@@ -1,0 +1,13 @@
+//! Monitor demo (Fig 15): the window-based O(μs) monitor distinguishes
+//! genuine network stragglers from GPU interference and task termination.
+//!
+//! Run: `cargo run --release --example monitor_demo`
+
+use vccl::config::Config;
+use vccl::coordinator::observability;
+
+fn main() {
+    let cfg = Config::paper_defaults();
+    println!("{}", observability::fig15_pinpointing(&cfg));
+    println!("{}", observability::fig19_window_sweep(&cfg));
+}

@@ -1,0 +1,63 @@
+//! END-TO-END mandate: real training through the full three-layer stack.
+//!
+//! L1 Pallas kernels → L2 JAX train_step → AOT HLO text → L3 rust PJRT
+//! execution, with the communication layer simulated per transport. Trains
+//! a GPT-2-style model on a synthetic bigram corpus for a few hundred
+//! steps, logs the loss curve (EXPERIMENTS.md §E2E), and checks Fig 12's
+//! claim: NCCL-vs-VCCL transport choice does NOT change convergence (the
+//! loss curves are bit-identical; only simulated iteration time differs).
+//!
+//! Run: `make artifacts && cargo run --release --example train_e2e -- [steps] [preset]`
+
+use std::path::Path;
+
+use vccl::config::Config;
+use vccl::train::{run_training, TrainOpts};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let preset = args.get(1).cloned().unwrap_or_else(|| "e2e".to_string());
+    let dir = Path::new("artifacts");
+    if !dir.join(format!("meta_{preset}.json")).exists() {
+        eprintln!("artifacts for preset {preset:?} missing — run:");
+        eprintln!("  cd python && python -m compile.aot --out ../artifacts --presets {preset}");
+        std::process::exit(1);
+    }
+
+    let opts = TrainOpts { preset: preset.clone(), steps, log_every: 10, ..Default::default() };
+
+    println!("=== VCCL (SM-free) transport ===");
+    let vccl_rep = run_training(dir, Config::paper_defaults(), &opts, |r| {
+        println!("step {:>5}  loss {:.4}  ({:.0} ms/step)", r.step, r.loss, r.wall_ms);
+    })?;
+
+    println!("\n=== NCCL (kernel) transport — loss must be identical (Fig 12) ===");
+    let nccl_rep = run_training(dir, Config::nccl_baseline(), &opts, |_| {})?;
+
+    // Fig 12 equivalence: identical losses, step for step.
+    let mut max_diff = 0f32;
+    for (a, b) in vccl_rep.steps.iter().zip(nccl_rep.steps.iter()) {
+        max_diff = max_diff.max((a.loss - b.loss).abs());
+    }
+    println!("\nloss-curve max |Δ| across transports: {max_diff} (expected 0: the");
+    println!("transport changes WHEN tensors move, never their values)");
+
+    println!("\nsimulated 1F1B iteration time:");
+    println!("  VCCL: {:.2} ms  ({:.0} TFLOPS/GPU at paper-scale compute)",
+             vccl_rep.sim_iter_ns as f64 / 1e6, vccl_rep.sim_tflops_per_gpu);
+    println!("  NCCL: {:.2} ms  ({:.0} TFLOPS/GPU)",
+             nccl_rep.sim_iter_ns as f64 / 1e6, nccl_rep.sim_tflops_per_gpu);
+    let gain = nccl_rep.sim_iter_ns as f64 / vccl_rep.sim_iter_ns as f64 - 1.0;
+    println!("  SM-free gain: {:+.2}% (paper: up to +5.28%)", gain * 100.0);
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/e2e_loss_vccl.csv", vccl_rep.to_csv())?;
+    std::fs::write("reports/e2e_loss_nccl.csv", nccl_rep.to_csv())?;
+    println!("\nloss curves -> reports/e2e_loss_{{vccl,nccl}}.csv");
+    println!("initial loss {:.4} -> final loss {:.4} over {} steps",
+             vccl_rep.initial_loss(), vccl_rep.final_loss(), steps);
+    anyhow::ensure!(max_diff == 0.0, "transports must not change numerics");
+    anyhow::ensure!(vccl_rep.final_loss() < vccl_rep.initial_loss(), "loss must descend");
+    Ok(())
+}

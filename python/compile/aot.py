@@ -1,0 +1,106 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust PJRT runtime.
+
+HLO **text** is the interchange format, NOT `lowered.compile()` /
+serialized protos: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Outputs (per preset):
+  artifacts/train_step_<preset>.hlo.txt  (flat,m,v,step,tokens,targets) ->
+                                         tuple(flat', m', v', loss)
+  artifacts/loss_<preset>.hlo.txt        (flat,tokens,targets) -> tuple(loss)
+  artifacts/meta_<preset>.json           shapes + param layout for rust
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+try:
+    from . import config as cfgmod
+    from . import model as M
+except ImportError:
+    from compile import config as cfgmod
+    from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_preset(preset: str, out_dir: str) -> dict:
+    cfg = cfgmod.PRESETS[preset]
+    P = M.layout_size(cfg)
+    B, L = cfg.batch, cfg.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    flat = jax.ShapeDtypeStruct((P,), f32)
+    mv = jax.ShapeDtypeStruct((P,), f32)
+    step = jax.ShapeDtypeStruct((), f32)
+    toks = jax.ShapeDtypeStruct((B, L), i32)
+
+    step_fn = functools.partial(M.train_step, cfg=cfg)
+    lowered_step = jax.jit(step_fn).lower(flat, mv, mv, step, toks, toks)
+    loss_fn = functools.partial(M.loss_fn, cfg=cfg)
+    lowered_loss = jax.jit(lambda a, b, c: (loss_fn(a, b, c),)).lower(flat, toks, toks)
+
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {}
+    for name, lowered in [("train_step", lowered_step), ("loss", lowered_loss)]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}_{preset}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        paths[name] = path
+
+    meta = {
+        "preset": preset,
+        "model": cfg.to_dict(),
+        "flat_len": P,
+        "batch": B,
+        "seq_len": L,
+        "train_step": {
+            "inputs": ["flat[P]", "m[P]", "v[P]", "step[]", "tokens[B,L]", "targets[B,L]"],
+            "outputs": ["flat[P]", "m[P]", "v[P]", "loss[]"],
+        },
+        "artifacts": paths,
+    }
+    meta_path = os.path.join(out_dir, f"meta_{preset}.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    meta["meta_path"] = meta_path
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--presets",
+        default="tiny,e2e",
+        help="comma-separated preset names (tiny,e2e,gpt2_100m)",
+    )
+    args = ap.parse_args()
+    for preset in args.presets.split(","):
+        meta = lower_preset(preset.strip(), args.out)
+        print(
+            f"[aot] {preset}: {meta['flat_len']} params "
+            f"({meta['model']['param_count']} logical) -> {meta['artifacts']}"
+        )
+    # Marker file the Makefile can depend on.
+    with open(os.path.join(args.out, "model.hlo.txt"), "w") as f:
+        f.write("# see per-preset artifacts: train_step_<preset>.hlo.txt\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Model-size presets for the L2 GPT-2-style workload.
+
+The paper trains GPT-2 at 32B–314B on Hopper clusters; our compute substrate
+is a single CPU core driving XLA-CPU through PJRT, so the end-to-end example
+uses a scaled-down preset (documented in DESIGN.md's substitution table).
+The architecture (decoder-only transformer, 1F1B-friendly uniform blocks) and
+the full three-layer path (Pallas kernel -> JAX fwd/bwd -> HLO -> rust PJRT)
+are identical across presets; only the dimensions change.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    # Pallas tiling (see kernels/attention.py): rows per q-block.
+    block_q: int = 32
+    block_k: int = 32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def param_count(self) -> int:
+        d, v, l = self.d_model, self.vocab, self.n_layers
+        embed = v * d + self.seq_len * d
+        per_layer = (
+            2 * d            # ln1 scale/bias
+            + d * 3 * d + 3 * d  # qkv
+            + d * d + d      # proj
+            + 2 * d          # ln2
+            + d * self.d_ff + self.d_ff  # fc1
+            + self.d_ff * d + d          # fc2
+        )
+        final_ln = 2 * d
+        return embed + l * per_layer + final_ln
+
+    def to_dict(self):
+        d = asdict(self)
+        d["param_count"] = self.param_count()
+        d["d_head"] = self.d_head
+        d["d_ff"] = self.d_ff
+        return d
+
+
+#: Unit-test scale: lowers + runs in well under a second.
+TINY = ModelConfig(name="tiny", vocab=512, d_model=64, n_layers=2, n_heads=4,
+                   seq_len=32, batch=2, block_q=16, block_k=16)
+
+#: End-to-end training scale for the 1-core CPU substrate (~4M params).
+E2E = ModelConfig(name="e2e", vocab=2048, d_model=256, n_layers=4, n_heads=8,
+                  seq_len=128, batch=8)
+
+#: GPT-2-class ~100M preset (the paper-shaped model); lowers fine, but a
+#: few hundred CPU steps are not practical on one core — used for artifact
+#: generation checks and as the documented "real" configuration.
+GPT2_100M = ModelConfig(name="gpt2_100m", vocab=16384, d_model=768,
+                        n_layers=12, n_heads=12, seq_len=256, batch=8)
+
+PRESETS = {c.name: c for c in (TINY, E2E, GPT2_100M)}

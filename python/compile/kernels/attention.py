@@ -1,0 +1,138 @@
+"""Flash-attention-style Pallas kernel (the L1 compute hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot spot
+is GEMM co-running with communication on Hopper SMs; on TPU the analogous
+structure is MXU matmuls fed by an explicit HBM->VMEM schedule. This kernel
+expresses that schedule with a Pallas grid:
+
+  grid = (batch*heads, L/block_q)  -- one program per q-tile;
+  each program streams K/V tiles through VMEM with an online-softmax
+  carry (m, l, acc), so the S = Q K^T matrix is never materialized and
+  the VMEM footprint is O(block_q * (d_head + block_k)) instead of O(L^2).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO with identical numerics
+(verified against kernels/ref.py by pytest + hypothesis).
+
+Autodiff: pallas_call has no automatic VJP, so `flash_attention` is a
+jax.custom_vjp -- forward through the kernel, backward recomputed with the
+pure-jnp reference math (standard flash-attention practice: recompute
+attention in the backward rather than saving S).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, q_block: int):
+    """One q-tile: online softmax over causal k-tiles.
+
+    Refs are VMEM tiles: q [bq, dh], k/v [L, dh] (full rows of this
+    batch-head; the fori_loop below walks them in block_k strides, which is
+    the HBM->VMEM streaming the BlockSpec would express on real hardware).
+    """
+    q = q_ref[...]  # [bq, dh]
+    bq, dh = q.shape
+    L = k_ref.shape[0]
+    scale = (1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype)))
+
+    q_tile = pl.program_id(1)
+    q_start = q_tile * q_block
+
+    # Causal bound: this q-tile attends to keys < q_start + bq. We walk all
+    # tiles up to that bound. (Static loop count = L/block_k; masking takes
+    # care of the boundary.)
+    n_kblocks = L // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_start = i * block_k
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[...], k_start, block_k, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[...], k_start, block_k, axis=0)
+        s = (q @ k_blk.T) * scale  # [bq, block_k]
+        # Causal mask: key position must be <= query position.
+        q_pos = q_start + jnp.arange(bq)[:, None]
+        k_pos = k_start + jnp.arange(block_k)[None, :]
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+        # Online softmax update.
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), -1e30, dtype=q.dtype)
+    l0 = jnp.zeros((bq,), dtype=q.dtype)
+    acc0 = jnp.zeros((bq, dh), dtype=q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+    o_ref[...] = acc / l[:, None]
+
+
+def _flash_fwd_impl(q, k, v, *, block_q: int, block_k: int):
+    """q, k, v: [BH, L, Dh] -> [BH, L, Dh] via the Pallas kernel."""
+    BH, L, Dh = q.shape
+    assert L % block_q == 0 and L % block_k == 0, (L, block_q, block_k)
+    grid = (BH, L // block_q)
+    kernel = functools.partial(_flash_kernel, block_k=block_k, q_block=block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, Dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, L, Dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, L, Dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, Dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, Dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q=32, block_k=32):
+    """Causal flash attention over [BH, L, Dh] tensors (Pallas forward)."""
+    return _flash_fwd_impl(q, k, v, block_q=block_q, block_k=block_k)
+
+
+def _fwd(q, k, v, block_q, block_k):
+    out = _flash_fwd_impl(q, k, v, block_q=block_q, block_k=block_k)
+    return out, (q, k, v)
+
+
+def _bwd(block_q, block_k, res, g):
+    # Flash-style recompute: re-derive gradients from q, k, v with the
+    # reference math (no S matrix was saved by the forward).
+    q, k, v = res
+    _, vjp = jax.vjp(ref.causal_attention_ref_batched, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d_head: int, L: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per program (DESIGN.md §Perf):
+    q-tile + k-tile + v-tile + acc + softmax carries."""
+    q_tile = block_q * d_head
+    kv_tiles = 2 * block_k * d_head
+    acc = block_q * d_head
+    carries = 2 * block_q
+    return (q_tile + kv_tiles + acc + carries) * dtype_bytes
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int, d_head: int) -> float:
+    """Fraction of a 128x128 MXU tile the kernel's matmuls fill (§Perf).
+
+    Each inner matmul is [block_q, d_head] @ [d_head, block_k]; the MXU
+    processes 128x128 systolic tiles, so utilization ~= product of the
+    dimension fills (capped at 1).
+    """
+    fill = lambda n: min(n, 128) / 128.0
+    return fill(block_q) * fill(block_k) * fill(d_head)

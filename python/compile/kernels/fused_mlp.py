@@ -1,0 +1,87 @@
+"""Fused MLP Pallas kernel: gelu(x @ w1 + b1) @ w2 + b2 in one pass.
+
+Second L1 kernel: the transformer block's MLP fused end-to-end so the
+[N, 4D] hidden activation never round-trips to HBM — it lives in VMEM for
+the row-tile being processed (the TPU translation of kernel fusion that
+CUDA would express with a persistent threadblock).
+
+grid = (N / block_rows,): each program takes a row tile of x and both
+weight matrices (weights fit VMEM at our model sizes; at larger D this
+BlockSpec would tile F as well).
+
+Like attention.py: `interpret=True` for CPU-PJRT execution, `custom_vjp`
+with a pure-jnp backward (ref.fused_mlp_ref).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]          # [bn, D]
+    w1 = w1_ref[...]        # [D, F]
+    b1 = b1_ref[...]        # [F]
+    w2 = w2_ref[...]        # [F, D]
+    b2 = b2_ref[...]        # [D]
+    h = x @ w1 + b1[None, :]
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    h = 0.5 * h * (1.0 + jnp.tanh(c * (h + 0.044715 * h**3)))
+    o_ref[...] = h @ w2 + b2[None, :]
+
+
+def _mlp_fwd_impl(x, w1, b1, w2, b2, *, block_rows: int):
+    N, D = x.shape
+    F = w1.shape[1]
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, F), lambda i: (0, 0)),
+            pl.BlockSpec((F,), lambda i: (0,)),
+            pl.BlockSpec((F, D), lambda i: (0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def fused_mlp(x, w1, b1, w2, b2, block_rows=32):
+    """Fused transformer MLP over [N, D] rows (Pallas forward)."""
+    return _mlp_fwd_impl(x, w1, b1, w2, b2, block_rows=block_rows)
+
+
+def _fwd(x, w1, b1, w2, b2, block_rows):
+    out = _mlp_fwd_impl(x, w1, b1, w2, b2, block_rows=block_rows)
+    return out, (x, w1, b1, w2, b2)
+
+
+def _bwd(block_rows, res, g):
+    x, w1, b1, w2, b2 = res
+    _, vjp = jax.vjp(ref.fused_mlp_ref, x, w1, b1, w2, b2)
+    return vjp(g)
+
+
+fused_mlp.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(block_rows: int, d_model: int, d_ff: int,
+                         dtype_bytes: int = 4) -> int:
+    """VMEM working set per program (§Perf): x-tile + both weights + h."""
+    return (
+        block_rows * d_model      # x tile
+        + d_model * d_ff + d_ff   # w1, b1
+        + d_ff * d_model + d_model  # w2, b2
+        + block_rows * d_ff       # hidden tile
+        + block_rows * d_model    # out tile
+    ) * dtype_bytes

@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite asserts `assert_allclose`
+against, and they double as the backward-pass math for the kernels'
+`custom_vjp` (flash-attention-style recompute: the forward runs in Pallas,
+the backward re-derives gradients from saved inputs with plain jnp).
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v):
+    """Reference causal self-attention.
+
+    q, k, v: [L, Dh] for one (batch, head). Returns [L, Dh].
+    """
+    L = q.shape[0]
+    scale = (1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype)))
+    scores = (q @ k.T) * scale  # [L, L]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def causal_attention_ref_batched(q, k, v):
+    """q, k, v: [BH, L, Dh] — vmapped reference."""
+    import jax
+
+    return jax.vmap(causal_attention_ref)(q, k, v)
+
+
+def gelu(x):
+    """tanh-approximation GELU (GPT-2's activation)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_mlp_ref(x, w1, b1, w2, b2):
+    """Reference transformer MLP: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: [N, D]; w1: [D, F]; b1: [F]; w2: [F, D]; b2: [D].
+    """
+    h = gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def layer_norm_ref(x, scale, bias, eps=1e-5):
+    """Reference LayerNorm over the last axis."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias

@@ -1,0 +1,186 @@
+"""L2: GPT-2-style decoder-only transformer in JAX, calling the L1 Pallas
+kernels, with a flat-parameter Adam train step for the Rust PJRT runtime.
+
+Everything the Rust coordinator needs is two jitted functions over plain
+arrays (no pytrees cross the FFI):
+
+  loss_fn(flat_params, tokens, targets)                 -> loss
+  train_step(flat_params, m, v, step, tokens, targets)  -> (flat', m', v', loss)
+
+Parameters live in ONE flat f32 vector; (un)packing happens inside JAX with
+static offsets, so the Rust side passes exactly 3 big buffers + 1 scalar +
+2 token arrays and receives 3 buffers + 1 scalar back. XLA fuses the
+unpack/repack into the surrounding computation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+try:  # package-relative when imported as compile.model
+    from . import config as cfgmod
+    from .kernels import ref
+    from .kernels.attention import flash_attention
+    from .kernels.fused_mlp import fused_mlp
+except ImportError:  # script-style import from python/
+    from compile import config as cfgmod
+    from compile.kernels import ref
+    from compile.kernels.attention import flash_attention
+    from compile.kernels.fused_mlp import fused_mlp
+
+
+# ----------------------------------------------------------------------
+# Flat-parameter layout
+# ----------------------------------------------------------------------
+
+def param_layout(cfg):
+    """Ordered (name, shape) list defining the flat vector layout."""
+    d, v, L, f = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_ff
+    layout = [("embed", (v, d)), ("pos", (L, d))]
+    for i in range(cfg.n_layers):
+        layout += [
+            (f"l{i}.ln1_s", (d,)), (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.qkv_w", (d, 3 * d)), (f"l{i}.qkv_b", (3 * d,)),
+            (f"l{i}.proj_w", (d, d)), (f"l{i}.proj_b", (d,)),
+            (f"l{i}.ln2_s", (d,)), (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.fc1_w", (d, f)), (f"l{i}.fc1_b", (f,)),
+            (f"l{i}.fc2_w", (f, d)), (f"l{i}.fc2_b", (d,)),
+        ]
+    layout += [("lnf_s", (d,)), ("lnf_b", (d,))]
+    return layout
+
+
+def layout_size(cfg) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_layout(cfg))
+
+
+def unpack(flat, cfg):
+    """Flat f32 vector -> dict of named arrays (static slices)."""
+    params = {}
+    off = 0
+    for name, shape in param_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg, seed: int = 0):
+    """GPT-2-style init, returned as the flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_layout(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "ln1_b", "ln2_b", "lnf_b")) and len(shape) == 1:
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif name.endswith(("ln1_s", "ln2_s", "lnf_s")):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            std = 0.02
+            chunks.append((jax.random.normal(sub, shape, jnp.float32) * std).ravel())
+    return jnp.concatenate(chunks)
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+
+def forward_logits(flat, tokens, cfg):
+    """tokens [B, L] int32 -> logits [B, L, V]."""
+    p = unpack(flat, cfg)
+    B, L = tokens.shape
+    d, H = cfg.d_model, cfg.n_heads
+    dh = cfg.d_head
+
+    x = p["embed"][tokens] + p["pos"][None, :L, :]
+
+    for i in range(cfg.n_layers):
+        h = ref.layer_norm_ref(x, p[f"l{i}.ln1_s"], p[f"l{i}.ln1_b"])
+        qkv = h @ p[f"l{i}.qkv_w"] + p[f"l{i}.qkv_b"]  # [B, L, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # [B, L, d] -> [B*H, L, dh]
+        to_heads = lambda t: t.reshape(B, L, H, dh).transpose(0, 2, 1, 3).reshape(B * H, L, dh)
+        att = flash_attention(
+            to_heads(q), to_heads(k), to_heads(v), cfg.block_q, cfg.block_k
+        )
+        att = att.reshape(B, H, L, dh).transpose(0, 2, 1, 3).reshape(B, L, d)
+        x = x + att @ p[f"l{i}.proj_w"] + p[f"l{i}.proj_b"]
+
+        h = ref.layer_norm_ref(x, p[f"l{i}.ln2_s"], p[f"l{i}.ln2_b"])
+        mlp_out = fused_mlp(
+            h.reshape(B * L, d),
+            p[f"l{i}.fc1_w"], p[f"l{i}.fc1_b"],
+            p[f"l{i}.fc2_w"], p[f"l{i}.fc2_b"],
+            cfg.block_q,
+        ).reshape(B, L, d)
+        x = x + mlp_out
+
+    x = ref.layer_norm_ref(x, p["lnf_s"], p["lnf_b"])
+    return x @ p["embed"].T  # tied LM head
+
+
+def loss_fn(flat, tokens, targets, cfg):
+    """Mean next-token cross-entropy."""
+    logits = forward_logits(flat, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+# ----------------------------------------------------------------------
+# Adam train step (flat-vector optimizer state)
+# ----------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS, LR = 0.9, 0.999, 1e-8, 1.5e-4
+
+
+def train_step(flat, m, v, step, tokens, targets, cfg):
+    """One Adam step. step: scalar f32 (1-based). Returns new state + loss."""
+    loss, g = jax.value_and_grad(lambda f: loss_fn(f, tokens, targets, cfg))(flat)
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    flat = flat - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return flat, m, v, loss
+
+
+def make_jitted(cfg):
+    """(loss_jit, step_jit) with cfg closed over."""
+    loss_jit = jax.jit(functools.partial(loss_fn, cfg=cfg))
+    step_jit = jax.jit(functools.partial(train_step, cfg=cfg))
+    return loss_jit, step_jit
+
+
+def synthetic_batch(cfg, seed: int):
+    """Deterministic synthetic corpus: Zipf-ish token stream with strong
+    bigram structure, so the loss has something learnable to descend on."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    B, L, V = cfg.batch, cfg.seq_len, cfg.vocab
+    # bigram "grammar": next token = (3*tok + noise) mod V
+    start = jax.random.randint(k1, (B, 1), 0, V)
+    noise = jax.random.randint(k2, (B, L), 0, 7)
+
+    def step(tok, n):
+        nxt = (3 * tok + n) % V
+        return nxt, nxt
+
+    def row(s, ns):
+        _, toks = jax.lax.scan(step, s[0], ns)
+        return toks
+
+    seqs = jax.vmap(row)(start, noise)  # [B, L]
+    tokens = seqs[:, :-1]
+    targets = seqs[:, 1:]
+    # pad back to L with wraparound so shapes stay [B, L]
+    tokens = jnp.concatenate([start, tokens], axis=1)[:, : L]
+    targets = seqs
+    return tokens.astype(jnp.int32), targets.astype(jnp.int32)
+
+
+def get_config(name: str):
+    return cfgmod.PRESETS[name]

@@ -1,0 +1,50 @@
+"""AOT artifact checks: HLO text generates, has the right signature, and
+matches what the Rust runtime expects (meta.json contract)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import config as C
+
+
+@pytest.fixture(scope="module")
+def tiny_meta(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    return aot.lower_preset("tiny", str(out))
+
+
+class TestAot:
+    def test_artifacts_written(self, tiny_meta):
+        for p in tiny_meta["artifacts"].values():
+            assert os.path.exists(p)
+            assert os.path.getsize(p) > 1000
+
+    def test_hlo_is_text_with_entry_layout(self, tiny_meta):
+        text = open(tiny_meta["artifacts"]["train_step"]).read()
+        assert text.startswith("HloModule")
+        assert "entry_computation_layout" in text
+        # Interchange contract: text, not protobuf (see aot.py docstring).
+        assert "\x00" not in text
+
+    def test_train_step_signature(self, tiny_meta):
+        text = open(tiny_meta["artifacts"]["train_step"]).read()
+        P = tiny_meta["flat_len"]
+        B, L = tiny_meta["batch"], tiny_meta["seq_len"]
+        head = text.splitlines()[0]
+        assert f"f32[{P}]" in head
+        assert f"s32[{B},{L}]" in head
+        # Output tuple: 3 buffers + scalar loss.
+        assert head.count(f"f32[{P}]") >= 4  # 3 in + ≥1 out mentions
+
+    def test_meta_contract(self, tiny_meta):
+        meta = json.load(open(tiny_meta["meta_path"]))
+        assert meta["flat_len"] == C.TINY.param_count()
+        assert meta["train_step"]["outputs"][-1] == "loss[]"
+
+    def test_loss_artifact_single_output(self, tiny_meta):
+        text = open(tiny_meta["artifacts"]["loss"]).read()
+        head = text.splitlines()[0]
+        assert "->(f32[])" in head

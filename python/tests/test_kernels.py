@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The hypothesis sweeps cover the shape/dtype space the model exercises
+(power-of-two sequence lengths, head dims, block sizes); assert_allclose
+against kernels/ref.py is THE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (
+    flash_attention,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.fused_mlp import fused_mlp
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# Flash attention
+# ----------------------------------------------------------------------
+
+class TestFlashAttention:
+    def test_matches_reference_basic(self):
+        q, k, v = rand(0, 4, 64, 16), rand(1, 4, 64, 16), rand(2, 4, 64, 16)
+        out = flash_attention(q, k, v, 32, 32)
+        expect = ref.causal_attention_ref_batched(q, k, v)
+        np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bh=st.sampled_from([1, 2, 4]),
+        L=st.sampled_from([16, 32, 64, 128]),
+        dh=st.sampled_from([8, 16, 32]),
+        blk=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_reference_sweep(self, bh, L, dh, blk, seed):
+        if L % blk != 0:
+            blk = L
+        q = rand(seed, bh, L, dh)
+        k = rand(seed + 1, bh, L, dh)
+        v = rand(seed + 2, bh, L, dh)
+        out = flash_attention(q, k, v, blk, blk)
+        expect = ref.causal_attention_ref_batched(q, k, v)
+        np.testing.assert_allclose(out, expect, rtol=3e-5, atol=3e-5)
+
+    def test_block_size_does_not_change_numerics(self):
+        q, k, v = rand(7, 2, 64, 16), rand(8, 2, 64, 16), rand(9, 2, 64, 16)
+        outs = [flash_attention(q, k, v, bq, bk) for bq, bk in [(16, 16), (32, 16), (64, 64)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        # Changing a future key/value must not change earlier outputs.
+        q, k, v = rand(3, 1, 32, 8), rand(4, 1, 32, 8), rand(5, 1, 32, 8)
+        out1 = flash_attention(q, k, v, 16, 16)
+        k2 = k.at[:, -1, :].set(99.0)
+        v2 = v.at[:, -1, :].set(-99.0)
+        out2 = flash_attention(q, k2, v2, 16, 16)
+        np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(out1[:, -1], out2[:, -1])
+
+    def test_gradients_match_reference(self):
+        q, k, v = rand(10, 2, 32, 8), rand(11, 2, 32, 8), rand(12, 2, 32, 8)
+
+        def f_kernel(q, k, v):
+            return flash_attention(q, k, v, 16, 16).sum()
+
+        def f_ref(q, k, v):
+            return ref.causal_attention_ref_batched(q, k, v).sum()
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+    def test_jit_and_lower(self):
+        q, k, v = rand(13, 2, 32, 8), rand(14, 2, 32, 8), rand(15, 2, 32, 8)
+        jitted = jax.jit(lambda a, b, c: flash_attention(a, b, c, 16, 16))
+        np.testing.assert_allclose(
+            jitted(q, k, v), flash_attention(q, k, v, 16, 16), rtol=1e-6
+        )
+
+    def test_vmem_estimates_sane(self):
+        # §Perf: the working set must fit Hopper/TPU-v4-class VMEM (16MB).
+        fp = vmem_footprint_bytes(block_q=128, block_k=128, d_head=64, L=2048)
+        assert fp < 16 * 1024 * 1024
+        u = mxu_utilization_estimate(128, 128, 64)
+        assert 0.0 < u <= 1.0
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(8, 8, 8) < 0.01
+
+
+# ----------------------------------------------------------------------
+# Fused MLP
+# ----------------------------------------------------------------------
+
+class TestFusedMlp:
+    def test_matches_reference_basic(self):
+        x = rand(20, 64, 32)
+        w1, b1 = rand(21, 32, 128), rand(22, 128)
+        w2, b2 = rand(23, 128, 32), rand(24, 32)
+        out = fused_mlp(x, w1, b1, w2, b2, 32)
+        expect = ref.fused_mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([16, 32, 64, 128]),
+        d=st.sampled_from([8, 16, 32]),
+        f=st.sampled_from([32, 64]),
+        blk=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_reference_sweep(self, n, d, f, blk, seed):
+        if n % blk != 0:
+            blk = n
+        x = rand(seed, n, d)
+        w1, b1 = rand(seed + 1, d, f), rand(seed + 2, f)
+        w2, b2 = rand(seed + 3, f, d), rand(seed + 4, d)
+        out = fused_mlp(x, w1, b1, w2, b2, blk)
+        expect = ref.fused_mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, expect, rtol=3e-5, atol=3e-5)
+
+    def test_gradients_match_reference(self):
+        x = rand(30, 32, 16)
+        w1, b1 = rand(31, 16, 64), rand(32, 64)
+        w2, b2 = rand(33, 64, 16), rand(34, 16)
+
+        def f_kernel(*a):
+            return fused_mlp(*a, 16).sum()
+
+        def f_ref(*a):
+            return ref.fused_mlp_ref(*a).sum()
+
+        gk = jax.grad(f_kernel, argnums=tuple(range(5)))(x, w1, b1, w2, b2)
+        gr = jax.grad(f_ref, argnums=tuple(range(5)))(x, w1, b1, w2, b2)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+    def test_block_rows_invariance(self):
+        x = rand(40, 64, 16)
+        w1, b1 = rand(41, 16, 64), rand(42, 64)
+        w2, b2 = rand(43, 64, 16), rand(44, 16)
+        outs = [fused_mlp(x, w1, b1, w2, b2, blk) for blk in (8, 16, 32, 64)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+class TestRefInternals:
+    def test_gelu_known_values(self):
+        # gelu(0)=0; gelu(large)≈large; gelu(-large)≈0.
+        x = jnp.array([0.0, 10.0, -10.0])
+        g = ref.gelu(x)
+        assert abs(float(g[0])) < 1e-6
+        assert abs(float(g[1]) - 10.0) < 1e-3
+        assert abs(float(g[2])) < 1e-3
+
+    def test_layer_norm_stats(self):
+        x = rand(50, 8, 32)
+        y = ref.layer_norm_ref(x, jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y.std(-1)), 1.0, atol=1e-2)
+
+    def test_attention_rows_sum_to_convex_combination(self):
+        # Each output row is a convex combination of v rows: with v = const,
+        # output = const.
+        q, k = rand(51, 1, 16, 8), rand(52, 1, 16, 8)
+        v = jnp.ones((1, 16, 8))
+        out = ref.causal_attention_ref_batched(q, k, v)
+        np.testing.assert_allclose(out, 1.0, rtol=1e-5)

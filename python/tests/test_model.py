@@ -1,0 +1,111 @@
+"""L2 correctness: model shapes, training descent, determinism, and the
+flat-parameter packing the Rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import config as C
+from compile import model as M
+
+
+CFG = C.TINY
+
+
+class TestLayout:
+    def test_flat_size_matches_layout(self):
+        flat = M.init_params(CFG)
+        assert flat.shape == (M.layout_size(CFG),)
+        assert M.layout_size(CFG) == CFG.param_count()
+
+    def test_unpack_shapes(self):
+        flat = M.init_params(CFG)
+        p = M.unpack(flat, CFG)
+        assert p["embed"].shape == (CFG.vocab, CFG.d_model)
+        assert p["l0.qkv_w"].shape == (CFG.d_model, 3 * CFG.d_model)
+        assert p["l1.fc1_w"].shape == (CFG.d_model, CFG.d_ff)
+        assert p["lnf_s"].shape == (CFG.d_model,)
+
+    def test_unpack_roundtrip_values(self):
+        flat = M.init_params(CFG)
+        p = M.unpack(flat, CFG)
+        # First layout entry is the embedding: its raveled values must be
+        # the first vocab*d elements of the flat vector.
+        np.testing.assert_array_equal(
+            np.asarray(p["embed"]).ravel(),
+            np.asarray(flat[: CFG.vocab * CFG.d_model]),
+        )
+
+    def test_presets_param_counts(self):
+        assert C.GPT2_100M.param_count() > 95_000_000
+        assert C.E2E.param_count() < 10_000_000
+        assert C.TINY.param_count() < 300_000
+
+
+class TestForward:
+    def test_logits_shape(self):
+        flat = M.init_params(CFG)
+        toks, _ = M.synthetic_batch(CFG, 0)
+        logits = M.forward_logits(flat, toks, CFG)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+    def test_initial_loss_near_uniform(self):
+        flat = M.init_params(CFG)
+        toks, tgts = M.synthetic_batch(CFG, 0)
+        loss = float(M.loss_fn(flat, toks, tgts, CFG))
+        uniform = float(np.log(CFG.vocab))
+        assert abs(loss - uniform) < 0.5, (loss, uniform)
+
+    def test_forward_deterministic(self):
+        flat = M.init_params(CFG)
+        toks, tgts = M.synthetic_batch(CFG, 0)
+        l1 = float(M.loss_fn(flat, toks, tgts, CFG))
+        l2 = float(M.loss_fn(flat, toks, tgts, CFG))
+        assert l1 == l2
+
+
+class TestTraining:
+    def test_loss_descends(self):
+        flat = M.init_params(CFG)
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        _, step_jit = M.make_jitted(CFG)
+        toks, tgts = M.synthetic_batch(CFG, 0)
+        l_first = None
+        for i in range(20):
+            flat, m, v, loss = step_jit(flat, m, v, jnp.float32(i + 1), toks, tgts)
+            if l_first is None:
+                l_first = float(loss)
+        assert float(loss) < l_first - 0.3, (l_first, float(loss))
+
+    def test_grad_is_finite(self):
+        flat = M.init_params(CFG)
+        toks, tgts = M.synthetic_batch(CFG, 0)
+        g = jax.grad(lambda f: M.loss_fn(f, toks, tgts, CFG))(flat)
+        assert bool(jnp.isfinite(g).all())
+        assert float(jnp.abs(g).max()) > 0.0
+
+    def test_training_deterministic(self):
+        def run():
+            flat = M.init_params(CFG)
+            m = jnp.zeros_like(flat)
+            v = jnp.zeros_like(flat)
+            _, step_jit = M.make_jitted(CFG)
+            toks, tgts = M.synthetic_batch(CFG, 0)
+            for i in range(3):
+                flat, m, v, loss = step_jit(flat, m, v, jnp.float32(i + 1), toks, tgts)
+            return float(loss)
+
+        assert run() == run()
+
+    def test_synthetic_batch_shapes_and_range(self):
+        toks, tgts = M.synthetic_batch(CFG, 1)
+        assert toks.shape == (CFG.batch, CFG.seq_len)
+        assert tgts.shape == (CFG.batch, CFG.seq_len)
+        assert toks.dtype == jnp.int32
+        assert int(toks.min()) >= 0 and int(toks.max()) < CFG.vocab
+
+    def test_synthetic_batches_differ_by_seed(self):
+        t0, _ = M.synthetic_batch(CFG, 0)
+        t1, _ = M.synthetic_batch(CFG, 1)
+        assert not np.array_equal(np.asarray(t0), np.asarray(t1))

@@ -1,0 +1,22 @@
+//! Minimal bench harness shared by all benches (criterion is unavailable
+//! in the offline vendored build): N timed iterations, median + MAD report.
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let mut samples: Vec<f64> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let min = samples[0];
+    let max = samples[samples.len() - 1];
+    println!("{name:50} median {med:>9.3} ms   (min {min:.3} / max {max:.3}, n={iters})");
+    med
+}

@@ -1,0 +1,30 @@
+//! Fig 13/14/18 bench: failover machinery cost + report regeneration.
+
+mod bench_util;
+use vccl::ccl::ClusterSim;
+use vccl::config::Config;
+use vccl::coordinator::reliability;
+use vccl::sim::SimTime;
+use vccl::topology::RankId;
+use vccl::util::ByteSize;
+
+fn main() {
+    println!("== failover (Fig 13a/b, 14, 18) ==");
+    bench_util::bench("port-down -> failover -> completion (sim)", 5, || {
+        let mut cfg = Config::paper_defaults();
+        cfg.net.ib_timeout_exp = 10;
+        cfg.net.ib_retry_cnt = 2;
+        cfg.net.qp_warmup_ns = 100_000_000;
+        cfg.vccl.channels = 1;
+        let mut s = ClusterSim::new(cfg);
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(100_000_000);
+        assert!(s.ops[id.0].is_done());
+        assert_eq!(s.stats.failovers, 1);
+    });
+    let cfg = Config::paper_defaults();
+    println!("\n{}", reliability::fig13b_training_under_failure(&cfg));
+    println!("{}", reliability::fig18_multiport_stress(&cfg));
+}

@@ -1,0 +1,24 @@
+//! Table 5 bench: end-to-end cost of running with the monitor enabled.
+
+mod bench_util;
+use vccl::ccl::ClusterSim;
+use vccl::config::Config;
+use vccl::coordinator::observability;
+use vccl::topology::RankId;
+use vccl::util::ByteSize;
+
+fn main() {
+    println!("== monitor_overhead (Table 5) ==");
+    for on in [false, true] {
+        let label = format!("256MB p2p with monitor={on} (sim wall time)");
+        bench_util::bench(&label, 5, || {
+            let mut cfg = Config::paper_defaults();
+            cfg.vccl.monitor = on;
+            cfg.vccl.channels = 2;
+            let mut s = ClusterSim::new(cfg);
+            let (_, op) = s.run_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+            assert!(op.is_done());
+        });
+    }
+    println!("\n{}", observability::table5_monitor_overhead(&Config::paper_defaults()));
+}

@@ -1,0 +1,24 @@
+//! Fig 10 bench: P2P sweep per transport + simulator wall-time per op.
+
+mod bench_util;
+use vccl::ccl::ClusterSim;
+use vccl::config::Config;
+use vccl::topology::RankId;
+use vccl::util::ByteSize;
+
+fn main() {
+    println!("== p2p_perf (Fig 10) ==");
+    for (name, cfg) in [("vccl", Config::paper_defaults()), ("nccl", Config::nccl_baseline())] {
+        for &mb in &[1u64, 64] {
+            let label = format!("{name} inter-node sendrecv {mb}MB (sim)");
+            bench_util::bench(&label, 10, || {
+                let mut c = cfg.clone();
+                c.vccl.channels = 2;
+                let mut s = ClusterSim::new(c);
+                let (_, op) = s.run_p2p(RankId(0), RankId(8), ByteSize::mb(mb).0);
+                assert!(op.is_done());
+            });
+        }
+    }
+    println!("\nfull table: `vccl exp fig10`");
+}

@@ -1,0 +1,38 @@
+//! §Perf L3 target: the DES core must sustain ≥1M events/s so that
+//! cluster-scale experiments run in seconds.
+
+mod bench_util;
+use vccl::sim::{Engine, SimTime};
+
+fn main() {
+    println!("== simcore: event engine throughput ==");
+    const N: u64 = 1_000_000;
+    let med_ms = bench_util::bench("engine: schedule+pop 1M events", 10, || {
+        let mut e: Engine<u64> = Engine::new();
+        for i in 0..N {
+            e.schedule(SimTime::ns(i % 1000), i);
+        }
+        while e.pop().is_some() {}
+    });
+    let evps = N as f64 / (med_ms / 1e3);
+    println!("=> {evps:.2e} events/s (target ≥ 1e6)");
+    assert!(evps > 1e6, "below §Perf target");
+
+    bench_util::bench("engine: interleaved schedule/pop/cancel", 10, || {
+        let mut e: Engine<u64> = Engine::new();
+        let mut last = None;
+        for i in 0..200_000u64 {
+            let id = e.schedule(SimTime::ns(i % 64), i);
+            if i % 3 == 0 {
+                if let Some(prev) = last.take() {
+                    e.cancel(prev);
+                }
+            }
+            last = Some(id);
+            if i % 2 == 0 {
+                let _ = e.pop();
+            }
+        }
+        while e.pop().is_some() {}
+    });
+}

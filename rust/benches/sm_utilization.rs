@@ -1,0 +1,16 @@
+//! Table 1 bench: regenerates the SM-utilization table and times it.
+
+mod bench_util;
+use vccl::config::Config;
+use vccl::coordinator::experiments;
+
+fn main() {
+    println!("== sm_utilization (Table 1 / Table 4) ==");
+    let cfg = Config::paper_defaults();
+    bench_util::bench("table1 regeneration", 3, || {
+        let r = experiments::table1_sm_utilization(&cfg);
+        assert!(r.contains("alltoall"));
+    });
+    println!("\n{}", experiments::table1_sm_utilization(&cfg));
+    println!("{}", experiments::table4_resource_consumption(&cfg));
+}

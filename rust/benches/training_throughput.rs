@@ -1,0 +1,26 @@
+//! Fig 11 bench: 1F1B iteration under the three transports.
+
+mod bench_util;
+use vccl::ccl::ClusterSim;
+use vccl::config::Config;
+use vccl::coordinator::experiments;
+use vccl::pipeline::{PipelineCfg, PipelineSim};
+
+fn main() {
+    println!("== training_throughput (Fig 11) ==");
+    for (name, mk) in [
+        ("vccl", Config::paper_defaults as fn() -> Config),
+        ("ncclx", Config::ncclx_like),
+        ("nccl", Config::nccl_baseline),
+    ] {
+        let label = format!("{name}: 1F1B iteration (PP=4, m=8, sim)");
+        bench_util::bench(&label, 5, || {
+            let cfg = mk();
+            let pcfg = PipelineCfg::spread(&cfg, 4, 8);
+            let mut p = PipelineSim::new(ClusterSim::new(cfg), pcfg);
+            let r = p.run_iteration();
+            assert!(!r.hung && !r.deadlocked);
+        });
+    }
+    println!("\n{}", experiments::fig11_training_throughput(&Config::paper_defaults()));
+}

@@ -1,0 +1,27 @@
+//! Fig 19 bench: estimator throughput + window-size fidelity sweep.
+
+mod bench_util;
+use vccl::config::Config;
+use vccl::coordinator::observability;
+use vccl::monitor::{MsgRecord, WindowEstimator};
+use vccl::sim::SimTime;
+
+fn main() {
+    println!("== window_sweep (Fig 19 / Appendix H) ==");
+    const N: usize = 1_000_000;
+    for w in [1usize, 8, 32] {
+        let label = format!("estimator push x1M (W={w})");
+        let med = bench_util::bench(&label, 5, || {
+            let mut e = WindowEstimator::new(w);
+            for i in 0..N as u64 {
+                e.push(MsgRecord {
+                    posted_at: SimTime::ns(i * 20),
+                    completed_at: SimTime::ns(i * 20 + 21),
+                    bytes: 1 << 20,
+                });
+            }
+        });
+        println!("   -> {:.0} ns/WC (the Table 5 'CPU overhead' unit cost)", med * 1e6 / N as f64);
+    }
+    println!("\n{}", observability::fig19_window_sweep(&Config::paper_defaults()));
+}

@@ -1,0 +1,1162 @@
+//! The cluster simulation: one event loop tying together the RDMA network,
+//! the GPUs, the transports, the fault-tolerance machinery and the monitor.
+//!
+//! `ClusterSim` is the L3 runtime's *model* of the world. Collective
+//! operations decompose into chunked point-to-point transfers ([`Xfer`]),
+//! each following its transport's cost profile (§3.2): staging copies and
+//! GPU↔CPU flag polling for the kernel baseline, copy-engine admission for
+//! the SM-free path, zero-copy GDR when eligible. Chunk payloads become
+//! flows in [`crate::net::FlowNet`]; Work Completions drive the chunk
+//! pointers (the same pointers §3.3's migration retreats on failover).
+//!
+//! Everything is deterministic: same config + seed ⇒ identical event trace.
+
+use std::collections::HashMap;
+
+use crate::config::{Config, Transport};
+use crate::fault::{migrate_to_breakpoint, DeltaProbe, ProbeVerdict, RecvPointers, SendPointers,
+    SyncFifo};
+use crate::gpu::{CopyEngines, GpuCompute, TaskId};
+use crate::monitor::MonitorSet;
+use crate::net::{CompletionStatus, FlowId, QpId, QpState, RdmaNet, WorkCompletion};
+use crate::sim::{Engine, SimTime};
+use crate::topology::{build_rings, Cluster, PortId, RankId, Ring};
+use crate::util::Rng;
+
+use super::mempool::{AllocPolicy, MemPool};
+use super::transport::{locality_of, DataPath, Locality, TransportProfile};
+
+/// Index newtypes into the cluster's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConnId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct XferId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpId(pub usize);
+
+/// The one event type of the simulation.
+#[derive(Debug, Clone, Copy)]
+pub enum Event {
+    /// Flow-completion check (network payloads, NVLink copies).
+    Flow { flow: FlowId, gen: u32 },
+    /// Hardware retransmission window expired for a QP.
+    QpRetry { qp: QpId, epoch: u32 },
+    /// QP warm-up finished; release queued WRs.
+    QpWarm { qp: QpId },
+    /// GPU compute task completion check.
+    GpuTask { gpu: usize, task: TaskId, gen: u32 },
+    /// A staged chunk of a transfer is ready to go on the wire.
+    ChunkReady { xfer: XferId },
+    /// Fault injection.
+    PortDown { port: PortId },
+    PortUp { port: PortId },
+    /// Receiver-side δ-timeout double check (§3.3 case 2).
+    DeltaCheck { conn: ConnId, epoch: u32 },
+    /// Advance a collective to its next ring step on one channel.
+    OpStep { op: OpId, channel: usize },
+}
+
+/// Which QP a connection currently uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActiveSide {
+    Primary,
+    Backup,
+}
+
+/// A (src GPU, dst GPU, channel) connection. Inter-node connections own
+/// QPs (primary + optional backup); intra-node connections move chunks
+/// over NVLink flows directly.
+#[derive(Debug)]
+pub struct Conn {
+    pub id: ConnId,
+    pub src: RankId,
+    pub dst: RankId,
+    pub channel: usize,
+    pub locality: Locality,
+    pub primary: Option<QpId>,
+    pub primary_port: Option<PortId>,
+    pub backup: Option<QpId>,
+    pub backup_port: Option<PortId>,
+    pub active: ActiveSide,
+    /// Transfers queued on this connection. Only the FRONT transfer is
+    /// active (NCCL's per-channel FIFO serializes sends between a pair);
+    /// the rest start when their predecessors finish.
+    pub pending: std::collections::VecDeque<XferId>,
+    /// Case-2 receiver-side probe.
+    pub probe: Option<DeltaProbe>,
+    /// Failovers seen (stats / Fig 14).
+    pub failovers: u32,
+    /// Waiting for primary port to heal + QP to warm.
+    pub awaiting_failback: bool,
+    /// First use seen (lazy mempool accounting).
+    pub used: bool,
+}
+
+impl Conn {
+    /// The transfer currently on the wire for this connection.
+    pub fn cur_xfer(&self) -> Option<XferId> {
+        self.pending.front().copied()
+    }
+
+    pub fn active_qp(&self) -> Option<QpId> {
+        match self.active {
+            ActiveSide::Primary => self.primary,
+            ActiveSide::Backup => self.backup,
+        }
+    }
+
+    pub fn active_port(&self) -> Option<PortId> {
+        match self.active {
+            ActiveSide::Primary => self.primary_port,
+            ActiveSide::Backup => self.backup_port,
+        }
+    }
+}
+
+/// One chunked point-to-point transfer.
+#[derive(Debug)]
+pub struct Xfer {
+    pub id: XferId,
+    pub op: OpId,
+    pub channel: usize,
+    pub conn: ConnId,
+    pub bytes: u64,
+    pub chunk_bytes: u64,
+    pub chunks_total: u64,
+    pub send: SendPointers,
+    pub recv: RecvPointers,
+    pub fifo: SyncFifo,
+    pub profile: TransportProfile,
+    pub locality: Locality,
+    /// Sender staging pipeline: next time the staging resource is free.
+    stage_free_at: SimTime,
+    /// Per-side SMs we actually acquired (released on completion).
+    sms_src: u32,
+    sms_dst: u32,
+    pub done: bool,
+    pub started_at: SimTime,
+    pub finished_at: Option<SimTime>,
+}
+
+impl Xfer {
+    fn inflight(&self) -> u64 {
+        self.send.posted - self.send.acked
+    }
+}
+
+/// Collective kinds (NCCL-Tests semantics for `bytes`: per-rank buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollKind {
+    /// Point-to-point between a (src, dst) pair.
+    SendRecv,
+    /// Ring allreduce: 2(N−1) steps (reduce-scatter + allgather phases).
+    AllReduce,
+    /// Ring allgather: N−1 steps.
+    AllGather,
+    /// Ring reduce-scatter: N−1 steps (with reduction).
+    ReduceScatter,
+    /// Direct alltoall: every rank sends bytes/N to every peer.
+    AllToAll,
+}
+
+/// A running collective operation.
+#[derive(Debug)]
+pub struct Op {
+    pub id: OpId,
+    pub kind: CollKind,
+    pub bytes: u64,
+    pub p2p: Option<(RankId, RankId)>,
+    pub channels: usize,
+    pub steps_total: usize,
+    pub chan_step: Vec<usize>,
+    pub chan_pending: Vec<usize>,
+    pub channels_done: usize,
+    pub failed: bool,
+    pub started_at: SimTime,
+    pub finished_at: Option<SimTime>,
+}
+
+impl Op {
+    pub fn is_done(&self) -> bool {
+        self.finished_at.is_some()
+    }
+
+    /// Algorithm bandwidth in Gbps (NCCL-Tests `algbw`): bytes / time.
+    pub fn algbw_gbps(&self) -> Option<f64> {
+        let end = self.finished_at?;
+        let ns = end.since(self.started_at).as_ns().max(1);
+        Some(self.bytes as f64 * 8.0 / ns as f64)
+    }
+
+    /// Bus bandwidth (NCCL-Tests `busbw`): algbw × correction factor.
+    pub fn busbw_gbps(&self, nranks: usize) -> Option<f64> {
+        let alg = self.algbw_gbps()?;
+        let n = nranks as f64;
+        let factor = match self.kind {
+            CollKind::SendRecv => 1.0,
+            CollKind::AllReduce => 2.0 * (n - 1.0) / n,
+            CollKind::AllGather | CollKind::ReduceScatter => (n - 1.0) / n,
+            CollKind::AllToAll => (n - 1.0) / n,
+        };
+        Some(alg * factor)
+    }
+}
+
+/// Aggregate counters (Fig 17 / Table 4/5 inputs).
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    /// Kernel launches per transport op (Table 4: VCCL launches none).
+    pub comm_kernel_launches: u64,
+    /// CPU-proxy busy nanoseconds per rank.
+    pub proxy_cpu_ns: Vec<u64>,
+    /// Copy-engine operations issued.
+    pub ce_ops: u64,
+    /// Total payload bytes completed on the wire.
+    pub wire_bytes: u64,
+    /// Per-port completion trace: (ns, port ordinal, bytes). Feeds the
+    /// bandwidth-timeline figures (13a, 18).
+    pub port_trace: Vec<(u64, usize, u64)>,
+    /// Failovers and failbacks executed.
+    pub failovers: u64,
+    pub failbacks: u64,
+    /// Ops that hung (no fault tolerance) — Fig 13b/14 GPU-waste input.
+    pub hung_ops: u64,
+    /// δ-probe verdicts observed (case-2 machinery).
+    pub probe_benign: u64,
+    pub probe_dead: u64,
+}
+
+/// The simulation.
+pub struct ClusterSim {
+    pub cfg: Config,
+    pub topo: Cluster,
+    pub engine: Engine<Event>,
+    pub rdma: RdmaNet,
+    pub gpus: Vec<GpuUnit>,
+    pub conns: Vec<Conn>,
+    conn_by_key: HashMap<(usize, usize, usize), ConnId>,
+    pub xfers: Vec<Xfer>,
+    pub ops: Vec<Op>,
+    qp_conn: HashMap<QpId, ConnId>,
+    intra_flows: HashMap<FlowId, XferId>,
+    pub monitor: Option<MonitorSet>,
+    pub rings: Vec<Ring>,
+    pub mempools: Vec<MemPool>,
+    pub stats: Stats,
+    pub rng: Rng,
+    /// Op-level SM residency: one communication kernel per (op, GPU), not
+    /// one per channel-transfer (Table 1's 2-SM inter-host default is per
+    /// operation). (op, gpu) → (sms held, live transfer refcount).
+    op_sms: HashMap<(usize, usize), (u32, u32)>,
+}
+
+/// Per-GPU execution resources.
+pub struct GpuUnit {
+    pub compute: GpuCompute,
+    pub ce: CopyEngines,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: Config) -> Self {
+        let topo = Cluster::new(cfg.topo.clone());
+        let fabric = &topo.fabric;
+        let mut net_cfg = cfg.net.clone();
+        net_cfg.link_gbps = cfg.net.link_gbps;
+        let rdma = RdmaNet::new(fabric, net_cfg);
+        let n_ranks = topo.num_ranks();
+        let gpus = (0..n_ranks)
+            .map(|_| GpuUnit {
+                compute: GpuCompute::new(cfg.gpu.clone()),
+                ce: CopyEngines::new(cfg.gpu.num_copy_engines, cfg.gpu.copy_engine_setup_ns),
+            })
+            .collect();
+        let rings = build_rings(&topo, cfg.vccl.channels.max(1));
+        let policy = if cfg.vccl.lazy_mempool { AllocPolicy::LazyPool } else { AllocPolicy::Eager };
+        let mempools = (0..n_ranks)
+            .map(|_| {
+                let mut m = MemPool::new(policy, cfg.vccl.zero_copy, cfg.vccl.chunk_bytes * 8);
+                m.on_init(n_ranks - 1, cfg.vccl.channels);
+                m
+            })
+            .collect();
+        let monitor = if cfg.vccl.monitor { Some(MonitorSet::new(&cfg.vccl)) } else { None };
+        let seed = cfg.seed;
+        ClusterSim {
+            cfg,
+            topo,
+            engine: Engine::new(),
+            rdma,
+            gpus,
+            conns: Vec::new(),
+            conn_by_key: HashMap::new(),
+            xfers: Vec::new(),
+            ops: Vec::new(),
+            qp_conn: HashMap::new(),
+            intra_flows: HashMap::new(),
+            monitor,
+            rings,
+            mempools,
+            stats: Stats { proxy_cpu_ns: vec![0; n_ranks], ..Default::default() },
+            rng: Rng::new(seed),
+            op_sms: HashMap::new(),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    // ------------------------------------------------------------------
+    // Connections
+    // ------------------------------------------------------------------
+
+    /// Get or create the connection (src → dst, channel). QPs for
+    /// inter-node connections are created on first need (bootstrap).
+    pub fn conn(&mut self, src: RankId, dst: RankId, channel: usize) -> ConnId {
+        let key = (src.0, dst.0, channel);
+        if let Some(&id) = self.conn_by_key.get(&key) {
+            return id;
+        }
+        let locality = locality_of(&self.topo, src, dst);
+        let id = ConnId(self.conns.len());
+        let (primary, primary_port, backup, backup_port) = match locality {
+            Locality::IntraNode => (None, None, None, None),
+            _ => {
+                // PXN: the payload leaves from the NIC rail-matched to the
+                // destination's local index (relay GPU's NIC).
+                let src_gpu = self.topo.gpu_of_rank(src);
+                let dst_gpu = self.topo.gpu_of_rank(dst);
+                let eff_src_gpu = if locality == Locality::InterPxn {
+                    crate::topology::GpuId { node: src_gpu.node, local: dst_gpu.local }
+                } else {
+                    src_gpu
+                };
+                let p_port = self.topo.primary_port(eff_src_gpu);
+                let d_port = self.topo.primary_port(dst_gpu);
+                let p_qp = self.rdma.create_qp(&self.topo.fabric, p_port, d_port);
+                self.qp_conn.insert(p_qp, id);
+                let (b_qp, b_port) = if self.cfg.vccl.fault_tolerance {
+                    let bp = self.topo.backup_port(eff_src_gpu);
+                    let bd = self.topo.backup_port(dst_gpu);
+                    let q = self.rdma.create_qp(&self.topo.fabric, bp, bd);
+                    self.qp_conn.insert(q, id);
+                    (Some(q), Some(bp))
+                } else {
+                    (None, None)
+                };
+                (Some(p_qp), Some(p_port), b_qp, b_port)
+            }
+        };
+        let probe = if self.cfg.vccl.fault_tolerance && locality != Locality::IntraNode {
+            Some(DeltaProbe::new(self.cfg.net.retry_window_ns(), self.cfg.vccl.delta_margin))
+        } else {
+            None
+        };
+        self.conns.push(Conn {
+            id,
+            src,
+            dst,
+            channel,
+            locality,
+            primary,
+            primary_port,
+            backup,
+            backup_port,
+            active: ActiveSide::Primary,
+            pending: std::collections::VecDeque::new(),
+            probe,
+            failovers: 0,
+            awaiting_failback: false,
+            used: false,
+        });
+        self.conn_by_key.insert(key, id);
+        id
+    }
+
+    // ------------------------------------------------------------------
+    // Transfers
+    // ------------------------------------------------------------------
+
+    /// Create a transfer on (src→dst, channel) and start pumping chunks.
+    pub fn start_xfer(&mut self, op: OpId, src: RankId, dst: RankId, channel: usize, bytes: u64)
+        -> XferId {
+        let conn_id = self.conn(src, dst, channel);
+        let locality = self.conns[conn_id.0].locality;
+        let profile = TransportProfile::resolve(&self.cfg, locality);
+        let now = self.now();
+        let chunk = self.cfg.vccl.chunk_bytes.min(bytes.max(1));
+        let chunks_total = bytes.div_ceil(chunk).max(1);
+        let xid = XferId(self.xfers.len());
+
+        // Lazy-mempool first-use accounting.
+        if !self.conns[conn_id.0].used {
+            self.conns[conn_id.0].used = true;
+            self.mempools[src.0].on_first_use(dst.0, channel);
+        }
+
+        // Acquire the transport's SM residency: one comm kernel per
+        // (op, GPU) — channel transfers of the same op share it.
+        let (sms_src, sms_dst) = (profile.src_sms, profile.dst_sms);
+        self.op_sm_acquire(op, src.0, sms_src, now);
+        self.op_sm_acquire(op, dst.0, sms_dst, now);
+
+        let setup = profile.setup_ns;
+        self.xfers.push(Xfer {
+            id: xid,
+            op,
+            channel,
+            conn: conn_id,
+            bytes,
+            chunk_bytes: chunk,
+            chunks_total,
+            send: SendPointers::default(),
+            recv: RecvPointers::default(),
+            fifo: SyncFifo::default(),
+            profile,
+            locality,
+            stage_free_at: now + SimTime::ns(setup),
+            sms_src,
+            sms_dst,
+            done: false,
+            started_at: now,
+            finished_at: None,
+        });
+        self.conns[conn_id.0].pending.push_back(xid);
+        // Only the queue head transmits; followers wait their turn.
+        if self.conns[conn_id.0].pending.len() == 1 {
+            self.pump_xfer(xid);
+        }
+        xid
+    }
+
+    /// Sender-side pipeline: stage (copy/launch/sync) the next chunks into
+    /// flight, respecting the CTS slot window.
+    fn pump_xfer(&mut self, xid: XferId) {
+        const SLOTS: u64 = 8; // NCCL FIFO depth / CTS credits
+        let now = self.now();
+        loop {
+            let x = &self.xfers[xid.0];
+            if x.done || x.send.posted >= x.chunks_total || x.inflight() >= SLOTS {
+                return;
+            }
+            let chunk = x
+                .chunk_bytes
+                .min(x.bytes.saturating_sub(x.send.posted * x.chunk_bytes))
+                .max(1);
+            let src = self.conns[x.conn.0].src;
+            let base = now.max(x.stage_free_at);
+            // When the chunk becomes postable, per data path.
+            let ready_at = if x.locality == Locality::IntraNode {
+                match x.profile.intra_path {
+                    // cudaMemcpy through a copy engine: admission queueing
+                    // + setup latency; the byte movement itself is the
+                    // NVLink flow started at ChunkReady.
+                    DataPath::CopyEngine => {
+                        let busy = (chunk as f64
+                            / (self.cfg.gpu.nvlink_gbps * 0.125 * x.profile.intra_efficiency))
+                            as u64;
+                        let grant = self.gpus[src.0].ce.admit(base, busy);
+                        self.stats.ce_ops += 1;
+                        grant.start_at
+                    }
+                    // SM copy kernel streams chunks back-to-back.
+                    _ => base,
+                }
+            } else {
+                let stage_ns = match x.profile.stage {
+                    None | Some(DataPath::ZeroCopy) => 0,
+                    Some(DataPath::SmStaged) => {
+                        // SM copy app→chunk buffer at HBM rate.
+                        (chunk as f64 / (self.cfg.gpu.hbm_gbps * 0.125)) as u64
+                    }
+                    Some(DataPath::CopyEngine) => {
+                        // PXN relay: NVLink-rate CE copy to the rail GPU.
+                        let busy = (chunk as f64
+                            / (self.cfg.gpu.nvlink_gbps * 0.125 * x.profile.intra_efficiency))
+                            as u64;
+                        let grant = self.gpus[src.0].ce.admit(base, busy);
+                        self.stats.ce_ops += 1;
+                        (grant.start_at + SimTime::ns(busy)).since(base).as_ns()
+                    }
+                };
+                base + SimTime::ns(stage_ns + x.profile.per_chunk_sync_ns)
+            };
+            let x = &mut self.xfers[xid.0];
+            x.stage_free_at = ready_at;
+            x.send.posted += 1;
+            // Proxy CPU cost per chunk (Fig 17: SM-free shifts work to CPU).
+            let proxy_ns = match self.cfg.vccl.transport {
+                Transport::SmFree => 1_200,
+                Transport::NcclxLike => 900,
+                Transport::Kernel => 700,
+            };
+            self.stats.proxy_cpu_ns[src.0] += proxy_ns;
+            self.engine.schedule_at(ready_at, Event::ChunkReady { xfer: xid });
+        }
+    }
+
+    /// A staged chunk is ready: put it on the wire (QP or NVLink flow).
+    fn on_chunk_ready(&mut self, xid: XferId) {
+        let now = self.now();
+        let x = &self.xfers[xid.0];
+        if x.done || x.send.transmitted >= x.chunks_total {
+            return;
+        }
+        let conn_id = x.conn;
+        let chunk = x
+            .chunk_bytes
+            .min(x.bytes.saturating_sub(x.send.transmitted * x.chunk_bytes))
+            .max(1);
+        let conn = &self.conns[conn_id.0];
+        match conn.locality {
+            Locality::IntraNode => {
+                let src_gpu = self.topo.gpu_of_rank(conn.src);
+                let dst_gpu = self.topo.gpu_of_rank(conn.dst);
+                let path = self.topo.fabric.path_nvlink(src_gpu, dst_gpu);
+                // SM copies move fewer bytes/s on the same link: inflate the
+                // byte count by 1/efficiency (time-equivalent).
+                let eff_bytes = (chunk as f64 / self.xfers[xid.0].profile.intra_efficiency) as u64;
+                // Handshake tail: device-side flag for the copy kernel,
+                // shared-memory P2pRegInfo flags for the CE path (§3.2-1).
+                let tail = match self.cfg.vccl.transport {
+                    Transport::Kernel => 500,
+                    _ => 300,
+                };
+                let (flow, timers) = self.rdma.flows.start(
+                    now,
+                    path,
+                    eff_bytes,
+                    tail,
+                    crate::net::FlowMeta(xid.0 as u64),
+                );
+                self.intra_flows.insert(flow, xid);
+                for t in timers {
+                    self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                }
+                self.xfers[xid.0].send.transmitted += 1;
+            }
+            _ => {
+                let Some(mut qp) = conn.active_qp() else { return };
+                // Posting to an errored QP would silently flush: perceive
+                // the failure NOW and post on the freshly-activated backup.
+                if self.rdma.qp_state(qp) == QpState::Error {
+                    self.on_conn_failure(conn_id, qp);
+                    match self.conns[conn_id.0].active_qp() {
+                        Some(q) if self.rdma.qp_state(q) == QpState::Rts => qp = q,
+                        _ => {
+                            // Both paths dead (§6 limitation): the op hangs.
+                            let op = self.xfers[xid.0].op;
+                            if !self.ops[op.0].failed {
+                                self.ops[op.0].failed = true;
+                                self.stats.hung_ops += 1;
+                            }
+                            return;
+                        }
+                    }
+                }
+                let extra_tail = if self.xfers[xid.0].profile.recv_copy {
+                    // Receiver chunk→app copy + its poll.
+                    (chunk as f64 / (self.cfg.gpu.hbm_gbps * 0.125)) as u64
+                        + self.cfg.gpu.gpu_cpu_poll_ns
+                } else {
+                    0
+                };
+                let (_wr, out) = self.rdma.post_send(qp, chunk, now, extra_tail);
+                self.xfers[xid.0].send.transmitted += 1;
+                // Arm the receiver's δ-probe (case 2) on first outstanding.
+                let deadline = self.conns[conn_id.0]
+                    .probe
+                    .as_mut()
+                    .and_then(|p| p.arm(now));
+                if let Some((at, epoch)) = deadline {
+                    self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch });
+                }
+                self.absorb(out);
+            }
+        }
+    }
+
+    /// Schedule NetOutput items into the engine and route WCs.
+    fn absorb(&mut self, out: crate::net::rdma::NetOutput) {
+        for t in out.timers {
+            self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+        }
+        for (qp, epoch, at) in out.retry_deadlines {
+            self.engine.schedule_at(at, Event::QpRetry { qp, epoch });
+        }
+        for (qp, at) in out.warmups {
+            self.engine.schedule_at(at, Event::QpWarm { qp });
+        }
+        for wc in out.wcs {
+            self.on_wc(wc);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Completions
+    // ------------------------------------------------------------------
+
+    fn on_wc(&mut self, wc: WorkCompletion) {
+        let Some(&conn_id) = self.qp_conn.get(&wc.qp) else { return };
+        let conn = &self.conns[conn_id.0];
+        match wc.status {
+            CompletionStatus::Success => {
+                // Successful chunks count whichever QP carried them: after
+                // failback the backup QP drains its in-flight window while
+                // new chunks already flow on the primary.
+                let port = self.rdma.qp_src(wc.qp);
+                let ordinal = self.topo.fabric.port_ordinal(port);
+                let backlog = self.rdma.port_backlog_bytes(port);
+                if let Some(mon) = &mut self.monitor {
+                    let _ = mon.on_wc(ordinal, wc.posted_at, wc.completed_at, wc.bytes, backlog);
+                }
+                self.stats.port_trace.push((wc.completed_at.as_ns(), ordinal, wc.bytes));
+                self.stats.wire_bytes += wc.bytes;
+                let Some(xid) = conn.cur_xfer() else { return };
+                self.on_chunk_complete(xid, conn_id);
+            }
+            CompletionStatus::RetryExceeded => {
+                self.stats.probe_dead += 0; // (case-1 path; probes counted separately)
+                self.on_conn_failure(conn_id, wc.qp);
+            }
+            CompletionStatus::WrFlushed => {
+                // Flushed WRs of a failed-over QP: already rolled back by
+                // pointer migration — ignore.
+            }
+        }
+    }
+
+    fn on_chunk_complete(&mut self, xid: XferId, conn_id: ConnId) {
+        let now = self.now();
+        {
+            let x = &mut self.xfers[xid.0];
+            if x.done {
+                return;
+            }
+            x.send.acked += 1;
+            x.recv.received += 1;
+            x.recv.done += 1;
+            x.recv.posted = x.recv.posted.max(x.recv.done);
+        }
+        // Progress the δ-probe.
+        let more = {
+            let x = &self.xfers[xid.0];
+            x.send.acked < x.chunks_total
+        };
+        let redeadline = self.conns[conn_id.0]
+            .probe
+            .as_mut()
+            .and_then(|p| p.on_progress(now, more));
+        if let Some((at, epoch)) = redeadline {
+            self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch });
+        }
+        if self.xfers[xid.0].send.acked >= self.xfers[xid.0].chunks_total {
+            self.finish_xfer(xid);
+        } else {
+            self.pump_xfer(xid);
+        }
+    }
+
+    fn finish_xfer(&mut self, xid: XferId) {
+        let now = self.now();
+        let (conn_id, op, channel, sms_src, sms_dst) = {
+            let x = &mut self.xfers[xid.0];
+            x.done = true;
+            x.finished_at = Some(now);
+            (x.conn, x.op, x.channel, x.sms_src, x.sms_dst)
+        };
+        let (src, dst, next) = {
+            let c = &mut self.conns[conn_id.0];
+            debug_assert_eq!(c.pending.front(), Some(&xid));
+            c.pending.pop_front();
+            if let Some(p) = c.probe.as_mut() {
+                p.disarm();
+            }
+            (c.src, c.dst, c.pending.front().copied())
+        };
+        // Wake the next queued transfer on this connection.
+        if let Some(n) = next {
+            self.pump_xfer(n);
+        }
+        self.op_sm_release(op, src.0, sms_src, now);
+        self.op_sm_release(op, dst.0, sms_dst, now);
+        self.on_xfer_done(op, channel);
+    }
+
+    /// Refcounted op-level comm-kernel SM acquisition.
+    fn op_sm_acquire(&mut self, op: OpId, gpu: usize, sms: u32, now: SimTime) {
+        if sms == 0 {
+            return;
+        }
+        let entry = self.op_sms.entry((op.0, gpu)).or_insert((0, 0));
+        if entry.1 == 0 {
+            entry.0 = sms;
+            entry.1 = 1;
+            self.stats.comm_kernel_launches += 1;
+            for t in self.gpus[gpu].compute.acquire_comm_sms(sms, now) {
+                self.engine.schedule_at(t.at, Event::GpuTask { gpu, task: t.task, gen: t.gen });
+            }
+        } else {
+            entry.1 += 1;
+        }
+    }
+
+    fn op_sm_release(&mut self, op: OpId, gpu: usize, sms: u32, now: SimTime) {
+        if sms == 0 {
+            return;
+        }
+        let Some(entry) = self.op_sms.get_mut(&(op.0, gpu)) else { return };
+        entry.1 -= 1;
+        if entry.1 == 0 {
+            let held = entry.0;
+            self.op_sms.remove(&(op.0, gpu));
+            for t in self.gpus[gpu].compute.release_comm_sms(held, now) {
+                self.engine.schedule_at(t.at, Event::GpuTask { gpu, task: t.task, gen: t.gen });
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fault tolerance (§3.3)
+    // ------------------------------------------------------------------
+
+    /// A QP surfaced a retry-exceeded error: fail over to the backup QP (if
+    /// any), or mark the op as hung (the NCCL baseline behaviour).
+    fn on_conn_failure(&mut self, conn_id: ConnId, failed_qp: QpId) {
+        let now = self.now();
+        let conn = &self.conns[conn_id.0];
+        let error_port = if Some(failed_qp) == conn.primary {
+            conn.primary_port
+        } else {
+            conn.backup_port
+        };
+        let has_backup = conn.backup.is_some() && Some(failed_qp) == conn.primary;
+        let cur = conn.cur_xfer();
+        if cur.is_none() {
+            // Idle connection: switch to the backup right away so the next
+            // transfer posts on a live QP, and start warming the primary.
+            if has_backup {
+                let c = &mut self.conns[conn_id.0];
+                c.active = ActiveSide::Backup;
+                c.awaiting_failback = true;
+                c.failovers += 1;
+                self.stats.failovers += 1;
+                let out = self.rdma.reset_to_rts(failed_qp, now);
+                self.absorb(out);
+            }
+            return;
+        }
+        let xid = cur.unwrap();
+        if !has_backup {
+            // No backup (NCCL baseline, or the backup itself died): the
+            // collective hangs — the failure mode Fig 13b shows for NCCL.
+            let op = self.xfers[xid.0].op;
+            if !self.ops[op.0].failed {
+                self.ops[op.0].failed = true;
+                self.stats.hung_ops += 1;
+            }
+            return;
+        }
+
+        // --- VCCL failover ---
+        // 1. Migrate pointers to the breakpoint (Fig 8).
+        let rolled_back = {
+            let x = &mut self.xfers[xid.0];
+            let lost = migrate_to_breakpoint(&mut x.send, &mut x.recv, &mut x.fifo);
+            x.fifo.error_port = error_port;
+            lost
+        };
+        // 2. Switch to the backup QP.
+        {
+            let c = &mut self.conns[conn_id.0];
+            c.active = ActiveSide::Backup;
+            c.awaiting_failback = true;
+            c.failovers += 1;
+            if let Some(p) = c.probe.as_mut() {
+                p.disarm();
+            }
+        }
+        self.stats.failovers += 1;
+        // 3. Proactively reset the dead primary so its warm-up overlaps the
+        //    failover period (§3.3 "recovery of normal QPs").
+        let out = self.rdma.reset_to_rts(failed_qp, now);
+        self.absorb(out);
+        // 4. Re-post the rolled-back window on the backup QP (breakpoint
+        //    retransmission). The chunks were already staged — only the
+        //    proxy's ibv_post_send needs to re-run, so a small CPU delay.
+        for i in 0..rolled_back {
+            self.engine.schedule_at(
+                now + SimTime::ns(2_000 + i * 500),
+                Event::ChunkReady { xfer: xid },
+            );
+        }
+        // 5. Resume normal pumping for not-yet-staged chunks.
+        self.pump_xfer(xid);
+    }
+
+    /// δ-timeout double-check (case 2).
+    fn on_delta_check(&mut self, conn_id: ConnId, epoch: u32) {
+        let now = self.now();
+        let conn = &self.conns[conn_id.0];
+        if conn.cur_xfer().is_none() {
+            // Nothing in flight: the probe must not keep re-arming.
+            if let Some(p) = self.conns[conn_id.0].probe.as_mut() {
+                p.disarm();
+            }
+            return;
+        }
+        let conn = &self.conns[conn_id.0];
+        let Some(qp) = conn.active_qp() else { return };
+        let link_alive = {
+            let path = self.rdma.qp_path_up(qp, &self.topo.fabric);
+            path
+        };
+        let Some(probe) = self.conns[conn_id.0].probe.as_mut() else { return };
+        match probe.check(epoch, now, link_alive) {
+            ProbeVerdict::NotDue => {}
+            ProbeVerdict::SenderStalled => {
+                self.stats.probe_benign += 1;
+                if let Some((at, e)) = self.conns[conn_id.0].probe.as_ref().unwrap().next_deadline()
+                {
+                    self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch: e });
+                }
+            }
+            ProbeVerdict::LinkDead => {
+                self.stats.probe_dead += 1;
+                // Receiver generates a local WC error → same failover path.
+                self.on_conn_failure(conn_id, qp);
+            }
+        }
+    }
+
+    /// Port state change entry points (failure injection).
+    pub fn inject_port_down(&mut self, port: PortId, at: SimTime) {
+        self.engine.schedule_at(at, Event::PortDown { port });
+    }
+
+    pub fn inject_port_up(&mut self, port: PortId, at: SimTime) {
+        self.engine.schedule_at(at, Event::PortUp { port });
+    }
+
+    fn on_port_state(&mut self, port: PortId, up: bool) {
+        let now = self.now();
+        self.topo.fabric.set_port_up(port, up);
+        let out = self.rdma.set_port_up(&self.topo.fabric, port, up, now);
+        self.absorb(out);
+        if up {
+            // Failback check: any connection waiting on a healed path may
+            // return once its (proactively reset) primary QP is warm.
+            let candidates: Vec<ConnId> = self
+                .conns
+                .iter()
+                .filter(|c| c.awaiting_failback)
+                .map(|c| c.id)
+                .collect();
+            for cid in candidates {
+                self.try_failback(cid);
+            }
+        }
+    }
+
+    fn try_failback(&mut self, conn_id: ConnId) {
+        let now = self.now();
+        let c = &self.conns[conn_id.0];
+        let (Some(pqp), Some(_pport)) = (c.primary, c.primary_port) else { return };
+        // The WHOLE primary path must be healthy — the failed port may be
+        // on either end (or a trunk), not just the local NIC.
+        if self.rdma.qp_state(pqp) != QpState::Rts
+            || !self.rdma.qp_path_up(pqp, &self.topo.fabric)
+        {
+            return;
+        }
+        if !self.rdma.is_warm(pqp, now) {
+            // Will fire again on the QpWarm event.
+            return;
+        }
+        let c = &mut self.conns[conn_id.0];
+        c.active = ActiveSide::Primary;
+        c.awaiting_failback = false;
+        self.stats.failbacks += 1;
+        // New chunks flow on the primary from here on; re-pump in case the
+        // transfer throttled down on the backup.
+        if let Some(xid) = self.conns[conn_id.0].cur_xfer() {
+            self.pump_xfer(xid);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Event loop
+    // ------------------------------------------------------------------
+
+    pub fn dispatch(&mut self, ev: Event) {
+        let now = self.now();
+        match ev {
+            Event::Flow { flow, gen } => {
+                if let Some(&xid) = self.intra_flows.get(&flow) {
+                    let (meta, timers) = self.rdma.flows.try_finish(flow, gen, now);
+                    for t in timers {
+                        self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                    }
+                    if meta.is_some() {
+                        self.intra_flows.remove(&flow);
+                        let conn_id = self.xfers[xid.0].conn;
+                        self.stats.wire_bytes += self.xfers[xid.0].chunk_bytes;
+                        self.on_chunk_complete(xid, conn_id);
+                    }
+                } else {
+                    let out = self.rdma.on_flow_timer(flow, gen, now);
+                    self.absorb(out);
+                }
+            }
+            Event::QpRetry { qp, epoch } => {
+                let out = self.rdma.on_retry_deadline(qp, epoch, now);
+                self.absorb(out);
+            }
+            Event::QpWarm { qp } => {
+                let out = self.rdma.on_warm(qp, now);
+                self.absorb(out);
+                // A freshly warm primary may enable failback.
+                if let Some(&cid) = self.qp_conn.get(&qp) {
+                    if self.conns[cid.0].awaiting_failback && self.conns[cid.0].primary == Some(qp)
+                    {
+                        self.try_failback(cid);
+                    }
+                }
+            }
+            Event::GpuTask { gpu, task, gen } => {
+                let _ = self.gpus[gpu].compute.try_finish(task, gen, now);
+            }
+            Event::ChunkReady { xfer } => self.on_chunk_ready(xfer),
+            Event::PortDown { port } => self.on_port_state(port, false),
+            Event::PortUp { port } => self.on_port_state(port, true),
+            Event::DeltaCheck { conn, epoch } => self.on_delta_check(conn, epoch),
+            Event::OpStep { op, channel } => self.issue_step(op, channel),
+        }
+    }
+
+    /// Run until the engine drains or `deadline` passes. Returns the time.
+    pub fn run_until(&mut self, deadline: SimTime) -> SimTime {
+        while let Some(t) = self.engine.peek_time() {
+            if t > deadline {
+                break;
+            }
+            let (_, ev) = self.engine.pop().unwrap();
+            self.dispatch(ev);
+        }
+        self.engine.now()
+    }
+
+    /// Run to quiescence (panics after `max_events` as a hang backstop).
+    pub fn run_to_idle(&mut self, max_events: u64) -> SimTime {
+        let debug = std::env::var("VCCL_DEBUG_EVENTS").is_ok();
+        let mut n: u64 = 0;
+        let mut counts = [0u64; 9];
+        while let Some((_, ev)) = self.engine.pop() {
+            if debug {
+                let k = match ev {
+                    Event::Flow { .. } => 0,
+                    Event::QpRetry { .. } => 1,
+                    Event::QpWarm { .. } => 2,
+                    Event::GpuTask { .. } => 3,
+                    Event::ChunkReady { .. } => 4,
+                    Event::PortDown { .. } => 5,
+                    Event::PortUp { .. } => 6,
+                    Event::DeltaCheck { .. } => 7,
+                    Event::OpStep { .. } => 8,
+                };
+                counts[k] += 1;
+                if n % 10_000_000 == 0 && n > 0 {
+                    eprintln!("[debug] n={n} now={} counts(flow,retry,warm,gpu,chunk,down,up,delta,step)={counts:?}", self.engine.now());
+                }
+            }
+            self.dispatch(ev);
+            n += 1;
+            assert!(n < max_events, "simulation did not quiesce in {max_events} events");
+        }
+        self.engine.now()
+    }
+
+    /// Run until the given op completes (or fails / the engine drains).
+    /// Unlike [`Self::run_to_idle`] this leaves future events (warm-ups,
+    /// scheduled port flaps) pending, so back-to-back ops see a continuous
+    /// clock. Returns true if the op finished.
+    pub fn run_until_op(&mut self, op: OpId, max_events: u64) -> bool {
+        let mut n: u64 = 0;
+        while !self.ops[op.0].is_done() && !self.ops[op.0].failed {
+            let Some((_, ev)) = self.engine.pop() else { break };
+            self.dispatch(ev);
+            n += 1;
+            assert!(n < max_events, "op did not finish in {max_events} events");
+        }
+        self.ops[op.0].is_done()
+    }
+
+    /// Bandwidth timeline of a port: bucketed Gbps series from the WC trace.
+    pub fn port_bandwidth_series(&self, port: PortId, bucket: SimTime) -> Vec<(f64, f64)> {
+        let ordinal = self.topo.fabric.port_ordinal(port);
+        let b = bucket.as_ns().max(1);
+        let mut buckets: HashMap<u64, u64> = HashMap::new();
+        for &(t, p, bytes) in &self.stats.port_trace {
+            if p == ordinal {
+                *buckets.entry(t / b).or_default() += bytes;
+            }
+        }
+        let mut out: Vec<(f64, f64)> = buckets
+            .into_iter()
+            .map(|(k, bytes)| {
+                ((k * b) as f64 / 1e9, bytes as f64 * 8.0 / b as f64)
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::Verdict;
+    use crate::util::ByteSize;
+
+    /// Fast-failing config so failover tests run in bounded sim time:
+    /// retry window ≈ 8.4 ms, warm-up 100 ms.
+    fn fast_ft_cfg() -> Config {
+        let mut cfg = Config::paper_defaults();
+        cfg.vccl.channels = 1;
+        cfg.net.ib_timeout_exp = 10;
+        cfg.net.ib_retry_cnt = 2;
+        cfg.net.qp_warmup_ns = 100_000_000;
+        cfg
+    }
+
+    #[test]
+    fn failover_completes_transfer_through_backup() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        // 256MB takes ~5.5s at 388Gbps; kill the port at 2ms, never restore.
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        let op = &s.ops[id.0];
+        assert!(op.is_done(), "transfer must complete on the backup QP");
+        assert!(!op.failed);
+        assert_eq!(s.stats.failovers, 1);
+        // The stall costs ≈ the retry window before failover kicks in.
+        let t = op.finished_at.unwrap().since(op.started_at);
+        let window = s.cfg.net.retry_window_ns();
+        assert!(t.as_ns() > window, "t={t} must include the retry window");
+    }
+
+    #[test]
+    fn flap_within_retry_window_needs_no_failover() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        s.inject_port_up(port, SimTime::ms(4)); // back before ~10.4ms deadline
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done());
+        assert_eq!(s.stats.failovers, 0, "short flap must ride out the retry window");
+    }
+
+    #[test]
+    fn failback_returns_to_primary_after_port_up() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        // Port heals at 300ms — after failover (≈10ms) and after the
+        // proactively-started warm-up (100ms) has finished.
+        s.inject_port_up(port, SimTime::ms(300));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::gb(1).0);
+        s.run_to_idle(100_000_000);
+        assert!(s.ops[id.0].is_done());
+        assert_eq!(s.stats.failovers, 1);
+        assert_eq!(s.stats.failbacks, 1, "traffic must return to the primary QP");
+    }
+
+    #[test]
+    fn nccl_baseline_hangs_on_port_failure() {
+        let mut cfg = Config::nccl_baseline();
+        cfg.vccl.channels = 1;
+        cfg.net.ib_timeout_exp = 10;
+        cfg.net.ib_retry_cnt = 2;
+        let mut s = ClusterSim::new(cfg);
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        let op = &s.ops[id.0];
+        assert!(op.failed, "NCCL baseline must hang (Fig 13b)");
+        assert!(!op.is_done());
+        assert_eq!(s.stats.hung_ops, 1);
+        assert_eq!(s.stats.failovers, 0);
+    }
+
+    #[test]
+    fn backup_qp_uses_second_closest_nic() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let cid = s.conn(RankId(0), RankId(8), 0);
+        let c = &s.conns[cid.0];
+        let p = c.primary_port.unwrap();
+        let b = c.backup_port.unwrap();
+        assert_ne!(p, b);
+        assert_eq!(p.nic.local, 0);
+        assert_eq!(b.nic.local, 1); // neighbouring RNIC (§3.3)
+    }
+
+    #[test]
+    fn dual_port_backup_on_same_nic() {
+        let mut cfg = fast_ft_cfg();
+        cfg.topo.dual_port_nics = true;
+        let mut s = ClusterSim::new(cfg);
+        let cid = s.conn(RankId(0), RankId(8), 0);
+        let c = &s.conns[cid.0];
+        let p = c.primary_port.unwrap();
+        let b = c.backup_port.unwrap();
+        assert_eq!(p.nic, b.nic, "dual-port: backup lives on the other port");
+        assert_ne!(p.port, b.port);
+    }
+
+    #[test]
+    fn monitor_sees_traffic_and_stays_healthy() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        s.run_to_idle(20_000_000);
+        assert!(s.ops[id.0].is_done());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        let ordinal = s.topo.fabric.port_ordinal(port);
+        let mon = s.monitor.as_ref().unwrap();
+        assert!(!mon.samples(ordinal).is_empty(), "monitor must emit samples");
+        assert!(mon
+            .verdicts(ordinal)
+            .iter()
+            .all(|(_, v)| *v == Verdict::Healthy));
+    }
+
+    #[test]
+    fn mempool_lazy_vs_eager_footprint() {
+        let mut v = ClusterSim::new(fast_ft_cfg());
+        let _ = v.run_p2p(RankId(0), RankId(8), ByteSize::mb(8).0);
+        let lazy_peak: u64 = v.mempools.iter().map(|m| m.peak_bytes()).sum();
+        let mut cfg = Config::nccl_baseline();
+        cfg.vccl.channels = 1;
+        let mut n = ClusterSim::new(cfg);
+        let _ = n.run_p2p(RankId(0), RankId(8), ByteSize::mb(8).0);
+        let eager_peak: u64 = n.mempools.iter().map(|m| m.peak_bytes()).sum();
+        assert!(lazy_peak * 4 < eager_peak, "lazy={lazy_peak} eager={eager_peak}");
+    }
+
+    #[test]
+    fn proxy_cpu_higher_for_smfree() {
+        // Fig 17: SM-free shifts ~2% utilization to the CPU proxies.
+        let mut v = ClusterSim::new(fast_ft_cfg());
+        let _ = v.run_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        let v_cpu: u64 = v.stats.proxy_cpu_ns.iter().sum();
+        let mut cfg = Config::nccl_baseline();
+        cfg.vccl.channels = 1;
+        let mut n = ClusterSim::new(cfg);
+        let _ = n.run_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        let n_cpu: u64 = n.stats.proxy_cpu_ns.iter().sum();
+        assert!(v_cpu > n_cpu, "vccl={v_cpu} nccl={n_cpu}");
+    }
+}

@@ -1,0 +1,303 @@
+//! Collective primitives over the cluster simulation.
+//!
+//! Every primitive decomposes into per-channel ring steps (or a direct
+//! exchange for AlltoAll), each step a set of chunked point-to-point
+//! transfers. The decomposition mirrors NCCL's Simple-protocol ring
+//! algorithms; channels stripe over rails (see [`crate::topology::rings`]).
+//!
+//! | primitive      | steps      | per-step payload per rank        |
+//! |----------------|------------|----------------------------------|
+//! | SendRecv       | 1          | bytes / channels                 |
+//! | AllReduce      | 2(N−1)     | bytes / (N · channels)           |
+//! | AllGather      | N−1        | bytes / (N · channels)           |
+//! | ReduceScatter  | N−1        | bytes / (N · channels)           |
+//! | AlltoAll       | 1          | bytes / (N · channels) per peer  |
+//!
+//! Reduction steps (AllReduce's first N−1, all of ReduceScatter) add a
+//! reduction-kernel delay between ring steps — reductions are *not*
+//! SM-free in either system (§6: VCCL targets reduction-free primitives).
+
+use crate::sim::SimTime;
+use crate::topology::RankId;
+
+use super::cluster::{ClusterSim, CollKind, Event, Op, OpId};
+
+impl ClusterSim {
+    /// Submit a collective over all ranks. Returns its id; drive with
+    /// [`ClusterSim::run_until`] / [`ClusterSim::run_to_idle`].
+    pub fn submit(&mut self, kind: CollKind, bytes: u64) -> OpId {
+        assert_ne!(kind, CollKind::SendRecv, "use submit_p2p for SendRecv");
+        self.submit_inner(kind, bytes, None)
+    }
+
+    /// Submit a point-to-point SendRecv.
+    pub fn submit_p2p(&mut self, src: RankId, dst: RankId, bytes: u64) -> OpId {
+        self.submit_inner(CollKind::SendRecv, bytes, Some((src, dst)))
+    }
+
+    fn submit_inner(&mut self, kind: CollKind, bytes: u64, p2p: Option<(RankId, RankId)>) -> OpId {
+        let n = self.topo.num_ranks();
+        let channels = self.cfg.vccl.channels.max(1);
+        let steps_total = match kind {
+            CollKind::SendRecv | CollKind::AllToAll => 1,
+            CollKind::AllReduce => 2 * (n - 1),
+            CollKind::AllGather | CollKind::ReduceScatter => n - 1,
+        };
+        let id = OpId(self.ops.len());
+        self.ops.push(Op {
+            id,
+            kind,
+            bytes,
+            p2p,
+            channels,
+            steps_total,
+            chan_step: vec![0; channels],
+            chan_pending: vec![0; channels],
+            channels_done: 0,
+            failed: false,
+            started_at: self.now(),
+            finished_at: None,
+        });
+        for c in 0..channels {
+            let now = self.now();
+            self.engine.schedule_at(now, Event::OpStep { op: id, channel: c });
+        }
+        id
+    }
+
+    /// Issue the current step of `op` on `channel` (OpStep event handler).
+    pub(crate) fn issue_step(&mut self, op: OpId, channel: usize) {
+        let (kind, bytes, p2p, channels, nranks) = {
+            let o = &self.ops[op.0];
+            if o.failed || o.is_done() {
+                return;
+            }
+            (o.kind, o.bytes, o.p2p, o.channels, self.topo.num_ranks())
+        };
+        match kind {
+            CollKind::SendRecv => {
+                let (src, dst) = p2p.expect("SendRecv without endpoints");
+                let per = (bytes / channels as u64).max(1);
+                self.ops[op.0].chan_pending[channel] = 1;
+                self.start_xfer(op, src, dst, channel, per);
+            }
+            CollKind::AllReduce | CollKind::AllGather | CollKind::ReduceScatter => {
+                let seg = (bytes / (nranks as u64 * channels as u64)).max(1);
+                let ring = self.rings[channel % self.rings.len()].clone();
+                self.ops[op.0].chan_pending[channel] = nranks;
+                for &r in &ring.order {
+                    let next = ring.next(r);
+                    self.start_xfer(op, r, next, channel, seg);
+                }
+            }
+            CollKind::AllToAll => {
+                let per = (bytes / (nranks as u64 * channels as u64)).max(1);
+                self.ops[op.0].chan_pending[channel] = nranks * (nranks - 1);
+                for r in 0..nranks {
+                    for s in 0..nranks {
+                        if r != s {
+                            self.start_xfer(op, RankId(r), RankId(s), channel, per);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A transfer of `op` on `channel` finished: advance the step machine.
+    pub(crate) fn on_xfer_done(&mut self, op: OpId, channel: usize) {
+        let now = self.now();
+        let nranks = self.topo.num_ranks();
+        let (advance, reduce_delay_ns) = {
+            let o = &mut self.ops[op.0];
+            debug_assert!(o.chan_pending[channel] > 0);
+            o.chan_pending[channel] -= 1;
+            if o.chan_pending[channel] > 0 {
+                return;
+            }
+            o.chan_step[channel] += 1;
+            if o.chan_step[channel] >= o.steps_total {
+                o.channels_done += 1;
+                if o.channels_done == o.channels {
+                    o.finished_at = Some(now);
+                }
+                return;
+            }
+            // Reduction delay between ring steps where a reduce happens:
+            // AllReduce's reduce-scatter phase (steps 1..N−1 consume data)
+            // and every ReduceScatter step.
+            let seg = (o.bytes / (nranks as u64 * o.channels as u64)).max(1);
+            let reduces = match o.kind {
+                CollKind::AllReduce => o.chan_step[channel] < nranks, // first N−1 steps
+                CollKind::ReduceScatter => true,
+                _ => false,
+            };
+            let delay = if reduces {
+                (seg as f64 / (self.cfg.gpu.reduce_gbps * 0.125)) as u64
+            } else {
+                0
+            };
+            (true, delay)
+        };
+        if advance {
+            self.engine
+                .schedule(SimTime::ns(reduce_delay_ns), Event::OpStep { op, channel });
+        }
+    }
+
+    /// Convenience: run one collective to completion and return (time, op).
+    pub fn run_collective(&mut self, kind: CollKind, bytes: u64) -> (SimTime, &Op) {
+        let id = self.submit(kind, bytes);
+        self.run_to_idle(200_000_000);
+        let op = &self.ops[id.0];
+        let t = op.finished_at.expect("collective did not finish");
+        (t.since(op.started_at), op)
+    }
+
+    /// Convenience: run one SendRecv to completion.
+    pub fn run_p2p(&mut self, src: RankId, dst: RankId, bytes: u64) -> (SimTime, &Op) {
+        let id = self.submit_p2p(src, dst, bytes);
+        self.run_to_idle(200_000_000);
+        let op = &self.ops[id.0];
+        let t = op.finished_at.expect("p2p did not finish");
+        (t.since(op.started_at), op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::ByteSize;
+
+    fn sim(mut cfg: Config) -> ClusterSim {
+        cfg.vccl.channels = 2; // keep event counts small in unit tests
+        ClusterSim::new(cfg)
+    }
+
+    #[test]
+    fn inter_node_p2p_reaches_line_rate() {
+        let mut s = sim(Config::paper_defaults());
+        let (t, op) = s.run_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        let bw = op.algbw_gbps().unwrap();
+        // One NIC pair at 400 Gbps × wire efficiency ≈ 388; expect > 350.
+        assert!(bw > 350.0 && bw <= 400.0, "bw={bw} t={t}");
+    }
+
+    #[test]
+    fn intra_node_p2p_beats_inter_node() {
+        let mut s1 = sim(Config::paper_defaults());
+        let (_, op1) = s1.run_p2p(RankId(0), RankId(1), ByteSize::mb(64).0);
+        let intra = op1.algbw_gbps().unwrap();
+        let mut s2 = sim(Config::paper_defaults());
+        let (_, op2) = s2.run_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        let inter = op2.algbw_gbps().unwrap();
+        assert!(intra > 4.0 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn smfree_intra_large_message_faster_than_kernel() {
+        // §4.1: copy engines saturate NVLink better (+7% large-message BW).
+        let mut v = sim(Config::paper_defaults());
+        let (_, opv) = v.run_p2p(RankId(0), RankId(1), ByteSize::mb(512).0);
+        let vbw = opv.algbw_gbps().unwrap();
+        let mut n = sim(Config::nccl_baseline());
+        let (_, opn) = n.run_p2p(RankId(0), RankId(1), ByteSize::mb(512).0);
+        let nbw = opn.algbw_gbps().unwrap();
+        let gain = vbw / nbw;
+        assert!((1.03..1.12).contains(&gain), "gain={gain} v={vbw} n={nbw}");
+    }
+
+    #[test]
+    fn smfree_small_message_latency_lower_inter_node() {
+        // §4.1: −18.9% small-message latency from removing GPU-CPU sync.
+        let mut v = sim(Config::paper_defaults());
+        let (tv, _) = v.run_p2p(RankId(0), RankId(8), ByteSize::kb(64).0);
+        let mut n = sim(Config::nccl_baseline());
+        let (tn, _) = n.run_p2p(RankId(0), RankId(8), ByteSize::kb(64).0);
+        assert!(tv < tn, "vccl={tv} nccl={tn}");
+    }
+
+    #[test]
+    fn kernel_transport_occupies_sms_smfree_does_not() {
+        let mut n = sim(Config::nccl_baseline());
+        n.submit_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        // Mid-transfer, the sender GPU must hold comm SMs.
+        n.run_until(SimTime::us(50));
+        assert!(n.gpus[0].compute.comm_sms() > 0);
+        n.run_to_idle(10_000_000);
+        assert_eq!(n.gpus[0].compute.comm_sms(), 0);
+
+        let mut v = sim(Config::paper_defaults());
+        v.submit_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        v.run_until(SimTime::us(50));
+        assert_eq!(v.gpus[0].compute.comm_sms(), 0);
+        v.run_to_idle(10_000_000);
+    }
+
+    #[test]
+    fn ncclx_holds_exactly_one_sm_during_p2p() {
+        let mut x = sim(Config::ncclx_like());
+        x.submit_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        x.run_until(SimTime::us(50));
+        assert_eq!(x.gpus[0].compute.comm_sms(), 1);
+        x.run_to_idle(10_000_000);
+    }
+
+    #[test]
+    fn allreduce_busbw_approaches_link_rate() {
+        let mut s = sim(Config::paper_defaults());
+        let nranks = s.topo.num_ranks();
+        let (_, op) = s.run_collective(CollKind::AllReduce, ByteSize::mb(128).0);
+        let busbw = op.busbw_gbps(nranks).unwrap();
+        // Ring allreduce on 2×8 GPUs, inter-node bound: busbw should land
+        // in the hundreds of Gbps (paper Fig 18 baseline: ~450 Gbps).
+        assert!(busbw > 200.0, "busbw={busbw}");
+    }
+
+    #[test]
+    fn allgather_and_reducescatter_complete() {
+        let mut s = sim(Config::paper_defaults());
+        let (_, op) = s.run_collective(CollKind::AllGather, ByteSize::mb(32).0);
+        assert!(op.is_done());
+        let mut s = sim(Config::paper_defaults());
+        let (_, op) = s.run_collective(CollKind::ReduceScatter, ByteSize::mb(32).0);
+        assert!(op.is_done());
+    }
+
+    #[test]
+    fn reducescatter_slower_than_allgather_due_to_reduction() {
+        let mut s1 = sim(Config::paper_defaults());
+        let (t_ag, _) = s1.run_collective(CollKind::AllGather, ByteSize::mb(64).0);
+        let mut s2 = sim(Config::paper_defaults());
+        let (t_rs, _) = s2.run_collective(CollKind::ReduceScatter, ByteSize::mb(64).0);
+        assert!(t_rs > t_ag, "rs={t_rs} ag={t_ag}");
+    }
+
+    #[test]
+    fn alltoall_completes_with_pxn() {
+        let mut s = sim(Config::paper_defaults());
+        let (_, op) = s.run_collective(CollKind::AllToAll, ByteSize::mb(16).0);
+        assert!(op.is_done());
+        assert!(op.algbw_gbps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn allreduce_deterministic_across_runs() {
+        let run = || {
+            let mut s = sim(Config::paper_defaults());
+            let (t, _) = s.run_collective(CollKind::AllReduce, ByteSize::mb(16).0);
+            t
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn bigger_message_takes_longer() {
+        let mut a = sim(Config::paper_defaults());
+        let (ta, _) = a.run_p2p(RankId(0), RankId(8), ByteSize::mb(8).0);
+        let mut b = sim(Config::paper_defaults());
+        let (tb, _) = b.run_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        assert!(tb > ta);
+    }
+}

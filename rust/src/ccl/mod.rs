@@ -1,0 +1,18 @@
+//! The collective communication library core.
+//!
+//! - [`cluster`] — the simulation: event loop, connections, chunked
+//!   transfers, failover/failback, monitor feeding.
+//! - [`collectives`] — SendRecv / AllReduce / AllGather / ReduceScatter /
+//!   AlltoAll as per-channel ring-step machines over the cluster.
+//! - [`transport`] — the three P2P implementations' cost profiles
+//!   (NCCL kernel baseline, NCCLX-like, VCCL SM-free).
+//! - [`mempool`] — eager vs lazy (2MB pool) buffer accounting (§4.4).
+
+pub mod cluster;
+pub mod collectives;
+pub mod mempool;
+pub mod transport;
+
+pub use cluster::{ActiveSide, ClusterSim, CollKind, Conn, ConnId, Event, Op, OpId, Stats, Xfer, XferId};
+pub use mempool::{AllocPolicy, MemPool};
+pub use transport::{locality_of, DataPath, Locality, TransportProfile};

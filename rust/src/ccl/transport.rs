@@ -1,0 +1,216 @@
+//! Transport cost profiles: what each P2P implementation pays per transfer
+//! and per chunk, and which execution resources it holds (§3.2, Fig 1/4).
+//!
+//! | aspect                  | NCCL kernel      | NCCLX-like      | VCCL SM-free    |
+//! |-------------------------|------------------|-----------------|-----------------|
+//! | SMs held (inter-node)   | 2                | 1 (ordering)    | 0               |
+//! | SMs held (intra-node)   | 32               | 1               | 0               |
+//! | data movement intra     | SM copy kernel   | copy engine     | copy engine     |
+//! | staging copies inter    | app↔chunk bufs   | zero-copy       | zero-copy       |
+//! | GPU↔CPU sync per chunk  | flag polling     | none            | none            |
+//! | stream ordering         | the kernel itself| 1-SM kernel     | writeValue ops  |
+//!
+//! (The NCCL baseline here is configured *with* zero-copy when the paper's
+//! comparison does so — Fig 10 "we explicitly implement the zero-copy
+//! mechanism for the NCCL baseline"; staging costs remain for intra-node
+//! and for the chunk-FIFO handshake.)
+
+use crate::config::{Config, StreamOrdering, Transport};
+use crate::gpu::OrderingCost;
+
+/// Whether a transfer crosses nodes, and how.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Locality {
+    /// NVLink within one server.
+    IntraNode,
+    /// RDMA between servers, NIC-local GPU (same local index) — eligible
+    /// for zero-copy GDR.
+    InterSameRail,
+    /// RDMA between servers with different local indices: PXN relays the
+    /// payload over NVLink to the rail-local GPU first (§3.2-1).
+    InterPxn,
+}
+
+/// How chunk payloads move on the sending side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPath {
+    /// GDR straight from the (registered) application buffer.
+    ZeroCopy,
+    /// Staged through the chunk FIFO by an SM copy kernel.
+    SmStaged,
+    /// Moved by a GPU copy engine (cudaMemcpy, async).
+    CopyEngine,
+}
+
+/// Resolved per-transfer cost profile.
+#[derive(Debug, Clone, Copy)]
+pub struct TransportProfile {
+    /// SMs held on the *sender* GPU for the whole transfer.
+    pub src_sms: u32,
+    /// SMs held on the *receiver* GPU for the whole transfer.
+    pub dst_sms: u32,
+    /// One-time setup on the critical path before the first chunk
+    /// (kernel launch / proxy wake / ordering sync).
+    pub setup_ns: u64,
+    /// Added latency per chunk from GPU↔CPU synchronization (flag polling
+    /// in the kernel transport; ~0 for the CPU-driven paths).
+    pub per_chunk_sync_ns: u64,
+    /// Sender-side staging before a chunk can be posted. `None` = no
+    /// staging copy (zero-copy).
+    pub stage: Option<DataPath>,
+    /// Data path for the wire movement of intra-node chunks.
+    pub intra_path: DataPath,
+    /// Efficiency factor applied to intra-node link bandwidth
+    /// (SM copies issue narrower transactions: §4.1's 7 %).
+    pub intra_efficiency: f64,
+    /// Receiver-side per-chunk delivery copy cost exists (chunk buf → app
+    /// buf). Zero-copy transports skip it.
+    pub recv_copy: bool,
+}
+
+impl TransportProfile {
+    /// Resolve the profile for a transport × locality pair.
+    pub fn resolve(cfg: &Config, locality: Locality) -> TransportProfile {
+        let t = cfg.vccl.transport;
+        let zero_copy = cfg.vccl.zero_copy;
+        let ord = OrderingCost::of(match t {
+            Transport::Kernel => StreamOrdering::WriteValue, // unused: kernel orders itself
+            _ => cfg.vccl.ordering,
+        });
+        match t {
+            Transport::Kernel => {
+                let (src_sms, dst_sms) = match locality {
+                    Locality::IntraNode => (32, 0), // sender-driven kernel copy
+                    _ => (2, 2),                    // send + recv kernels
+                };
+                TransportProfile {
+                    src_sms,
+                    dst_sms,
+                    setup_ns: cfg.gpu.kernel_launch_ns,
+                    // GPU↔CPU flag polling gates each chunk the proxy posts;
+                    // intra-node kernel copies never involve the proxy.
+                    per_chunk_sync_ns: if locality == Locality::IntraNode {
+                        0
+                    } else {
+                        cfg.gpu.gpu_cpu_poll_ns
+                    },
+                    stage: match locality {
+                        Locality::IntraNode => None, // kernel writes peer directly
+                        _ => {
+                            if zero_copy {
+                                None
+                            } else {
+                                Some(DataPath::SmStaged)
+                            }
+                        }
+                    },
+                    intra_path: DataPath::SmStaged,
+                    intra_efficiency: cfg.gpu.sm_copy_efficiency,
+                    recv_copy: !zero_copy && locality != Locality::IntraNode,
+                }
+            }
+            Transport::NcclxLike => TransportProfile {
+                // SM-free data path, but a persistent 1-SM ordering kernel
+                // pinned on both parties for the op duration.
+                src_sms: 1,
+                dst_sms: if locality == Locality::IntraNode { 0 } else { 1 },
+                setup_ns: cfg.gpu.kernel_launch_ns,
+                per_chunk_sync_ns: 0,
+                stage: None,
+                intra_path: DataPath::CopyEngine,
+                intra_efficiency: cfg.gpu.ce_copy_efficiency,
+                recv_copy: false,
+            },
+            Transport::SmFree => TransportProfile {
+                src_sms: 0,
+                dst_sms: 0,
+                setup_ns: ord.sync_ns,
+                per_chunk_sync_ns: 0,
+                stage: match locality {
+                    // PXN still needs the NVLink relay copy; done by CE.
+                    Locality::InterPxn => Some(DataPath::CopyEngine),
+                    _ => None,
+                },
+                intra_path: DataPath::CopyEngine,
+                intra_efficiency: cfg.gpu.ce_copy_efficiency,
+                recv_copy: false,
+            },
+        }
+    }
+}
+
+/// Classify a (src, dst) rank pair.
+pub fn locality_of(
+    cluster: &crate::topology::Cluster,
+    src: crate::topology::RankId,
+    dst: crate::topology::RankId,
+) -> Locality {
+    if cluster.same_node(src, dst) {
+        Locality::IntraNode
+    } else if cluster.gpu_of_rank(src).local == cluster.gpu_of_rank(dst).local {
+        Locality::InterSameRail
+    } else {
+        Locality::InterPxn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyConfig;
+    use crate::topology::{Cluster, RankId};
+
+    #[test]
+    fn kernel_transport_holds_sms() {
+        let cfg = Config::nccl_baseline();
+        let inter = TransportProfile::resolve(&cfg, Locality::InterSameRail);
+        assert_eq!((inter.src_sms, inter.dst_sms), (2, 2));
+        let intra = TransportProfile::resolve(&cfg, Locality::IntraNode);
+        assert_eq!(intra.src_sms, 32);
+        assert!(intra.intra_efficiency < 0.9);
+        assert_eq!(inter.per_chunk_sync_ns, cfg.gpu.gpu_cpu_poll_ns);
+    }
+
+    #[test]
+    fn smfree_holds_none() {
+        let cfg = Config::paper_defaults();
+        for loc in [Locality::IntraNode, Locality::InterSameRail, Locality::InterPxn] {
+            let p = TransportProfile::resolve(&cfg, loc);
+            assert_eq!((p.src_sms, p.dst_sms), (0, 0), "{loc:?}");
+            assert_eq!(p.per_chunk_sync_ns, 0);
+            assert!(!p.recv_copy);
+        }
+        // Zero-copy except the PXN relay.
+        assert!(TransportProfile::resolve(&cfg, Locality::InterSameRail).stage.is_none());
+        assert_eq!(
+            TransportProfile::resolve(&cfg, Locality::InterPxn).stage,
+            Some(DataPath::CopyEngine)
+        );
+    }
+
+    #[test]
+    fn ncclx_holds_exactly_one_sm() {
+        let cfg = Config::ncclx_like();
+        let p = TransportProfile::resolve(&cfg, Locality::InterSameRail);
+        assert_eq!((p.src_sms, p.dst_sms), (1, 1));
+        assert!(p.stage.is_none());
+    }
+
+    #[test]
+    fn ce_beats_sm_copy_efficiency() {
+        // The §4.1 +7% intra-node bandwidth claim reduces to this ordering.
+        let v = TransportProfile::resolve(&Config::paper_defaults(), Locality::IntraNode);
+        let n = TransportProfile::resolve(&Config::nccl_baseline(), Locality::IntraNode);
+        assert!(v.intra_efficiency > n.intra_efficiency);
+        let gain = v.intra_efficiency / n.intra_efficiency;
+        assert!((1.05..1.10).contains(&gain), "gain={gain}");
+    }
+
+    #[test]
+    fn locality_classification() {
+        let c = Cluster::new(TopologyConfig { num_nodes: 2, ..Default::default() });
+        assert_eq!(locality_of(&c, RankId(0), RankId(3)), Locality::IntraNode);
+        assert_eq!(locality_of(&c, RankId(0), RankId(8)), Locality::InterSameRail);
+        assert_eq!(locality_of(&c, RankId(0), RankId(9)), Locality::InterPxn);
+    }
+}

@@ -1,0 +1,155 @@
+//! Environment-variable override layer.
+//!
+//! Honours both the paper's `ICCL_*` spelling and a `VCCL_*` alias. The
+//! lookup function is injected so tests can drive overrides without touching
+//! the process environment (std::env is process-global and test-parallel
+//! unsafe).
+
+use super::{Config, StreamOrdering, Transport};
+
+/// Apply recognised environment variables onto `cfg`.
+///
+/// `get` abstracts `std::env::var` for testability. For each knob the
+/// `ICCL_` spelling wins over `VCCL_` (the paper's §5 lesson 1 is precisely
+/// about `ICCL_NET_PLUGIN` being set by accident — we at least make the
+/// precedence deterministic and *log* unknown ICCL_ variables).
+pub fn apply_env(cfg: &mut Config, get: impl Fn(&str) -> Option<String>) -> Vec<String> {
+    let mut applied = Vec::new();
+    let lookup = |name: &str| -> Option<String> {
+        get(&format!("ICCL_{name}")).or_else(|| get(&format!("VCCL_{name}")))
+    };
+
+    if let Some(v) = lookup("IB_TIMEOUT").and_then(|s| s.parse().ok()) {
+        cfg.net.ib_timeout_exp = v;
+        applied.push(format!("IB_TIMEOUT={v}"));
+    }
+    if let Some(v) = lookup("IB_RETRY_CNT").and_then(|s| s.parse().ok()) {
+        cfg.net.ib_retry_cnt = v;
+        applied.push(format!("IB_RETRY_CNT={v}"));
+    }
+    if let Some(v) = lookup("WINDOW_SIZE").and_then(|s| s.parse().ok()) {
+        cfg.vccl.window_size = v;
+        applied.push(format!("WINDOW_SIZE={v}"));
+    }
+    if let Some(v) = lookup("CHANNELS").and_then(|s| s.parse().ok()) {
+        cfg.vccl.channels = v;
+        applied.push(format!("CHANNELS={v}"));
+    }
+    if let Some(v) = lookup("CHUNK_BYTES").and_then(|s| s.parse().ok()) {
+        cfg.vccl.chunk_bytes = v;
+        applied.push(format!("CHUNK_BYTES={v}"));
+    }
+    if let Some(v) = lookup("TRANSPORT") {
+        match v.as_str() {
+            "kernel" | "nccl" => cfg.vccl.transport = Transport::Kernel,
+            "ncclx" => cfg.vccl.transport = Transport::NcclxLike,
+            "smfree" | "vccl" => cfg.vccl.transport = Transport::SmFree,
+            other => applied.push(format!("TRANSPORT={other} (unrecognised, ignored)")),
+        }
+        applied.push(format!("TRANSPORT={}", cfg.vccl.transport.name()));
+    }
+    if let Some(v) = lookup("ORDERING") {
+        match v.as_str() {
+            "hostfunc" => cfg.vccl.ordering = StreamOrdering::HostFunc,
+            "writevalue" | "waitvalue" => cfg.vccl.ordering = StreamOrdering::WriteValue,
+            other => applied.push(format!("ORDERING={other} (unrecognised, ignored)")),
+        }
+    }
+    if let Some(v) = lookup("FAULT_TOLERANCE").and_then(|s| parse_bool(&s)) {
+        cfg.vccl.fault_tolerance = v;
+        applied.push(format!("FAULT_TOLERANCE={v}"));
+    }
+    if let Some(v) = lookup("MONITOR").and_then(|s| parse_bool(&s)) {
+        cfg.vccl.monitor = v;
+        applied.push(format!("MONITOR={v}"));
+    }
+    if let Some(v) = lookup("ZERO_COPY").and_then(|s| parse_bool(&s)) {
+        cfg.vccl.zero_copy = v;
+        applied.push(format!("ZERO_COPY={v}"));
+    }
+    if let Some(v) = lookup("LAZY_MEMPOOL").and_then(|s| parse_bool(&s)) {
+        cfg.vccl.lazy_mempool = v;
+        applied.push(format!("LAZY_MEMPOOL={v}"));
+    }
+    if let Some(v) = lookup("SEED").and_then(|s| s.parse().ok()) {
+        cfg.seed = v;
+        applied.push(format!("SEED={v}"));
+    }
+    // §5 lesson 1: loading a foreign net plugin corrupts internal structs.
+    // We refuse rather than UB.
+    if let Some(v) = lookup("NET_PLUGIN") {
+        applied.push(format!(
+            "NET_PLUGIN={v} — refusing to load foreign plugins (see §5 lesson 1); ignored"
+        ));
+    }
+    applied
+}
+
+fn parse_bool(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" | "on" => Some(true),
+        "0" | "false" | "no" | "off" => Some(false),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn env_of(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn iccl_vars_override_defaults() {
+        let mut cfg = Config::paper_defaults();
+        let env = env_of(&[("ICCL_IB_TIMEOUT", "14"), ("ICCL_IB_RETRY_CNT", "3")]);
+        apply_env(&mut cfg, |k| env.get(k).cloned());
+        assert_eq!(cfg.net.ib_timeout_exp, 14);
+        assert_eq!(cfg.net.ib_retry_cnt, 3);
+    }
+
+    #[test]
+    fn iccl_wins_over_vccl() {
+        let mut cfg = Config::paper_defaults();
+        let env = env_of(&[("ICCL_WINDOW_SIZE", "4"), ("VCCL_WINDOW_SIZE", "64")]);
+        apply_env(&mut cfg, |k| env.get(k).cloned());
+        assert_eq!(cfg.vccl.window_size, 4);
+    }
+
+    #[test]
+    fn transport_and_ordering_parse() {
+        let mut cfg = Config::paper_defaults();
+        let env = env_of(&[("VCCL_TRANSPORT", "kernel"), ("VCCL_ORDERING", "hostfunc")]);
+        apply_env(&mut cfg, |k| env.get(k).cloned());
+        assert_eq!(cfg.vccl.transport, Transport::Kernel);
+        assert_eq!(cfg.vccl.ordering, StreamOrdering::HostFunc);
+    }
+
+    #[test]
+    fn bool_forms() {
+        for (s, want) in [("1", true), ("true", true), ("ON", true), ("0", false), ("off", false)]
+        {
+            assert_eq!(parse_bool(s), Some(want));
+        }
+        assert_eq!(parse_bool("maybe"), None);
+    }
+
+    #[test]
+    fn net_plugin_refused_not_loaded() {
+        let mut cfg = Config::paper_defaults();
+        let env = env_of(&[("ICCL_NET_PLUGIN", "libnccl-net.so")]);
+        let applied = apply_env(&mut cfg, |k| env.get(k).cloned());
+        assert!(applied.iter().any(|l| l.contains("refusing")));
+    }
+
+    #[test]
+    fn unknown_values_ignored() {
+        let mut cfg = Config::paper_defaults();
+        let env = env_of(&[("VCCL_TRANSPORT", "quantum")]);
+        apply_env(&mut cfg, |k| env.get(k).cloned());
+        assert_eq!(cfg.vccl.transport, Transport::SmFree); // unchanged
+    }
+}

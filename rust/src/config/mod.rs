@@ -1,0 +1,450 @@
+//! Configuration system.
+//!
+//! Three layers, later wins:
+//!   1. built-in defaults matching the paper's cluster (Table 3 + §4 setup),
+//!   2. a JSON config file (`--config cluster.json`),
+//!   3. `VCCL_*` / `ICCL_*` environment variables — the paper's knobs
+//!      (`ICCL_IB_TIMEOUT`, `ICCL_IB_RETRY_CNT`, ...) are honoured verbatim.
+//!
+//! The env-var layer exists because the paper's §5 lessons are mostly about
+//! env-var misconfiguration; the experiment harness exercises the same
+//! surface (`vccl exp hostfunc` flips `VCCL_ORDERING=hostfunc`, etc).
+
+mod env;
+
+pub use env::apply_env;
+
+
+use crate::util::Gbps;
+
+/// Which transport implements P2P primitives (§3.2 and baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// NCCL baseline: kernel-based P2P occupying SMs for the op duration,
+    /// GPU↔CPU shared-flag polling, staged copies through chunk buffers.
+    Kernel,
+    /// NCCLX-like ablation: SM-free data path but a persistent 1-SM ordering
+    /// kernel held while the op is in flight (Fig 11's −1.73 % baseline).
+    NcclxLike,
+    /// VCCL: fully SM-free — zero-copy / copy-engine data movement, CPU
+    /// proxy control, writeValue/waitValue stream ordering.
+    SmFree,
+}
+
+impl Transport {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Kernel => "nccl-kernel",
+            Transport::NcclxLike => "ncclx-like",
+            Transport::SmFree => "vccl-smfree",
+        }
+    }
+}
+
+/// How CUDA-stream ordering is enforced when no kernel is on the stream
+/// (§3.2-3): hostFunc callbacks (can deadlock — Fig 5) vs stream memory ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamOrdering {
+    /// `cudaLaunchHostFunc`: callbacks from independent streams may be
+    /// serialized on one host thread → bidirectional 1F1B deadlock.
+    HostFunc,
+    /// `cuStreamWriteValue`/`cuStreamWaitValue`: stream-native, no host
+    /// callback thread, no serialization-induced deadlock.
+    WriteValue,
+}
+
+/// GPU model parameters (Hopper-class defaults; Appendix A/E numbers).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    /// SMs per GPU (H800/H100: 132).
+    pub num_sms: u32,
+    /// Dense BF16 throughput per GPU at 100 % MXU/TensorCore utilization
+    /// (TFLOPS). Used by the GEMM wave model.
+    pub peak_tflops: f64,
+    /// Copy engines per GPU.
+    pub num_copy_engines: u32,
+    /// NVLink per-direction bandwidth per GPU (Gbps). Hopper: 900 GB/s
+    /// aggregate bidirectional NVLink ≈ 3600 Gbps per direction.
+    pub nvlink_gbps: f64,
+    /// Efficiency of SM-driven intra-node copies relative to link peak.
+    /// Copy engines issue wider transactions (§4.1: +7 % large-message BW).
+    pub sm_copy_efficiency: f64,
+    /// Efficiency of copy-engine-driven copies relative to link peak.
+    pub ce_copy_efficiency: f64,
+    /// Fixed cost to launch a kernel (ns).
+    pub kernel_launch_ns: u64,
+    /// Copy-engine request setup latency (ns) — the reason small-message
+    /// intra-node latency is *worse* under VCCL (§4.1).
+    pub copy_engine_setup_ns: u64,
+    /// GPU↔CPU shared-flag polling interval for the NCCL-baseline proxy (ns).
+    pub gpu_cpu_poll_ns: u64,
+    /// Per-SM slowdown of co-resident GEMM blocks when a communication
+    /// kernel shares the SM (Appendix E: 20 comm warps vs 12 GEMM warps
+    /// compete for issue slots).
+    pub coresidency_slowdown: f64,
+    /// HBM bandwidth used by staging copies between application and chunk
+    /// buffers (Gbps). H800-class: ~3.3 TB/s.
+    pub hbm_gbps: f64,
+    /// Effective throughput of the SM reduction kernel in ring collectives
+    /// (Gbps) — HBM-bound, well below peak.
+    pub reduce_gbps: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            num_sms: 132,
+            peak_tflops: 989.0,
+            num_copy_engines: 3,
+            nvlink_gbps: 3600.0,
+            sm_copy_efficiency: 0.87,
+            ce_copy_efficiency: 0.93,
+            kernel_launch_ns: 1_500,
+            copy_engine_setup_ns: 4_000,
+            gpu_cpu_poll_ns: 1_200,
+            coresidency_slowdown: 1.6,
+            hbm_gbps: 26_400.0,
+            reduce_gbps: 4_800.0,
+        }
+    }
+}
+
+/// Network / RDMA parameters (ConnectX-7-class defaults, §4 cluster).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Per-port line rate (Gbps).
+    pub link_gbps: f64,
+    /// One-way propagation + switching latency per hop (ns).
+    pub hop_latency_ns: u64,
+    /// NIC processing latency per WR (doorbell → wire) (ns).
+    pub nic_latency_ns: u64,
+    /// RDMA_READ/WRITE payload efficiency on the wire (headers, DCQCN).
+    pub wire_efficiency: f64,
+    /// IB transport retry timeout exponent: timeout = 4.096 μs × 2^N
+    /// (Table 3: ICCL_IB_TIMEOUT=18 → ≈1.07 s per retry).
+    pub ib_timeout_exp: u32,
+    /// Retry count before the QP enters error state (Table 3: 7).
+    pub ib_retry_cnt: u32,
+    /// PCIe host↔device bandwidth per GPU (Gbps) — bounds GDR when the
+    /// buffer is not NIC-local (PXN motivation).
+    pub pcie_gbps: f64,
+    /// Incast degradation: when >1 flows converge on one egress port the
+    /// effective goodput is scaled by this factor per extra flow (models
+    /// the PFC backpressure / congestion collapse of Fig 18 phase 2).
+    pub incast_penalty: f64,
+    /// QP hardware warm-up time after RESET→RTS before full-rate service
+    /// (§3.3 recovery: "often on the order of seconds").
+    pub qp_warmup_ns: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            link_gbps: 400.0,
+            hop_latency_ns: 1_000,
+            nic_latency_ns: 2_500,
+            wire_efficiency: 0.97,
+            ib_timeout_exp: 18,
+            ib_retry_cnt: 7,
+            pcie_gbps: 512.0,
+            incast_penalty: 0.35,
+            qp_warmup_ns: 1_500_000_000,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The per-attempt retransmission timeout: 4.096 μs × 2^exp.
+    pub fn retry_timeout_ns(&self) -> u64 {
+        (4_096.0 * 2f64.powi(self.ib_timeout_exp as i32)) as u64
+    }
+
+    /// Total time the hardware retries before reporting a WC error
+    /// (retry_cnt attempts). The paper's Fig 13a shows ~10 s of silence
+    /// with TIMEOUT=18, RETRY=7 — but notes about half of flaps recover
+    /// within the window, so the window is intentional.
+    pub fn retry_window_ns(&self) -> u64 {
+        self.retry_timeout_ns() * self.ib_retry_cnt as u64
+    }
+
+    pub fn link(&self) -> Gbps {
+        Gbps(self.link_gbps)
+    }
+}
+
+/// Cluster shape (§4: 8 GPUs + 8 rail NICs (+1 mgmt) per server, two-tier
+/// rail-optimized CLOS, 1:1 oversubscription).
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    pub num_nodes: usize,
+    pub gpus_per_node: usize,
+    pub nics_per_node: usize,
+    /// NICs with two physical ports (backup QP placement uses the second
+    /// port of the same NIC when available — §3.3).
+    pub dual_port_nics: bool,
+    /// Leaf switches per rail group; spine count derives from 1:1
+    /// oversubscription.
+    pub rails: usize,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            num_nodes: 2,
+            gpus_per_node: 8,
+            nics_per_node: 8,
+            dual_port_nics: false,
+            rails: 8,
+        }
+    }
+}
+
+/// VCCL feature switches + tunables (the paper's Table 3 "VCCL settings").
+#[derive(Debug, Clone)]
+pub struct VcclConfig {
+    pub transport: Transport,
+    pub ordering: StreamOrdering,
+    /// Primary-backup QP fault tolerance (§3.3).
+    pub fault_tolerance: bool,
+    /// Window-based monitor (§3.4).
+    pub monitor: bool,
+    /// Monitor sliding-window size in messages (Table 3: 8).
+    pub window_size: usize,
+    /// Anomaly heuristic: bandwidth drop threshold vs trailing average.
+    pub bw_drop_ratio: f64,
+    /// Anomaly heuristic: remaining-to-send multiple of historical max.
+    pub rts_multiple: f64,
+    /// Trailing-average horizon for the pinpointer (ns; paper: ~10 ms).
+    pub trailing_ns: u64,
+    /// Case-2 double-check δ: slightly larger than the retry timeout.
+    pub delta_margin: f64,
+    /// Channels per communicator (Table 3 CC traffic generator: 32; the
+    /// 1024-GPU accounting in §4.2 uses 16).
+    pub channels: usize,
+    /// Chunk size per channel slot.
+    pub chunk_bytes: u64,
+    /// Lazy 2 MB-aligned memory pool instead of eager pre-allocation (§4.4).
+    pub lazy_mempool: bool,
+    /// Zero-copy user-buffer registration for P2P (§3.2, §4.4).
+    pub zero_copy: bool,
+}
+
+impl Default for VcclConfig {
+    fn default() -> Self {
+        VcclConfig {
+            transport: Transport::SmFree,
+            ordering: StreamOrdering::WriteValue,
+            fault_tolerance: true,
+            monitor: true,
+            window_size: 8,
+            bw_drop_ratio: 0.5,
+            rts_multiple: 2.0,
+            trailing_ns: 10_000_000,
+            delta_margin: 1.25,
+            channels: 16,
+            chunk_bytes: 1 << 20,
+            lazy_mempool: true,
+            zero_copy: true,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub gpu: GpuConfig,
+    pub net: NetConfig,
+    pub topo: TopologyConfig,
+    pub vccl: VcclConfig,
+    /// RNG seed for all stochastic elements.
+    pub seed: u64,
+}
+
+impl Config {
+    /// Paper-default configuration (Table 3 + §4 cluster description).
+    pub fn paper_defaults() -> Self {
+        Config { seed: 0x5CC1, ..Default::default() }
+    }
+
+    /// NCCL-baseline configuration: kernel transport, no backup QPs, eager
+    /// buffers, monitor off.
+    pub fn nccl_baseline() -> Self {
+        let mut c = Self::paper_defaults();
+        c.vccl.transport = Transport::Kernel;
+        c.vccl.fault_tolerance = false;
+        c.vccl.monitor = false;
+        c.vccl.lazy_mempool = false;
+        c.vccl.zero_copy = false;
+        c
+    }
+
+    /// NCCLX-like configuration (SM-free data path + 1-SM ordering kernel).
+    pub fn ncclx_like() -> Self {
+        let mut c = Self::paper_defaults();
+        c.vccl.transport = Transport::NcclxLike;
+        c.vccl.fault_tolerance = false;
+        c.vccl.monitor = false;
+        c
+    }
+
+    /// Load from a `key = value` config file (dotted keys, `#` comments),
+    /// then apply environment overrides.
+    pub fn load(path: Option<&str>) -> anyhow::Result<Self> {
+        let mut cfg = Config::paper_defaults();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("reading config {p}: {e}"))?;
+            cfg.apply_kv_text(&text)?;
+        }
+        apply_env(&mut cfg, |k| std::env::var(k).ok());
+        Ok(cfg)
+    }
+
+    /// Apply `section.key = value` lines. Unknown keys are an error — a
+    /// silently ignored typo is exactly the §5 failure mode we refuse.
+    pub fn apply_kv_text(&mut self, text: &str) -> anyhow::Result<()> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            self.set_key(k.trim(), v.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {}", lineno + 1, e))?;
+        }
+        Ok(())
+    }
+
+    /// Set one dotted key. Public so the CLI's `--set k=v` flag reuses it.
+    pub fn set_key(&mut self, key: &str, val: &str) -> anyhow::Result<()> {
+        fn p<T: std::str::FromStr>(v: &str) -> anyhow::Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            v.parse::<T>().map_err(|e| anyhow::anyhow!("bad value {v:?}: {e}"))
+        }
+        fn pb(v: &str) -> anyhow::Result<bool> {
+            match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" | "on" => Ok(true),
+                "0" | "false" | "no" | "off" => Ok(false),
+                other => Err(anyhow::anyhow!("bad bool {other:?}")),
+            }
+        }
+        match key {
+            "seed" => self.seed = p(val)?,
+            "gpu.num_sms" => self.gpu.num_sms = p(val)?,
+            "gpu.peak_tflops" => self.gpu.peak_tflops = p(val)?,
+            "gpu.num_copy_engines" => self.gpu.num_copy_engines = p(val)?,
+            "gpu.nvlink_gbps" => self.gpu.nvlink_gbps = p(val)?,
+            "gpu.sm_copy_efficiency" => self.gpu.sm_copy_efficiency = p(val)?,
+            "gpu.ce_copy_efficiency" => self.gpu.ce_copy_efficiency = p(val)?,
+            "gpu.kernel_launch_ns" => self.gpu.kernel_launch_ns = p(val)?,
+            "gpu.copy_engine_setup_ns" => self.gpu.copy_engine_setup_ns = p(val)?,
+            "gpu.gpu_cpu_poll_ns" => self.gpu.gpu_cpu_poll_ns = p(val)?,
+            "gpu.coresidency_slowdown" => self.gpu.coresidency_slowdown = p(val)?,
+            "gpu.hbm_gbps" => self.gpu.hbm_gbps = p(val)?,
+            "gpu.reduce_gbps" => self.gpu.reduce_gbps = p(val)?,
+            "net.link_gbps" => self.net.link_gbps = p(val)?,
+            "net.hop_latency_ns" => self.net.hop_latency_ns = p(val)?,
+            "net.nic_latency_ns" => self.net.nic_latency_ns = p(val)?,
+            "net.wire_efficiency" => self.net.wire_efficiency = p(val)?,
+            "net.ib_timeout_exp" => self.net.ib_timeout_exp = p(val)?,
+            "net.ib_retry_cnt" => self.net.ib_retry_cnt = p(val)?,
+            "net.pcie_gbps" => self.net.pcie_gbps = p(val)?,
+            "net.incast_penalty" => self.net.incast_penalty = p(val)?,
+            "net.qp_warmup_ns" => self.net.qp_warmup_ns = p(val)?,
+            "topo.num_nodes" => self.topo.num_nodes = p(val)?,
+            "topo.gpus_per_node" => self.topo.gpus_per_node = p(val)?,
+            "topo.nics_per_node" => self.topo.nics_per_node = p(val)?,
+            "topo.dual_port_nics" => self.topo.dual_port_nics = pb(val)?,
+            "topo.rails" => self.topo.rails = p(val)?,
+            "vccl.transport" => {
+                self.vccl.transport = match val {
+                    "kernel" | "nccl" => Transport::Kernel,
+                    "ncclx" => Transport::NcclxLike,
+                    "smfree" | "vccl" => Transport::SmFree,
+                    other => anyhow::bail!("unknown transport {other:?}"),
+                }
+            }
+            "vccl.ordering" => {
+                self.vccl.ordering = match val {
+                    "hostfunc" => StreamOrdering::HostFunc,
+                    "writevalue" | "waitvalue" => StreamOrdering::WriteValue,
+                    other => anyhow::bail!("unknown ordering {other:?}"),
+                }
+            }
+            "vccl.fault_tolerance" => self.vccl.fault_tolerance = pb(val)?,
+            "vccl.monitor" => self.vccl.monitor = pb(val)?,
+            "vccl.window_size" => self.vccl.window_size = p(val)?,
+            "vccl.bw_drop_ratio" => self.vccl.bw_drop_ratio = p(val)?,
+            "vccl.rts_multiple" => self.vccl.rts_multiple = p(val)?,
+            "vccl.trailing_ns" => self.vccl.trailing_ns = p(val)?,
+            "vccl.delta_margin" => self.vccl.delta_margin = p(val)?,
+            "vccl.channels" => self.vccl.channels = p(val)?,
+            "vccl.chunk_bytes" => self.vccl.chunk_bytes = p(val)?,
+            "vccl.lazy_mempool" => self.vccl.lazy_mempool = pb(val)?,
+            "vccl.zero_copy" => self.vccl.zero_copy = pb(val)?,
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_window_matches_paper_order_of_magnitude() {
+        // TIMEOUT=18, RETRY_CNT=7 → per-attempt ≈ 1.07 s, window ≈ 7.5 s.
+        // Fig 13a narrates "about 10 s" of silence before failover.
+        let net = NetConfig::default();
+        let w = net.retry_window_ns() as f64 / 1e9;
+        assert!((6.0..12.0).contains(&w), "window={w}s");
+    }
+
+    #[test]
+    fn presets_differ_as_expected() {
+        let v = Config::paper_defaults();
+        let n = Config::nccl_baseline();
+        let x = Config::ncclx_like();
+        assert_eq!(v.vccl.transport, Transport::SmFree);
+        assert_eq!(n.vccl.transport, Transport::Kernel);
+        assert_eq!(x.vccl.transport, Transport::NcclxLike);
+        assert!(v.vccl.fault_tolerance && !n.vccl.fault_tolerance);
+        assert!(v.vccl.zero_copy && !n.vccl.zero_copy);
+    }
+
+    #[test]
+    fn kv_text_applies_and_rejects_unknown() {
+        let mut c = Config::paper_defaults();
+        c.apply_kv_text(
+            "# comment\n\
+             net.link_gbps = 200\n\
+             vccl.window_size = 16  # inline comment\n\
+             vccl.transport = kernel\n\
+             topo.dual_port_nics = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.net.link_gbps, 200.0);
+        assert_eq!(c.vccl.window_size, 16);
+        assert_eq!(c.vccl.transport, Transport::Kernel);
+        assert!(c.topo.dual_port_nics);
+        // Typos are hard errors (§5 lesson: silent misconfig is fatal).
+        assert!(c.apply_kv_text("vccl.windowsize = 8").is_err());
+        assert!(c.apply_kv_text("vccl.transport = quantum").is_err());
+        assert!(c.apply_kv_text("not a kv line").is_err());
+    }
+
+    #[test]
+    fn set_key_parses_all_sections() {
+        let mut c = Config::paper_defaults();
+        c.set_key("gpu.num_sms", "78").unwrap();
+        c.set_key("net.ib_timeout_exp", "14").unwrap();
+        c.set_key("topo.num_nodes", "4").unwrap();
+        c.set_key("seed", "99").unwrap();
+        assert_eq!((c.gpu.num_sms, c.net.ib_timeout_exp, c.topo.num_nodes, c.seed), (78, 14, 4, 99));
+    }
+}

@@ -1,0 +1,214 @@
+//! The leader/coordinator: CLI entry points and the experiment harness
+//! that regenerates every table and figure of the paper (see DESIGN.md's
+//! experiment index).
+//!
+//! `vccl exp <id>` runs one experiment and prints its report (also written
+//! to `reports/<id>.txt`); `vccl exp all` runs the full set. `vccl train`
+//! is the real-compute training entry point (PJRT over the AOT artifacts).
+
+pub mod experiments;
+pub mod reliability;
+pub mod observability;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+
+/// Parsed command line (hand-rolled: the offline build has no clap).
+#[derive(Debug)]
+pub enum Command {
+    /// `vccl exp <id> [--set k=v ...]`
+    Exp { id: String },
+    /// `vccl train [--preset p] [--steps n] [--transport t] [--out csv]`
+    Train { preset: String, steps: u64, out: Option<PathBuf> },
+    /// `vccl info` — print resolved configuration.
+    Info,
+    Help,
+}
+
+/// Parse argv. Also applies `--config file` and repeated `--set k=v` onto
+/// the returned Config (after env-var overrides).
+pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
+    let mut cfg = Config::load(None)?;
+    let mut it = args.iter().peekable();
+    let cmd = it.next().map(|s| s.as_str()).unwrap_or("help");
+    let mut preset = "tiny".to_string();
+    let mut steps = 50u64;
+    let mut out = None;
+    let mut exp_id = String::new();
+    if cmd == "exp" {
+        exp_id = it
+            .next()
+            .ok_or_else(|| anyhow!("usage: vccl exp <id> (try `vccl exp list`)"))?
+            .clone();
+    }
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--config" => {
+                let path = it.next().ok_or_else(|| anyhow!("--config needs a path"))?;
+                cfg = Config::load(Some(path))?;
+            }
+            "--set" => {
+                let kv = it.next().ok_or_else(|| anyhow!("--set needs k=v"))?;
+                let (k, v) =
+                    kv.split_once('=').ok_or_else(|| anyhow!("--set expects key=value"))?;
+                cfg.set_key(k, v)?;
+            }
+            "--preset" => preset = it.next().ok_or_else(|| anyhow!("--preset needs a name"))?.clone(),
+            "--steps" => {
+                steps = it
+                    .next()
+                    .ok_or_else(|| anyhow!("--steps needs a number"))?
+                    .parse()
+                    .map_err(|e| anyhow!("--steps: {e}"))?;
+            }
+            "--out" => out = Some(PathBuf::from(it.next().ok_or_else(|| anyhow!("--out path"))?)),
+            "--transport" => {
+                let t = it.next().ok_or_else(|| anyhow!("--transport needs a value"))?;
+                cfg.set_key("vccl.transport", t)?;
+            }
+            other => return Err(anyhow!("unknown flag {other:?}")),
+        }
+    }
+    let command = match cmd {
+        "exp" => Command::Exp { id: exp_id },
+        "train" => Command::Train { preset, steps, out },
+        "info" => Command::Info,
+        _ => Command::Help,
+    };
+    Ok((command, cfg))
+}
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table1", "SM utilization of P2P workloads (Appendix A)"),
+    ("fig2", "failure-type statistics over 10 months"),
+    ("fig10", "inter/intra-node P2P bandwidth & latency, VCCL vs NCCL"),
+    ("fig11", "training TFLOPS: NCCL vs NCCLX-like vs VCCL, strong scaling"),
+    ("fig13a", "SendRecv bandwidth timeline under a port down/up"),
+    ("fig13b", "training TFLOPS under link failure: NCCL hangs, VCCL recovers"),
+    ("fig14", "failure-induced idle GPU time: single/dual-plane/VCCL"),
+    ("fig15", "straggler pinpointing across 4 cases"),
+    ("fig16", "runtime diagnosis percentage ramp"),
+    ("table4", "kernel invocation, SM and CPU consumption (w/ Fig 17)"),
+    ("table5", "online monitor overhead"),
+    ("fig18", "AllReduce resilience under multi-port failures (Appendix G)"),
+    ("fig19", "monitor window-size sweep (Appendix H)"),
+    ("fig21", "memory footprint: eager NCCL vs VCCL dynamic pool (Appendix J)"),
+    ("appc", "PP message-size analysis (Appendix C)"),
+    ("scaling", "§5 gain-decay model I=(Tn−Tv)/(Tv+α)"),
+    ("hostfunc", "Fig 5 ablation: hostFunc ordering deadlock"),
+    ("retrywin", "ablation: retry window before failover vs immediate"),
+];
+
+/// Run one experiment by id; returns the report text.
+pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
+    let report = match id {
+        "table1" => experiments::table1_sm_utilization(cfg),
+        "fig2" => reliability::fig2_failure_stats(cfg),
+        "fig10" => experiments::fig10_p2p_perf(cfg),
+        "fig11" => experiments::fig11_training_throughput(cfg),
+        "fig13a" => reliability::fig13a_failover_timeline(cfg),
+        "fig13b" => reliability::fig13b_training_under_failure(cfg),
+        "fig14" => reliability::fig14_idle_gpu_time(cfg),
+        "fig15" => observability::fig15_pinpointing(cfg),
+        "fig16" => observability::fig16_diagnosis_ramp(cfg),
+        "table4" => experiments::table4_resource_consumption(cfg),
+        "table5" => observability::table5_monitor_overhead(cfg),
+        "fig18" => reliability::fig18_multiport_stress(cfg),
+        "fig19" => observability::fig19_window_sweep(cfg),
+        "fig21" => experiments::fig21_memory_footprint(cfg),
+        "appc" => experiments::appc_message_sizes(cfg),
+        "scaling" => experiments::scaling_gain_decay(cfg),
+        "hostfunc" => experiments::hostfunc_ablation(cfg),
+        "retrywin" => reliability::retrywin_ablation(cfg),
+        "list" => {
+            let mut out = String::new();
+            for (id, desc) in EXPERIMENTS {
+                out.push_str(&format!("{id:10} {desc}\n"));
+            }
+            return Ok(out);
+        }
+        "all" => {
+            let mut out = String::new();
+            for (id, _) in EXPERIMENTS {
+                out.push_str(&format!("\n================ {id} ================\n"));
+                out.push_str(&run_experiment(id, cfg)?);
+            }
+            return Ok(out);
+        }
+        other => return Err(anyhow!("unknown experiment {other:?} (try `vccl exp list`)")),
+    };
+    // Persist alongside stdout for EXPERIMENTS.md.
+    let dir = std::path::Path::new("reports");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(format!("{id}.txt")), &report);
+    }
+    Ok(report)
+}
+
+pub fn help_text() -> String {
+    let mut s = String::from(
+        "vccl — VCCL reproduction coordinator\n\n\
+         USAGE:\n\
+         \x20 vccl exp <id|list|all> [--set k=v]...   regenerate a paper table/figure\n\
+         \x20 vccl train [--preset tiny|e2e] [--steps N] [--transport vccl|nccl|ncclx]\n\
+         \x20           [--out loss.csv]               real PJRT training run\n\
+         \x20 vccl info                                print resolved config\n\n\
+         EXPERIMENTS:\n",
+    );
+    for (id, desc) in EXPERIMENTS {
+        s.push_str(&format!("  {id:10} {desc}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_exp() {
+        let (cmd, _) = parse_args(&argv("exp fig10")).unwrap();
+        assert!(matches!(cmd, Command::Exp { id } if id == "fig10"));
+    }
+
+    #[test]
+    fn parse_train_flags() {
+        let (cmd, cfg) =
+            parse_args(&argv("train --preset e2e --steps 7 --transport nccl")).unwrap();
+        match cmd {
+            Command::Train { preset, steps, .. } => {
+                assert_eq!(preset, "e2e");
+                assert_eq!(steps, 7);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(cfg.vccl.transport, crate::config::Transport::Kernel);
+    }
+
+    #[test]
+    fn parse_set_overrides() {
+        let (_, cfg) = parse_args(&argv("exp fig10 --set net.link_gbps=200")).unwrap();
+        assert_eq!(cfg.net.link_gbps, 200.0);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse_args(&argv("exp fig10 --bogus")).is_err());
+    }
+
+    #[test]
+    fn experiment_list_nonempty() {
+        let cfg = Config::paper_defaults();
+        let listing = run_experiment("list", &cfg).unwrap();
+        assert!(listing.contains("fig18"));
+        assert!(EXPERIMENTS.len() >= 18);
+    }
+}

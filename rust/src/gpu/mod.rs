@@ -1,0 +1,23 @@
+//! GPU execution model: SM pool, compute kernels with the co-residency
+//! tail-straggler effect (paper Appendix E), copy engines, and the CUDA
+//! stream-ordering primitives the SM-free design replaces kernels with.
+//!
+//! What matters for this paper is not cycle-accurate SM simulation but the
+//! *resource interference* structure:
+//!
+//!  - a communication kernel occupies `n` SMs for its full duration
+//!    (Table 1: 32 SMs intra-node P2P, 2 inter-node, 28/4 alltoall);
+//!  - a GEMM whose blocks land on those SMs is extended by a tail-straggler
+//!    factor (Appendix E: the kernel cannot finish until its slowest block
+//!    does, and blocks co-resident with 20 communication warps run slower);
+//!  - copy engines move data without touching SMs but pay a setup latency
+//!    and are a contended, countable resource (§4.1: higher small-message
+//!    intra-node latency under VCCL).
+
+pub mod compute;
+pub mod copy_engine;
+pub mod stream;
+
+pub use compute::{ComputeTask, GpuCompute, TaskId, TaskTimer};
+pub use copy_engine::{CopyEngines, CopyGrant};
+pub use stream::{BrokerOutcome, EventFlag, HostCallback, HostFuncBroker, OrderingCost};

@@ -1,0 +1,222 @@
+//! CUDA-stream ordering without kernels (§3.2-3).
+//!
+//! When the P2P data path no longer puts a kernel on the stream, something
+//! else must (a) hold back the communication until prerequisite compute
+//! finishes and (b) block dependent compute until the communication is done.
+//! The paper tries `cudaLaunchHostFunc` first and hits the Fig 5 deadlock:
+//! host callbacks from *independent streams* are serialized on CUDA's
+//! internal host-execution thread, so a callback that blocks (waiting for a
+//! peer's ready flag) starves the very callback that would set it.
+//!
+//! [`HostFuncBroker`] reproduces that semantics: per-process FIFO callback
+//! queues with blocking waits — and a detector for the circular-wait state.
+//! `cuStreamWriteValue`/`cuStreamWaitValue` (the fix) are stream-native and
+//! modelled as plain nanosecond-scale stream ops with no shared thread.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::config::StreamOrdering;
+
+/// Cost model for the ordering primitive on each P2P op.
+#[derive(Debug, Clone, Copy)]
+pub struct OrderingCost {
+    /// Latency added on the critical path per synchronization point (ns).
+    pub sync_ns: u64,
+    /// SMs held for the duration of the op (0 except the NCCLX-like
+    /// ordering kernel, which is accounted in the transport instead).
+    pub sms: u32,
+}
+
+impl OrderingCost {
+    pub fn of(mode: StreamOrdering) -> OrderingCost {
+        match mode {
+            // Host callback dispatch: μs-scale (CUDA internal thread hop).
+            StreamOrdering::HostFunc => OrderingCost { sync_ns: 6_000, sms: 0 },
+            // Stream memory op: sub-μs (device-side poll on a mapped word).
+            StreamOrdering::WriteValue => OrderingCost { sync_ns: 400, sms: 0 },
+        }
+    }
+}
+
+/// An event that callbacks wait on / signal (e.g. `proxyReadyEvent` of the
+/// forward or backward P2P group between a GPU pair).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventFlag(pub u64);
+
+/// One host-function callback: optionally blocks until `waits` is signalled,
+/// then signals `signals`.
+#[derive(Debug, Clone)]
+pub struct HostCallback {
+    pub waits: Option<EventFlag>,
+    pub signals: Vec<EventFlag>,
+    /// Label for diagnostics ("gpu0.bwd_recv").
+    pub label: &'static str,
+}
+
+/// Result of executing the queued callbacks.
+#[derive(Debug, PartialEq, Eq)]
+pub enum BrokerOutcome {
+    /// All callbacks ran; order of completion labels.
+    Completed(Vec<&'static str>),
+    /// Circular wait: the listed callbacks can never run.
+    Deadlock(Vec<&'static str>),
+}
+
+/// Per-process host-callback execution: each process (≈ one training rank)
+/// has ONE internal CUDA host thread running its callbacks strictly FIFO.
+#[derive(Debug, Default)]
+pub struct HostFuncBroker {
+    queues: HashMap<usize, VecDeque<HostCallback>>,
+}
+
+impl HostFuncBroker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a callback on `process`'s host thread.
+    pub fn enqueue(&mut self, process: usize, cb: HostCallback) {
+        self.queues.entry(process).or_default().push_back(cb);
+    }
+
+    /// Execute until done or stuck. The semantics being tested: a *blocked
+    /// head* callback blocks its whole thread — callbacks behind it cannot
+    /// run even if their own waits are satisfied (single-thread limitation
+    /// of `cudaLaunchHostFunc`).
+    pub fn run(&mut self, pre_signalled: &[EventFlag]) -> BrokerOutcome {
+        let mut signalled: HashSet<EventFlag> = pre_signalled.iter().copied().collect();
+        let mut completed = Vec::new();
+        loop {
+            let mut progressed = false;
+            let pids: Vec<usize> = {
+                let mut v: Vec<usize> = self.queues.keys().copied().collect();
+                v.sort();
+                v
+            };
+            for pid in pids {
+                let runnable = {
+                    let q = &self.queues[&pid];
+                    match q.front() {
+                        None => false,
+                        Some(cb) => cb.waits.map_or(true, |w| signalled.contains(&w)),
+                    }
+                };
+                if runnable {
+                    let cb = self.queues.get_mut(&pid).unwrap().pop_front().unwrap();
+                    for s in cb.signals {
+                        signalled.insert(s);
+                    }
+                    completed.push(cb.label);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        let stuck: Vec<&'static str> = self
+            .queues
+            .values()
+            .flat_map(|q| q.iter().map(|cb| cb.label))
+            .collect();
+        if stuck.is_empty() {
+            BrokerOutcome::Completed(completed)
+        } else {
+            BrokerOutcome::Deadlock(stuck)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FWD_0_TO_1: EventFlag = EventFlag(1);
+    const BWD_1_TO_0: EventFlag = EventFlag(2);
+
+    /// The Fig 5 scenario. GPU0's host thread first enqueues a callback
+    /// that blocks on the *backward* communication from GPU1; the callback
+    /// that would signal GPU0's forward send sits behind it. GPU1 is the
+    /// mirror image. Neither head can run → deadlock.
+    #[test]
+    fn fig5_bidirectional_hostfunc_deadlocks() {
+        let mut b = HostFuncBroker::new();
+        b.enqueue(
+            0,
+            HostCallback { waits: Some(BWD_1_TO_0), signals: vec![], label: "gpu0.wait_bwd" },
+        );
+        b.enqueue(
+            0,
+            HostCallback { waits: None, signals: vec![FWD_0_TO_1], label: "gpu0.signal_fwd" },
+        );
+        b.enqueue(
+            1,
+            HostCallback { waits: Some(FWD_0_TO_1), signals: vec![], label: "gpu1.wait_fwd" },
+        );
+        b.enqueue(
+            1,
+            HostCallback { waits: None, signals: vec![BWD_1_TO_0], label: "gpu1.signal_bwd" },
+        );
+        match b.run(&[]) {
+            BrokerOutcome::Deadlock(stuck) => {
+                assert_eq!(stuck.len(), 4);
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    /// The paper's first workaround: merging the bidirectional P2P groups
+    /// reorders the queues so the signal precedes the blocking wait.
+    #[test]
+    fn merged_groups_complete() {
+        let mut b = HostFuncBroker::new();
+        b.enqueue(
+            0,
+            HostCallback { waits: None, signals: vec![FWD_0_TO_1], label: "gpu0.signal_fwd" },
+        );
+        b.enqueue(
+            0,
+            HostCallback { waits: Some(BWD_1_TO_0), signals: vec![], label: "gpu0.wait_bwd" },
+        );
+        b.enqueue(
+            1,
+            HostCallback { waits: None, signals: vec![BWD_1_TO_0], label: "gpu1.signal_bwd" },
+        );
+        b.enqueue(
+            1,
+            HostCallback { waits: Some(FWD_0_TO_1), signals: vec![], label: "gpu1.wait_fwd" },
+        );
+        match b.run(&[]) {
+            BrokerOutcome::Completed(order) => assert_eq!(order.len(), 4),
+            other => panic!("expected completion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pre_signalled_event_unblocks() {
+        let mut b = HostFuncBroker::new();
+        b.enqueue(0, HostCallback { waits: Some(EventFlag(9)), signals: vec![], label: "w" });
+        assert_eq!(b.run(&[EventFlag(9)]), BrokerOutcome::Completed(vec!["w"]));
+    }
+
+    #[test]
+    fn blocked_head_starves_runnable_tail() {
+        // The single-thread limitation itself: the tail callback has no
+        // dependency at all but can never run.
+        let mut b = HostFuncBroker::new();
+        b.enqueue(0, HostCallback { waits: Some(EventFlag(5)), signals: vec![], label: "head" });
+        b.enqueue(0, HostCallback { waits: None, signals: vec![EventFlag(5)], label: "tail" });
+        match b.run(&[]) {
+            BrokerOutcome::Deadlock(stuck) => assert_eq!(stuck, vec!["head", "tail"]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ordering_costs_differ() {
+        let hf = OrderingCost::of(StreamOrdering::HostFunc);
+        let wv = OrderingCost::of(StreamOrdering::WriteValue);
+        assert!(hf.sync_ns > 10 * wv.sync_ns);
+        assert_eq!(wv.sms, 0);
+    }
+}

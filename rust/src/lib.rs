@@ -1,0 +1,49 @@
+//! # VCCL — an efficient, reliable and observable collective communication
+//! library, reproduced on a simulated GPU-cluster substrate.
+//!
+//! This crate reproduces the system described in *"An Efficient, Reliable and
+//! Observable Collective Communication Library in Large-scale GPU Training
+//! Clusters"* (VCCL). The paper's substrate — Hopper GPUs, ConnectX-7 RNICs,
+//! a 400 Gbps rail-optimized CLOS fabric — is rebuilt here as a deterministic
+//! discrete-event simulation, faithful to the abstractions the paper
+//! manipulates (SMs / copy engines / CUDA streams on the GPU side, QP / WR /
+//! WC / CQ verbs on the network side). The *real* compute path (the paper's
+//! GPT-2 training workload) is JAX + Pallas, AOT-lowered to HLO and executed
+//! from Rust through PJRT (`runtime`).
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`sim`] — discrete-event engine: nanosecond clock, event queue.
+//! - [`topology`] — servers, GPUs, RNICs, NVLink, two-tier rail-optimized CLOS.
+//! - [`net`] — RDMA verbs simulation: QPs, WR/WC/CQ, retry-timeout, CTS
+//!   credits, max-min fair link sharing, incast/PFC behaviour, port failures.
+//! - [`gpu`] — SM pool + block scheduler, GEMM wave/straggler model
+//!   (paper Appendix E), copy engines, CUDA streams and ordering primitives.
+//! - [`ccl`] — the collective library itself: communicators, transports
+//!   (kernel-based NCCL baseline, NCCLX-like, SM-free VCCL), primitives,
+//!   zero-copy registration, dynamic memory pool.
+//! - [`fault`] — primary-backup QP mechanism (§3.3): failure perception,
+//!   state migration, breakpoint retransmission, failback.
+//! - [`monitor`] — window-based O(μs) network monitor (§3.4) and the
+//!   dual-threshold straggler pinpointer.
+//! - [`pipeline`] — 1F1B pipeline-parallel schedule and the training
+//!   iteration model used for the throughput experiments (Fig 11, 13b, 14).
+//! - [`runtime`] — PJRT (xla crate) wrapper that loads the AOT artifacts.
+//! - [`train`] — real-compute training driver (loss curves, Fig 12 / e2e).
+//! - [`coordinator`] — leader/CLI: experiment drivers for every paper
+//!   table and figure.
+
+pub mod util;
+pub mod config;
+pub mod sim;
+pub mod topology;
+pub mod net;
+pub mod gpu;
+pub mod ccl;
+pub mod fault;
+pub mod monitor;
+pub mod pipeline;
+pub mod metrics;
+pub mod runtime;
+pub mod train;
+pub mod coordinator;

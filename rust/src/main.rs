@@ -1,0 +1,48 @@
+//! `vccl` — CLI entry point. See `vccl help` / coordinator module docs.
+
+use vccl::coordinator::{self, Command};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, cfg) = match coordinator::parse_args(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", coordinator::help_text());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        Command::Help => {
+            println!("{}", coordinator::help_text());
+            Ok(())
+        }
+        Command::Info => {
+            println!("{cfg:#?}");
+            Ok(())
+        }
+        Command::Exp { id } => coordinator::run_experiment(&id, &cfg).map(|r| println!("{r}")),
+        Command::Train { preset, steps, out } => {
+            let opts = vccl::train::TrainOpts { preset, steps, ..Default::default() };
+            vccl::train::run_training(std::path::Path::new("artifacts"), cfg, &opts, |rec| {
+                println!("step {:>5}  loss {:.4}  ({:.0} ms)", rec.step, rec.loss, rec.wall_ms);
+            })
+            .map(|rep| {
+                println!(
+                    "transport={} sim_iter={:.1}ms sim_tflops/gpu={:.0} final_loss={:.4}",
+                    rep.transport,
+                    rep.sim_iter_ns as f64 / 1e6,
+                    rep.sim_tflops_per_gpu,
+                    rep.final_loss()
+                );
+                if let Some(path) = out {
+                    std::fs::write(&path, rep.to_csv()).expect("write csv");
+                    println!("loss curve -> {}", path.display());
+                }
+            })
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

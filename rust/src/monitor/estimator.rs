@@ -1,0 +1,172 @@
+//! Bandwidth estimators: per-message and sliding-window (Fig 9).
+
+use std::collections::VecDeque;
+
+use crate::sim::SimTime;
+
+/// One completed message observed at the verbs layer.
+#[derive(Debug, Clone, Copy)]
+pub struct MsgRecord {
+    pub posted_at: SimTime,
+    pub completed_at: SimTime,
+    pub bytes: u64,
+}
+
+/// One throughput sample emitted by the estimator.
+#[derive(Debug, Clone, Copy)]
+pub struct BwSample {
+    /// Timestamp of the sample (completion of the window's last WC).
+    pub at: SimTime,
+    /// Estimated throughput in Gbps.
+    pub gbps: f64,
+    /// Span the estimate covers (t₂ − t₁), ns.
+    pub span_ns: u64,
+}
+
+/// Sliding-window estimator. `window == 1` is exactly the paper's naive
+/// per-message scheme.
+#[derive(Debug)]
+pub struct WindowEstimator {
+    window: usize,
+    ring: VecDeque<MsgRecord>,
+    samples: Vec<BwSample>,
+}
+
+impl WindowEstimator {
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 1, "window must be ≥ 1");
+        WindowEstimator { window, ring: VecDeque::with_capacity(window), samples: Vec::new() }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Push a completed message; emits a sample once the ring holds a full
+    /// window (then slides by one per message).
+    pub fn push(&mut self, rec: MsgRecord) -> Option<BwSample> {
+        self.ring.push_back(rec);
+        if self.ring.len() > self.window {
+            self.ring.pop_front();
+        }
+        if self.ring.len() < self.window {
+            return None;
+        }
+        // t₁ = post of the first WR in the window; the WCs may complete out
+        // of post order under multi-QP striping, so take min/max defensively.
+        let t1 = self.ring.iter().map(|r| r.posted_at).min().unwrap();
+        let t2 = self.ring.iter().map(|r| r.completed_at).max().unwrap();
+        let span = t2.since(t1).as_ns().max(1);
+        let total: u64 = self.ring.iter().map(|r| r.bytes).sum();
+        let gbps = total as f64 / span as f64 / 0.125;
+        let s = BwSample { at: t2, gbps, span_ns: span };
+        self.samples.push(s);
+        Some(s)
+    }
+
+    pub fn samples(&self) -> &[BwSample] {
+        &self.samples
+    }
+
+    pub fn last(&self) -> Option<BwSample> {
+        self.samples.last().copied()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.ring.capacity() * std::mem::size_of::<MsgRecord>()
+            + self.samples.capacity() * std::mem::size_of::<BwSample>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(post_us: u64, done_us: u64, bytes: u64) -> MsgRecord {
+        MsgRecord {
+            posted_at: SimTime::us(post_us),
+            completed_at: SimTime::us(done_us),
+            bytes,
+        }
+    }
+
+    #[test]
+    fn per_message_equals_window_one() {
+        let mut e = WindowEstimator::new(1);
+        // 1MB in 20.97us ≈ 400 Gbps.
+        let s = e.push(msg(0, 21, 1 << 20)).unwrap();
+        assert!((s.gbps - 399.5).abs() < 5.0, "gbps={}", s.gbps);
+    }
+
+    #[test]
+    fn window_needs_w_messages() {
+        let mut e = WindowEstimator::new(4);
+        assert!(e.push(msg(0, 10, 1000)).is_none());
+        assert!(e.push(msg(10, 20, 1000)).is_none());
+        assert!(e.push(msg(20, 30, 1000)).is_none());
+        assert!(e.push(msg(30, 40, 1000)).is_some());
+        // Slides by one afterwards.
+        assert!(e.push(msg(40, 50, 1000)).is_some());
+        assert_eq!(e.samples().len(), 2);
+    }
+
+    #[test]
+    fn window_amortizes_queuing_noise() {
+        // Two interleaved messages share the link: each takes 2× the solo
+        // time (queuing), but the window over both spans the same wall time
+        // as their combined bytes → correct aggregate estimate.
+        // Solo: 1MB @ 400Gbps = ~21us. Interleaved pair: both complete at 42us.
+        let mut naive = WindowEstimator::new(1);
+        let mut windowed = WindowEstimator::new(2);
+        let a = msg(0, 42, 1 << 20);
+        let b = msg(0, 42, 1 << 20);
+        let na = naive.push(a).unwrap();
+        let _ = naive.push(b).unwrap();
+        windowed.push(a);
+        let w = windowed.push(b).unwrap();
+        // Naive halves the estimate (each message "sees" 2MB-worth of time).
+        assert!((na.gbps - 200.0).abs() < 5.0, "naive={}", na.gbps);
+        // Windowed recovers the true link rate.
+        assert!((w.gbps - 400.0).abs() < 5.0, "windowed={}", w.gbps);
+    }
+
+    #[test]
+    fn larger_window_smooths_more() {
+        // A single slow outlier among fast messages: W=8 dampens it more
+        // than W=2 (Appendix H's fluctuation story).
+        let make = |w: usize| {
+            let mut e = WindowEstimator::new(w);
+            let mut t = 0;
+            let mut minmax: (f64, f64) = (f64::MAX, 0.0);
+            for i in 0..64u64 {
+                let dur = if i == 32 { 200 } else { 20 }; // outlier
+                if let Some(s) = e.push(msg(t, t + dur, 1 << 20)) {
+                    minmax.0 = minmax.0.min(s.gbps);
+                    minmax.1 = minmax.1.max(s.gbps);
+                }
+                t += dur;
+            }
+            minmax.1 / minmax.0 // fluctuation ratio
+        };
+        let f2 = make(2);
+        let f8 = make(8);
+        let f32_ = make(32);
+        assert!(f2 > f8 && f8 > f32_, "f2={f2} f8={f8} f32={f32_}");
+    }
+
+    #[test]
+    fn out_of_order_completion_safe() {
+        let mut e = WindowEstimator::new(2);
+        e.push(msg(0, 30, 1000));
+        // Completes before the earlier message (multi-QP striping).
+        let s = e.push(msg(5, 25, 1000)).unwrap();
+        assert_eq!(s.span_ns, 30_000 - 0);
+    }
+
+    #[test]
+    fn zero_span_guard() {
+        let mut e = WindowEstimator::new(1);
+        let s = e.push(msg(10, 10, 1000)).unwrap();
+        assert!(s.gbps.is_finite());
+    }
+}

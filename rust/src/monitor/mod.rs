@@ -1,0 +1,113 @@
+//! Online network performance monitor (§3.4): O(μs) per-NIC throughput from
+//! WR/WC timestamps, window-smoothed, plus the dual-threshold straggler
+//! pinpointer.
+//!
+//! Two estimators, exactly as the paper frames them (Fig 9):
+//!
+//! - **per-message**: `B = ω(M) / (t₂ − t₁)` — captures transient dynamics
+//!   but is hopelessly noisy under concurrent traffic (queuing delay and
+//!   bandwidth interleaving pollute `t₂ − t₁`);
+//! - **per-window**: over the last `W` messages, `B̄ = Σω(Mᵢ) / (t₂ − t₁)`
+//!   with `t₁` = post time of the window's first WR and `t₂` = completion
+//!   of its last WC — amortizes queuing noise while staying responsive.
+//!   `W = 1` degenerates to per-message; Table 3 uses `W = 8`; Appendix H
+//!   shows `W = 32` over-smoothing.
+//!
+//! The pinpointer (Fig 15) flags a *network* anomaly only when BOTH hold:
+//!  (i) windowed bandwidth drops > 50 % below the trailing (~10 ms) average
+//!      of the same primitive, and
+//! (ii) remaining-to-send (un-ACKed bytes on the NIC) exceeds 2× its
+//!      historical max — bandwidth collapse *with* data piling up is a
+//!      network problem; collapse with an empty NIC is the upstream
+//!      (compute) starving the NIC (GPU interference / normal completion).
+
+pub mod estimator;
+pub mod pinpoint;
+
+pub use estimator::{BwSample, MsgRecord, WindowEstimator};
+pub use pinpoint::{Pinpointer, Verdict};
+
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+/// Per-port monitor bundle: one estimator + one pinpointer per RNIC port,
+/// keyed by an opaque port index (the cluster maps `PortId` → index).
+#[derive(Debug)]
+pub struct MonitorSet {
+    window: usize,
+    trailing_ns: u64,
+    bw_drop_ratio: f64,
+    rts_multiple: f64,
+    ports: HashMap<usize, PortMonitor>,
+    /// Overhead accounting: CPU-ns charged per processed WC (Table 5).
+    pub wc_cost_ns: u64,
+    pub processed_wcs: u64,
+}
+
+#[derive(Debug)]
+pub struct PortMonitor {
+    pub estimator: WindowEstimator,
+    pub pinpointer: Pinpointer,
+}
+
+impl MonitorSet {
+    pub fn new(cfg: &crate::config::VcclConfig) -> Self {
+        MonitorSet {
+            window: cfg.window_size,
+            trailing_ns: cfg.trailing_ns,
+            bw_drop_ratio: cfg.bw_drop_ratio,
+            rts_multiple: cfg.rts_multiple,
+            ports: HashMap::new(),
+            wc_cost_ns: 150, // ~pair of timestamps + ring push per WC
+            processed_wcs: 0,
+        }
+    }
+
+    fn port(&mut self, port: usize) -> &mut PortMonitor {
+        let (w, t, b, r) = (self.window, self.trailing_ns, self.bw_drop_ratio, self.rts_multiple);
+        self.ports.entry(port).or_insert_with(|| PortMonitor {
+            estimator: WindowEstimator::new(w),
+            pinpointer: Pinpointer::new(t, b, r),
+        })
+    }
+
+    /// Feed one completed message (WR post time, WC completion time, bytes)
+    /// plus the port's current backlog. Returns a verdict when the sample
+    /// completes a window.
+    pub fn on_wc(
+        &mut self,
+        port: usize,
+        posted_at: SimTime,
+        completed_at: SimTime,
+        bytes: u64,
+        backlog_bytes: u64,
+    ) -> Option<Verdict> {
+        self.processed_wcs += 1;
+        let pm = self.port(port);
+        let sample = pm.estimator.push(MsgRecord { posted_at, completed_at, bytes })?;
+        Some(pm.pinpointer.observe(sample.at, sample.gbps, backlog_bytes))
+    }
+
+    /// All samples a port has produced (for the figure outputs).
+    pub fn samples(&self, port: usize) -> &[BwSample] {
+        self.ports.get(&port).map(|p| p.estimator.samples()).unwrap_or(&[])
+    }
+
+    pub fn verdicts(&self, port: usize) -> &[(SimTime, Verdict)] {
+        self.ports.get(&port).map(|p| p.pinpointer.log()).unwrap_or(&[])
+    }
+
+    /// Total monitor CPU time charged (ns) — the Table 5 overhead metric.
+    pub fn cpu_overhead_ns(&self) -> u64 {
+        self.processed_wcs * self.wc_cost_ns
+    }
+
+    /// Approximate resident memory of the monitor state in bytes
+    /// (ring buffers + sample logs) — Table 5's memory column.
+    pub fn memory_bytes(&self) -> usize {
+        self.ports
+            .values()
+            .map(|p| p.estimator.memory_bytes() + p.pinpointer.memory_bytes())
+            .sum()
+    }
+}

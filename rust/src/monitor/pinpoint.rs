@@ -1,0 +1,210 @@
+//! The dual-threshold network-straggler pinpointer (§3.4, Fig 15).
+//!
+//! Inputs per windowed sample: estimated bandwidth + the NIC's
+//! remaining-to-send (RTS, un-ACKed bytes tracked via the WR/WC lifecycle).
+//! Output verdicts reproduce the four Fig 15 cases:
+//!
+//! | case                      | bandwidth        | RTS            | verdict        |
+//! |---------------------------|------------------|----------------|----------------|
+//! | 1 normal                  | stable           | stable         | Healthy        |
+//! | 2 task termination        | declines to 0    | drains to 0    | Healthy        |
+//! | 3 network interference    | drops > 50 %     | accumulates 2× | NetworkAnomaly |
+//! | 4 GPU interference        | drops > 50 %     | no build-up    | NonNetwork     |
+
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// Classification of one monitored sample.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Bandwidth within range, or decline explained by buffer drain.
+    Healthy,
+    /// Condition (i) + (ii): the link itself is degraded — isolate it.
+    NetworkAnomaly,
+    /// Bandwidth dropped but the NIC is starved: upstream (GPU/compute)
+    /// problem, NOT the network ("network innocence" proof).
+    NonNetwork,
+}
+
+/// Streaming pinpointer with a trailing-average baseline.
+#[derive(Debug)]
+pub struct Pinpointer {
+    trailing_ns: u64,
+    bw_drop_ratio: f64,
+    rts_multiple: f64,
+    /// (t, gbps) history inside the trailing horizon.
+    trail: VecDeque<(SimTime, f64)>,
+    trail_sum: f64,
+    /// Historical max of RTS (condition ii baseline).
+    rts_hist_max: u64,
+    log: Vec<(SimTime, Verdict)>,
+}
+
+impl Pinpointer {
+    pub fn new(trailing_ns: u64, bw_drop_ratio: f64, rts_multiple: f64) -> Self {
+        Pinpointer {
+            trailing_ns,
+            bw_drop_ratio,
+            rts_multiple,
+            trail: VecDeque::new(),
+            trail_sum: 0.0,
+            rts_hist_max: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// Observe one windowed sample. Returns (and logs) the verdict.
+    pub fn observe(&mut self, at: SimTime, gbps: f64, rts_bytes: u64) -> Verdict {
+        // Evict history outside the trailing horizon.
+        while let Some(&(t, g)) = self.trail.front() {
+            if at.since(t).as_ns() > self.trailing_ns {
+                self.trail.pop_front();
+                self.trail_sum -= g;
+            } else {
+                break;
+            }
+        }
+        let baseline = if self.trail.is_empty() {
+            gbps
+        } else {
+            self.trail_sum / self.trail.len() as f64
+        };
+
+        let bw_collapsed = gbps < baseline * self.bw_drop_ratio;
+        // Condition (ii) against the max observed *before* this sample.
+        let rts_piled = self.rts_hist_max > 0
+            && rts_bytes as f64 > self.rts_hist_max as f64 * self.rts_multiple;
+
+        let verdict = if bw_collapsed && rts_piled {
+            Verdict::NetworkAnomaly
+        } else if bw_collapsed {
+            // Includes both case 2 (termination: RTS drained to ~0) and
+            // case 4 (GPU interference: NIC starved). Either way: not the
+            // network's fault.
+            if rts_bytes == 0 {
+                Verdict::Healthy // terminal drain — case 2
+            } else {
+                Verdict::NonNetwork
+            }
+        } else {
+            Verdict::Healthy
+        };
+
+        // Update baselines AFTER judging (anomalous samples shouldn't
+        // poison the history — only healthy ones establish "normal").
+        // The RTS baseline additionally adapts at most 20% per healthy
+        // sample: a window straddling the onset of an anomaly reads as
+        // "healthy" (mixed bandwidth) but must not teach the detector that
+        // a piled-up NIC is normal.
+        if verdict == Verdict::Healthy {
+            self.trail.push_back((at, gbps));
+            self.trail_sum += gbps;
+            self.rts_hist_max = if self.rts_hist_max == 0 {
+                rts_bytes
+            } else {
+                self.rts_hist_max
+                    .max(rts_bytes.min((self.rts_hist_max as f64 * 1.2) as u64))
+            };
+        }
+        self.log.push((at, verdict));
+        verdict
+    }
+
+    pub fn log(&self) -> &[(SimTime, Verdict)] {
+        &self.log
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.trail.capacity() * std::mem::size_of::<(SimTime, f64)>()
+            + self.log.capacity() * std::mem::size_of::<(SimTime, Verdict)>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pin() -> Pinpointer {
+        // 10ms trail, 50% drop, 2× RTS — the paper's thresholds.
+        Pinpointer::new(10_000_000, 0.5, 2.0)
+    }
+
+    /// Case 1: stable bandwidth + stable RTS → healthy throughout.
+    #[test]
+    fn case1_normal_traffic() {
+        let mut p = pin();
+        for i in 0..100u64 {
+            let v = p.observe(SimTime::us(10 * i), 390.0 + (i % 7) as f64, 4 << 20);
+            assert_eq!(v, Verdict::Healthy, "sample {i}");
+        }
+    }
+
+    /// Case 2: task termination — bandwidth falls because the NIC buffer
+    /// drains; RTS → 0 explains it.
+    #[test]
+    fn case2_termination_not_flagged() {
+        let mut p = pin();
+        for i in 0..50u64 {
+            p.observe(SimTime::us(10 * i), 400.0, 4 << 20);
+        }
+        // Tail-off with empty NIC.
+        for i in 50..60u64 {
+            let v = p.observe(SimTime::us(10 * i), 30.0, 0);
+            assert_eq!(v, Verdict::Healthy, "terminal sample {i}");
+        }
+    }
+
+    /// Case 3: network interference — bandwidth halves AND un-sent data
+    /// piles up on the NIC → network anomaly.
+    #[test]
+    fn case3_network_interference_flagged() {
+        let mut p = pin();
+        for i in 0..50u64 {
+            p.observe(SimTime::us(10 * i), 400.0, 4 << 20);
+        }
+        let mut flagged = 0;
+        for i in 50..70u64 {
+            let rts = (4u64 << 20) * (2 + (i - 50)); // accumulating
+            if p.observe(SimTime::us(10 * i), 120.0, rts) == Verdict::NetworkAnomaly {
+                flagged += 1;
+            }
+        }
+        assert!(flagged >= 15, "flagged={flagged}");
+    }
+
+    /// Case 4: GPU interference — bandwidth collapses but the NIC is
+    /// starved (no accumulation) → NOT a network anomaly.
+    #[test]
+    fn case4_gpu_interference_not_network() {
+        let mut p = pin();
+        for i in 0..50u64 {
+            p.observe(SimTime::us(10 * i), 400.0, 4 << 20);
+        }
+        for i in 50..70u64 {
+            let v = p.observe(SimTime::us(10 * i), 100.0, 1 << 20);
+            assert_eq!(v, Verdict::NonNetwork, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn anomalies_do_not_poison_baseline() {
+        let mut p = pin();
+        for i in 0..50u64 {
+            p.observe(SimTime::us(10 * i), 400.0, 4 << 20);
+        }
+        // Long anomaly, then recovery: recovery must read as healthy and
+        // the anomaly must KEEP being flagged (baseline not dragged down).
+        for i in 50..90u64 {
+            let v = p.observe(SimTime::us(10 * i), 100.0, 40 << 20);
+            assert_eq!(v, Verdict::NetworkAnomaly, "sample {i}");
+        }
+        let v = p.observe(SimTime::us(900), 395.0, 4 << 20);
+        assert_eq!(v, Verdict::Healthy);
+    }
+
+    #[test]
+    fn cold_start_is_healthy() {
+        let mut p = pin();
+        assert_eq!(p.observe(SimTime::ZERO, 5.0, 0), Verdict::Healthy);
+    }
+}

@@ -1,0 +1,23 @@
+//! Network substrate: fluid-flow bandwidth model + RDMA verbs simulation.
+//!
+//! Two halves:
+//!
+//! - [`flow`] — a progress-based fluid model: every in-flight transfer is a
+//!   *flow* over a path of links; link bandwidth is divided max-min fairly
+//!   among the flows crossing it, and each flow's completion time is
+//!   re-derived whenever the flow set or link state changes. Incast (the
+//!   many-to-one pattern behind Fig 18's congestion collapse) degrades the
+//!   effective goodput of a receive port shared by several flows, modelling
+//!   PFC backpressure.
+//!
+//! - [`rdma`] — the verbs narrow waist the paper builds on (§3.4): QPs with
+//!   the RESET→INIT→RTR→RTS→ERROR state machine, Work Requests that become
+//!   flows, Work Completions with success/retry-exceeded status, the
+//!   IB_TIMEOUT/IB_RETRY_CNT retransmission window, and the hardware warm-up
+//!   period after a QP reset that §3.3 masks by overlapping with failover.
+
+pub mod flow;
+pub mod rdma;
+
+pub use flow::{FlowId, FlowMeta, FlowNet, FlowTimer};
+pub use rdma::{CompletionStatus, NetOutput, Qp, QpId, QpState, RdmaNet, WorkCompletion, WrId};

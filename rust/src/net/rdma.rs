@@ -1,0 +1,650 @@
+//! RDMA verbs simulation: QPs, WRs, WCs, retry-timeout semantics.
+//!
+//! This is the "narrow waist" (§3.4) the whole paper stands on. The model
+//! keeps exactly the behaviours VCCL's mechanisms depend on:
+//!
+//! - **QP state machine** RESET→INIT→RTR→RTS→ERROR. A link failure drives
+//!   affected QPs to ERROR after the hardware retransmission window
+//!   (IB_TIMEOUT/IB_RETRY_CNT), surfacing a `RetryExceeded` WC — the paper's
+//!   Fig 7(a) failure-perception trigger.
+//! - **WR → flow → WC** with post/completion timestamps, feeding the
+//!   O(μs) monitor (§3.4).
+//! - **Warm-up**: a freshly transitioned QP needs `qp_warmup_ns` before the
+//!   hardware serves at full rate (§3.3 recovery); VCCL masks it by
+//!   resetting proactively during failover. Modelled as a transfer-start
+//!   gate: WRs posted while cold are released when warm.
+//!
+//! The layer is engine-agnostic: every mutating call returns a [`NetOutput`]
+//! of timers the owner must schedule and WCs to deliver.
+
+use std::collections::HashMap;
+
+use super::flow::{FlowId, FlowMeta, FlowNet, FlowTimer};
+use crate::config::NetConfig;
+use crate::sim::SimTime;
+use crate::topology::{Fabric, Path, PortId};
+
+/// Queue-pair identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QpId(pub u64);
+
+/// Work-request identifier (caller-assigned, unique per QP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WrId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QpState {
+    Reset,
+    Init,
+    Rtr,
+    Rts,
+    Error,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionStatus {
+    Success,
+    /// `IBV_WC_RETRY_EXC_ERR`: the hardware exhausted
+    /// IB_RETRY_CNT × timeout without an ACK.
+    RetryExceeded,
+    /// WR flushed because the QP entered the error state.
+    WrFlushed,
+}
+
+/// A work completion, timestamped for the monitor.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkCompletion {
+    pub qp: QpId,
+    pub wr: WrId,
+    pub status: CompletionStatus,
+    pub bytes: u64,
+    pub posted_at: SimTime,
+    pub completed_at: SimTime,
+}
+
+/// What a mutating call asks the owner to do.
+#[derive(Debug, Default)]
+pub struct NetOutput {
+    /// (Re)schedule flow-completion checks.
+    pub timers: Vec<FlowTimer>,
+    /// Deliver these completions to their CQs.
+    pub wcs: Vec<WorkCompletion>,
+    /// Schedule a retry-deadline check: `on_retry_deadline(qp, epoch)` at t.
+    pub retry_deadlines: Vec<(QpId, u32, SimTime)>,
+    /// Schedule a warm-up release: `on_warm(qp)` at t.
+    pub warmups: Vec<(QpId, SimTime)>,
+}
+
+impl NetOutput {
+    fn merge(&mut self, other: NetOutput) {
+        self.timers.extend(other.timers);
+        self.wcs.extend(other.wcs);
+        self.retry_deadlines.extend(other.retry_deadlines);
+        self.warmups.extend(other.warmups);
+    }
+}
+
+#[derive(Debug)]
+struct Wr {
+    wr: WrId,
+    bytes: u64,
+    posted_at: SimTime,
+    flow: Option<FlowId>, // None while queued behind a cold QP
+    /// Extra caller-supplied fixed latency (receiver-side delivery copies
+    /// etc.), folded into the flow's tail.
+    extra_tail_ns: u64,
+}
+
+/// One simulated queue pair (send side; the receive side is implicit —
+/// completion is delivered to both endpoints by the owner).
+#[derive(Debug)]
+pub struct Qp {
+    pub id: QpId,
+    pub src: PortId,
+    pub dst: PortId,
+    pub state: QpState,
+    path: Path,
+    /// Warm until: WRs posted before this fire at reduced readiness.
+    warm_at: SimTime,
+    /// Monotonic epoch; bumped whenever retry context changes so stale
+    /// deadline events are ignored.
+    epoch: u32,
+    /// Deadline of the running retransmission window (None = healthy).
+    retrying_since: Option<SimTime>,
+    outstanding: Vec<Wr>,
+    next_wr_seq: u64,
+}
+
+impl Qp {
+    pub fn outstanding_wrs(&self) -> usize {
+        self.outstanding.len()
+    }
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// The RDMA network: QPs over a [`FlowNet`].
+pub struct RdmaNet {
+    pub flows: FlowNet,
+    cfg: NetConfig,
+    qps: HashMap<QpId, Qp>,
+    next_qp: u64,
+    flow_owner: HashMap<FlowId, (QpId, WrId)>,
+}
+
+impl RdmaNet {
+    pub fn new(fabric: &Fabric, cfg: NetConfig) -> Self {
+        let flows = FlowNet::from_fabric(fabric, cfg.wire_efficiency, cfg.incast_penalty);
+        RdmaNet { flows, cfg, qps: HashMap::new(), next_qp: 0, flow_owner: HashMap::new() }
+    }
+
+    pub fn cfg(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    /// Create a QP between two ports and drive it straight to RTS (the
+    /// bootstrap connection phase; metadata caching makes later resets
+    /// cheap — §3.3 "recovery of normal QPs").
+    pub fn create_qp(&mut self, fabric: &Fabric, src: PortId, dst: PortId) -> QpId {
+        let id = QpId(self.next_qp);
+        self.next_qp += 1;
+        let path = fabric.path_inter(src, dst);
+        self.qps.insert(
+            id,
+            Qp {
+                id,
+                src,
+                dst,
+                state: QpState::Rts,
+                path,
+                warm_at: SimTime::ZERO,
+                epoch: 0,
+                retrying_since: None,
+                outstanding: Vec::new(),
+                next_wr_seq: 0,
+            },
+        );
+        id
+    }
+
+    pub fn qp_state(&self, qp: QpId) -> QpState {
+        self.qps[&qp].state
+    }
+
+    pub fn qp_src(&self, qp: QpId) -> PortId {
+        self.qps[&qp].src
+    }
+
+    pub fn qp_dst(&self, qp: QpId) -> PortId {
+        self.qps[&qp].dst
+    }
+
+    pub fn qp_outstanding(&self, qp: QpId) -> usize {
+        self.qps[&qp].outstanding.len()
+    }
+
+    /// Is every link on this QP's path currently up? (The CTS re-probe of
+    /// the §3.3 case-2 double check.)
+    pub fn qp_path_up(&self, qp: QpId, fabric: &Fabric) -> bool {
+        fabric.path_up(self.qps[&qp].path())
+    }
+
+    /// Total un-ACKed bytes on a port's QPs — the monitor's
+    /// "remaining-to-send" (RTS) signal (§3.4 pinpointing condition ii).
+    pub fn port_backlog_bytes(&self, port: PortId) -> u64 {
+        self.qps
+            .values()
+            .filter(|q| q.src == port)
+            .flat_map(|q| q.outstanding.iter())
+            .map(|w| w.bytes)
+            .sum()
+    }
+
+    /// Post a send WR. `extra_tail_ns` adds caller-level fixed latency to
+    /// the completion (e.g. the receiver's chunk→app delivery copy in the
+    /// staged NCCL transport). Returns the WrId plus scheduling work.
+    pub fn post_send(
+        &mut self,
+        qp_id: QpId,
+        bytes: u64,
+        now: SimTime,
+        extra_tail_ns: u64,
+    ) -> (WrId, NetOutput) {
+        let mut out = NetOutput::default();
+        let (wr_id, start_at, tail, path) = {
+            let qp = self.qps.get_mut(&qp_id).expect("post_send on unknown QP");
+            let wr_id = WrId(qp.next_wr_seq);
+            qp.next_wr_seq += 1;
+            if qp.state != QpState::Rts {
+                // Posting to a non-RTS QP flushes immediately.
+                out.wcs.push(WorkCompletion {
+                    qp: qp_id,
+                    wr: wr_id,
+                    status: CompletionStatus::WrFlushed,
+                    bytes,
+                    posted_at: now,
+                    completed_at: now,
+                });
+                return (wr_id, out);
+            }
+            let start_at = now.max(qp.warm_at);
+            let tail = self.cfg.nic_latency_ns
+                + qp.path.hops as u64 * self.cfg.hop_latency_ns
+                + extra_tail_ns;
+            qp.outstanding.push(Wr {
+                wr: wr_id,
+                bytes,
+                posted_at: now,
+                flow: None,
+                extra_tail_ns,
+            });
+            (wr_id, start_at, tail, qp.path.clone())
+        };
+        if start_at > now {
+            // Cold QP: queue the WR; it is released by `on_warm`.
+            out.warmups.push((qp_id, start_at));
+        } else {
+            let (flow, timers) =
+                self.flows.start(now, path, bytes, tail, FlowMeta(0));
+            self.flow_owner.insert(flow, (qp_id, wr_id));
+            let qp = self.qps.get_mut(&qp_id).unwrap();
+            qp.outstanding.last_mut().unwrap().flow = Some(flow);
+            out.timers.extend(timers);
+            // If the path is already dead the flow stalls immediately →
+            // arm the retransmission window.
+            out.merge(self.maybe_arm_retry(qp_id, now));
+        }
+        (wr_id, out)
+    }
+
+    /// Warm-up release: start flows for any queued WRs that were waiting.
+    pub fn on_warm(&mut self, qp_id: QpId, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        let Some(qp) = self.qps.get(&qp_id) else { return out };
+        if qp.state != QpState::Rts || now < qp.warm_at {
+            return out;
+        }
+        let pending: Vec<(WrId, u64, u64)> = qp
+            .outstanding
+            .iter()
+            .filter(|w| w.flow.is_none())
+            .map(|w| (w.wr, w.bytes, w.extra_tail_ns))
+            .collect();
+        let base_tail =
+            self.cfg.nic_latency_ns + qp.path.hops as u64 * self.cfg.hop_latency_ns;
+        let path = qp.path.clone();
+        for (wr, bytes, extra) in pending {
+            let (flow, timers) =
+                self.flows.start(now, path.clone(), bytes, base_tail + extra, FlowMeta(0));
+            self.flow_owner.insert(flow, (qp_id, wr));
+            let q = self.qps.get_mut(&qp_id).unwrap();
+            if let Some(w) = q.outstanding.iter_mut().find(|w| w.wr == wr) {
+                w.flow = Some(flow);
+            }
+            out.timers.extend(timers);
+        }
+        out.merge(self.maybe_arm_retry(qp_id, now));
+        out
+    }
+
+    /// A flow-completion timer fired.
+    pub fn on_flow_timer(&mut self, flow: FlowId, gen: u32, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        let (meta, timers) = self.flows.try_finish(flow, gen, now);
+        out.timers.extend(timers);
+        if meta.is_none() {
+            return out;
+        }
+        let Some((qp_id, wr_id)) = self.flow_owner.remove(&flow) else { return out };
+        if let Some(qp) = self.qps.get_mut(&qp_id) {
+            if let Some(pos) = qp.outstanding.iter().position(|w| w.wr == wr_id) {
+                let w = qp.outstanding.remove(pos);
+                out.wcs.push(WorkCompletion {
+                    qp: qp_id,
+                    wr: wr_id,
+                    status: CompletionStatus::Success,
+                    bytes: w.bytes,
+                    posted_at: w.posted_at,
+                    completed_at: now,
+                });
+            }
+        }
+        // Successful progress resets the retransmission window.
+        if self.qps.get(&qp_id).map_or(false, |q| q.retrying_since.is_some())
+            && !self.qp_stalled(qp_id)
+        {
+            let qp = self.qps.get_mut(&qp_id).unwrap();
+            qp.retrying_since = None;
+            qp.epoch += 1;
+        }
+        out
+    }
+
+    fn qp_stalled(&self, qp_id: QpId) -> bool {
+        let qp = &self.qps[&qp_id];
+        qp.outstanding
+            .iter()
+            .filter_map(|w| w.flow)
+            .any(|f| self.flows.is_stalled(f).unwrap_or(false))
+    }
+
+    /// Arm the hardware retransmission window if any outstanding flow is
+    /// stalled and no window is already running.
+    fn maybe_arm_retry(&mut self, qp_id: QpId, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        if !self.qp_stalled(qp_id) {
+            return out;
+        }
+        let window = self.cfg.retry_window_ns();
+        let qp = self.qps.get_mut(&qp_id).unwrap();
+        if qp.retrying_since.is_none() {
+            qp.retrying_since = Some(now);
+            qp.epoch += 1;
+            out.retry_deadlines.push((qp_id, qp.epoch, now + SimTime::ns(window)));
+        }
+        out
+    }
+
+    /// Retry-deadline event. If the QP is still stalled the hardware gives
+    /// up: every outstanding WR completes with `RetryExceeded` and the QP
+    /// enters the error state (Fig 7a).
+    pub fn on_retry_deadline(&mut self, qp_id: QpId, epoch: u32, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        let Some(qp) = self.qps.get(&qp_id) else { return out };
+        if qp.epoch != epoch || qp.retrying_since.is_none() {
+            return out; // stale — window was reset by progress or failover
+        }
+        if !self.qp_stalled(qp_id) {
+            // Link recovered but no completion has fired yet — disarm.
+            let qp = self.qps.get_mut(&qp_id).unwrap();
+            qp.retrying_since = None;
+            qp.epoch += 1;
+            return out;
+        }
+        out.merge(self.force_error(qp_id, now));
+        out
+    }
+
+    /// Drive a QP to the error state, flushing outstanding WRs. First WR
+    /// reports `RetryExceeded` (the error the proxy perceives); the rest
+    /// flush. Used both by the retry deadline and by explicit teardown.
+    pub fn force_error(&mut self, qp_id: QpId, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        let Some(qp) = self.qps.get_mut(&qp_id) else { return out };
+        qp.state = QpState::Error;
+        qp.retrying_since = None;
+        qp.epoch += 1;
+        let drained: Vec<Wr> = qp.outstanding.drain(..).collect();
+        for (i, w) in drained.iter().enumerate() {
+            if let Some(f) = w.flow {
+                self.flow_owner.remove(&f);
+                out.timers.extend(self.flows.kill(f, now));
+            }
+            out.wcs.push(WorkCompletion {
+                qp: qp_id,
+                wr: w.wr,
+                status: if i == 0 {
+                    CompletionStatus::RetryExceeded
+                } else {
+                    CompletionStatus::WrFlushed
+                },
+                bytes: w.bytes,
+                posted_at: w.posted_at,
+                completed_at: now,
+            });
+        }
+        out
+    }
+
+    /// Begin the RESET→INIT→RTR→RTS sequence on an errored QP. The state
+    /// transition itself is fast; the hardware warm-up dominates (§3.3).
+    /// VCCL calls this *immediately on failure perception* so the warm-up
+    /// overlaps the failover period ("proactive reset").
+    pub fn reset_to_rts(&mut self, qp_id: QpId, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        let warmup = self.cfg.qp_warmup_ns;
+        let Some(qp) = self.qps.get_mut(&qp_id) else { return out };
+        qp.state = QpState::Rts;
+        qp.retrying_since = None;
+        qp.epoch += 1;
+        qp.warm_at = now + SimTime::ns(warmup);
+        out.warmups.push((qp_id, qp.warm_at));
+        out
+    }
+
+    /// Whether the QP's hardware is warm (full-rate) at `now`.
+    pub fn is_warm(&self, qp_id: QpId, now: SimTime) -> bool {
+        self.qps[&qp_id].warm_at <= now
+    }
+
+    /// Port state change: stalls / resumes flows; arms retry windows on
+    /// every QP whose path crosses the port.
+    pub fn set_port_up(
+        &mut self,
+        fabric: &Fabric,
+        port: PortId,
+        up: bool,
+        now: SimTime,
+    ) -> NetOutput {
+        let mut out = NetOutput::default();
+        let tx = fabric.port_tx(port);
+        let rx = fabric.port_rx(port);
+        out.timers.extend(self.flows.set_link_up(tx, up, now));
+        out.timers.extend(self.flows.set_link_up(rx, up, now));
+        let qp_ids: Vec<QpId> = self.qps.keys().copied().collect();
+        for qp_id in qp_ids {
+            if self.qps[&qp_id].state != QpState::Rts {
+                continue;
+            }
+            if !up {
+                out.merge(self.maybe_arm_retry(qp_id, now));
+            } else if !self.qp_stalled(qp_id) {
+                // Recovered within the window: disarm quietly ("about half
+                // of flaps recover within seconds" — §3.3).
+                let qp = self.qps.get_mut(&qp_id).unwrap();
+                if qp.retrying_since.is_some() {
+                    qp.retrying_since = None;
+                    qp.epoch += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyConfig;
+    use crate::topology::{NicId, NodeId};
+
+    fn setup() -> (Fabric, RdmaNet) {
+        let fabric = Fabric::build(&TopologyConfig { num_nodes: 2, ..Default::default() });
+        // Shrink the retry window so tests run fast: 4.096us × 2^10 × 2 ≈ 8.4ms
+        let cfg = NetConfig { ib_timeout_exp: 10, ib_retry_cnt: 2, ..Default::default() };
+        let net = RdmaNet::new(&fabric, cfg);
+        (fabric, net)
+    }
+
+    fn port(node: usize, nic: usize) -> PortId {
+        PortId { nic: NicId { node: NodeId(node), local: nic }, port: 0 }
+    }
+
+    /// Mini event loop over NetOutput (timers + deadlines + warmups).
+    struct Loop {
+        wcs: Vec<WorkCompletion>,
+        timers: Vec<FlowTimer>,
+        deadlines: Vec<(QpId, u32, SimTime)>,
+        warmups: Vec<(QpId, SimTime)>,
+        now: SimTime,
+    }
+
+    impl Loop {
+        fn new() -> Self {
+            Loop {
+                wcs: vec![],
+                timers: vec![],
+                deadlines: vec![],
+                warmups: vec![],
+                now: SimTime::ZERO,
+            }
+        }
+        fn absorb(&mut self, out: NetOutput) {
+            self.wcs.extend(out.wcs);
+            self.timers.extend(out.timers);
+            self.deadlines.extend(out.retry_deadlines);
+            self.warmups.extend(out.warmups);
+        }
+        /// Run until no events remain or `until` reached.
+        fn run(&mut self, net: &mut RdmaNet, until: SimTime) {
+            loop {
+                let tt = self.timers.iter().map(|t| t.at).min();
+                let dt = self.deadlines.iter().map(|d| d.2).min();
+                let wt = self.warmups.iter().map(|w| w.1).min();
+                let next = [tt, dt, wt].into_iter().flatten().min();
+                let Some(at) = next else { break };
+                if at > until {
+                    break;
+                }
+                self.now = at;
+                if tt == Some(at) {
+                    let i = self.timers.iter().position(|t| t.at == at).unwrap();
+                    let t = self.timers.remove(i);
+                    let out = net.on_flow_timer(t.flow, t.gen, at);
+                    self.absorb(out);
+                } else if dt == Some(at) {
+                    let i = self.deadlines.iter().position(|d| d.2 == at).unwrap();
+                    let d = self.deadlines.remove(i);
+                    let out = net.on_retry_deadline(d.0, d.1, at);
+                    self.absorb(out);
+                } else {
+                    let i = self.warmups.iter().position(|w| w.1 == at).unwrap();
+                    let w = self.warmups.remove(i);
+                    let out = net.on_warm(w.0, at);
+                    self.absorb(out);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wr_completes_with_success_and_timestamps() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        let mut lp = Loop::new();
+        let (wr, out) = net.post_send(qp, 1 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        lp.run(&mut net, SimTime::s(1));
+        assert_eq!(lp.wcs.len(), 1);
+        let wc = lp.wcs[0];
+        assert_eq!(wc.wr, wr);
+        assert_eq!(wc.status, CompletionStatus::Success);
+        assert_eq!(wc.posted_at, SimTime::ZERO);
+        // ≈ 1MB / (400Gbps × 0.97) + 2500ns NIC + 2 hops × 1000ns
+        let expect = (1048576.0 / (400.0 * 0.125 * 0.97)) + 2500.0 + 2000.0;
+        assert!((wc.completed_at.as_ns() as f64 - expect).abs() < 50.0);
+    }
+
+    #[test]
+    fn port_down_triggers_retry_exceeded_after_window() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        let mut lp = Loop::new();
+        let (_, out) = net.post_send(qp, 64 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        // Kill the port at 100us, before completion.
+        let out = net.set_port_up(&fabric, port(0, 0), false, SimTime::us(100));
+        lp.absorb(out);
+        lp.run(&mut net, SimTime::s(5));
+        assert_eq!(lp.wcs.len(), 1);
+        assert_eq!(lp.wcs[0].status, CompletionStatus::RetryExceeded);
+        assert_eq!(net.qp_state(qp), QpState::Error);
+        // Deadline = 100us + window (2 retries × 4.096us×2^10 ≈ 8.39ms)
+        let window_ns = net.cfg().retry_window_ns();
+        let expect = 100_000 + window_ns;
+        assert_eq!(lp.wcs[0].completed_at.as_ns(), expect);
+    }
+
+    #[test]
+    fn flap_within_window_recovers_silently() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        let mut lp = Loop::new();
+        let (_, out) = net.post_send(qp, 8 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        let out = net.set_port_up(&fabric, port(0, 0), false, SimTime::us(50));
+        lp.absorb(out);
+        // Up again well inside the window.
+        let out = net.set_port_up(&fabric, port(0, 0), true, SimTime::ms(2));
+        lp.absorb(out);
+        lp.run(&mut net, SimTime::s(5));
+        assert_eq!(lp.wcs.len(), 1);
+        assert_eq!(lp.wcs[0].status, CompletionStatus::Success);
+        assert_eq!(net.qp_state(qp), QpState::Rts);
+    }
+
+    #[test]
+    fn post_to_error_qp_flushes() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        net.force_error(qp, SimTime::ZERO);
+        let (_, out) = net.post_send(qp, 1024, SimTime::us(1), 0);
+        assert_eq!(out.wcs.len(), 1);
+        assert_eq!(out.wcs[0].status, CompletionStatus::WrFlushed);
+    }
+
+    #[test]
+    fn reset_to_rts_queues_until_warm() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        net.force_error(qp, SimTime::ZERO);
+        let mut lp = Loop::new();
+        let out = net.reset_to_rts(qp, SimTime::ZERO);
+        lp.absorb(out);
+        assert!(!net.is_warm(qp, SimTime::ZERO));
+        // Post while cold: WR waits for the warm-up release.
+        let (_, out) = net.post_send(qp, 1 << 20, SimTime::us(1), 0);
+        lp.absorb(out);
+        lp.run(&mut net, SimTime::s(5));
+        assert_eq!(lp.wcs.len(), 1);
+        assert_eq!(lp.wcs[0].status, CompletionStatus::Success);
+        // Completed after warm-up (default 1.5s), not at ~21us.
+        assert!(lp.wcs[0].completed_at >= SimTime::ns(net.cfg().qp_warmup_ns));
+    }
+
+    #[test]
+    fn error_flushes_all_outstanding() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        let mut lp = Loop::new();
+        for _ in 0..4 {
+            let (_, out) = net.post_send(qp, 16 << 20, SimTime::ZERO, 0);
+            lp.absorb(out);
+        }
+        assert_eq!(net.qp_outstanding(qp), 4);
+        let out = net.force_error(qp, SimTime::us(10));
+        lp.absorb(out);
+        let statuses: Vec<_> = lp.wcs.iter().map(|w| w.status).collect();
+        assert_eq!(statuses.len(), 4);
+        assert_eq!(statuses[0], CompletionStatus::RetryExceeded);
+        assert!(statuses[1..].iter().all(|s| *s == CompletionStatus::WrFlushed));
+        assert_eq!(net.port_backlog_bytes(port(0, 0)), 0);
+    }
+
+    #[test]
+    fn backlog_tracks_outstanding_bytes() {
+        let (fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 0));
+        let mut lp = Loop::new();
+        let (_, out) = net.post_send(qp, 1 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        let (_, out) = net.post_send(qp, 2 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        assert_eq!(net.port_backlog_bytes(port(0, 0)), 3 << 20);
+        lp.run(&mut net, SimTime::s(1));
+        assert_eq!(net.port_backlog_bytes(port(0, 0)), 0);
+        assert_eq!(net.qp_state(qp), QpState::Rts);
+        assert_eq!(lp.wcs.len(), 2);
+    }
+}

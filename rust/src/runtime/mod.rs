@@ -1,0 +1,254 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the boundary of the three-layer architecture: Python/JAX runs
+//! ONCE at build time (`make artifacts`) and never on the training path;
+//! from here on the rust binary is self-contained. The interchange format
+//! is HLO **text** (`HloModuleProto::from_text_file`) — the image's
+//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos, and
+//! the text parser reassigns ids cleanly (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Minimal metadata mirror of `artifacts/meta_<preset>.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub preset: String,
+    pub flat_len: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub param_count: usize,
+    pub vocab: i32,
+}
+
+impl ArtifactMeta {
+    /// Parse the (small, flat) JSON without a serde dependency.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let grab = |key: &str| -> Result<u64> {
+            json_number(&text, key).ok_or_else(|| anyhow!("missing {key} in {}", path.display()))
+        };
+        let preset = json_string(&text, "preset")
+            .ok_or_else(|| anyhow!("missing preset in {}", path.display()))?;
+        Ok(ArtifactMeta {
+            preset,
+            flat_len: grab("flat_len")? as usize,
+            batch: grab("batch")? as usize,
+            seq_len: grab("seq_len")? as usize,
+            param_count: grab("param_count")? as usize,
+            vocab: grab("vocab")? as i32,
+        })
+    }
+}
+
+/// Extract the first `"key": <number>` occurrence.
+fn json_number(text: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = text.find(&pat)? + pat.len();
+    let rest = text[at..].trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract the first `"key": "value"` occurrence.
+fn json_string(text: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let at = text.find(&pat)? + pat.len();
+    let rest = text[at..].trim_start().strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+/// A compiled model runtime: the PJRT CPU client plus the train-step and
+/// loss executables for one preset.
+pub struct ModelRuntime {
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    train_step: xla::PjRtLoadedExecutable,
+    loss: xla::PjRtLoadedExecutable,
+}
+
+/// Full training state living on the Rust side (no Python at runtime).
+pub struct TrainState {
+    pub flat: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl ModelRuntime {
+    /// Load artifacts for `preset` from `artifact_dir`.
+    pub fn load(artifact_dir: &Path, preset: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(&artifact_dir.join(format!("meta_{preset}.json")))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = artifact_dir.join(format!("{name}_{preset}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
+        };
+        let train_step = compile("train_step")?;
+        let loss = compile("loss")?;
+        Ok(ModelRuntime { meta, client, train_step, loss })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Deterministic initial state (GPT-2-style N(0, 0.02) weights). The
+    /// loss-curve experiments compare transports with the SAME Rust init,
+    /// so curves are directly comparable (Fig 12's point: identical
+    /// numerics whichever CCL moves the tensors).
+    pub fn init_state(&self, seed: u64) -> TrainState {
+        let n = self.meta.flat_len;
+        let mut rng = crate::util::Rng::new(seed);
+        let mut flat = Vec::with_capacity(n);
+        for _ in 0..n {
+            flat.push((rng.normal(0.0, 0.02)) as f32);
+        }
+        TrainState { flat, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    fn tokens_literal(&self, toks: &[i32]) -> Result<xla::Literal> {
+        let (b, l) = (self.meta.batch as i64, self.meta.seq_len as i64);
+        anyhow::ensure!(toks.len() == (b * l) as usize, "token buffer shape");
+        xla::Literal::vec1(toks)
+            .reshape(&[b, l])
+            .map_err(|e| anyhow!("tokens reshape: {e:?}"))
+    }
+
+    /// One optimizer step on (tokens, targets); returns the loss.
+    pub fn train_step(&self, st: &mut TrainState, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        st.step += 1;
+        let inputs = [
+            xla::Literal::vec1(st.flat.as_slice()),
+            xla::Literal::vec1(st.m.as_slice()),
+            xla::Literal::vec1(st.v.as_slice()),
+            xla::Literal::scalar(st.step as f32),
+            self.tokens_literal(tokens)?,
+            self.tokens_literal(targets)?,
+        ];
+        let result = self
+            .train_step
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute train_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        st.flat = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        st.m = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        st.v = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok(loss)
+    }
+
+    /// Evaluate the loss without updating state.
+    pub fn eval_loss(&self, st: &TrainState, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let inputs = [
+            xla::Literal::vec1(st.flat.as_slice()),
+            self.tokens_literal(tokens)?,
+            self.tokens_literal(targets)?,
+        ];
+        let result = self
+            .loss
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute loss: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch loss: {e:?}"))?;
+        let l = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        Ok(l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0])
+    }
+}
+
+/// Synthetic corpus matching `model.synthetic_batch`'s bigram grammar:
+/// next = (3·tok + noise) mod V. Gives the model real structure to learn.
+pub fn synthetic_batch(batch: usize, seq: usize, vocab: i32, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut tokens = Vec::with_capacity(batch * seq);
+    let mut targets = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let mut tok = rng.below(vocab as u64) as i32;
+        for _ in 0..seq {
+            tokens.push(tok);
+            let noise = rng.below(7) as i32;
+            tok = (3 * tok + noise).rem_euclid(vocab);
+            targets.push(tok);
+        }
+    }
+    (tokens, targets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_helpers() {
+        let text = r#"{"preset": "tiny", "flat_len": 134912, "batch": 2, "nested": {"x": 1}}"#;
+        assert_eq!(json_number(text, "flat_len"), Some(134912));
+        assert_eq!(json_number(text, "batch"), Some(2));
+        assert_eq!(json_string(text, "preset").as_deref(), Some("tiny"));
+        assert_eq!(json_number(text, "missing"), None);
+    }
+
+    #[test]
+    fn synthetic_batch_in_range_and_deterministic() {
+        let (t1, g1) = synthetic_batch(2, 16, 512, 42);
+        let (t2, _) = synthetic_batch(2, 16, 512, 42);
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), 32);
+        assert!(t1.iter().chain(g1.iter()).all(|&x| (0..512).contains(&x)));
+        // Bigram structure: target[i] derives from token[i].
+        for i in 0..16 {
+            let d = (g1[i] - 3 * t1[i]).rem_euclid(512);
+            assert!(d < 7, "grammar violated at {i}");
+        }
+    }
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("vccl_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("meta_x.json");
+        std::fs::write(
+            &p,
+            r#"{"preset": "x", "model": {"vocab": 512, "param_count": 99}, "flat_len": 5, "batch": 2, "seq_len": 8}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&p).unwrap();
+        assert_eq!((m.flat_len, m.batch, m.seq_len, m.param_count), (5, 2, 8, 99));
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.preset, "x");
+    }
+
+    /// Full PJRT round trip — only runs when the tiny artifacts exist
+    /// (`make artifacts`). Kept as a test so `make test` exercises the
+    /// Python→HLO→rust path end to end.
+    #[test]
+    fn pjrt_train_step_descends_loss() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("meta_tiny.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = ModelRuntime::load(&dir, "tiny").expect("load artifacts");
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        let mut st = rt.init_state(7);
+        let (toks, tgts) =
+            synthetic_batch(rt.meta.batch, rt.meta.seq_len, rt.meta.vocab, 1);
+        let l0 = rt.eval_loss(&st, &toks, &tgts).unwrap();
+        let mut last = l0;
+        for _ in 0..10 {
+            last = rt.train_step(&mut st, &toks, &tgts).unwrap();
+        }
+        assert!(last.is_finite() && l0.is_finite());
+        assert!(last < l0, "loss must descend: {l0} -> {last}");
+    }
+}

@@ -1,0 +1,236 @@
+//! The event engine: a time-ordered queue of typed events with cancellation.
+//!
+//! The engine is *not* an actor framework — event payloads are a plain enum
+//! owned by the simulation (`ClusterSim` dispatches them in one big match).
+//! That keeps the hot loop branch-predictable and allocation-free, which is
+//! what lets cluster-scale experiments (thousands of ranks × thousands of
+//! chunks) run in milliseconds. See `benches/simcore.rs` for the events/sec
+//! target (§Perf: ≥1M events/s).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+/// Handle to a scheduled event, usable to cancel it before it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+#[derive(Debug)]
+struct Scheduled<Ev> {
+    at: SimTime,
+    seq: u64,
+    ev: Ev,
+}
+
+// Order by (time, seq): seq breaks ties FIFO so simultaneous events fire in
+// scheduling order — crucial for determinism.
+impl<Ev> PartialEq for Scheduled<Ev> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<Ev> Eq for Scheduled<Ev> {}
+impl<Ev> PartialOrd for Scheduled<Ev> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<Ev> Ord for Scheduled<Ev> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// A discrete-event queue over event payloads of type `Ev`.
+pub struct Engine<Ev> {
+    now: SimTime,
+    heap: BinaryHeap<Reverse<Scheduled<Ev>>>,
+    seq: u64,
+    // Cancelled event seqs. Kept sorted-free: membership is checked lazily on
+    // pop. Size is bounded by the number of outstanding cancellations.
+    cancelled: std::collections::HashSet<u64>,
+    dispatched: u64,
+}
+
+impl<Ev> Default for Engine<Ev> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<Ev> Engine<Ev> {
+    pub fn new() -> Self {
+        Engine {
+            now: SimTime::ZERO,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            cancelled: std::collections::HashSet::new(),
+            dispatched: 0,
+        }
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events dispatched so far (for the §Perf events/s metric).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Number of events still pending.
+    pub fn pending(&self) -> usize {
+        self.heap.len() - self.cancelled.len().min(self.heap.len())
+    }
+
+    /// Schedule `ev` to fire `delay` after now.
+    pub fn schedule(&mut self, delay: SimTime, ev: Ev) -> EventId {
+        self.schedule_at(self.now + delay, ev)
+    }
+
+    /// Schedule `ev` at an absolute time (must not be in the past).
+    pub fn schedule_at(&mut self, at: SimTime, ev: Ev) -> EventId {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled { at, seq, ev }));
+        EventId(seq)
+    }
+
+    /// Cancel a previously scheduled event. Idempotent; cancelling an
+    /// already-fired event is a no-op.
+    pub fn cancel(&mut self, id: EventId) {
+        self.cancelled.insert(id.0);
+    }
+
+    /// Pop the next live event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, Ev)> {
+        while let Some(Reverse(s)) = self.heap.pop() {
+            if self.cancelled.remove(&s.seq) {
+                continue;
+            }
+            debug_assert!(s.at >= self.now);
+            self.now = s.at;
+            self.dispatched += 1;
+            return Some((s.at, s.ev));
+        }
+        None
+    }
+
+    /// Peek at the timestamp of the next live event without firing it.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        // Drop cancelled heads eagerly so peek is accurate.
+        while let Some(Reverse(s)) = self.heap.peek() {
+            if self.cancelled.contains(&s.seq) {
+                let seq = s.seq;
+                self.heap.pop();
+                self.cancelled.remove(&seq);
+            } else {
+                return Some(s.at);
+            }
+        }
+        None
+    }
+
+    /// True if no live events remain.
+    pub fn is_idle(&mut self) -> bool {
+        self.peek_time().is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule(SimTime::ns(30), 3);
+        e.schedule(SimTime::ns(10), 1);
+        e.schedule(SimTime::ns(20), 2);
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(e.now().as_ns(), 30);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..100 {
+            e.schedule(SimTime::ns(5), i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cancellation_skips_event() {
+        let mut e: Engine<&str> = Engine::new();
+        let a = e.schedule(SimTime::ns(10), "a");
+        e.schedule(SimTime::ns(20), "b");
+        e.cancel(a);
+        assert_eq!(e.pop().map(|(_, v)| v), Some("b"));
+        assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_is_idempotent_and_safe_after_fire() {
+        let mut e: Engine<u8> = Engine::new();
+        let a = e.schedule(SimTime::ns(1), 1);
+        e.cancel(a);
+        e.cancel(a);
+        assert!(e.pop().is_none());
+        let b = e.schedule(SimTime::ns(2), 2);
+        assert_eq!(e.pop().map(|(_, v)| v), Some(2));
+        e.cancel(b); // already fired — must not poison future pops
+        e.schedule(SimTime::ns(3), 3);
+        assert_eq!(e.pop().map(|(_, v)| v), Some(3));
+    }
+
+    #[test]
+    fn clock_monotonic_and_events_counted() {
+        let mut e: Engine<u64> = Engine::new();
+        let mut last = SimTime::ZERO;
+        for i in 0..1000u64 {
+            e.schedule(SimTime::ns(i % 17), i);
+        }
+        let mut n = 0;
+        while let Some((t, _)) = e.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+        }
+        assert_eq!(n, 1000);
+        assert_eq!(e.dispatched(), 1000);
+    }
+
+    #[test]
+    fn peek_respects_cancellation() {
+        let mut e: Engine<u8> = Engine::new();
+        let a = e.schedule(SimTime::ns(5), 1);
+        e.schedule(SimTime::ns(9), 2);
+        e.cancel(a);
+        assert_eq!(e.peek_time(), Some(SimTime::ns(9)));
+        assert!(!e.is_idle());
+    }
+
+    #[test]
+    fn schedule_during_run() {
+        // An event handler scheduling follow-ups is the normal pattern.
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule(SimTime::ns(1), 0);
+        let mut fired = vec![];
+        while let Some((_, v)) = e.pop() {
+            fired.push(v);
+            if v < 5 {
+                e.schedule(SimTime::ns(1), v + 1);
+            }
+        }
+        assert_eq!(fired, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(e.now().as_ns(), 6);
+    }
+}

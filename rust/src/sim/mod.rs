@@ -1,0 +1,14 @@
+//! Discrete-event simulation core.
+//!
+//! Everything in the simulated cluster — NIC transmissions, kernel
+//! completions, proxy polling, failure injection — is an event on a single
+//! nanosecond-resolution virtual clock. The engine is deliberately minimal:
+//! a binary heap of `(time, seq, event)` with stable FIFO ordering for
+//! simultaneous events and O(1) amortized cancellation (needed when fluid
+//! flows are re-rated and their completion events must be invalidated).
+
+mod engine;
+mod time;
+
+pub use engine::{Engine, EventId};
+pub use time::SimTime;

@@ -1,0 +1,114 @@
+//! Simulated time: a nanosecond-resolution virtual clock.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time, in nanoseconds since simulation start.
+///
+/// Nanoseconds are the natural resolution for this paper: the monitor
+/// operates at O(μs), RDMA WR→WC round trips are single-digit μs, and the
+/// GPU-CPU synchronization costs the SM-free design removes are sub-μs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub const fn ns(n: u64) -> Self {
+        SimTime(n)
+    }
+    pub const fn us(n: u64) -> Self {
+        SimTime(n * 1_000)
+    }
+    pub const fn ms(n: u64) -> Self {
+        SimTime(n * 1_000_000)
+    }
+    pub const fn s(n: u64) -> Self {
+        SimTime(n * 1_000_000_000)
+    }
+    /// From fractional seconds (convenience for config values).
+    pub fn from_secs_f64(s: f64) -> Self {
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    pub fn as_ns(&self) -> u64 {
+        self.0
+    }
+    pub fn as_us_f64(&self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_ms_f64(&self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_secs_f64(&self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Saturating difference (durations are non-negative).
+    pub fn since(&self, earlier: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::units::fmt_ns(self.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        assert_eq!(SimTime::us(3).as_ns(), 3_000);
+        assert_eq!(SimTime::ms(2).as_ns(), 2_000_000);
+        assert_eq!(SimTime::s(1).as_ns(), 1_000_000_000);
+        assert_eq!(SimTime::from_secs_f64(0.5).as_ns(), 500_000_000);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::us(10);
+        let b = SimTime::us(4);
+        assert_eq!((a + b).as_ns(), 14_000);
+        assert_eq!((a - b).as_ns(), 6_000);
+        // saturating
+        assert_eq!((b - a).as_ns(), 0);
+        assert_eq!(b.since(a).as_ns(), 0);
+        assert_eq!(a.since(b).as_ns(), 6_000);
+    }
+
+    #[test]
+    fn display_scales() {
+        assert_eq!(SimTime::ns(12).to_string(), "12ns");
+        assert_eq!(SimTime::us(9).to_string(), "9.000us");
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime::ns(1) < SimTime::us(1));
+        assert!(SimTime::s(1) > SimTime::ms(999));
+    }
+}

@@ -1,0 +1,329 @@
+//! The link fabric: NVLink inside servers, a two-tier rail-optimized CLOS
+//! between them.
+//!
+//! Links are *unidirectional* capacity units; a flow's path is an ordered
+//! list of link ids. Modelling directions separately matters: the paper's
+//! CTS credit messages travel receiver→sender while the payload goes
+//! sender→receiver, and a port-down kills both at once.
+//!
+//! Rail-optimized wiring (the §4 cluster): NIC *i* of every server connects
+//! to leaf switch *i* ("rail *i*"). Same-rail traffic crosses one leaf;
+//! cross-rail traffic transits the spine trunk. 1:1 oversubscription means
+//! the spine trunk never bottlenecks before the NIC uplinks do, but it
+//! *shares* — which is how incast shows up.
+
+
+
+use super::{GpuId, NicId, PortId};
+use crate::config::TopologyConfig;
+
+/// Index into the fabric's link table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// NIC port → leaf (tx) or leaf → NIC port (rx). Capacity = line rate.
+    NicUplinkTx,
+    NicUplinkRx,
+    /// Aggregated leaf↔spine trunk (1:1 oversubscription → capacity =
+    /// nodes × line rate per direction).
+    SpineTrunkUp,
+    SpineTrunkDown,
+    /// Per-GPU NVLink egress / ingress.
+    NvlinkTx,
+    NvlinkRx,
+}
+
+/// One unidirectional link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub kind: LinkKind,
+    pub capacity_gbps: f64,
+    pub up: bool,
+}
+
+/// An ordered list of links a flow traverses, plus the hop count used for
+/// the propagation-latency part of the flow model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Path {
+    pub links: Vec<LinkId>,
+    pub hops: u32,
+}
+
+impl Path {
+    pub fn empty() -> Self {
+        Path { links: Vec::new(), hops: 0 }
+    }
+}
+
+/// The complete link table with id arithmetic for addressing.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    links: Vec<Link>,
+    nodes: usize,
+    nics_per_node: usize,
+    ports_per_nic: usize,
+    gpus_per_node: usize,
+    rails: usize,
+    // Layout offsets into `links`:
+    // [0 .. n_ports*2)                    NIC uplinks (tx, rx interleaved)
+    // [uplinks .. +rails*planes*2)        spine trunks (up, down per leaf)
+    // [trunks .. +n_gpus*2)               NVLink (tx, rx per GPU)
+    trunk_base: usize,
+    nvlink_base: usize,
+    link_gbps: f64,
+    nvlink_gbps: f64,
+}
+
+impl Fabric {
+    pub fn build(cfg: &TopologyConfig) -> Self {
+        Self::build_with_rates(cfg, 400.0, 3600.0)
+    }
+
+    pub fn build_with_rates(cfg: &TopologyConfig, link_gbps: f64, nvlink_gbps: f64) -> Self {
+        let ports_per_nic = if cfg.dual_port_nics { 2 } else { 1 };
+        let n_ports = cfg.num_nodes * cfg.nics_per_node * ports_per_nic;
+        let planes = ports_per_nic; // dual-port → dual-plane deployment (§4.2)
+        let n_leaves = cfg.rails * planes;
+        let n_gpus = cfg.num_nodes * cfg.gpus_per_node;
+
+        let mut links = Vec::with_capacity(n_ports * 2 + n_leaves * 2 + n_gpus * 2);
+        for _ in 0..n_ports {
+            links.push(Link { kind: LinkKind::NicUplinkTx, capacity_gbps: link_gbps, up: true });
+            links.push(Link { kind: LinkKind::NicUplinkRx, capacity_gbps: link_gbps, up: true });
+        }
+        let trunk_base = links.len();
+        let trunk_cap = cfg.num_nodes as f64 * link_gbps; // 1:1 oversubscription
+        for _ in 0..n_leaves {
+            links.push(Link { kind: LinkKind::SpineTrunkUp, capacity_gbps: trunk_cap, up: true });
+            links.push(Link {
+                kind: LinkKind::SpineTrunkDown,
+                capacity_gbps: trunk_cap,
+                up: true,
+            });
+        }
+        let nvlink_base = links.len();
+        for _ in 0..n_gpus {
+            links.push(Link { kind: LinkKind::NvlinkTx, capacity_gbps: nvlink_gbps, up: true });
+            links.push(Link { kind: LinkKind::NvlinkRx, capacity_gbps: nvlink_gbps, up: true });
+        }
+
+        Fabric {
+            links,
+            nodes: cfg.num_nodes,
+            nics_per_node: cfg.nics_per_node,
+            ports_per_nic,
+            gpus_per_node: cfg.gpus_per_node,
+            rails: cfg.rails,
+            trunk_base,
+            nvlink_base,
+            link_gbps,
+            nvlink_gbps,
+        }
+    }
+
+    /// Stable ordinal of a port (dense, 0-based) — used as the monitor's
+    /// per-port key and for trace labelling.
+    pub fn port_ordinal(&self, p: PortId) -> usize {
+        self.port_index(p)
+    }
+
+    fn port_index(&self, p: PortId) -> usize {
+        debug_assert!((p.port as usize) < self.ports_per_nic, "port {} out of range", p);
+        (p.nic.node.0 * self.nics_per_node + p.nic.local) * self.ports_per_nic + p.port as usize
+    }
+
+    /// Transmit-direction uplink of a NIC port.
+    pub fn port_tx(&self, p: PortId) -> LinkId {
+        LinkId(self.port_index(p) * 2)
+    }
+
+    /// Receive-direction downlink of a NIC port.
+    pub fn port_rx(&self, p: PortId) -> LinkId {
+        LinkId(self.port_index(p) * 2 + 1)
+    }
+
+    fn leaf_index(&self, rail: usize, plane: usize) -> usize {
+        rail * self.ports_per_nic + plane
+    }
+
+    pub fn trunk_up(&self, rail: usize, plane: usize) -> LinkId {
+        LinkId(self.trunk_base + self.leaf_index(rail, plane) * 2)
+    }
+
+    pub fn trunk_down(&self, rail: usize, plane: usize) -> LinkId {
+        LinkId(self.trunk_base + self.leaf_index(rail, plane) * 2 + 1)
+    }
+
+    fn gpu_index(&self, g: GpuId) -> usize {
+        g.node.0 * self.gpus_per_node + g.local
+    }
+
+    pub fn nvlink_tx(&self, g: GpuId) -> LinkId {
+        LinkId(self.nvlink_base + self.gpu_index(g) * 2)
+    }
+
+    pub fn nvlink_rx(&self, g: GpuId) -> LinkId {
+        LinkId(self.nvlink_base + self.gpu_index(g) * 2 + 1)
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn line_rate_gbps(&self) -> f64 {
+        self.link_gbps
+    }
+
+    pub fn nvlink_gbps(&self) -> f64 {
+        self.nvlink_gbps
+    }
+
+    /// Bring a NIC port up/down (both directions at once — an optical-module
+    /// failure kills the physical port).
+    pub fn set_port_up(&mut self, p: PortId, up: bool) {
+        let tx = self.port_tx(p);
+        let rx = self.port_rx(p);
+        self.links[tx.0].up = up;
+        self.links[rx.0].up = up;
+    }
+
+    pub fn port_up(&self, p: PortId) -> bool {
+        self.links[self.port_tx(p).0].up
+    }
+
+    /// Whether every link on the path is up.
+    pub fn path_up(&self, path: &Path) -> bool {
+        path.links.iter().all(|&l| self.links[l.0].up)
+    }
+
+    /// The rail (leaf) a NIC belongs to.
+    pub fn rail_of(&self, nic: NicId) -> usize {
+        nic.local % self.rails
+    }
+
+    /// Inter-node path between two NIC ports.
+    ///
+    /// Same rail + same plane → one leaf: `src.tx → dst.rx` (2 hops).
+    /// Otherwise the flow transits spine trunks (4 hops). Rail-optimized
+    /// collectives keep traffic on the first form; PXN exists to avoid the
+    /// second.
+    pub fn path_inter(&self, src: PortId, dst: PortId) -> Path {
+        assert_ne!(src.nic.node, dst.nic.node, "use path_nvlink for intra-node");
+        let (sr, sp) = (self.rail_of(src.nic), src.port as usize);
+        let (dr, dp) = (self.rail_of(dst.nic), dst.port as usize);
+        if sr == dr && sp == dp {
+            Path { links: vec![self.port_tx(src), self.port_rx(dst)], hops: 2 }
+        } else {
+            Path {
+                links: vec![
+                    self.port_tx(src),
+                    self.trunk_up(sr, sp),
+                    self.trunk_down(dr, dp),
+                    self.port_rx(dst),
+                ],
+                hops: 4,
+            }
+        }
+    }
+
+    /// Intra-node NVLink path between two GPUs.
+    pub fn path_nvlink(&self, src: GpuId, dst: GpuId) -> Path {
+        assert_eq!(src.node, dst.node, "NVLink is intra-node only");
+        assert_ne!(src.local, dst.local, "self-copy has no path");
+        Path { links: vec![self.nvlink_tx(src), self.nvlink_rx(dst)], hops: 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::NodeId;
+
+    fn topo(nodes: usize, dual: bool) -> TopologyConfig {
+        TopologyConfig { num_nodes: nodes, dual_port_nics: dual, ..Default::default() }
+    }
+
+    fn port(node: usize, nic: usize, p: u8) -> PortId {
+        PortId { nic: NicId { node: NodeId(node), local: nic }, port: p }
+    }
+
+    #[test]
+    fn same_rail_path_skips_spine() {
+        let f = Fabric::build(&topo(2, false));
+        let p = f.path_inter(port(0, 3, 0), port(1, 3, 0));
+        assert_eq!(p.links.len(), 2);
+        assert_eq!(p.hops, 2);
+        assert_eq!(f.link(p.links[0]).kind, LinkKind::NicUplinkTx);
+        assert_eq!(f.link(p.links[1]).kind, LinkKind::NicUplinkRx);
+    }
+
+    #[test]
+    fn cross_rail_path_transits_spine() {
+        let f = Fabric::build(&topo(2, false));
+        let p = f.path_inter(port(0, 3, 0), port(1, 5, 0));
+        assert_eq!(p.links.len(), 4);
+        assert_eq!(f.link(p.links[1]).kind, LinkKind::SpineTrunkUp);
+        assert_eq!(f.link(p.links[2]).kind, LinkKind::SpineTrunkDown);
+    }
+
+    #[test]
+    fn dual_plane_cross_plane_goes_through_spine() {
+        let f = Fabric::build(&topo(2, true));
+        // Same rail but different plane (port 0 vs port 1) — separate leaves.
+        let p = f.path_inter(port(0, 3, 0), port(1, 3, 1));
+        assert_eq!(p.links.len(), 4);
+    }
+
+    #[test]
+    fn port_down_breaks_path() {
+        let mut f = Fabric::build(&topo(2, false));
+        let path = f.path_inter(port(0, 2, 0), port(1, 2, 0));
+        assert!(f.path_up(&path));
+        f.set_port_up(port(0, 2, 0), false);
+        assert!(!f.path_up(&path));
+        assert!(!f.port_up(port(0, 2, 0)));
+        // Other ports unaffected.
+        assert!(f.port_up(port(0, 3, 0)));
+        f.set_port_up(port(0, 2, 0), true);
+        assert!(f.path_up(&path));
+    }
+
+    #[test]
+    fn nvlink_path_is_one_hop() {
+        let f = Fabric::build(&topo(1, false));
+        let a = GpuId { node: NodeId(0), local: 0 };
+        let b = GpuId { node: NodeId(0), local: 5 };
+        let p = f.path_nvlink(a, b);
+        assert_eq!(p.links.len(), 2);
+        assert_eq!(p.hops, 1);
+        assert_eq!(f.link(p.links[0]).capacity_gbps, 3600.0);
+    }
+
+    #[test]
+    fn trunk_capacity_is_1to1_oversubscribed() {
+        let f = Fabric::build(&topo(4, false));
+        let t = f.trunk_up(0, 0);
+        assert_eq!(f.link(t).capacity_gbps, 4.0 * 400.0);
+    }
+
+    #[test]
+    fn link_ids_distinct() {
+        let f = Fabric::build(&topo(2, true));
+        let mut seen = std::collections::HashSet::new();
+        for n in 0..2 {
+            for nic in 0..8 {
+                for p in 0..2u8 {
+                    assert!(seen.insert(f.port_tx(port(n, nic, p))));
+                    assert!(seen.insert(f.port_rx(port(n, nic, p))));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 2 * 8 * 2 * 2);
+    }
+}

@@ -1,0 +1,87 @@
+//! Typed identifiers for cluster entities.
+//!
+//! Newtypes keep rank / GPU / NIC / port index spaces from mixing — the kind
+//! of bug the paper's §5 "misleading cases" section shows is expensive to
+//! chase in production.
+
+
+use std::fmt;
+
+/// A server in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// A GPU, addressed as (node, local index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GpuId {
+    pub node: NodeId,
+    pub local: usize,
+}
+
+/// An RDMA NIC, addressed as (node, local index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NicId {
+    pub node: NodeId,
+    pub local: usize,
+}
+
+/// A physical NIC port (dual-port RNICs have port 0 and 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PortId {
+    pub nic: NicId,
+    pub port: u8,
+}
+
+/// A flat communicator rank (node-major order, like NCCL's global rank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RankId(pub usize);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node{}", self.0)
+    }
+}
+impl fmt::Display for GpuId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/gpu{}", self.node, self.local)
+    }
+}
+impl fmt::Display for NicId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/nic{}", self.node, self.local)
+    }
+}
+impl fmt::Display for PortId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}p{}", self.nic, self.port)
+    }
+}
+impl fmt::Display for RankId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let p = PortId { nic: NicId { node: NodeId(2), local: 3 }, port: 1 };
+        assert_eq!(p.to_string(), "node2/nic3p1");
+        assert_eq!(RankId(17).to_string(), "rank17");
+        assert_eq!(GpuId { node: NodeId(0), local: 4 }.to_string(), "node0/gpu4");
+    }
+
+    #[test]
+    fn ids_hash_and_order() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(RankId(1));
+        s.insert(RankId(1));
+        s.insert(RankId(2));
+        assert_eq!(s.len(), 2);
+        assert!(RankId(1) < RankId(2));
+    }
+}

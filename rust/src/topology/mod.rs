@@ -1,0 +1,130 @@
+//! Cluster topology: servers, GPUs, RNICs, NVLink, and the two-tier
+//! rail-optimized CLOS fabric of the paper's production cluster (§4:
+//! 8 GPUs + 8 rail RNICs per server, 400 Gbps, 1:1 oversubscription).
+//!
+//! The topology layer answers three questions for the rest of the stack:
+//!  1. *Placement* — which RNIC is closest / second-closest to a GPU
+//!     (primary vs backup QP placement, §3.3).
+//!  2. *Paths* — the ordered list of links a flow traverses between two
+//!     NIC ports (feeds the max-min fair bandwidth allocator in `net`).
+//!  3. *Rings* — rail-aligned ring orderings for ring collectives.
+
+mod ids;
+mod fabric;
+mod rings;
+
+pub use fabric::{Fabric, LinkId, LinkKind, Path};
+pub use ids::{GpuId, NicId, NodeId, PortId, RankId};
+pub use rings::{build_rings, Ring};
+
+use crate::config::TopologyConfig;
+
+/// A fully-resolved cluster: node/GPU/NIC inventory plus the link fabric.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub cfg: TopologyConfig,
+    pub fabric: Fabric,
+}
+
+impl Cluster {
+    pub fn new(cfg: TopologyConfig) -> Self {
+        let fabric = Fabric::build(&cfg);
+        Cluster { cfg, fabric }
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.cfg.num_nodes * self.cfg.gpus_per_node
+    }
+
+    /// Map a flat rank to its (node, local GPU) coordinates.
+    pub fn gpu_of_rank(&self, rank: RankId) -> GpuId {
+        let node = rank.0 / self.cfg.gpus_per_node;
+        let local = rank.0 % self.cfg.gpus_per_node;
+        GpuId { node: NodeId(node), local }
+    }
+
+    pub fn rank_of_gpu(&self, gpu: GpuId) -> RankId {
+        RankId(gpu.node.0 * self.cfg.gpus_per_node + gpu.local)
+    }
+
+    /// The rail-local (closest) RNIC for a GPU: in a rail-optimized server
+    /// GPU *i* sits under the same PCIe switch as RNIC *i*.
+    pub fn primary_nic(&self, gpu: GpuId) -> NicId {
+        NicId { node: gpu.node, local: gpu.local % self.cfg.nics_per_node }
+    }
+
+    /// The backup placement (§3.3): the other port of the same RNIC when
+    /// dual-port, otherwise the second-closest RNIC (same PCIe complex,
+    /// neighbouring index).
+    pub fn backup_port(&self, gpu: GpuId) -> PortId {
+        let primary = self.primary_nic(gpu);
+        if self.cfg.dual_port_nics {
+            PortId { nic: primary, port: 1 }
+        } else {
+            let second = NicId {
+                node: gpu.node,
+                local: (primary.local + 1) % self.cfg.nics_per_node,
+            };
+            PortId { nic: second, port: 0 }
+        }
+    }
+
+    pub fn primary_port(&self, gpu: GpuId) -> PortId {
+        PortId { nic: self.primary_nic(gpu), port: 0 }
+    }
+
+    /// True if two ranks are on the same server (NVLink-reachable).
+    pub fn same_node(&self, a: RankId, b: RankId) -> bool {
+        self.gpu_of_rank(a).node == self.gpu_of_rank(b).node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(nodes: usize) -> Cluster {
+        Cluster::new(TopologyConfig { num_nodes: nodes, ..Default::default() })
+    }
+
+    #[test]
+    fn rank_gpu_round_trip() {
+        let c = cluster(4);
+        for r in 0..c.num_ranks() {
+            let g = c.gpu_of_rank(RankId(r));
+            assert_eq!(c.rank_of_gpu(g), RankId(r));
+        }
+    }
+
+    #[test]
+    fn primary_nic_is_rail_local() {
+        let c = cluster(2);
+        let g = GpuId { node: NodeId(1), local: 5 };
+        assert_eq!(c.primary_nic(g), NicId { node: NodeId(1), local: 5 });
+    }
+
+    #[test]
+    fn backup_is_second_closest_single_port() {
+        let c = cluster(2);
+        let g = GpuId { node: NodeId(0), local: 7 };
+        let b = c.backup_port(g);
+        assert_eq!(b.nic.local, 0); // wraps 7+1 → 0
+        assert_eq!(b.port, 0);
+    }
+
+    #[test]
+    fn backup_is_other_port_when_dual() {
+        let c = Cluster::new(TopologyConfig { dual_port_nics: true, ..Default::default() });
+        let g = GpuId { node: NodeId(0), local: 3 };
+        let b = c.backup_port(g);
+        assert_eq!(b.nic, c.primary_nic(g)); // same NIC, same hardware distance
+        assert_eq!(b.port, 1);
+    }
+
+    #[test]
+    fn same_node_detection() {
+        let c = cluster(2);
+        assert!(c.same_node(RankId(0), RankId(7)));
+        assert!(!c.same_node(RankId(0), RankId(8)));
+    }
+}

@@ -1,0 +1,129 @@
+//! Ring construction for ring collectives.
+//!
+//! NCCL builds one logical ring per channel; in a rail-optimized fabric the
+//! efficient ring visits every GPU of a node before hopping to the next node
+//! over the rail of the *channel's* NIC, so inter-node traffic stays on one
+//! rail per channel (§2.1 "topology search & graph construction" — we
+//! reproduce the production-relevant subset: rail-aligned rings).
+
+use super::{Cluster, RankId};
+
+/// One logical ring: an ordering of all ranks, plus the rail its inter-node
+/// hops use.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    pub order: Vec<RankId>,
+    pub rail: usize,
+}
+
+impl Ring {
+    /// Successor of `r` on the ring.
+    pub fn next(&self, r: RankId) -> RankId {
+        let i = self.pos(r);
+        self.order[(i + 1) % self.order.len()]
+    }
+
+    /// Predecessor of `r` on the ring.
+    pub fn prev(&self, r: RankId) -> RankId {
+        let i = self.pos(r);
+        self.order[(i + self.order.len() - 1) % self.order.len()]
+    }
+
+    fn pos(&self, r: RankId) -> usize {
+        self.order.iter().position(|&x| x == r).expect("rank not in ring")
+    }
+}
+
+/// Build `channels` rail-aligned rings over the whole cluster.
+///
+/// Channel `c` uses rail `c % rails`; within each node the visit order is
+/// rotated by the rail so that the node's *boundary* GPUs (the ones doing the
+/// inter-node send/recv) sit on the channel's rail-local NIC.
+pub fn build_rings(cluster: &Cluster, channels: usize) -> Vec<Ring> {
+    let n_nodes = cluster.cfg.num_nodes;
+    let per = cluster.cfg.gpus_per_node;
+    let rails = cluster.cfg.rails.max(1);
+    (0..channels)
+        .map(|c| {
+            let rail = c % rails;
+            let mut order = Vec::with_capacity(n_nodes * per);
+            for node in 0..n_nodes {
+                // Start the node's segment at the rail-local GPU so that the
+                // inter-node hop (last GPU of this node → first of next)
+                // leaves from / arrives at the rail's NIC.
+                for k in 0..per {
+                    let local = (rail + k) % per;
+                    order.push(RankId(node * per + local));
+                }
+            }
+            Ring { order, rail }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyConfig;
+
+    fn cluster(nodes: usize) -> Cluster {
+        Cluster::new(TopologyConfig { num_nodes: nodes, ..Default::default() })
+    }
+
+    #[test]
+    fn ring_visits_every_rank_once() {
+        let c = cluster(3);
+        for ring in build_rings(&c, 8) {
+            let mut sorted: Vec<usize> = ring.order.iter().map(|r| r.0).collect();
+            sorted.sort();
+            assert_eq!(sorted, (0..c.num_ranks()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn channels_spread_over_rails() {
+        let c = cluster(2);
+        let rings = build_rings(&c, 16);
+        let rails: std::collections::HashSet<usize> = rings.iter().map(|r| r.rail).collect();
+        assert_eq!(rails.len(), 8); // 16 channels over 8 rails → all used
+    }
+
+    #[test]
+    fn node_segment_starts_on_rail_gpu() {
+        let c = cluster(2);
+        let rings = build_rings(&c, 8);
+        for ring in &rings {
+            // First rank of each node segment must be the rail-local GPU.
+            for node in 0..2 {
+                let first = ring.order[node * 8];
+                let gpu = c.gpu_of_rank(first);
+                assert_eq!(gpu.local, ring.rail);
+            }
+        }
+    }
+
+    #[test]
+    fn next_prev_inverse() {
+        let c = cluster(2);
+        let ring = &build_rings(&c, 1)[0];
+        for &r in &ring.order {
+            assert_eq!(ring.prev(ring.next(r)), r);
+        }
+    }
+
+    #[test]
+    fn inter_node_hop_count_is_nodes() {
+        // Each ring should cross node boundaries exactly `n_nodes` times
+        // (wrapping hop included) — the property that makes it rail-friendly.
+        let c = cluster(4);
+        let ring = &build_rings(&c, 1)[0];
+        let crossings = ring
+            .order
+            .iter()
+            .zip(ring.order.iter().cycle().skip(1))
+            .filter(|(a, b)| !c.same_node(**a, **b))
+            .take(ring.order.len())
+            .count();
+        assert_eq!(crossings, 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small utilities shared across the simulator: deterministic RNG, byte /
+//! bandwidth units, and human-readable formatting.
+
+pub mod rng;
+pub mod units;
+
+pub use rng::Rng;
+pub use units::{ByteSize, Gbps};

@@ -1,0 +1,145 @@
+//! Byte-size and bandwidth units.
+//!
+//! The simulator works internally in **bytes** and **nanoseconds**; these
+//! wrappers keep conversions explicit and provide the human-readable
+//! formatting used by the experiment reports (GB/s in the paper's figures,
+//! Gbps on the wire).
+
+use std::fmt;
+
+/// A number of bytes, with convenience constructors mirroring the message
+/// sizes NCCL-Tests sweeps (1KB .. 4GB).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ByteSize(pub u64);
+
+impl ByteSize {
+    pub const fn b(n: u64) -> Self {
+        ByteSize(n)
+    }
+    pub const fn kb(n: u64) -> Self {
+        ByteSize(n * 1024)
+    }
+    pub const fn mb(n: u64) -> Self {
+        ByteSize(n * 1024 * 1024)
+    }
+    pub const fn gb(n: u64) -> Self {
+        ByteSize(n * 1024 * 1024 * 1024)
+    }
+    pub fn as_f64(&self) -> f64 {
+        self.0 as f64
+    }
+}
+
+impl fmt::Display for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0 as f64;
+        if self.0 >= 1 << 30 {
+            write!(f, "{:.1}GB", b / (1u64 << 30) as f64)
+        } else if self.0 >= 1 << 20 {
+            write!(f, "{:.1}MB", b / (1u64 << 20) as f64)
+        } else if self.0 >= 1 << 10 {
+            write!(f, "{:.1}KB", b / (1u64 << 10) as f64)
+        } else {
+            write!(f, "{}B", self.0)
+        }
+    }
+}
+
+/// Bandwidth in gigabits per second (the unit the paper's figures use for
+/// link and collective throughput).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Gbps(pub f64);
+
+impl Gbps {
+    /// Bytes per nanosecond: 1 Gbps = 1e9 bit/s = 0.125 B/ns.
+    pub fn bytes_per_ns(&self) -> f64 {
+        self.0 * 0.125
+    }
+
+    /// Construct from a transfer of `bytes` over `ns` nanoseconds.
+    pub fn from_transfer(bytes: u64, ns: u64) -> Gbps {
+        if ns == 0 {
+            return Gbps(f64::INFINITY);
+        }
+        Gbps(bytes as f64 / ns as f64 / 0.125)
+    }
+
+    /// Time in ns to move `bytes` at this rate.
+    pub fn transfer_ns(&self, bytes: u64) -> u64 {
+        if self.0 <= 0.0 {
+            return u64::MAX;
+        }
+        (bytes as f64 / self.bytes_per_ns()).ceil() as u64
+    }
+
+    /// GB/s (the unit NCCL-Tests reports as busbw/algbw).
+    pub fn gbytes_per_sec(&self) -> f64 {
+        self.0 / 8.0
+    }
+}
+
+impl fmt::Display for Gbps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1}Gbps", self.0)
+    }
+}
+
+/// Pretty-print a nanosecond duration (μs/ms/s auto-scaled).
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_size_constructors() {
+        assert_eq!(ByteSize::kb(4).0, 4096);
+        assert_eq!(ByteSize::mb(1).0, 1 << 20);
+        assert_eq!(ByteSize::gb(4).0, 4u64 << 30);
+    }
+
+    #[test]
+    fn byte_size_display() {
+        assert_eq!(ByteSize::b(100).to_string(), "100B");
+        assert_eq!(ByteSize::kb(2).to_string(), "2.0KB");
+        assert_eq!(ByteSize::mb(32).to_string(), "32.0MB");
+    }
+
+    #[test]
+    fn gbps_round_trip() {
+        // 400 Gbps moves 50 GB/s → 1 MB in ~20.97us.
+        let bw = Gbps(400.0);
+        let ns = bw.transfer_ns(1 << 20);
+        assert!((ns as f64 - 20_971.52).abs() < 2.0, "ns={ns}");
+        let back = Gbps::from_transfer(1 << 20, ns);
+        assert!((back.0 - 400.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn gbps_gbytes() {
+        assert!((Gbps(400.0).gbytes_per_sec() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.500us");
+        assert_eq!(fmt_ns(2_500_000), "2.500ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+
+    #[test]
+    fn zero_rate_never_finishes() {
+        assert_eq!(Gbps(0.0).transfer_ns(1), u64::MAX);
+    }
+}

@@ -1,0 +1,218 @@
+//! Cross-module integration tests: the full stack (topology → net → gpu →
+//! ccl → fault → monitor → pipeline) driven through the public API, plus
+//! RNG-driven property sweeps (proptest is unavailable in the offline
+//! vendored build; these use seeded exhaustive/random case generation).
+
+use vccl::ccl::{ClusterSim, CollKind};
+use vccl::config::{Config, Transport};
+use vccl::monitor::Verdict;
+use vccl::pipeline::{PipelineCfg, PipelineSim};
+use vccl::sim::SimTime;
+use vccl::topology::RankId;
+use vccl::util::{ByteSize, Rng};
+
+/// Debug builds run the same properties with fewer random cases (the
+/// un-optimized simulator is ~10× slower; coverage is a release concern).
+const CASES: usize = if cfg!(debug_assertions) { 5 } else { 30 };
+const FT_CASES: usize = if cfg!(debug_assertions) { 4 } else { 20 };
+
+fn fast_cfg() -> Config {
+    let mut c = Config::paper_defaults();
+    c.net.ib_timeout_exp = 10;
+    c.net.ib_retry_cnt = 2;
+    c.net.qp_warmup_ns = 50_000_000;
+    c.vccl.channels = 2;
+    c
+}
+
+// ---------------------------------------------------------------------
+// Conservation / correctness invariants
+// ---------------------------------------------------------------------
+
+/// Property: every submitted byte is delivered exactly once, for random
+/// sizes, random (src,dst) pairs and every transport.
+#[test]
+fn property_p2p_conserves_bytes() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let transport = *rng.choose(&["kernel", "ncclx", "smfree"]);
+        let mut cfg = fast_cfg();
+        cfg.set_key("vccl.transport", transport).unwrap();
+        let mut s = ClusterSim::new(cfg);
+        let n = s.topo.num_ranks();
+        let src = RankId(rng.below(n as u64) as usize);
+        let mut dst = RankId(rng.below(n as u64) as usize);
+        if dst == src {
+            dst = RankId((src.0 + 1) % n);
+        }
+        let bytes = rng.range(1, 8 << 20);
+        let id = s.submit_p2p(src, dst, bytes);
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done(), "case {case}: {src}->{dst} {bytes}B {transport}");
+        // Chunk accounting: posted == transmitted == acked == total.
+        for x in &s.xfers {
+            assert_eq!(x.send.acked, x.chunks_total, "case {case}");
+            assert!(x.send.invariant_ok());
+        }
+    }
+}
+
+/// Property: collectives complete for every kind × transport × size combo.
+#[test]
+fn property_collectives_always_complete() {
+    let kinds = [CollKind::AllReduce, CollKind::AllGather, CollKind::ReduceScatter,
+                 CollKind::AllToAll];
+    let mut rng = Rng::new(0xC0FFEE);
+    for &kind in &kinds {
+        for transport in ["kernel", "smfree"] {
+            let mut cfg = fast_cfg();
+            cfg.set_key("vccl.transport", transport).unwrap();
+            let mut s = ClusterSim::new(cfg);
+            let bytes = rng.range(1 << 16, 16 << 20);
+            let id = s.submit(kind, bytes);
+            s.run_to_idle(100_000_000);
+            assert!(s.ops[id.0].is_done(), "{kind:?} {transport} {bytes}");
+        }
+    }
+}
+
+/// Property: simulation is deterministic — same seed, same event count,
+/// same finish time; different op sizes change it.
+#[test]
+fn property_determinism() {
+    let run = |bytes: u64| {
+        let mut s = ClusterSim::new(fast_cfg());
+        let id = s.submit(CollKind::AllReduce, bytes);
+        s.run_to_idle(100_000_000);
+        (s.ops[id.0].finished_at.unwrap().as_ns(), s.engine.dispatched())
+    };
+    assert_eq!(run(1 << 20), run(1 << 20));
+    assert_ne!(run(1 << 20).0, run(2 << 20).0);
+}
+
+/// Property: failover never loses or duplicates chunks, across random
+/// failure timings.
+#[test]
+fn property_failover_exactly_once_delivery() {
+    let mut rng = Rng::new(0xFA11);
+    for case in 0..FT_CASES {
+        let mut cfg = fast_cfg();
+        cfg.vccl.channels = 1;
+        let mut s = ClusterSim::new(cfg);
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        let down_at = SimTime::ns(rng.range(10_000, 3_000_000));
+        s.inject_port_down(port, down_at);
+        if rng.chance(0.5) {
+            s.inject_port_up(port, down_at + SimTime::ms(rng.range(1, 400)));
+        }
+        let bytes = rng.range(1 << 20, 64 << 20);
+        let id = s.submit_p2p(RankId(0), RankId(8), bytes);
+        s.run_to_idle(100_000_000);
+        assert!(s.ops[id.0].is_done(), "case {case}");
+        let x = &s.xfers[0];
+        assert_eq!(x.send.acked, x.chunks_total, "case {case}: chunk loss/dup");
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end stack scenarios
+// ---------------------------------------------------------------------
+
+/// The full reliability story in one scenario: train under a flap, fail
+/// over, fail back, and keep the monitor healthy on unaffected ports.
+#[test]
+fn pipeline_failover_failback_with_monitor() {
+    let mut cfg = fast_cfg();
+    cfg.vccl.channels = 2;
+    let pcfg = PipelineCfg::spread(&cfg, 4, 4);
+    let mut p = PipelineSim::new(ClusterSim::new(cfg), pcfg);
+    let port = p.sim.topo.primary_port(p.sim.topo.gpu_of_rank(RankId(4)));
+    p.sim.inject_port_down(port, SimTime::ms(20));
+    p.sim.inject_port_up(port, SimTime::ms(400));
+    let r1 = p.run_iteration();
+    assert!(!r1.hung && !r1.deadlocked);
+    let r2 = p.run_iteration();
+    assert!(!r2.hung);
+    // After recovery the iteration time returns to (near) baseline.
+    let mut base = PipelineSim::new(
+        ClusterSim::new(fast_cfg()),
+        PipelineCfg::spread(&fast_cfg(), 4, 4),
+    );
+    let rb = base.run_iteration();
+    assert!(r2.iter_ns < rb.iter_ns * 12 / 10, "post-failback iter must normalize");
+}
+
+/// Transport ordering holds under every collective (SM-free ≤ NCCLX ≤ NCCL
+/// in SM terms; completion times within sane factors).
+#[test]
+fn transports_complete_all_primitives_with_sane_ordering() {
+    for kind in [CollKind::AllReduce, CollKind::AllToAll] {
+        let mut times = Vec::new();
+        for t in ["smfree", "ncclx", "kernel"] {
+            let mut cfg = fast_cfg();
+            cfg.set_key("vccl.transport", t).unwrap();
+            let mut s = ClusterSim::new(cfg);
+            let id = s.submit(kind, 8 << 20);
+            s.run_to_idle(100_000_000);
+            times.push(s.ops[id.0].finished_at.unwrap().as_ns());
+        }
+        // All within 3× of each other (the data path dominates).
+        let min = *times.iter().min().unwrap();
+        let max = *times.iter().max().unwrap();
+        assert!(max < 3 * min, "{kind:?}: {times:?}");
+    }
+}
+
+/// The monitor never cries wolf on a healthy cluster under heavy load.
+#[test]
+fn monitor_no_false_positives_under_load() {
+    let mut s = ClusterSim::new(fast_cfg());
+    for _ in 0..3 {
+        let id = s.submit(CollKind::AllReduce, 32 << 20);
+        s.run_until_op(id, 100_000_000);
+    }
+    let mon = s.monitor.as_ref().unwrap();
+    let mut anomalies = 0;
+    for port in 0..16 {
+        anomalies += mon
+            .verdicts(port)
+            .iter()
+            .filter(|(_, v)| *v == Verdict::NetworkAnomaly)
+            .count();
+    }
+    assert_eq!(anomalies, 0, "healthy cluster must produce no network anomalies");
+}
+
+/// Env-var knobs round-trip through the whole stack.
+#[test]
+fn env_knobs_change_behaviour() {
+    let mut cfg = Config::paper_defaults();
+    vccl::config::apply_env(&mut cfg, |k| match k {
+        "ICCL_IB_TIMEOUT" => Some("10".into()),
+        "ICCL_IB_RETRY_CNT" => Some("2".into()),
+        "VCCL_TRANSPORT" => Some("kernel".into()),
+        _ => None,
+    });
+    assert_eq!(cfg.net.ib_timeout_exp, 10);
+    assert_eq!(cfg.vccl.transport, Transport::Kernel);
+    // The retry window derived from those knobs is what failover obeys.
+    let window = cfg.net.retry_window_ns();
+    assert_eq!(window, (4096.0 * 1024.0) as u64 * 2);
+}
+
+/// Large-scale smoke: an 8-node (64-GPU) alltoall completes and stays
+/// deterministic (the §Perf events/s budget is what makes this fast).
+#[test]
+fn large_cluster_alltoall() {
+    if cfg!(debug_assertions) {
+        return; // release-only: 4k transfers through the un-optimized build
+    }
+    let mut cfg = fast_cfg();
+    cfg.topo.num_nodes = 8;
+    cfg.vccl.channels = 1;
+    let mut s = ClusterSim::new(cfg);
+    let id = s.submit(CollKind::AllToAll, ByteSize::mb(4).0);
+    s.run_to_idle(400_000_000);
+    assert!(s.ops[id.0].is_done());
+    assert!(s.stats.wire_bytes > 0);
+}
