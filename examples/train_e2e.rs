@@ -3,11 +3,13 @@
 //! L1 Pallas kernels → L2 JAX train_step → AOT HLO text → L3 rust PJRT
 //! execution, with the communication layer simulated per transport. Trains
 //! a GPT-2-style model on a synthetic bigram corpus for a few hundred
-//! steps, logs the loss curve (EXPERIMENTS.md §E2E), and checks Fig 12's
+//! steps, logs the loss curve to `reports/`, and checks Fig 12's
 //! claim: NCCL-vs-VCCL transport choice does NOT change convergence (the
 //! loss curves are bit-identical; only simulated iteration time differs).
 //!
-//! Run: `make artifacts && cargo run --release --example train_e2e -- [steps] [preset]`
+//! Run (needs the AOT artifacts and a PJRT-enabled build):
+//! `cd python && python -m compile.aot --out ../artifacts --presets e2e`,
+//! then `cargo run --release --features xla --example train_e2e -- [steps] [preset]`
 
 use std::path::Path;
 

@@ -3,7 +3,7 @@
 //! Every primitive decomposes into per-channel ring steps (or a direct
 //! exchange for AlltoAll), each step a set of chunked point-to-point
 //! transfers. The decomposition mirrors NCCL's Simple-protocol ring
-//! algorithms; channels stripe over rails (see [`crate::topology::rings`]).
+//! algorithms; channels stripe over rails (see [`crate::topology::build_rings`]).
 //!
 //! | primitive      | steps      | per-step payload per rank        |
 //! |----------------|------------|----------------------------------|

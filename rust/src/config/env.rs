@@ -1,4 +1,4 @@
-//! Environment-variable override layer.
+//! Environment-variable override layer (full table: docs/CONFIG.md).
 //!
 //! Honours both the paper's `ICCL_*` spelling and a `VCCL_*` alias. The
 //! lookup function is injected so tests can drive overrides without touching

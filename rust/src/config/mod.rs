@@ -9,6 +9,9 @@
 //! The env-var layer exists because the paper's §5 lessons are mostly about
 //! env-var misconfiguration; the experiment harness exercises the same
 //! surface (`vccl exp hostfunc` flips `VCCL_ORDERING=hostfunc`, etc).
+//!
+//! Every key, its default and the paper knob it maps to is documented in
+//! docs/CONFIG.md.
 
 mod env;
 

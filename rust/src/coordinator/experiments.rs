@@ -10,9 +10,18 @@ use crate::pipeline::{dp_overhead_ns, relative_gain, PipelineCfg, PipelineSim};
 use crate::topology::RankId;
 use crate::util::ByteSize;
 
-fn fresh(cfg: &Config, transport: &str, nodes: usize, channels: usize) -> ClusterSim {
+/// Normalize a config for one transport: baselines drop VCCL-only features
+/// (the kernel baseline additionally loses zero-copy and the lazy pool —
+/// NCCL defaults). Shared by the experiment harness and `coordinator::bench`
+/// so "the kernel baseline" means the same thing in reports and BENCH JSON.
+pub(crate) fn transport_cfg(
+    cfg: &Config,
+    transport: &str,
+    nodes: usize,
+    channels: usize,
+) -> Config {
     let mut c = cfg.clone();
-    c.set_key("vccl.transport", transport).unwrap();
+    c.set_key("vccl.transport", transport).expect("known transport");
     if transport != "smfree" && transport != "vccl" {
         c.vccl.fault_tolerance = false;
         c.vccl.monitor = false;
@@ -23,7 +32,11 @@ fn fresh(cfg: &Config, transport: &str, nodes: usize, channels: usize) -> Cluste
     }
     c.topo.num_nodes = nodes;
     c.vccl.channels = channels;
-    ClusterSim::new(c)
+    c
+}
+
+fn fresh(cfg: &Config, transport: &str, nodes: usize, channels: usize) -> ClusterSim {
+    ClusterSim::new(transport_cfg(cfg, transport, nodes, channels))
 }
 
 /// Table 1 / Appendix A: SM utilization of reduction-free workloads under

@@ -3,9 +3,12 @@
 //! experiment index).
 //!
 //! `vccl exp <id>` runs one experiment and prints its report (also written
-//! to `reports/<id>.txt`); `vccl exp all` runs the full set. `vccl train`
-//! is the real-compute training entry point (PJRT over the AOT artifacts).
+//! to `reports/<id>.txt`); `vccl exp all` runs the full set. `vccl bench`
+//! runs the headline experiments and emits machine-readable
+//! `BENCH_*.json` (see [`bench`]). `vccl train` is the real-compute
+//! training entry point (PJRT over the AOT artifacts).
 
+pub mod bench;
 pub mod experiments;
 pub mod reliability;
 pub mod observability;
@@ -21,6 +24,8 @@ use crate::config::Config;
 pub enum Command {
     /// `vccl exp <id> [--set k=v ...]`
     Exp { id: String },
+    /// `vccl bench [--out-dir d] [--quick]` — emit `BENCH_*.json`.
+    Bench { out_dir: PathBuf, quick: bool },
     /// `vccl train [--preset p] [--steps n] [--transport t] [--out csv]`
     Train { preset: String, steps: u64, out: Option<PathBuf> },
     /// `vccl info` — print resolved configuration.
@@ -37,6 +42,8 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     let mut preset = "tiny".to_string();
     let mut steps = 50u64;
     let mut out = None;
+    let mut out_dir = PathBuf::from(".");
+    let mut quick = false;
     let mut exp_id = String::new();
     if cmd == "exp" {
         exp_id = it
@@ -65,6 +72,10 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
                     .map_err(|e| anyhow!("--steps: {e}"))?;
             }
             "--out" => out = Some(PathBuf::from(it.next().ok_or_else(|| anyhow!("--out path"))?)),
+            "--out-dir" => {
+                out_dir = PathBuf::from(it.next().ok_or_else(|| anyhow!("--out-dir path"))?);
+            }
+            "--quick" => quick = true,
             "--transport" => {
                 let t = it.next().ok_or_else(|| anyhow!("--transport needs a value"))?;
                 cfg.set_key("vccl.transport", t)?;
@@ -74,6 +85,7 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     }
     let command = match cmd {
         "exp" => Command::Exp { id: exp_id },
+        "bench" => Command::Bench { out_dir, quick },
         "train" => Command::Train { preset, steps, out },
         "info" => Command::Info,
         _ => Command::Help,
@@ -141,7 +153,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         }
         other => return Err(anyhow!("unknown experiment {other:?} (try `vccl exp list`)")),
     };
-    // Persist alongside stdout for EXPERIMENTS.md.
+    // Persist alongside stdout so reports/ accumulates the full set.
     let dir = std::path::Path::new("reports");
     if std::fs::create_dir_all(dir).is_ok() {
         let _ = std::fs::write(dir.join(format!("{id}.txt")), &report);
@@ -154,6 +166,8 @@ pub fn help_text() -> String {
         "vccl — VCCL reproduction coordinator\n\n\
          USAGE:\n\
          \x20 vccl exp <id|list|all> [--set k=v]...   regenerate a paper table/figure\n\
+         \x20 vccl bench [--out-dir DIR] [--quick]     run the headline experiments and\n\
+         \x20                                          write BENCH_{p2p,failover,monitor,train}.json\n\
          \x20 vccl train [--preset tiny|e2e] [--steps N] [--transport vccl|nccl|ncclx]\n\
          \x20           [--out loss.csv]               real PJRT training run\n\
          \x20 vccl info                                print resolved config\n\n\
@@ -191,6 +205,26 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert_eq!(cfg.vccl.transport, crate::config::Transport::Kernel);
+    }
+
+    #[test]
+    fn parse_bench() {
+        let (cmd, _) = parse_args(&argv("bench")).unwrap();
+        match cmd {
+            Command::Bench { out_dir, quick } => {
+                assert_eq!(out_dir, std::path::PathBuf::from("."));
+                assert!(!quick);
+            }
+            other => panic!("{other:?}"),
+        }
+        let (cmd, _) = parse_args(&argv("bench --out-dir /tmp/b --quick")).unwrap();
+        match cmd {
+            Command::Bench { out_dir, quick } => {
+                assert_eq!(out_dir, std::path::PathBuf::from("/tmp/b"));
+                assert!(quick);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

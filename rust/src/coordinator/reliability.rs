@@ -306,7 +306,9 @@ pub fn retrywin_ablation(cfg: &Config) -> String {
         let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
         s.inject_port_down(port, SimTime::ms(100));
         s.inject_port_up(port, SimTime::ms(2_100)); // 2s flap
-        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(512).0);
+        // 16GB so the transfer (~340ms at line rate) is mid-flight when the
+        // flap hits; anything that drains before t=100ms measures nothing.
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::gb(16).0);
         s.run_to_idle(400_000_000);
         let op = &s.ops[id.0];
         (op.finished_at.map(|t| t.as_ns()).unwrap_or(0), s.stats.failovers, op.is_done())
@@ -329,8 +331,10 @@ pub fn retrywin_ablation(cfg: &Config) -> String {
     ]);
     let mut out = String::from(
         "Ablation — retaining the hardware retry window (§3.3):\n\
-         short flaps (≈half of failures) recover inside the window; immediate\n\
-         failover churns QPs (and pays warm-up) for no availability benefit.\n\n",
+         short flaps (≈half of failures) recover inside the window with ZERO\n\
+         QP churn; a hair-trigger window fails over on every flap, paying\n\
+         state migration + a proactive primary reset each time. The paper\n\
+         keeps TIMEOUT=18/RETRY=7 because flap-riding is free.\n\n",
     );
     out.push_str(&t.render());
     out

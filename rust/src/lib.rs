@@ -13,6 +13,9 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
+//! - [`util`] — deterministic RNG, byte/bandwidth units, formatting.
+//! - [`config`] — layered configuration: paper defaults → config file →
+//!   `ICCL_*`/`VCCL_*` env vars (every knob is in docs/CONFIG.md).
 //! - [`sim`] — discrete-event engine: nanosecond clock, event queue.
 //! - [`topology`] — servers, GPUs, RNICs, NVLink, two-tier rail-optimized CLOS.
 //! - [`net`] — RDMA verbs simulation: QPs, WR/WC/CQ, retry-timeout, CTS
@@ -28,10 +31,12 @@
 //!   dual-threshold straggler pinpointer.
 //! - [`pipeline`] — 1F1B pipeline-parallel schedule and the training
 //!   iteration model used for the throughput experiments (Fig 11, 13b, 14).
+//! - [`metrics`] — counters/gauges, report tables, and the `BENCH_*.json`
+//!   emission behind `vccl bench`.
 //! - [`runtime`] — PJRT (xla crate) wrapper that loads the AOT artifacts.
 //! - [`train`] — real-compute training driver (loss curves, Fig 12 / e2e).
 //! - [`coordinator`] — leader/CLI: experiment drivers for every paper
-//!   table and figure.
+//!   table and figure, plus the `bench` measurement loop.
 
 pub mod util;
 pub mod config;

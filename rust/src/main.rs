@@ -21,6 +21,14 @@ fn main() {
             Ok(())
         }
         Command::Exp { id } => coordinator::run_experiment(&id, &cfg).map(|r| println!("{r}")),
+        Command::Bench { out_dir, quick } => {
+            coordinator::bench::run_bench(&cfg, &out_dir, &coordinator::bench::BenchOpts { quick })
+                .map(|paths| {
+                    for p in paths {
+                        println!("wrote {}", p.display());
+                    }
+                })
+        }
         Command::Train { preset, steps, out } => {
             let opts = vccl::train::TrainOpts { preset, steps, ..Default::default() };
             vccl::train::run_training(std::path::Path::new("artifacts"), cfg, &opts, |rec| {

@@ -1,5 +1,7 @@
-//! Lightweight metrics: named counters/gauges plus the plain-text table
-//! formatter every experiment report uses (no external deps — offline build).
+//! Lightweight metrics: named counters/gauges, the plain-text table
+//! formatter every experiment report uses, and the machine-readable
+//! [`BenchReport`] JSON emitted by `vccl bench` (no external deps — offline
+//! build, hand-rolled JSON writer).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -92,6 +94,93 @@ impl Table {
     }
 }
 
+/// One named measurement inside a [`BenchReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchMetric {
+    /// Dotted metric name, e.g. `p2p.inter.vccl.64MB.algbw_gbps`.
+    pub name: String,
+    pub value: f64,
+    /// Unit suffix (`gbps`, `us`, `ms`, `tflops`, `count`, `percent`, ...).
+    pub unit: String,
+}
+
+/// A machine-readable benchmark report, serialized to `BENCH_<name>.json`
+/// by `vccl bench` so the performance trajectory of the repo is tracked
+/// from real, reproducible runs (same seed ⇒ same numbers).
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Short suite name: `p2p`, `failover`, `monitor`, `train`.
+    pub bench: String,
+    /// What paper artifact this reproduces (e.g. "Fig 10 / Table 1").
+    pub source: String,
+    pub metrics: Vec<BenchMetric>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str, source: &str) -> Self {
+        BenchReport { bench: bench.to_string(), source: source.to_string(), metrics: Vec::new() }
+    }
+
+    /// Record one metric. Non-finite values are clamped to 0 so the emitted
+    /// JSON is always valid (JSON has no NaN/Infinity).
+    pub fn push(&mut self, name: impl Into<String>, value: f64, unit: &str) -> &mut Self {
+        let value = if value.is_finite() { value } else { 0.0 };
+        self.metrics.push(BenchMetric { name: name.into(), value, unit: unit.to_string() });
+        self
+    }
+
+    /// Serialize to pretty-printed JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"bench\": {},", json_string(&self.bench));
+        let _ = writeln!(out, "  \"source\": {},", json_string(&self.source));
+        out.push_str("  \"metrics\": [\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            let comma = if i + 1 < self.metrics.len() { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "    {{\"name\": {}, \"value\": {}, \"unit\": {}}}{comma}",
+                json_string(&m.name),
+                json_number(m.value),
+                json_string(&m.unit),
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// JSON string literal with the mandatory escapes.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: finite, shortest round-trip form, never `NaN`. Rust's f64
+/// `Display` never emits scientific notation, so the output is always a
+/// valid JSON number (`42`, `387.5`, `0.000000032`).
+fn json_number(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    format!("{v}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +214,43 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new(vec!["a", "b"]);
         t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn bench_report_json_shape() {
+        let mut r = BenchReport::new("p2p", "Fig 10 / Table 1");
+        r.push("p2p.inter.vccl.64MB.algbw_gbps", 387.5, "gbps");
+        r.push("p2p.inter.vccl.64MB.latency_us", 1342.0, "us");
+        let j = r.to_json();
+        assert!(j.contains("\"bench\": \"p2p\""));
+        assert!(j.contains("\"source\": \"Fig 10 / Table 1\""));
+        assert!(j.contains("\"name\": \"p2p.inter.vccl.64MB.algbw_gbps\""));
+        assert!(j.contains("\"value\": 387.5"));
+        assert!(j.contains("\"unit\": \"gbps\""));
+        // Exactly one comma between the two metric objects, none trailing.
+        assert!(j.matches("\"name\"").count() == 2);
+        assert!(!j.contains("},\n  ]"), "trailing comma before ]:\n{j}");
+        assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn bench_json_escapes_and_clamps() {
+        let mut r = BenchReport::new("weird\"name", "line\nbreak");
+        r.push("nan.metric", f64::NAN, "x");
+        r.push("int.metric", 3.0, "count");
+        let j = r.to_json();
+        assert!(j.contains("weird\\\"name"));
+        assert!(j.contains("line\\nbreak"));
+        assert!(j.contains("\"value\": 0")); // NaN clamped
+        assert!(j.contains("\"value\": 3")); // integral rendered without .0
+        assert!(!j.contains("NaN"));
+    }
+
+    #[test]
+    fn json_number_forms() {
+        assert_eq!(json_number(42.0), "42");
+        assert_eq!(json_number(-1.0), "-1");
+        assert_eq!(json_number(f64::INFINITY), "0");
+        assert!(json_number(1.5).starts_with("1.5"));
     }
 }

@@ -1,5 +1,5 @@
 //! Pipeline-parallel training model: the 1F1B schedule (Fig 6) executed
-//! over the cluster simulation.
+//! over the cluster simulation ([`crate::ccl::ClusterSim`]).
 //!
 //! This is where the paper's headline number comes from: in 1F1B the P2P
 //! activation/gradient exchanges overlap with forward/backward compute, and
@@ -7,7 +7,7 @@
 //! costs the compute — kernel-based P2P parks 2 (inter) / 32 (intra) SMs on
 //! the GPU and tail-straggles the co-resident GEMMs (Appendix E); the
 //! NCCLX-like design parks 1; SM-free parks none. The schedule below runs
-//! real dependency-driven 1F1B over [`ClusterSim`], so compute slowdowns
+//! real dependency-driven 1F1B over [`crate::ccl::ClusterSim`], so compute slowdowns
 //! and communication times interact exactly as they do on hardware.
 //!
 //! [`scaling`] adds the §5 analytic model `I = (Tn − Tv)/(Tv + α)` for the

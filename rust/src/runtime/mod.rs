@@ -1,11 +1,21 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
 //!
 //! This is the boundary of the three-layer architecture: Python/JAX runs
-//! ONCE at build time (`make artifacts`) and never on the training path;
-//! from here on the rust binary is self-contained. The interchange format
-//! is HLO **text** (`HloModuleProto::from_text_file`) — the image's
-//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos, and
-//! the text parser reassigns ids cleanly (see /opt/xla-example/README.md).
+//! ONCE at build time (`python -m compile.aot --out artifacts`) and never on
+//! the training path; from here on the rust binary is self-contained. The
+//! interchange format is HLO **text** rather than a serialized
+//! `HloModuleProto`: pinned xla_extension builds (0.5.x) reject the 64-bit
+//! instruction ids that jax≥0.5 emits in its protos, while the HLO text
+//! parser reassigns ids cleanly on load — so text is the only format that is
+//! stable across the Python and Rust sides of the pipeline. See DESIGN.md,
+//! "PJRT runtime and the HLO text fallback", for the full rationale and the
+//! artifact layout.
+//!
+//! The actual `xla` crate (PJRT bindings over xla_extension) is optional:
+//! builds without the `xla` cargo feature get a stub [`ModelRuntime`] whose
+//! `load` fails with a clear message, keeping every simulation-side
+//! experiment — the entire `vccl exp` / `vccl bench` surface — fully
+//! functional offline.
 
 use std::path::Path;
 
@@ -61,11 +71,17 @@ fn json_string(text: &str, key: &str) -> Option<String> {
 }
 
 /// A compiled model runtime: the PJRT CPU client plus the train-step and
-/// loss executables for one preset.
+/// loss executables for one preset. Without the `xla` feature this is a
+/// stub that can never be constructed (`load` always errors), which keeps
+/// the [`crate::train`] driver compiling and lets it surface a precise
+/// "built without PJRT" error at runtime instead of a build failure.
 pub struct ModelRuntime {
     pub meta: ArtifactMeta,
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
+    #[cfg(feature = "xla")]
     train_step: xla::PjRtLoadedExecutable,
+    #[cfg(feature = "xla")]
     loss: xla::PjRtLoadedExecutable,
 }
 
@@ -77,6 +93,23 @@ pub struct TrainState {
     pub step: u64,
 }
 
+impl ModelRuntime {
+    /// Deterministic initial state (GPT-2-style N(0, 0.02) weights). The
+    /// loss-curve experiments compare transports with the SAME Rust init,
+    /// so curves are directly comparable (Fig 12's point: identical
+    /// numerics whichever CCL moves the tensors).
+    pub fn init_state(&self, seed: u64) -> TrainState {
+        let n = self.meta.flat_len;
+        let mut rng = crate::util::Rng::new(seed);
+        let mut flat = Vec::with_capacity(n);
+        for _ in 0..n {
+            flat.push((rng.normal(0.0, 0.02)) as f32);
+        }
+        TrainState { flat, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+#[cfg(feature = "xla")]
 impl ModelRuntime {
     /// Load artifacts for `preset` from `artifact_dir`.
     pub fn load(artifact_dir: &Path, preset: &str) -> Result<Self> {
@@ -98,20 +131,6 @@ impl ModelRuntime {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
-    }
-
-    /// Deterministic initial state (GPT-2-style N(0, 0.02) weights). The
-    /// loss-curve experiments compare transports with the SAME Rust init,
-    /// so curves are directly comparable (Fig 12's point: identical
-    /// numerics whichever CCL moves the tensors).
-    pub fn init_state(&self, seed: u64) -> TrainState {
-        let n = self.meta.flat_len;
-        let mut rng = crate::util::Rng::new(seed);
-        let mut flat = Vec::with_capacity(n);
-        for _ in 0..n {
-            flat.push((rng.normal(0.0, 0.02)) as f32);
-        }
-        TrainState { flat, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
     }
 
     fn tokens_literal(&self, toks: &[i32]) -> Result<xla::Literal> {
@@ -164,6 +183,43 @@ impl ModelRuntime {
             .map_err(|e| anyhow!("fetch loss: {e:?}"))?;
         let l = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
         Ok(l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0])
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl ModelRuntime {
+    /// Stub: validate the artifact metadata (so missing AOT artifacts
+    /// still produce the familiar error), then report that PJRT execution
+    /// is not compiled in.
+    pub fn load(artifact_dir: &Path, preset: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(&artifact_dir.join(format!("meta_{preset}.json")))?;
+        Err(anyhow!(
+            "artifacts for preset {:?} found, but this binary was built without the \
+             `xla` cargo feature, so PJRT execution is unavailable; rebuild with \
+             `--features xla` after vendoring the xla crate (DESIGN.md, \"PJRT \
+             runtime and the HLO text fallback\"). Simulation experiments \
+             (`vccl exp`, `vccl bench`) do not need it.",
+            meta.preset
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the xla feature)".to_string()
+    }
+
+    /// Stub: unreachable in practice — `load` never constructs the stub.
+    pub fn train_step(
+        &self,
+        _st: &mut TrainState,
+        _tokens: &[i32],
+        _targets: &[i32],
+    ) -> Result<f32> {
+        Err(anyhow!("PJRT unavailable: built without the `xla` feature"))
+    }
+
+    /// Stub: unreachable in practice — `load` never constructs the stub.
+    pub fn eval_loss(&self, _st: &TrainState, _tokens: &[i32], _targets: &[i32]) -> Result<f32> {
+        Err(anyhow!("PJRT unavailable: built without the `xla` feature"))
     }
 }
 
@@ -228,14 +284,27 @@ mod tests {
         assert_eq!(m.preset, "x");
     }
 
-    /// Full PJRT round trip — only runs when the tiny artifacts exist
-    /// (`make artifacts`). Kept as a test so `make test` exercises the
-    /// Python→HLO→rust path end to end.
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let dir = std::env::temp_dir().join("vccl_no_artifacts_here");
+        let e = match ModelRuntime::load(&dir, "tiny") {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail without artifacts"),
+        };
+        assert!(e.to_string().contains("meta_tiny.json"), "{e}");
+    }
+
+    /// Full PJRT round trip — only compiled with the `xla` feature and only
+    /// runs when the tiny artifacts exist
+    /// (`python -m compile.aot --out rust/artifacts --presets tiny`). Kept
+    /// as a test so PJRT-enabled builds exercise the Python→HLO→rust path
+    /// end to end.
+    #[cfg(feature = "xla")]
     #[test]
     fn pjrt_train_step_descends_loss() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("meta_tiny.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
+            eprintln!("skipping: generate the AOT artifacts first");
             return;
         }
         let rt = ModelRuntime::load(&dir, "tiny").expect("load artifacts");

@@ -53,7 +53,8 @@ impl TrainReport {
         self.steps.first().map(|s| s.loss).unwrap_or(f32::NAN)
     }
 
-    /// CSV of the loss curve (EXPERIMENTS.md ingests this).
+    /// CSV of the loss curve (the `train --out` flag and the `train_e2e`
+    /// example write these under `reports/`).
     pub fn to_csv(&self) -> String {
         let mut out = String::from("step,loss,wall_ms\n");
         for s in &self.steps {
@@ -179,12 +180,15 @@ mod tests {
         assert_eq!(r.final_loss(), 6.25);
     }
 
-    /// Real-compute smoke test (needs `make artifacts`).
+    /// Real-compute smoke test (needs the AOT artifacts and a PJRT-enabled
+    /// build: `python -m compile.aot --out rust/artifacts --presets tiny`
+    /// then `--features xla`).
+    #[cfg(feature = "xla")]
     #[test]
     fn tiny_training_descends_and_sim_reports() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("meta_tiny.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
+            eprintln!("skipping: generate the AOT artifacts first");
             return;
         }
         let opts = TrainOpts { steps: 12, ..Default::default() };

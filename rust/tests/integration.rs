@@ -5,6 +5,7 @@
 
 use vccl::ccl::{ClusterSim, CollKind};
 use vccl::config::{Config, Transport};
+use vccl::coordinator::{self, bench, Command, EXPERIMENTS};
 use vccl::monitor::Verdict;
 use vccl::pipeline::{PipelineCfg, PipelineSim};
 use vccl::sim::SimTime;
@@ -198,6 +199,71 @@ fn env_knobs_change_behaviour() {
     // The retry window derived from those knobs is what failover obeys.
     let window = cfg.net.retry_window_ns();
     assert_eq!(window, (4096.0 * 1024.0) as u64 * 2);
+}
+
+// ---------------------------------------------------------------------
+// CLI / experiment-harness coverage
+// ---------------------------------------------------------------------
+
+/// Every experiment id the coordinator advertises must round-trip through
+/// `parse_args` and produce a non-empty report from `run_experiment`
+/// without panicking.
+#[test]
+fn every_experiment_id_parses_and_reports() {
+    for (id, _) in EXPERIMENTS {
+        let (cmd, _) = coordinator::parse_args(&["exp".to_string(), id.to_string()]).unwrap();
+        assert!(matches!(cmd, Command::Exp { id: parsed } if parsed == *id));
+    }
+    // Debug builds skip the four slowest timeline experiments (the
+    // un-optimized simulator is ~10× slower; full coverage is a release
+    // concern — same policy as `large_cluster_alltoall`).
+    let heavy = ["fig13a", "fig18", "fig11", "fig13b"];
+    let cfg = Config::paper_defaults();
+    for (id, _) in EXPERIMENTS {
+        if cfg!(debug_assertions) && heavy.contains(id) {
+            continue;
+        }
+        let report = coordinator::run_experiment(id, &cfg)
+            .unwrap_or_else(|e| panic!("experiment {id} failed: {e}"));
+        assert!(!report.trim().is_empty(), "experiment {id} returned an empty report");
+        assert!(
+            report.contains('|') || report.contains(':'),
+            "experiment {id} produced no table:\n{report}"
+        );
+    }
+    // `list` enumerates everything; unknown ids are a clean error, not a
+    // panic.
+    let listing = coordinator::run_experiment("list", &cfg).unwrap();
+    for (id, _) in EXPERIMENTS {
+        assert!(listing.contains(id), "listing is missing {id}");
+    }
+    assert!(coordinator::run_experiment("definitely-not-an-id", &cfg).is_err());
+}
+
+/// `vccl bench` must emit all four BENCH_*.json files with non-empty,
+/// finite metric arrays (the acceptance gate for the perf trajectory).
+#[test]
+fn bench_emits_four_json_files_with_metrics() {
+    let dir = std::env::temp_dir().join(format!("vccl_bench_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths =
+        bench::run_bench(&Config::paper_defaults(), &dir, &bench::BenchOpts { quick: true })
+            .unwrap();
+    assert_eq!(paths.len(), 4);
+    for name in ["BENCH_p2p.json", "BENCH_failover.json", "BENCH_monitor.json", "BENCH_train.json"]
+    {
+        let path = dir.join(name);
+        assert!(paths.contains(&path), "missing {name}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"metrics\": ["), "{name} lacks a metrics array");
+        assert!(text.contains("\"name\""), "{name} metrics array is empty");
+        assert!(!text.contains("NaN"), "{name} contains non-finite values");
+    }
+    // Headline shape: VCCL rides through the port failure NCCL hangs on.
+    let failover = std::fs::read_to_string(dir.join("BENCH_failover.json")).unwrap();
+    assert!(failover.contains("failover.vccl.completed"));
+    assert!(failover.contains("failover.nccl.hung"));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Large-scale smoke: an 8-node (64-GPU) alltoall completes and stays

@@ -1,0 +1,164 @@
+//! Offline, dependency-free shim of the [`anyhow`](https://docs.rs/anyhow)
+//! API surface the `vccl` crate uses: [`Error`], [`Result`], the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait.
+//!
+//! The build image has no crates.io access, so this crate stands in for the
+//! real one as a path dependency. It is intentionally tiny: errors are a
+//! message string plus an optional chain of `context` annotations — enough
+//! for CLI diagnostics, not a general error-handling framework. Replacing it
+//! with the real `anyhow = "1"` requires no source changes in `vccl`.
+
+use std::fmt;
+
+/// A string-backed error value, Display-formatted like `anyhow::Error`
+/// (outermost context first, then the original message after `: `).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context annotation, matching anyhow's `context: cause`
+    /// rendering.
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `.unwrap()` on a Result<_, Error> prints this; keep it readable.
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` — that
+// is what keeps this blanket conversion coherent (same trick as the real
+// anyhow crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string: `anyhow!("bad {x:?}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`]: `bail!("unknown transport {t:?}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds:
+/// `ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len())`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Annotate the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Annotate the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &str) -> Result<u32> {
+        let n: u32 = v.parse().map_err(|e| anyhow!("bad value {v:?}: {e}"))?;
+        ensure!(n > 0, "value must be positive, got {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn macro_formats_and_propagates() {
+        assert_eq!(parse("3").unwrap(), 3);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().contains("bad value \"x\""));
+        let e = parse("0").unwrap_err();
+        assert!(e.to_string().contains("positive"));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("writing {}", "report")).unwrap_err();
+        let text = e.to_string();
+        assert!(text.starts_with("writing report: "), "{text}");
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing key").unwrap_err().to_string(), "missing key");
+    }
+}
