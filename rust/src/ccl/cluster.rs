@@ -14,13 +14,14 @@
 use std::collections::HashMap;
 
 use crate::config::{Config, Transport};
-use crate::fault::{migrate_to_breakpoint, DeltaProbe, ProbeVerdict, RecvPointers, SendPointers,
-    SyncFifo};
+use crate::fault::{migrate_to_breakpoint_traced, DeltaProbe, ProbeVerdict, RecvPointers,
+    SendPointers, SyncFifo};
 use crate::gpu::{CopyEngines, GpuCompute, TaskId};
 use crate::monitor::MonitorSet;
 use crate::net::{CompletionStatus, FlowId, QpId, QpState, RdmaNet, WorkCompletion};
 use crate::sim::{Engine, SimTime};
 use crate::topology::{build_rings, Cluster, PortId, RankId, Ring};
+use crate::trace::{TraceEvent, Tracer};
 use crate::util::Rng;
 
 use super::mempool::{AllocPolicy, MemPool};
@@ -159,6 +160,19 @@ pub enum CollKind {
     AllToAll,
 }
 
+impl CollKind {
+    /// Stable name (trace events, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollKind::SendRecv => "SendRecv",
+            CollKind::AllReduce => "AllReduce",
+            CollKind::AllGather => "AllGather",
+            CollKind::ReduceScatter => "ReduceScatter",
+            CollKind::AllToAll => "AllToAll",
+        }
+    }
+}
+
 /// A running collective operation.
 #[derive(Debug)]
 pub struct Op {
@@ -244,6 +258,10 @@ pub struct ClusterSim {
     pub mempools: Vec<MemPool>,
     pub stats: Stats,
     pub rng: Rng,
+    /// Flight recorder handle (disabled unless `trace.enabled` or a shared
+    /// sink is installed — see `rust/src/trace/`). Cloned into the RDMA
+    /// and monitor layers at construction.
+    pub tracer: Tracer,
     /// Op-level SM residency: one communication kernel per (op, GPU), not
     /// one per channel-transfer (Table 1's 2-SM inter-host default is per
     /// operation). (op, gpu) → (sms held, live transfer refcount).
@@ -258,11 +276,15 @@ pub struct GpuUnit {
 
 impl ClusterSim {
     pub fn new(cfg: Config) -> Self {
-        let topo = Cluster::new(cfg.topo.clone());
+        // The fabric is built from the CONFIGURED rates — `net.link_gbps`
+        // and `gpu.nvlink_gbps` flow through to link capacities (and the
+        // 1:1 spine trunks derived from them) instead of hard-coded 400 /
+        // 3600 build rates.
+        let topo = Cluster::with_rates(cfg.topo.clone(), cfg.net.link_gbps, cfg.gpu.nvlink_gbps);
         let fabric = &topo.fabric;
-        let mut net_cfg = cfg.net.clone();
-        net_cfg.link_gbps = cfg.net.link_gbps;
-        let rdma = RdmaNet::new(fabric, net_cfg);
+        let tracer = Tracer::from_config(&cfg.trace);
+        let mut rdma = RdmaNet::new(fabric, cfg.net.clone());
+        rdma.set_tracer(tracer.clone());
         let n_ranks = topo.num_ranks();
         let gpus = (0..n_ranks)
             .map(|_| GpuUnit {
@@ -279,8 +301,18 @@ impl ClusterSim {
                 m
             })
             .collect();
-        let monitor = if cfg.vccl.monitor { Some(MonitorSet::new(&cfg.vccl)) } else { None };
+        let monitor = if cfg.vccl.monitor {
+            let mut m = MonitorSet::new(&cfg.vccl);
+            m.set_tracer(tracer.clone());
+            Some(m)
+        } else {
+            None
+        };
         let seed = cfg.seed;
+        tracer.record(
+            SimTime::ZERO,
+            TraceEvent::SimStarted { nodes: cfg.topo.num_nodes, ranks: n_ranks },
+        );
         ClusterSim {
             cfg,
             topo,
@@ -298,6 +330,7 @@ impl ClusterSim {
             mempools,
             stats: Stats { proxy_cpu_ns: vec![0; n_ranks], ..Default::default() },
             rng: Rng::new(seed),
+            tracer,
             op_sms: HashMap::new(),
         }
     }
@@ -759,10 +792,20 @@ impl ClusterSim {
         }
 
         // --- VCCL failover ---
-        // 1. Migrate pointers to the breakpoint (Fig 8).
+        // 1. Migrate pointers to the breakpoint (Fig 8). The traced variant
+        //    also freezes a `failover-conn<N>` incident snapshot, so the
+        //    PortDown → FlowStalled → QpError chain leading here survives
+        //    ring eviction on long runs.
         let rolled_back = {
             let x = &mut self.xfers[xid.0];
-            let lost = migrate_to_breakpoint(&mut x.send, &mut x.recv, &mut x.fifo);
+            let lost = migrate_to_breakpoint_traced(
+                &mut x.send,
+                &mut x.recv,
+                &mut x.fifo,
+                &self.tracer,
+                now,
+                conn_id.0,
+            );
             x.fifo.error_port = error_port;
             lost
         };
@@ -790,6 +833,11 @@ impl ClusterSim {
                 Event::ChunkReady { xfer: xid },
             );
         }
+        // The transfer's data flow resumes on the backup QP (breakpoint
+        // retransmission): the "resume" leg of the failover causal chain.
+        // Scope "xfer": the id is a transfer id, not a net-layer flow id.
+        self.tracer
+            .record(now, TraceEvent::FlowResumed { flow: xid.0 as u64, scope: "xfer" });
         // 5. Resume normal pumping for not-yet-staged chunks.
         self.pump_xfer(xid);
     }
@@ -840,6 +888,11 @@ impl ClusterSim {
 
     fn on_port_state(&mut self, port: PortId, up: bool) {
         let now = self.now();
+        let ordinal = self.topo.fabric.port_ordinal(port);
+        self.tracer.record(
+            now,
+            if up { TraceEvent::PortUp { port: ordinal } } else { TraceEvent::PortDown { port: ordinal } },
+        );
         self.topo.fabric.set_port_up(port, up);
         let out = self.rdma.set_port_up(&self.topo.fabric, port, up, now);
         self.absorb(out);
@@ -877,6 +930,7 @@ impl ClusterSim {
         c.active = ActiveSide::Primary;
         c.awaiting_failback = false;
         self.stats.failbacks += 1;
+        self.tracer.record(now, TraceEvent::Failback { conn: conn_id.0 });
         // New chunks flow on the primary from here on; re-pump in case the
         // transfer throttled down on the backup.
         if let Some(xid) = self.conns[conn_id.0].cur_xfer() {
@@ -1072,6 +1126,94 @@ mod tests {
         assert!(s.ops[id.0].is_done());
         assert_eq!(s.stats.failovers, 1);
         assert_eq!(s.stats.failbacks, 1, "traffic must return to the primary QP");
+    }
+
+    /// The flight recorder captures the §3.3 causal chain in order:
+    /// PortDown → FlowStalled → PointerMigrated → FlowResumed, and the
+    /// failover freezes an incident snapshot.
+    #[test]
+    fn traced_failover_records_causal_chain() {
+        let mut cfg = fast_ft_cfg();
+        cfg.trace.enabled = true;
+        let mut s = ClusterSim::new(cfg);
+        assert!(s.tracer.enabled());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done());
+        let sink = s.tracer.sink().unwrap();
+        let recs = sink.records();
+        let pos = |k: &str| {
+            recs.iter()
+                .position(|r| r.ev.kind() == k)
+                .unwrap_or_else(|| panic!("no {k} event recorded"))
+        };
+        let (down, stalled, migrated, resumed) = (
+            pos("PortDown"),
+            pos("FlowStalled"),
+            pos("PointerMigrated"),
+            pos("FlowResumed"),
+        );
+        assert!(down < stalled && stalled < migrated && migrated < resumed);
+        assert!(recs[down].at <= recs[stalled].at);
+        assert!(recs[stalled].at <= recs[migrated].at);
+        assert!(recs[migrated].at <= recs[resumed].at);
+        assert!(
+            sink.incidents().iter().any(|i| i.name.starts_with("failover-conn")),
+            "failover must freeze an incident snapshot"
+        );
+    }
+
+    /// The recorder observes, never schedules: the same scenario with
+    /// tracing on and off must produce the identical simulation.
+    #[test]
+    fn tracing_never_perturbs_the_simulation() {
+        let run = |traced: bool| {
+            let mut cfg = fast_ft_cfg();
+            cfg.trace.enabled = traced;
+            let mut s = ClusterSim::new(cfg);
+            let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+            // 256MB (~5.5s at line rate) so the 2ms port-down lands
+            // mid-transfer and the full failover path runs.
+            s.inject_port_down(port, SimTime::ms(2));
+            let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+            s.run_to_idle(50_000_000);
+            (
+                s.ops[id.0].finished_at.expect("op finishes").as_ns(),
+                s.engine.dispatched(),
+                s.stats.failovers,
+            )
+        };
+        let traced = run(true);
+        assert_eq!(traced, run(false));
+        assert_eq!(traced.2, 1, "the scenario must actually fail over");
+    }
+
+    /// Trace streams are reproducible: two runs at the same seed record
+    /// the identical (kind, timestamp) sequence.
+    #[test]
+    fn trace_stream_is_deterministic_across_runs() {
+        let run = || {
+            let mut cfg = fast_ft_cfg();
+            cfg.trace.enabled = true;
+            let mut s = ClusterSim::new(cfg);
+            let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+            s.inject_port_down(port, SimTime::ms(2));
+            let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+            s.run_to_idle(50_000_000);
+            assert!(s.ops[id.0].is_done());
+            s.tracer
+                .sink()
+                .unwrap()
+                .records()
+                .iter()
+                .map(|r| (r.at.as_ns(), r.ev.kind()))
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(!a.is_empty());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::sim::SimTime;
 use crate::topology::RankId;
+use crate::trace::TraceEvent;
 
 use super::cluster::{ClusterSim, CollKind, Event, Op, OpId};
 
@@ -58,6 +59,10 @@ impl ClusterSim {
             started_at: self.now(),
             finished_at: None,
         });
+        self.tracer.record(
+            self.now(),
+            TraceEvent::OpSubmitted { op: id.0, kind: kind.name(), bytes },
+        );
         for c in 0..channels {
             let now = self.now();
             self.engine.schedule_at(now, Event::OpStep { op: id, channel: c });
@@ -72,6 +77,10 @@ impl ClusterSim {
             if o.failed || o.is_done() {
                 return;
             }
+            self.tracer.record(
+                self.engine.now(),
+                TraceEvent::StepBegin { op: op.0, channel, step: o.chan_step[channel] },
+            );
             (o.kind, o.bytes, o.p2p, o.channels, self.topo.num_ranks())
         };
         match kind {
@@ -115,11 +124,16 @@ impl ClusterSim {
             if o.chan_pending[channel] > 0 {
                 return;
             }
+            self.tracer.record(
+                now,
+                TraceEvent::StepEnd { op: op.0, channel, step: o.chan_step[channel] },
+            );
             o.chan_step[channel] += 1;
             if o.chan_step[channel] >= o.steps_total {
                 o.channels_done += 1;
                 if o.channels_done == o.channels {
                     o.finished_at = Some(now);
+                    self.tracer.record(now, TraceEvent::OpFinished { op: op.0 });
                 }
                 return;
             }

@@ -71,6 +71,10 @@ pub fn apply_env(cfg: &mut Config, get: impl Fn(&str) -> Option<String>) -> Vec<
         cfg.vccl.lazy_mempool = v;
         applied.push(format!("LAZY_MEMPOOL={v}"));
     }
+    if let Some(v) = lookup("TRACE").and_then(|s| parse_bool(&s)) {
+        cfg.trace.enabled = v;
+        applied.push(format!("TRACE={v}"));
+    }
     if let Some(v) = lookup("SEED").and_then(|s| s.parse().ok()) {
         cfg.seed = v;
         applied.push(format!("SEED={v}"));
@@ -126,6 +130,14 @@ mod tests {
         apply_env(&mut cfg, |k| env.get(k).cloned());
         assert_eq!(cfg.vccl.transport, Transport::Kernel);
         assert_eq!(cfg.vccl.ordering, StreamOrdering::HostFunc);
+    }
+
+    #[test]
+    fn trace_env_toggles_recorder() {
+        let mut cfg = Config::paper_defaults();
+        let env = env_of(&[("VCCL_TRACE", "1")]);
+        apply_env(&mut cfg, |k| env.get(k).cloned());
+        assert!(cfg.trace.enabled);
     }
 
     #[test]

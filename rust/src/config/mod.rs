@@ -252,6 +252,34 @@ impl Default for VcclConfig {
     }
 }
 
+/// Flight-recorder settings (`trace.*`, see `rust/src/trace/`).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Record cross-layer trace events. Off by default: a disabled tracer
+    /// allocates nothing and costs one branch per would-be event.
+    pub enabled: bool,
+    /// Bounded ring capacity in events; older events are dropped (counted).
+    pub ring_capacity: usize,
+    /// Trailing window frozen into an incident snapshot when an anomaly is
+    /// flagged (pinpointer non-healthy verdict, failover migration).
+    pub snapshot_window_ns: u64,
+    /// Shared recorder installed by `vccl trace` so every simulation built
+    /// from this config records into one ring. Not settable from config
+    /// files or env vars; `Config::clone` shares it by design.
+    pub sink: Option<crate::trace::TraceSink>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: false,
+            ring_capacity: 1 << 16,
+            snapshot_window_ns: 2_000_000_000,
+            sink: None,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -259,6 +287,7 @@ pub struct Config {
     pub net: NetConfig,
     pub topo: TopologyConfig,
     pub vccl: VcclConfig,
+    pub trace: TraceConfig,
     /// RNG seed for all stochastic elements.
     pub seed: u64,
 }
@@ -389,6 +418,9 @@ impl Config {
             "vccl.chunk_bytes" => self.vccl.chunk_bytes = p(val)?,
             "vccl.lazy_mempool" => self.vccl.lazy_mempool = pb(val)?,
             "vccl.zero_copy" => self.vccl.zero_copy = pb(val)?,
+            "trace.enabled" => self.trace.enabled = pb(val)?,
+            "trace.ring_capacity" => self.trace.ring_capacity = p(val)?,
+            "trace.snapshot_window_ns" => self.trace.snapshot_window_ns = p(val)?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -449,5 +481,22 @@ mod tests {
         c.set_key("topo.num_nodes", "4").unwrap();
         c.set_key("seed", "99").unwrap();
         assert_eq!((c.gpu.num_sms, c.net.ib_timeout_exp, c.topo.num_nodes, c.seed), (78, 14, 4, 99));
+    }
+
+    #[test]
+    fn trace_keys_parse_and_default_off() {
+        let mut c = Config::paper_defaults();
+        assert!(!c.trace.enabled, "tracing must be opt-in");
+        assert!(c.trace.sink.is_none());
+        c.apply_kv_text(
+            "trace.enabled = true\n\
+             trace.ring_capacity = 1024\n\
+             trace.snapshot_window_ns = 5000000\n",
+        )
+        .unwrap();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.ring_capacity, 1024);
+        assert_eq!(c.trace.snapshot_window_ns, 5_000_000);
+        assert!(c.apply_kv_text("trace.bogus = 1").is_err());
     }
 }

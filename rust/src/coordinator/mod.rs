@@ -12,6 +12,7 @@ pub mod bench;
 pub mod experiments;
 pub mod reliability;
 pub mod observability;
+pub mod trace;
 
 use std::path::PathBuf;
 
@@ -24,6 +25,9 @@ use crate::config::Config;
 pub enum Command {
     /// `vccl exp <id> [--set k=v ...]`
     Exp { id: String },
+    /// `vccl trace <id> [--out file]` — run an experiment with the flight
+    /// recorder on; export Chrome trace JSON + incident timeline.
+    Trace { id: String, out: Option<PathBuf> },
     /// `vccl bench [--out-dir d] [--quick]` — emit `BENCH_*.json`.
     Bench { out_dir: PathBuf, quick: bool },
     /// `vccl train [--preset p] [--steps n] [--transport t] [--out csv]`
@@ -45,10 +49,10 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     let mut out_dir = PathBuf::from(".");
     let mut quick = false;
     let mut exp_id = String::new();
-    if cmd == "exp" {
+    if cmd == "exp" || cmd == "trace" {
         exp_id = it
             .next()
-            .ok_or_else(|| anyhow!("usage: vccl exp <id> (try `vccl exp list`)"))?
+            .ok_or_else(|| anyhow!("usage: vccl {cmd} <id> (try `vccl exp list`)"))?
             .clone();
     }
     while let Some(flag) = it.next() {
@@ -85,6 +89,7 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     }
     let command = match cmd {
         "exp" => Command::Exp { id: exp_id },
+        "trace" => Command::Trace { id: exp_id, out },
         "bench" => Command::Bench { out_dir, quick },
         "train" => Command::Train { preset, steps, out },
         "info" => Command::Info,
@@ -166,6 +171,10 @@ pub fn help_text() -> String {
         "vccl — VCCL reproduction coordinator\n\n\
          USAGE:\n\
          \x20 vccl exp <id|list|all> [--set k=v]...   regenerate a paper table/figure\n\
+         \x20 vccl trace <id> [--out FILE]             run an experiment with the flight\n\
+         \x20                                          recorder on; write Chrome trace JSON\n\
+         \x20                                          (chrome://tracing / Perfetto) and print\n\
+         \x20                                          the incident timeline\n\
          \x20 vccl bench [--out-dir DIR] [--quick]     run the headline experiments and\n\
          \x20                                          write BENCH_{p2p,failover,monitor,train}.json\n\
          \x20 vccl train [--preset tiny|e2e] [--steps N] [--transport vccl|nccl|ncclx]\n\
@@ -205,6 +214,30 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert_eq!(cfg.vccl.transport, crate::config::Transport::Kernel);
+    }
+
+    #[test]
+    fn parse_trace() {
+        let (cmd, _) = parse_args(&argv("trace fig13a")).unwrap();
+        match cmd {
+            Command::Trace { id, out } => {
+                assert_eq!(id, "fig13a");
+                assert!(out.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        let (cmd, cfg) =
+            parse_args(&argv("trace fig13a --out /tmp/t.json --set trace.ring_capacity=4096"))
+                .unwrap();
+        match cmd {
+            Command::Trace { id, out } => {
+                assert_eq!(id, "fig13a");
+                assert_eq!(out, Some(std::path::PathBuf::from("/tmp/t.json")));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(cfg.trace.ring_capacity, 4096);
+        assert!(parse_args(&argv("trace")).is_err(), "trace needs an id");
     }
 
     #[test]

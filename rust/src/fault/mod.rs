@@ -28,7 +28,9 @@ pub mod pointers;
 pub mod perception;
 
 pub use perception::{DeltaProbe, ProbeVerdict};
-pub use pointers::{migrate_to_breakpoint, RecvPointers, SendPointers, SyncFifo};
+pub use pointers::{
+    migrate_to_breakpoint, migrate_to_breakpoint_traced, RecvPointers, SendPointers, SyncFifo,
+};
 
 use crate::net::QpId;
 use crate::topology::PortId;

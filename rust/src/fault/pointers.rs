@@ -86,6 +86,35 @@ pub fn migrate_to_breakpoint(
     rolled_back
 }
 
+/// [`migrate_to_breakpoint`] plus flight-recorder instrumentation: records
+/// a `PointerMigrated` event and freezes the trailing window into a
+/// `failover-conn<N>` incident (failovers are exactly the moments the
+/// recorder exists for). The untraced function stays the pure state
+/// transform; call this one from failover paths that hold a
+/// [`crate::trace::Tracer`].
+pub fn migrate_to_breakpoint_traced(
+    send: &mut SendPointers,
+    recv: &mut RecvPointers,
+    fifo: &mut SyncFifo,
+    tracer: &crate::trace::Tracer,
+    at: crate::sim::SimTime,
+    conn: usize,
+) -> u64 {
+    let rolled_back = migrate_to_breakpoint(send, recv, fifo);
+    if tracer.enabled() {
+        tracer.record_anomaly(
+            at,
+            crate::trace::TraceEvent::PointerMigrated {
+                conn,
+                breakpoint: fifo.restart_pos,
+                rolled_back,
+            },
+            &format!("failover-conn{conn}"),
+        );
+    }
+    rolled_back
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +133,38 @@ mod tests {
         assert_eq!(r.received, 10);
         assert_eq!(r.done, 10);
         assert_eq!(f.restart_pos, 10);
+    }
+
+    #[test]
+    fn traced_migration_records_event_and_freezes_incident() {
+        use crate::sim::SimTime;
+        use crate::trace::{TraceEvent, TraceSink, Tracer};
+        let sink = TraceSink::new(64, 1_000_000);
+        let tracer = Tracer::attached(sink.clone());
+        let mut s = SendPointers { posted: 20, transmitted: 15, acked: 9 };
+        let mut r = RecvPointers { posted: 20, received: 14, done: 10 };
+        let mut f = SyncFifo::default();
+        let lost =
+            migrate_to_breakpoint_traced(&mut s, &mut r, &mut f, &tracer, SimTime::ms(5), 3);
+        assert_eq!(lost, 5);
+        let recs = sink.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(
+            recs[0].ev,
+            TraceEvent::PointerMigrated { conn: 3, breakpoint: 10, rolled_back: 5 }
+        );
+        let incs = sink.incidents();
+        assert_eq!(incs.len(), 1);
+        assert_eq!(incs[0].name, "failover-conn3");
+        // The disabled tracer is a pure pass-through.
+        let mut s2 = SendPointers { posted: 20, transmitted: 15, acked: 9 };
+        let mut r2 = RecvPointers { posted: 20, received: 14, done: 10 };
+        let mut f2 = SyncFifo::default();
+        let lost2 = migrate_to_breakpoint_traced(
+            &mut s2, &mut r2, &mut f2, &Tracer::disabled(), SimTime::ms(5), 3,
+        );
+        assert_eq!(lost2, 5);
+        assert_eq!((s2, r2), (s, r));
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! - [`config`] — layered configuration: paper defaults → config file →
 //!   `ICCL_*`/`VCCL_*` env vars (every knob is in docs/CONFIG.md).
 //! - [`sim`] — discrete-event engine: nanosecond clock, event queue.
+//! - [`trace`] — flight recorder: bounded cross-layer event ring with
+//!   Chrome-trace export and anomaly snapshots (`vccl trace <id>`).
 //! - [`topology`] — servers, GPUs, RNICs, NVLink, two-tier rail-optimized CLOS.
 //! - [`net`] — RDMA verbs simulation: QPs, WR/WC/CQ, retry-timeout, CTS
 //!   credits, max-min fair link sharing, incast/PFC behaviour, port failures.
@@ -41,6 +43,7 @@
 pub mod util;
 pub mod config;
 pub mod sim;
+pub mod trace;
 pub mod topology;
 pub mod net;
 pub mod gpu;

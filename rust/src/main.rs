@@ -21,6 +21,19 @@ fn main() {
             Ok(())
         }
         Command::Exp { id } => coordinator::run_experiment(&id, &cfg).map(|r| println!("{r}")),
+        Command::Trace { id, out } => {
+            coordinator::trace::run_traced(&id, &cfg, out.as_deref()).map(|run| {
+                println!("{}", run.report);
+                println!("{}", run.summary);
+                println!(
+                    "trace: {} event(s) ({} dropped from the ring), {} incident(s) -> {}",
+                    run.records.len(),
+                    run.dropped,
+                    run.incidents.len(),
+                    run.json_path.display()
+                );
+            })
+        }
         Command::Bench { out_dir, quick } => {
             coordinator::bench::run_bench(&cfg, &out_dir, &coordinator::bench::BenchOpts { quick })
                 .map(|paths| {

@@ -150,8 +150,10 @@ impl BenchReport {
     }
 }
 
-/// JSON string literal with the mandatory escapes.
-fn json_string(s: &str) -> String {
+/// JSON string literal with the mandatory escapes. Public because the
+/// flight recorder's Chrome-trace exporter (`trace::chrome`) reuses this
+/// emitter instead of growing a second hand-rolled JSON writer.
+pub fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -173,8 +175,9 @@ fn json_string(s: &str) -> String {
 
 /// JSON number: finite, shortest round-trip form, never `NaN`. Rust's f64
 /// `Display` never emits scientific notation, so the output is always a
-/// valid JSON number (`42`, `387.5`, `0.000000032`).
-fn json_number(v: f64) -> String {
+/// valid JSON number (`42`, `387.5`, `0.000000032`). Shared with
+/// `trace::chrome` like [`json_string`].
+pub fn json_number(v: f64) -> String {
     if !v.is_finite() {
         return "0".to_string();
     }

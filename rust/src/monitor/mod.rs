@@ -28,6 +28,7 @@ pub use estimator::{BwSample, MsgRecord, WindowEstimator};
 pub use pinpoint::{Pinpointer, Verdict};
 
 use crate::sim::SimTime;
+use crate::trace::{TraceEvent, Tracer};
 use std::collections::HashMap;
 
 /// Per-port monitor bundle: one estimator + one pinpointer per RNIC port,
@@ -42,6 +43,9 @@ pub struct MonitorSet {
     /// Overhead accounting: CPU-ns charged per processed WC (Table 5).
     pub wc_cost_ns: u64,
     pub processed_wcs: u64,
+    /// Flight recorder: non-healthy verdicts become trace events and
+    /// freeze anomaly snapshots (disabled by default).
+    tracer: Tracer,
 }
 
 #[derive(Debug)]
@@ -60,7 +64,13 @@ impl MonitorSet {
             ports: HashMap::new(),
             wc_cost_ns: 150, // ~pair of timestamps + ring push per WC
             processed_wcs: 0,
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Install a flight-recorder handle.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     fn port(&mut self, port: usize) -> &mut PortMonitor {
@@ -85,7 +95,22 @@ impl MonitorSet {
         self.processed_wcs += 1;
         let pm = self.port(port);
         let sample = pm.estimator.push(MsgRecord { posted_at, completed_at, bytes })?;
-        Some(pm.pinpointer.observe(sample.at, sample.gbps, backlog_bytes))
+        let verdict = pm.pinpointer.observe(sample.at, sample.gbps, backlog_bytes);
+        // Non-healthy verdicts are exactly the "why" moments the flight
+        // recorder exists for: record them and freeze the trailing window.
+        if verdict != Verdict::Healthy && self.tracer.enabled() {
+            let label = match verdict {
+                Verdict::NetworkAnomaly => "network-anomaly",
+                Verdict::NonNetwork => "non-network",
+                Verdict::Healthy => unreachable!(),
+            };
+            self.tracer.record_anomaly(
+                sample.at,
+                TraceEvent::MonitorVerdict { port, verdict: label, gbps: sample.gbps },
+                &format!("{label}-port{port}"),
+            );
+        }
+        Some(verdict)
     }
 
     /// All samples a port has produced (for the figure outputs).
@@ -109,5 +134,43 @@ impl MonitorSet {
             .values()
             .map(|p| p.estimator.memory_bytes() + p.pinpointer.memory_bytes())
             .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VcclConfig;
+    use crate::trace::{TraceSink, Tracer};
+
+    #[test]
+    fn non_healthy_verdicts_reach_the_flight_recorder() {
+        let mut mon = MonitorSet::new(&VcclConfig::default());
+        let sink = TraceSink::new(256, 1_000_000_000);
+        mon.set_tracer(Tracer::attached(sink.clone()));
+        let msg = 1u64 << 20;
+        let mut t = 0u64;
+        let mut push = |mon: &mut MonitorSet, gbps: f64, backlog: u64, t: &mut u64| {
+            let dur = (msg as f64 / (gbps * 0.125)) as u64;
+            let v = mon.on_wc(0, SimTime::ns(*t), SimTime::ns(*t + dur), msg, backlog);
+            *t += dur;
+            v
+        };
+        // Steady 390 Gbps with a steady backlog: all-healthy, no records.
+        for _ in 0..100 {
+            push(&mut mon, 390.0, 4 << 20, &mut t);
+        }
+        assert!(sink.is_empty(), "healthy traffic must record nothing");
+        // Bandwidth collapse WITH pile-up: network anomaly → trace events
+        // plus one (throttled) incident snapshot.
+        for _ in 0..40 {
+            push(&mut mon, 100.0, 64 << 20, &mut t);
+        }
+        let recs = sink.records();
+        assert!(!recs.is_empty(), "anomalous verdicts must be recorded");
+        assert!(recs.iter().all(|r| r.ev.kind() == "MonitorVerdict"));
+        let incs = sink.incidents();
+        assert_eq!(incs.len(), 1, "snapshots throttle to one per window");
+        assert!(incs[0].name.contains("network-anomaly"), "{}", incs[0].name);
     }
 }

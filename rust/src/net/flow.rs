@@ -15,6 +15,7 @@ use std::collections::HashMap;
 
 use crate::sim::SimTime;
 use crate::topology::{Fabric, LinkId, LinkKind, Path};
+use crate::trace::{TraceEvent, Tracer};
 
 /// Identifier of an in-flight flow.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -45,6 +46,9 @@ struct Flow {
     /// already folded into the first completion estimate.
     tail_latency_ns: u64,
     tail_charged: bool,
+    /// Set while the flow is stalled by a dead link (drives the
+    /// FlowStalled/FlowResumed trace transitions).
+    was_stalled: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -63,6 +67,8 @@ pub struct FlowNet {
     /// Many-to-one goodput degradation per extra distinct sender on a
     /// receive port (PFC backpressure; see `NetConfig::incast_penalty`).
     incast_penalty: f64,
+    /// Flight recorder (disabled by default; install via `set_tracer`).
+    tracer: Tracer,
 }
 
 impl FlowNet {
@@ -88,7 +94,13 @@ impl FlowNet {
             flows: HashMap::new(),
             next_id: 0,
             incast_penalty,
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Install a flight-recorder handle (flow start/rerate/stall/finish).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     pub fn active_flows(&self) -> usize {
@@ -121,8 +133,10 @@ impl FlowNet {
                 meta,
                 tail_latency_ns,
                 tail_charged: false,
+                was_stalled: false,
             },
         );
+        self.tracer.record(now, TraceEvent::FlowStarted { flow: id.0, bytes });
         let timers = self.reallocate(now);
         (id, timers)
     }
@@ -154,6 +168,7 @@ impl FlowNet {
         }
         let meta = f.meta;
         self.flows.remove(&id);
+        self.tracer.record(now, TraceEvent::FlowFinished { flow: id.0 });
         let timers = self.reallocate(now);
         (Some(meta), timers)
     }
@@ -163,6 +178,7 @@ impl FlowNet {
     pub fn kill(&mut self, id: FlowId, now: SimTime) -> Vec<FlowTimer> {
         self.settle(now);
         if self.flows.remove(&id).is_some() {
+            self.tracer.record(now, TraceEvent::FlowKilled { flow: id.0 });
             self.reallocate(now)
         } else {
             Vec::new()
@@ -241,8 +257,14 @@ impl FlowNet {
             })
             .collect();
 
-        // Max-min water filling.
-        let ids: Vec<FlowId> = self.flows.keys().copied().collect();
+        // Max-min water filling. Ids are SORTED: the allocation itself is
+        // order-independent, but the floating-point residual-capacity
+        // bookkeeping and the order timers (and trace records) are emitted
+        // are not — iterating in HashMap order would leak the per-process
+        // hasher seed into event tie-breaking and break the bit-identical
+        // trace contract (DESIGN.md, "Determinism contract").
+        let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
+        ids.sort_unstable();
         let mut rate: HashMap<FlowId, f64> = HashMap::with_capacity(ids.len());
         let mut frozen: HashMap<FlowId, bool> =
             ids.iter().map(|&i| (i, false)).collect();
@@ -307,13 +329,34 @@ impl FlowNet {
         // skipping the re-emit removes the O(flows) stale-event storm per
         // network change (§Perf L3: this is the simulator's hot path).
         let mut timers = Vec::with_capacity(ids.len());
-        for (&id, f) in self.flows.iter_mut() {
+        for &id in &ids {
+            let f = self.flows.get_mut(&id).expect("ids snapshot is current");
             let r = rate.get(&id).copied().unwrap_or(0.0);
             let unchanged = f.tail_charged
                 && f.rate_bpns > 0.0
                 && (r - f.rate_bpns).abs() <= 1e-3 * f.rate_bpns;
             if unchanged {
                 continue;
+            }
+            let old = f.rate_bpns;
+            // Trace only meaningful transitions: stall (>0 → 0 with bytes
+            // left), resume (stalled → moving), and re-rates beyond 10 % —
+            // the fair-share wobble every start/finish causes would
+            // otherwise dominate the ring.
+            if self.tracer.enabled() {
+                if old > 0.0 && r <= 0.0 && f.remaining > 0.5 {
+                    self.tracer.record(now, TraceEvent::FlowStalled { flow: id.0 });
+                } else if old <= 0.0 && r > 0.0 && f.was_stalled {
+                    self.tracer
+                        .record(now, TraceEvent::FlowResumed { flow: id.0, scope: "flow" });
+                } else if old > 0.0 && r > 0.0 && (r - old).abs() > 0.10 * old {
+                    self.tracer.record(now, TraceEvent::FlowRerated { flow: id.0, gbps: r * 8.0 });
+                }
+            }
+            if r <= 0.0 && old > 0.0 {
+                f.was_stalled = true;
+            } else if r > 0.0 {
+                f.was_stalled = false;
             }
             f.rate_bpns = r;
             f.gen += 1;
@@ -441,6 +484,27 @@ mod tests {
         assert_eq!(done.len(), 1);
         let expect_ns = 1_000_000.0 + (bytes as f64 / 2.0) / (400.0 * 0.125);
         assert!((done[0].0.as_ns() as f64 - expect_ns).abs() < 100.0);
+    }
+
+    #[test]
+    fn tracer_records_stall_and_resume_transitions() {
+        use crate::trace::{TraceSink, Tracer};
+        let f = fabric();
+        let mut net = FlowNet::from_fabric(&f, 1.0, 0.0);
+        let sink = TraceSink::new(1024, 1_000_000_000);
+        net.set_tracer(Tracer::attached(sink.clone()));
+        let path = f.path_inter(port(0, 0), port(1, 0));
+        let (id, _) = net.start(SimTime::ZERO, path, 8 << 20, 0, FlowMeta(1));
+        let tx = f.port_tx(port(0, 0));
+        net.set_link_up(tx, false, SimTime::us(10));
+        net.set_link_up(tx, true, SimTime::ms(1));
+        let kinds: Vec<&str> = sink.records().iter().map(|r| r.ev.kind()).collect();
+        let pos = |k: &str| kinds.iter().position(|x| *x == k);
+        let started = pos("FlowStarted").expect("start recorded");
+        let stalled = pos("FlowStalled").expect("stall recorded");
+        let resumed = pos("FlowResumed").expect("resume recorded");
+        assert!(started < stalled && stalled < resumed, "{kinds:?}");
+        assert_eq!(net.is_stalled(id), Some(false));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use super::flow::{FlowId, FlowMeta, FlowNet, FlowTimer};
 use crate::config::NetConfig;
 use crate::sim::SimTime;
 use crate::topology::{Fabric, Path, PortId};
+use crate::trace::{TraceEvent, Tracer};
 
 /// Queue-pair identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -104,6 +105,9 @@ pub struct Qp {
     pub dst: PortId,
     pub state: QpState,
     path: Path,
+    /// Dense ordinal of `src` (trace labelling; avoids threading the
+    /// fabric through every hot-path call).
+    src_ordinal: usize,
     /// Warm until: WRs posted before this fire at reduced readiness.
     warm_at: SimTime,
     /// Monotonic epoch; bumped whenever retry context changes so stale
@@ -131,12 +135,28 @@ pub struct RdmaNet {
     qps: HashMap<QpId, Qp>,
     next_qp: u64,
     flow_owner: HashMap<FlowId, (QpId, WrId)>,
+    /// Flight recorder (disabled by default; install via `set_tracer`).
+    tracer: Tracer,
 }
 
 impl RdmaNet {
     pub fn new(fabric: &Fabric, cfg: NetConfig) -> Self {
         let flows = FlowNet::from_fabric(fabric, cfg.wire_efficiency, cfg.incast_penalty);
-        RdmaNet { flows, cfg, qps: HashMap::new(), next_qp: 0, flow_owner: HashMap::new() }
+        RdmaNet {
+            flows,
+            cfg,
+            qps: HashMap::new(),
+            next_qp: 0,
+            flow_owner: HashMap::new(),
+            tracer: Tracer::disabled(),
+        }
+    }
+
+    /// Install a flight-recorder handle on this layer AND the fluid-flow
+    /// layer beneath it.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.flows.set_tracer(tracer.clone());
+        self.tracer = tracer;
     }
 
     pub fn cfg(&self) -> &NetConfig {
@@ -150,6 +170,7 @@ impl RdmaNet {
         let id = QpId(self.next_qp);
         self.next_qp += 1;
         let path = fabric.path_inter(src, dst);
+        let src_ordinal = fabric.port_ordinal(src);
         self.qps.insert(
             id,
             Qp {
@@ -158,6 +179,7 @@ impl RdmaNet {
                 dst,
                 state: QpState::Rts,
                 path,
+                src_ordinal,
                 warm_at: SimTime::ZERO,
                 epoch: 0,
                 retrying_since: None,
@@ -216,8 +238,21 @@ impl RdmaNet {
             let qp = self.qps.get_mut(&qp_id).expect("post_send on unknown QP");
             let wr_id = WrId(qp.next_wr_seq);
             qp.next_wr_seq += 1;
+            self.tracer.record(
+                now,
+                TraceEvent::WrPosted { qp: qp_id.0, port: qp.src_ordinal, bytes },
+            );
             if qp.state != QpState::Rts {
                 // Posting to a non-RTS QP flushes immediately.
+                self.tracer.record(
+                    now,
+                    TraceEvent::WrCompleted {
+                        qp: qp_id.0,
+                        port: qp.src_ordinal,
+                        bytes,
+                        status: "flushed",
+                    },
+                );
                 out.wcs.push(WorkCompletion {
                     qp: qp_id,
                     wr: wr_id,
@@ -300,6 +335,15 @@ impl RdmaNet {
         if let Some(qp) = self.qps.get_mut(&qp_id) {
             if let Some(pos) = qp.outstanding.iter().position(|w| w.wr == wr_id) {
                 let w = qp.outstanding.remove(pos);
+                self.tracer.record(
+                    now,
+                    TraceEvent::WrCompleted {
+                        qp: qp_id.0,
+                        port: qp.src_ordinal,
+                        bytes: w.bytes,
+                        status: "success",
+                    },
+                );
                 out.wcs.push(WorkCompletion {
                     qp: qp_id,
                     wr: wr_id,
@@ -341,7 +385,16 @@ impl RdmaNet {
         if qp.retrying_since.is_none() {
             qp.retrying_since = Some(now);
             qp.epoch += 1;
-            out.retry_deadlines.push((qp_id, qp.epoch, now + SimTime::ns(window)));
+            let deadline = now + SimTime::ns(window);
+            self.tracer.record(
+                now,
+                TraceEvent::QpRetryArmed {
+                    qp: qp_id.0,
+                    port: qp.src_ordinal,
+                    deadline_ns: deadline.as_ns(),
+                },
+            );
+            out.retry_deadlines.push((qp_id, qp.epoch, deadline));
         }
         out
     }
@@ -375,20 +428,32 @@ impl RdmaNet {
         qp.state = QpState::Error;
         qp.retrying_since = None;
         qp.epoch += 1;
+        let ordinal = qp.src_ordinal;
+        self.tracer.record(now, TraceEvent::QpError { qp: qp_id.0, port: ordinal });
         let drained: Vec<Wr> = qp.outstanding.drain(..).collect();
         for (i, w) in drained.iter().enumerate() {
             if let Some(f) = w.flow {
                 self.flow_owner.remove(&f);
                 out.timers.extend(self.flows.kill(f, now));
             }
+            let status = if i == 0 {
+                CompletionStatus::RetryExceeded
+            } else {
+                CompletionStatus::WrFlushed
+            };
+            self.tracer.record(
+                now,
+                TraceEvent::WrCompleted {
+                    qp: qp_id.0,
+                    port: ordinal,
+                    bytes: w.bytes,
+                    status: if i == 0 { "retry-exceeded" } else { "flushed" },
+                },
+            );
             out.wcs.push(WorkCompletion {
                 qp: qp_id,
                 wr: w.wr,
-                status: if i == 0 {
-                    CompletionStatus::RetryExceeded
-                } else {
-                    CompletionStatus::WrFlushed
-                },
+                status,
                 bytes: w.bytes,
                 posted_at: w.posted_at,
                 completed_at: now,
@@ -409,6 +474,10 @@ impl RdmaNet {
         qp.retrying_since = None;
         qp.epoch += 1;
         qp.warm_at = now + SimTime::ns(warmup);
+        self.tracer.record(
+            now,
+            TraceEvent::QpReset { qp: qp_id.0, port: qp.src_ordinal, warm_ns: warmup },
+        );
         out.warmups.push((qp_id, qp.warm_at));
         out
     }
@@ -432,7 +501,10 @@ impl RdmaNet {
         let rx = fabric.port_rx(port);
         out.timers.extend(self.flows.set_link_up(tx, up, now));
         out.timers.extend(self.flows.set_link_up(rx, up, now));
-        let qp_ids: Vec<QpId> = self.qps.keys().copied().collect();
+        // Sorted for determinism: retry windows armed here schedule engine
+        // events, and HashMap order would leak into timestamp tie-breaks.
+        let mut qp_ids: Vec<QpId> = self.qps.keys().copied().collect();
+        qp_ids.sort_unstable();
         for qp_id in qp_ids {
             if self.qps[&qp_id].state != QpState::Rts {
                 continue;

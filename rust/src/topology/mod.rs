@@ -27,8 +27,18 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Build with the paper's default rates (400 Gbps NICs, 3600 Gbps
+    /// NVLink). Prefer [`Cluster::with_rates`] when a `Config` is in hand —
+    /// that is what makes `net.link_gbps` / `gpu.nvlink_gbps` take effect.
     pub fn new(cfg: TopologyConfig) -> Self {
         let fabric = Fabric::build(&cfg);
+        Cluster { cfg, fabric }
+    }
+
+    /// Build with explicit line rates: NIC uplinks (and the 1:1 spine
+    /// trunks derived from them) at `link_gbps`, NVLink at `nvlink_gbps`.
+    pub fn with_rates(cfg: TopologyConfig, link_gbps: f64, nvlink_gbps: f64) -> Self {
+        let fabric = Fabric::build_with_rates(&cfg, link_gbps, nvlink_gbps);
         Cluster { cfg, fabric }
     }
 
@@ -119,6 +129,17 @@ mod tests {
         let b = c.backup_port(g);
         assert_eq!(b.nic, c.primary_nic(g)); // same NIC, same hardware distance
         assert_eq!(b.port, 1);
+    }
+
+    #[test]
+    fn with_rates_propagates_to_fabric() {
+        let c = Cluster::with_rates(TopologyConfig::default(), 200.0, 1800.0);
+        assert_eq!(c.fabric.line_rate_gbps(), 200.0);
+        assert_eq!(c.fabric.nvlink_gbps(), 1800.0);
+        let p = c.primary_port(GpuId { node: NodeId(0), local: 0 });
+        assert_eq!(c.fabric.link(c.fabric.port_tx(p)).capacity_gbps, 200.0);
+        // Spine trunks scale with the line rate (1:1 oversubscription).
+        assert_eq!(c.fabric.link(c.fabric.trunk_up(0, 0)).capacity_gbps, 2.0 * 200.0);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! Chrome trace-event JSON exporter (plus a small JSON syntax checker the
+//! tests and CI smoke use to validate the emitted file).
+//!
+//! The output is the ["JSON Object Format"] of the Trace Event spec:
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}`. Load it in
+//! `chrome://tracing` or drop it onto <https://ui.perfetto.dev>. Mapping:
+//!
+//! - **pid** = node (derived from the port ordinal) for port/QP/monitor
+//!   events; pseudo-processes for the port-less layers (`net.flow`,
+//!   `ccl`, `fault`, `sim`).
+//! - **tid** = the lane inside the process: port ordinal, flow id, op id,
+//!   connection id.
+//! - every record is an instant event (`"ph": "i"`, thread-scoped);
+//!   `"ph": "M"` metadata events name the processes.
+//!
+//! Timestamps are simulated microseconds (the spec's unit), so exports are
+//! byte-identical across runs at the same config + seed.
+//!
+//! ["JSON Object Format"]:
+//! https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+//!
+//! The JSON itself reuses the hand-rolled emitter from [`crate::metrics`]
+//! (`json_string` / `json_number`) — no serde in the offline build.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::metrics::{json_number, json_string};
+
+use super::{TraceEvent, TraceRecord};
+
+/// Pseudo-pids for layers that have no node: kept far above any real node
+/// index so they never collide.
+const PID_NET: usize = 9000;
+const PID_CCL: usize = 9001;
+const PID_FAULT: usize = 9002;
+const PID_SIM: usize = 9003;
+
+/// Topology facts the exporter needs to map a port ordinal to its node.
+#[derive(Debug, Clone, Copy)]
+pub struct ChromeMeta {
+    /// NIC ports per node (`nics_per_node × ports_per_nic`).
+    pub ports_per_node: usize,
+}
+
+/// The (pid, tid) lane of one event.
+fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
+    let node_of = |port: usize| port / meta.ports_per_node.max(1);
+    match *ev {
+        TraceEvent::SimStarted { .. } => (PID_SIM, 0),
+        TraceEvent::FlowStarted { flow, .. }
+        | TraceEvent::FlowRerated { flow, .. }
+        | TraceEvent::FlowStalled { flow }
+        | TraceEvent::FlowFinished { flow }
+        | TraceEvent::FlowKilled { flow } => (PID_NET, flow),
+        // A failover resume carries a TRANSFER id, not a net-flow id — it
+        // belongs on the fault process next to the pointer migration, not
+        // on some unrelated flow's lane.
+        TraceEvent::FlowResumed { flow, scope } => {
+            if scope == "xfer" { (PID_FAULT, flow) } else { (PID_NET, flow) }
+        }
+        TraceEvent::WrPosted { port, .. }
+        | TraceEvent::WrCompleted { port, .. }
+        | TraceEvent::QpRetryArmed { port, .. }
+        | TraceEvent::QpError { port, .. }
+        | TraceEvent::QpReset { port, .. }
+        | TraceEvent::PortDown { port }
+        | TraceEvent::PortUp { port }
+        | TraceEvent::MonitorVerdict { port, .. } => (node_of(port), port as u64),
+        TraceEvent::PointerMigrated { conn, .. } | TraceEvent::Failback { conn } => {
+            (PID_FAULT, conn as u64)
+        }
+        TraceEvent::OpSubmitted { op, .. }
+        | TraceEvent::OpFinished { op }
+        | TraceEvent::StepBegin { op, .. }
+        | TraceEvent::StepEnd { op, .. } => (PID_CCL, op as u64),
+    }
+}
+
+/// The `"args"` object for one event.
+fn args_json(ev: &TraceEvent) -> String {
+    match *ev {
+        TraceEvent::SimStarted { nodes, ranks } => {
+            format!("{{\"nodes\": {nodes}, \"ranks\": {ranks}}}")
+        }
+        TraceEvent::FlowStarted { flow, bytes } => {
+            format!("{{\"flow\": {flow}, \"bytes\": {bytes}}}")
+        }
+        TraceEvent::FlowRerated { flow, gbps } => {
+            format!("{{\"flow\": {flow}, \"gbps\": {}}}", json_number(gbps))
+        }
+        TraceEvent::FlowStalled { flow }
+        | TraceEvent::FlowFinished { flow }
+        | TraceEvent::FlowKilled { flow } => format!("{{\"flow\": {flow}}}"),
+        TraceEvent::FlowResumed { flow, scope } => {
+            format!("{{\"flow\": {flow}, \"scope\": {}}}", json_string(scope))
+        }
+        TraceEvent::WrPosted { qp, port, bytes } => {
+            format!("{{\"qp\": {qp}, \"port\": {port}, \"bytes\": {bytes}}}")
+        }
+        TraceEvent::WrCompleted { qp, port, bytes, status } => format!(
+            "{{\"qp\": {qp}, \"port\": {port}, \"bytes\": {bytes}, \"status\": {}}}",
+            json_string(status)
+        ),
+        TraceEvent::QpRetryArmed { qp, port, deadline_ns } => {
+            format!("{{\"qp\": {qp}, \"port\": {port}, \"deadline_ns\": {deadline_ns}}}")
+        }
+        TraceEvent::QpError { qp, port } => format!("{{\"qp\": {qp}, \"port\": {port}}}"),
+        TraceEvent::QpReset { qp, port, warm_ns } => {
+            format!("{{\"qp\": {qp}, \"port\": {port}, \"warm_ns\": {warm_ns}}}")
+        }
+        TraceEvent::PortDown { port } | TraceEvent::PortUp { port } => {
+            format!("{{\"port\": {port}}}")
+        }
+        TraceEvent::PointerMigrated { conn, breakpoint, rolled_back } => format!(
+            "{{\"conn\": {conn}, \"breakpoint\": {breakpoint}, \"rolled_back\": {rolled_back}}}"
+        ),
+        TraceEvent::Failback { conn } => format!("{{\"conn\": {conn}}}"),
+        TraceEvent::OpSubmitted { op, kind, bytes } => {
+            format!("{{\"op\": {op}, \"kind\": {}, \"bytes\": {bytes}}}", json_string(kind))
+        }
+        TraceEvent::OpFinished { op } => format!("{{\"op\": {op}}}"),
+        TraceEvent::StepBegin { op, channel, step } | TraceEvent::StepEnd { op, channel, step } => {
+            format!("{{\"op\": {op}, \"channel\": {channel}, \"step\": {step}}}")
+        }
+        TraceEvent::MonitorVerdict { port, verdict, gbps } => format!(
+            "{{\"port\": {port}, \"verdict\": {}, \"gbps\": {}}}",
+            json_string(verdict),
+            json_number(gbps)
+        ),
+    }
+}
+
+fn process_name(pid: usize) -> String {
+    match pid {
+        PID_NET => "net.flow".to_string(),
+        PID_CCL => "ccl".to_string(),
+        PID_FAULT => "fault".to_string(),
+        PID_SIM => "sim".to_string(),
+        n => format!("node{n}"),
+    }
+}
+
+/// Serialize records into Chrome trace-event JSON. Deterministic: records
+/// keep ring order, metadata is sorted by pid.
+pub fn export(records: &[TraceRecord], meta: &ChromeMeta) -> String {
+    // Name every process that appears.
+    let mut pids: BTreeMap<usize, String> = BTreeMap::new();
+    for r in records {
+        let (pid, _) = lane(&r.ev, meta);
+        pids.entry(pid).or_insert_with(|| process_name(pid));
+    }
+
+    let mut out = String::with_capacity(64 + records.len() * 128);
+    out.push_str("{\n  \"displayTimeUnit\": \"ms\",\n  \"traceEvents\": [\n");
+    let mut first = true;
+    let mut push_ev = |out: &mut String, line: &str| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str("    ");
+        out.push_str(line);
+    };
+    for (pid, name) in &pids {
+        push_ev(
+            &mut out,
+            &format!(
+                "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \
+                 \"args\": {{\"name\": {}}}}}",
+                json_string(name)
+            ),
+        );
+    }
+    for r in records {
+        let (pid, tid) = lane(&r.ev, meta);
+        let mut line = String::with_capacity(128);
+        let _ = write!(
+            line,
+            "{{\"name\": {}, \"cat\": {}, \"ph\": \"i\", \"s\": \"t\", \"ts\": {}, \
+             \"pid\": {pid}, \"tid\": {tid}, \"args\": {}}}",
+            json_string(r.ev.kind()),
+            json_string(r.ev.layer()),
+            json_number(r.at.as_ns() as f64 / 1e3),
+            args_json(&r.ev),
+        );
+        push_ev(&mut out, &line);
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON syntax checker (no serde offline). Validates the full JSON
+// grammar; used by tests and the CI trace smoke to prove the export parses.
+// ---------------------------------------------------------------------
+
+/// Validate that `s` is one well-formed JSON value. Returns the byte offset
+/// and a message on the first error.
+pub fn json_lint(s: &str) -> Result<(), String> {
+    let mut p = Lint { b: s.as_bytes(), i: 0, depth: 0 };
+    p.ws();
+    p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(())
+}
+
+struct Lint<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl Lint<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > 512 {
+            return Err(format!("nesting too deep at byte {}", self.i));
+        }
+        let r = match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.literal("true"),
+            Some(b'f') => self.literal("false"),
+            Some(b'n') => self.literal("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("expected a JSON value at byte {}", self.i)),
+        };
+        self.depth -= 1;
+        r
+    }
+
+    fn object(&mut self) -> Result<(), String> {
+        self.expect(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.expect(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<(), String> {
+        self.expect(b'"')?;
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                        b'u' => {
+                            for _ in 0..4 {
+                                let h = self.peek().ok_or("truncated \\u escape")?;
+                                if !h.is_ascii_hexdigit() {
+                                    return Err(format!("bad \\u escape at byte {}", self.i));
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                }
+                0x00..=0x1f => {
+                    return Err(format!("raw control character in string at byte {}", self.i - 1))
+                }
+                _ => {}
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let digits = |p: &mut Self| -> Result<(), String> {
+            let start = p.i;
+            while p.peek().is_some_and(|c| c.is_ascii_digit()) {
+                p.i += 1;
+            }
+            if p.i == start {
+                Err(format!("expected digits at byte {}", p.i))
+            } else {
+                Ok(())
+            }
+        };
+        digits(self)?;
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            digits(self)?;
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            digits(self)?;
+        }
+        Ok(())
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn meta() -> ChromeMeta {
+        ChromeMeta { ports_per_node: 8 }
+    }
+
+    fn rec(at_ns: u64, seq: u64, ev: TraceEvent) -> TraceRecord {
+        TraceRecord { at: SimTime::ns(at_ns), seq, ev }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_lanes() {
+        let records = vec![
+            rec(0, 0, TraceEvent::SimStarted { nodes: 2, ranks: 16 }),
+            rec(100, 1, TraceEvent::WrPosted { qp: 0, port: 9, bytes: 1 << 20 }),
+            rec(4_000_000, 2, TraceEvent::PortDown { port: 0 }),
+            rec(4_000_100, 3, TraceEvent::FlowStalled { flow: 7 }),
+            rec(5_000_000, 4, TraceEvent::PointerMigrated { conn: 0, breakpoint: 3, rolled_back: 2 }),
+            rec(5_000_500, 5, TraceEvent::MonitorVerdict { port: 9, verdict: "network-anomaly", gbps: 20.5 }),
+        ];
+        let json = export(&records, &meta());
+        json_lint(&json).unwrap();
+        // Port 9 lives on node 1 (8 ports per node).
+        assert!(json.contains("\"name\": \"WrPosted\""));
+        assert!(json.contains("\"pid\": 1, \"tid\": 9"));
+        // Pseudo-processes get metadata names.
+        assert!(json.contains("\"name\": \"net.flow\""));
+        assert!(json.contains("\"name\": \"fault\""));
+        // Timestamps are microseconds.
+        assert!(json.contains("\"ts\": 4000"));
+    }
+
+    #[test]
+    fn empty_export_is_valid() {
+        let json = export(&[], &meta());
+        json_lint(&json).unwrap();
+        assert!(json.contains("\"traceEvents\": ["));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let records = vec![
+            rec(1, 0, TraceEvent::FlowStarted { flow: 0, bytes: 123 }),
+            rec(2, 1, TraceEvent::FlowRerated { flow: 0, gbps: 387.5 }),
+            rec(3, 2, TraceEvent::FlowFinished { flow: 0 }),
+        ];
+        assert_eq!(export(&records, &meta()), export(&records, &meta()));
+    }
+
+    #[test]
+    fn json_lint_accepts_and_rejects() {
+        for good in [
+            "null",
+            "-12.5e-3",
+            "[1, 2, 3]",
+            "{\"a\": [true, false, {\"b\": \"c\\n\"}]}",
+            "  {\"u\": \"\\u00e9\"}  ",
+            "[]",
+            "{}",
+        ] {
+            json_lint(good).unwrap_or_else(|e| panic!("{good:?}: {e}"));
+        }
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\": }",
+            "{\"a\": 1,}",
+            "nul",
+            "\"unterminated",
+            "[1] extra",
+            "{'single': 1}",
+            "1.",
+            "\"bad \\x escape\"",
+        ] {
+            assert!(json_lint(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn all_event_args_are_valid_json() {
+        let events = [
+            TraceEvent::SimStarted { nodes: 1, ranks: 8 },
+            TraceEvent::FlowStarted { flow: 1, bytes: 2 },
+            TraceEvent::FlowRerated { flow: 1, gbps: 1.5 },
+            TraceEvent::FlowStalled { flow: 1 },
+            TraceEvent::FlowResumed { flow: 1, scope: "flow" },
+            TraceEvent::FlowResumed { flow: 1, scope: "xfer" },
+            TraceEvent::FlowFinished { flow: 1 },
+            TraceEvent::FlowKilled { flow: 1 },
+            TraceEvent::WrPosted { qp: 1, port: 2, bytes: 3 },
+            TraceEvent::WrCompleted { qp: 1, port: 2, bytes: 3, status: "success" },
+            TraceEvent::QpRetryArmed { qp: 1, port: 2, deadline_ns: 3 },
+            TraceEvent::QpError { qp: 1, port: 2 },
+            TraceEvent::QpReset { qp: 1, port: 2, warm_ns: 3 },
+            TraceEvent::PortDown { port: 1 },
+            TraceEvent::PortUp { port: 1 },
+            TraceEvent::PointerMigrated { conn: 1, breakpoint: 2, rolled_back: 3 },
+            TraceEvent::Failback { conn: 1 },
+            TraceEvent::OpSubmitted { op: 1, kind: "AllReduce", bytes: 2 },
+            TraceEvent::OpFinished { op: 1 },
+            TraceEvent::StepBegin { op: 1, channel: 2, step: 3 },
+            TraceEvent::StepEnd { op: 1, channel: 2, step: 3 },
+            TraceEvent::MonitorVerdict { port: 1, verdict: "non-network", gbps: 0.5 },
+        ];
+        for ev in events {
+            json_lint(&args_json(&ev)).unwrap_or_else(|e| panic!("{}: {e}", ev.kind()));
+        }
+    }
+}

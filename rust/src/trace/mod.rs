@@ -1,0 +1,491 @@
+//! Flight recorder: an always-on, bounded, cross-layer trace subsystem.
+//!
+//! The paper's observability pillar (§3.4) stops at per-connection bandwidth
+//! windows; diagnosing a real anomaly needs the *order* of events across
+//! layers — which WR stalled, which flow was re-rated, which pointer
+//! migrated. This module records exactly that:
+//!
+//! - a global, **bounded ring buffer** of typed [`TraceEvent`]s, recorded
+//!   behind a zero-cost-when-disabled [`Tracer`] handle that is threaded
+//!   through `net::{flow,rdma}`, `fault`, `monitor` and `ccl::cluster`;
+//! - **anomaly snapshots**: when the pinpointer flags a non-healthy verdict
+//!   (or a failover migrates pointers) the recorder freezes the trailing
+//!   window of events into a named [`Incident`], so the cause survives ring
+//!   eviction even on long runs;
+//! - two exporters — Chrome trace-event JSON ([`chrome`], loadable in
+//!   `chrome://tracing` / [Perfetto](https://ui.perfetto.dev)) and a
+//!   fixed-width incident timeline ([`timeline`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when disabled.** A disabled `Tracer` holds no sink — no
+//!    ring is allocated, every `record` call is one branch on an `Option`.
+//!    Simulation behaviour is *never* affected either way: the recorder
+//!    observes, it does not schedule.
+//! 2. **Bounded.** The ring holds at most `trace.ring_capacity` records;
+//!    older records are dropped (and counted). Incidents are capped at
+//!    [`MAX_INCIDENTS`] and throttled to one per snapshot window.
+//! 3. **Deterministic.** Records carry simulated time only; same config +
+//!    seed ⇒ byte-identical exports (the tie-break sorting in
+//!    `net::flow::FlowNet::reallocate` exists for this).
+
+pub mod chrome;
+pub mod timeline;
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::SimTime;
+
+/// Hard cap on frozen incidents per recorder (bounded-memory guarantee).
+pub const MAX_INCIDENTS: usize = 16;
+
+/// One typed cross-layer event. Variants carry plain ids (flow, QP, port
+/// ordinal, connection, op) so records stay `Copy` and the ring stays flat.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// A `ClusterSim` attached to this recorder (marks timeline epochs when
+    /// one `vccl trace` run drives several back-to-back simulations).
+    SimStarted { nodes: usize, ranks: usize },
+    /// A fluid flow entered the network (`net::flow`).
+    FlowStarted { flow: u64, bytes: u64 },
+    /// Max-min re-rate changed a flow's bandwidth by more than 10 %.
+    FlowRerated { flow: u64, gbps: f64 },
+    /// A flow's path lost a link: rate dropped to zero with bytes left.
+    FlowStalled { flow: u64 },
+    /// A stalled data stream is moving again. `scope` names the id
+    /// namespace of `flow`: `"flow"` — a net-layer flow whose link came
+    /// back within the retry window (`flow` = flow id); `"xfer"` — a
+    /// transfer whose rolled-back window was re-posted on the backup QP
+    /// after failover (`flow` = transfer id).
+    FlowResumed { flow: u64, scope: &'static str },
+    /// A flow drained its last byte.
+    FlowFinished { flow: u64 },
+    /// A flow was killed (failover flushes the primary QP's flows).
+    FlowKilled { flow: u64 },
+    /// The proxy posted a send WR on a QP (`net::rdma`).
+    WrPosted { qp: u64, port: usize, bytes: u64 },
+    /// A WC was delivered: `status` ∈ success / retry-exceeded / flushed.
+    WrCompleted { qp: u64, port: usize, bytes: u64, status: &'static str },
+    /// A stalled QP armed the hardware retransmission window.
+    QpRetryArmed { qp: u64, port: usize, deadline_ns: u64 },
+    /// The retransmission window expired: the QP entered the error state.
+    QpError { qp: u64, port: usize },
+    /// RESET→RTS begun (VCCL's proactive reset); warm after `warm_ns`.
+    QpReset { qp: u64, port: usize, warm_ns: u64 },
+    /// Fault injection / perception: a NIC port went down or came back.
+    PortDown { port: usize },
+    PortUp { port: usize },
+    /// §3.3 failover migrated both sides' pointers to the breakpoint.
+    PointerMigrated { conn: usize, breakpoint: u64, rolled_back: u64 },
+    /// Traffic returned to the (healed, warm) primary QP.
+    Failback { conn: usize },
+    /// A collective was submitted / finished (`ccl::collectives`).
+    OpSubmitted { op: usize, kind: &'static str, bytes: u64 },
+    OpFinished { op: usize },
+    /// A per-channel ring step began / completed.
+    StepBegin { op: usize, channel: usize, step: usize },
+    StepEnd { op: usize, channel: usize, step: usize },
+    /// The pinpointer classified a windowed sample as non-healthy
+    /// (`verdict` ∈ network-anomaly / non-network).
+    MonitorVerdict { port: usize, verdict: &'static str, gbps: f64 },
+}
+
+impl TraceEvent {
+    /// Stable event-kind name (used as the Chrome event name and in the
+    /// timeline's event column).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::SimStarted { .. } => "SimStarted",
+            TraceEvent::FlowStarted { .. } => "FlowStarted",
+            TraceEvent::FlowRerated { .. } => "FlowRerated",
+            TraceEvent::FlowStalled { .. } => "FlowStalled",
+            TraceEvent::FlowResumed { .. } => "FlowResumed",
+            TraceEvent::FlowFinished { .. } => "FlowFinished",
+            TraceEvent::FlowKilled { .. } => "FlowKilled",
+            TraceEvent::WrPosted { .. } => "WrPosted",
+            TraceEvent::WrCompleted { .. } => "WrCompleted",
+            TraceEvent::QpRetryArmed { .. } => "QpRetryArmed",
+            TraceEvent::QpError { .. } => "QpError",
+            TraceEvent::QpReset { .. } => "QpReset",
+            TraceEvent::PortDown { .. } => "PortDown",
+            TraceEvent::PortUp { .. } => "PortUp",
+            TraceEvent::PointerMigrated { .. } => "PointerMigrated",
+            TraceEvent::Failback { .. } => "Failback",
+            TraceEvent::OpSubmitted { .. } => "OpSubmitted",
+            TraceEvent::OpFinished { .. } => "OpFinished",
+            TraceEvent::StepBegin { .. } => "StepBegin",
+            TraceEvent::StepEnd { .. } => "StepEnd",
+            TraceEvent::MonitorVerdict { .. } => "MonitorVerdict",
+        }
+    }
+
+    /// The layer the event was recorded from (timeline's layer column).
+    pub fn layer(&self) -> &'static str {
+        match self {
+            TraceEvent::SimStarted { .. } => "sim",
+            TraceEvent::FlowStarted { .. }
+            | TraceEvent::FlowRerated { .. }
+            | TraceEvent::FlowStalled { .. }
+            | TraceEvent::FlowResumed { .. }
+            | TraceEvent::FlowFinished { .. }
+            | TraceEvent::FlowKilled { .. } => "net.flow",
+            TraceEvent::WrPosted { .. }
+            | TraceEvent::WrCompleted { .. }
+            | TraceEvent::QpRetryArmed { .. }
+            | TraceEvent::QpError { .. }
+            | TraceEvent::QpReset { .. } => "net.rdma",
+            TraceEvent::PortDown { .. } | TraceEvent::PortUp { .. } => "fabric",
+            TraceEvent::PointerMigrated { .. } | TraceEvent::Failback { .. } => "fault",
+            TraceEvent::OpSubmitted { .. }
+            | TraceEvent::OpFinished { .. }
+            | TraceEvent::StepBegin { .. }
+            | TraceEvent::StepEnd { .. } => "ccl",
+            TraceEvent::MonitorVerdict { .. } => "monitor",
+        }
+    }
+
+    /// Is this one of the causal-chain kinds the incident timeline keeps?
+    pub fn is_key_event(&self) -> bool {
+        matches!(
+            self,
+            TraceEvent::SimStarted { .. }
+                | TraceEvent::FlowStalled { .. }
+                | TraceEvent::FlowResumed { .. }
+                | TraceEvent::QpRetryArmed { .. }
+                | TraceEvent::QpError { .. }
+                | TraceEvent::QpReset { .. }
+                | TraceEvent::PortDown { .. }
+                | TraceEvent::PortUp { .. }
+                | TraceEvent::PointerMigrated { .. }
+                | TraceEvent::Failback { .. }
+                | TraceEvent::MonitorVerdict { .. }
+        )
+    }
+}
+
+/// One ring entry: simulated timestamp + monotone sequence + payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub at: SimTime,
+    pub seq: u64,
+    pub ev: TraceEvent,
+}
+
+/// A frozen snapshot of the trailing event window, named after the anomaly
+/// that triggered it.
+#[derive(Debug, Clone)]
+pub struct Incident {
+    pub name: String,
+    /// When the anomaly was flagged.
+    pub at: SimTime,
+    /// The trailing `trace.snapshot_window_ns` of ring records at that time.
+    pub events: Vec<TraceRecord>,
+}
+
+/// The recorder state behind a sink: bounded ring + incidents.
+#[derive(Debug)]
+struct Recorder {
+    capacity: usize,
+    snapshot_window_ns: u64,
+    ring: VecDeque<TraceRecord>,
+    seq: u64,
+    dropped: u64,
+    incidents: Vec<Incident>,
+    /// Simulation epoch: bumped on every `SimStarted` record. One `vccl
+    /// trace` run can drive several back-to-back simulations into the same
+    /// sink, and each restarts its clock at 0 — so both the freeze
+    /// throttle and the trailing-window cutoff must never compare
+    /// timestamps across epochs.
+    epoch: u64,
+    /// Sequence number of the current epoch's first record.
+    epoch_start_seq: u64,
+    /// (epoch, time) of the last frozen incident.
+    last_freeze: Option<(u64, SimTime)>,
+}
+
+impl Recorder {
+    fn new(capacity: usize, snapshot_window_ns: u64) -> Self {
+        Recorder {
+            capacity: capacity.max(1),
+            snapshot_window_ns,
+            // Grows on demand up to `capacity` — an idle enabled recorder
+            // costs (almost) nothing until events arrive.
+            ring: VecDeque::new(),
+            seq: 0,
+            dropped: 0,
+            incidents: Vec::new(),
+            epoch: 0,
+            epoch_start_seq: 0,
+            last_freeze: None,
+        }
+    }
+
+    fn record(&mut self, at: SimTime, ev: TraceEvent) {
+        if matches!(ev, TraceEvent::SimStarted { .. }) {
+            self.epoch += 1;
+            self.epoch_start_seq = self.seq;
+        }
+        if self.ring.len() >= self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(TraceRecord { at, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    /// Freeze the trailing window into a named incident. Throttled: at most
+    /// one incident per snapshot window within one simulation epoch (an
+    /// anomaly usually flags many consecutive samples), at most
+    /// [`MAX_INCIDENTS`] total. The window never reaches across a
+    /// `SimStarted` boundary into an earlier simulation's events.
+    fn freeze(&mut self, at: SimTime, name: &str) {
+        if self.incidents.len() >= MAX_INCIDENTS {
+            return;
+        }
+        if let Some((epoch, last)) = self.last_freeze {
+            if epoch == self.epoch && at.since(last).as_ns() < self.snapshot_window_ns {
+                return;
+            }
+        }
+        self.last_freeze = Some((self.epoch, at));
+        let cutoff = at.as_ns().saturating_sub(self.snapshot_window_ns);
+        let events: Vec<TraceRecord> = self
+            .ring
+            .iter()
+            .filter(|r| r.seq >= self.epoch_start_seq && r.at.as_ns() >= cutoff)
+            .copied()
+            .collect();
+        self.incidents.push(Incident { name: name.to_string(), at, events });
+    }
+}
+
+/// Shared handle to one recorder. Cloning shares the ring — this is how one
+/// `vccl trace` invocation collects events from every simulation the
+/// experiment builds. Uses `Arc<Mutex<_>>` so `Config` stays `Send`; the
+/// simulator is single-threaded, so the lock is never contended.
+#[derive(Clone)]
+pub struct TraceSink(Arc<Mutex<Recorder>>);
+
+impl TraceSink {
+    pub fn new(ring_capacity: usize, snapshot_window_ns: u64) -> Self {
+        TraceSink(Arc::new(Mutex::new(Recorder::new(ring_capacity, snapshot_window_ns))))
+    }
+
+    /// Snapshot of the ring contents, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.0.lock().unwrap().ring.iter().copied().collect()
+    }
+
+    pub fn incidents(&self) -> Vec<Incident> {
+        self.0.lock().unwrap().incidents.clone()
+    }
+
+    /// Records evicted from the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.0.lock().unwrap().dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let r = self.0.lock().unwrap();
+        write!(
+            f,
+            "TraceSink {{ events: {}, dropped: {}, incidents: {} }}",
+            r.ring.len(),
+            r.dropped,
+            r.incidents.len()
+        )
+    }
+}
+
+/// The handle threaded through the stack. Disabled = no sink = no ring
+/// allocation; every record call is a single `Option` branch.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    sink: Option<TraceSink>,
+}
+
+impl Tracer {
+    /// The no-op tracer (the default everywhere tracing is off).
+    pub fn disabled() -> Self {
+        Tracer { sink: None }
+    }
+
+    /// A tracer recording into `sink`.
+    pub fn attached(sink: TraceSink) -> Self {
+        Tracer { sink: Some(sink) }
+    }
+
+    /// Resolve from config: an installed shared sink wins (the `vccl trace`
+    /// path), else a fresh private recorder when `trace.enabled`, else off.
+    pub fn from_config(cfg: &crate::config::TraceConfig) -> Self {
+        if let Some(sink) = &cfg.sink {
+            Tracer::attached(sink.clone())
+        } else if cfg.enabled {
+            Tracer::attached(TraceSink::new(cfg.ring_capacity, cfg.snapshot_window_ns))
+        } else {
+            Tracer::disabled()
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn sink(&self) -> Option<&TraceSink> {
+        self.sink.as_ref()
+    }
+
+    /// Record one event at simulated time `at`.
+    #[inline]
+    pub fn record(&self, at: SimTime, ev: TraceEvent) {
+        if let Some(sink) = &self.sink {
+            sink.0.lock().unwrap().record(at, ev);
+        }
+    }
+
+    /// Record an anomaly event AND freeze the trailing window into a named
+    /// incident (throttled: at most one incident per snapshot window, at
+    /// most [`MAX_INCIDENTS`] total). Callers building the name with
+    /// `format!` should gate on [`Tracer::enabled`] first.
+    pub fn record_anomaly(&self, at: SimTime, ev: TraceEvent, name: &str) {
+        if let Some(sink) = &self.sink {
+            let mut r = sink.0.lock().unwrap();
+            r.record(at, ev);
+            r.freeze(at, name);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_holds_no_sink() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        assert!(t.sink().is_none());
+        // Recording through a disabled tracer is a no-op (and must not
+        // panic or allocate a ring).
+        t.record(SimTime::ns(1), TraceEvent::PortDown { port: 0 });
+        t.record_anomaly(SimTime::ns(2), TraceEvent::PortUp { port: 0 }, "x");
+        assert!(t.sink().is_none());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let sink = TraceSink::new(4, 1_000);
+        let t = Tracer::attached(sink.clone());
+        for i in 0..10u64 {
+            t.record(SimTime::ns(i), TraceEvent::FlowStarted { flow: i, bytes: 1 });
+        }
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped(), 6);
+        let recs = sink.records();
+        // Oldest evicted: the survivors are the last four, seq monotone.
+        assert_eq!(recs.len(), 4);
+        assert!(recs.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(recs[0].seq, 6);
+        assert_eq!(recs[3].seq, 9);
+    }
+
+    #[test]
+    fn incident_freezes_trailing_window_only() {
+        let sink = TraceSink::new(1024, 100); // 100ns snapshot window
+        let t = Tracer::attached(sink.clone());
+        t.record(SimTime::ns(10), TraceEvent::PortDown { port: 3 });
+        t.record(SimTime::ns(500), TraceEvent::FlowStalled { flow: 1 });
+        t.record_anomaly(
+            SimTime::ns(550),
+            TraceEvent::MonitorVerdict { port: 3, verdict: "network-anomaly", gbps: 12.0 },
+            "verdict-port3",
+        );
+        let incs = sink.incidents();
+        assert_eq!(incs.len(), 1);
+        assert_eq!(incs[0].name, "verdict-port3");
+        // The 10ns PortDown is outside the 100ns trailing window.
+        assert_eq!(incs[0].events.len(), 2);
+        assert!(incs[0].events.iter().all(|r| r.at.as_ns() >= 450));
+    }
+
+    #[test]
+    fn incidents_throttled_and_capped() {
+        let sink = TraceSink::new(64, 1_000);
+        let t = Tracer::attached(sink.clone());
+        // Two anomalies inside one window → one incident.
+        t.record_anomaly(SimTime::ns(100), TraceEvent::PortDown { port: 0 }, "a");
+        t.record_anomaly(SimTime::ns(200), TraceEvent::PortDown { port: 0 }, "b");
+        assert_eq!(sink.incidents().len(), 1);
+        // Far-apart anomalies accumulate, but never beyond MAX_INCIDENTS.
+        for i in 0..(MAX_INCIDENTS as u64 + 8) {
+            t.record_anomaly(
+                SimTime::ns(10_000 + i * 10_000),
+                TraceEvent::PortDown { port: 0 },
+                "more",
+            );
+        }
+        assert_eq!(sink.incidents().len(), MAX_INCIDENTS);
+    }
+
+    #[test]
+    fn sim_epochs_isolate_throttle_and_window() {
+        let sink = TraceSink::new(1024, 1_000_000);
+        let t = Tracer::attached(sink.clone());
+        // Sim 1: anomaly late in its timeline.
+        t.record(SimTime::ZERO, TraceEvent::SimStarted { nodes: 1, ranks: 8 });
+        t.record(SimTime::ms(11), TraceEvent::PortDown { port: 0 });
+        t.record_anomaly(SimTime::ms(11), TraceEvent::QpError { qp: 0, port: 0 }, "sim1");
+        assert_eq!(sink.incidents().len(), 1);
+        // Sim 2 restarts the clock at 0: its anomaly must NOT be throttled
+        // by sim 1's (clock went backwards), and its snapshot must not
+        // reach back into sim 1's events.
+        t.record(SimTime::ZERO, TraceEvent::SimStarted { nodes: 1, ranks: 8 });
+        t.record(SimTime::us(10), TraceEvent::PortDown { port: 3 });
+        t.record_anomaly(SimTime::us(20), TraceEvent::QpError { qp: 1, port: 3 }, "sim2");
+        let incs = sink.incidents();
+        assert_eq!(incs.len(), 2, "sim 2's incident must not be throttled away");
+        assert_eq!(incs[1].name, "sim2");
+        assert!(
+            incs[1].events.iter().all(|r| !matches!(r.ev, TraceEvent::QpError { qp: 0, .. })),
+            "sim 2's snapshot must not contain sim 1's events"
+        );
+        assert!(incs[1].events.iter().any(|r| matches!(r.ev, TraceEvent::PortDown { port: 3 })));
+    }
+
+    #[test]
+    fn clones_share_one_ring() {
+        let sink = TraceSink::new(16, 1_000);
+        let a = Tracer::attached(sink.clone());
+        let b = a.clone();
+        a.record(SimTime::ns(1), TraceEvent::PortDown { port: 0 });
+        b.record(SimTime::ns(2), TraceEvent::PortUp { port: 0 });
+        assert_eq!(sink.len(), 2);
+        let recs = sink.records();
+        assert_eq!(recs[0].ev.kind(), "PortDown");
+        assert_eq!(recs[1].ev.kind(), "PortUp");
+    }
+
+    #[test]
+    fn kinds_and_layers_are_stable() {
+        let ev = TraceEvent::PointerMigrated { conn: 1, breakpoint: 5, rolled_back: 3 };
+        assert_eq!(ev.kind(), "PointerMigrated");
+        assert_eq!(ev.layer(), "fault");
+        assert!(ev.is_key_event());
+        let ev = TraceEvent::WrPosted { qp: 0, port: 0, bytes: 1 };
+        assert_eq!(ev.layer(), "net.rdma");
+        assert!(!ev.is_key_event());
+    }
+}

@@ -1,0 +1,177 @@
+//! Fixed-width incident timeline: the human-readable exporter.
+//!
+//! Where the Chrome export is for interactive digging, this one answers the
+//! on-call question — *what happened, in what order?* — in plain text. It
+//! keeps only the causal-chain event kinds ([`TraceEvent::is_key_event`]):
+//! port flaps, stalls/resumes, retry windows, pointer migrations, failbacks
+//! and monitor verdicts, one fixed-width row each.
+
+use std::fmt::Write as _;
+
+use crate::metrics::Table;
+
+use super::{Incident, TraceEvent, TraceRecord};
+
+/// One-line human description of an event's payload.
+pub fn describe(ev: &TraceEvent) -> String {
+    match *ev {
+        TraceEvent::SimStarted { nodes, ranks } => format!("{nodes} nodes / {ranks} ranks"),
+        TraceEvent::FlowStarted { flow, bytes } => format!("flow {flow}: {bytes} B"),
+        TraceEvent::FlowRerated { flow, gbps } => format!("flow {flow} -> {gbps:.1} Gbps"),
+        TraceEvent::FlowStalled { flow } => format!("flow {flow} rate -> 0"),
+        TraceEvent::FlowResumed { flow, scope } => {
+            if scope == "xfer" {
+                format!("xfer {flow} resumed on the backup QP")
+            } else {
+                format!("flow {flow} moving again")
+            }
+        }
+        TraceEvent::FlowFinished { flow } => format!("flow {flow} drained"),
+        TraceEvent::FlowKilled { flow } => format!("flow {flow} aborted"),
+        TraceEvent::WrPosted { qp, bytes, .. } => format!("qp {qp}: {bytes} B"),
+        TraceEvent::WrCompleted { qp, status, .. } => format!("qp {qp}: {status}"),
+        TraceEvent::QpRetryArmed { qp, deadline_ns, .. } => {
+            format!("qp {qp}: hw retransmission until {:.3} s", deadline_ns as f64 / 1e9)
+        }
+        TraceEvent::QpError { qp, .. } => format!("qp {qp}: retry window exhausted"),
+        TraceEvent::QpReset { qp, warm_ns, .. } => {
+            format!("qp {qp}: proactive RESET->RTS, warm in {:.2} s", warm_ns as f64 / 1e9)
+        }
+        TraceEvent::PortDown { port } => format!("port {port} down"),
+        TraceEvent::PortUp { port } => format!("port {port} up"),
+        TraceEvent::PointerMigrated { conn, breakpoint, rolled_back } => format!(
+            "conn {conn}: breakpoint chunk {breakpoint}, {rolled_back} in-flight rolled back"
+        ),
+        TraceEvent::Failback { conn } => format!("conn {conn}: traffic back on primary"),
+        TraceEvent::OpSubmitted { op, kind, bytes } => format!("op {op}: {kind} {bytes} B"),
+        TraceEvent::OpFinished { op } => format!("op {op} complete"),
+        TraceEvent::StepBegin { op, channel, step } => {
+            format!("op {op} ch {channel} step {step}")
+        }
+        TraceEvent::StepEnd { op, channel, step } => format!("op {op} ch {channel} step {step}"),
+        TraceEvent::MonitorVerdict { port, verdict, gbps } => {
+            format!("port {port}: {verdict} at {gbps:.1} Gbps")
+        }
+    }
+}
+
+fn event_table(records: impl Iterator<Item = TraceRecord>) -> (Table, usize) {
+    let mut t = Table::new(vec!["t (ms)", "layer", "event", "detail"]);
+    let mut rows = 0;
+    for r in records {
+        t.row(vec![
+            format!("{:.3}", r.at.as_ms_f64()),
+            r.ev.layer().to_string(),
+            r.ev.kind().to_string(),
+            describe(&r.ev),
+        ]);
+        rows += 1;
+    }
+    (t, rows)
+}
+
+/// Timeline of the key (causal-chain) events in `records`, ring order.
+pub fn key_event_timeline(records: &[TraceRecord]) -> String {
+    let (t, rows) = event_table(records.iter().filter(|r| r.ev.is_key_event()).copied());
+    if rows == 0 {
+        return "timeline: no key events recorded (healthy run)\n".to_string();
+    }
+    let mut out = format!("timeline — {rows} key event(s):\n\n");
+    out.push_str(&t.render());
+    out
+}
+
+/// Rendering cap for one incident: a failover snapshot can hold thousands
+/// of per-chunk events; the table shows the key events plus the LAST
+/// `MAX_INCIDENT_ROWS` raw events leading into the anomaly. The full
+/// window is always in the frozen [`Incident`] (and the Chrome export).
+pub const MAX_INCIDENT_ROWS: usize = 40;
+
+/// Render one frozen incident: header, its key events, and the tail of
+/// the raw trailing window (capped at [`MAX_INCIDENT_ROWS`]).
+pub fn incident_table(inc: &Incident) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "incident {:?} at {:.3} ms — {} event(s) in the trailing window:\n",
+        inc.name,
+        inc.at.as_ms_f64(),
+        inc.events.len()
+    );
+    let key: Vec<TraceRecord> =
+        inc.events.iter().filter(|r| r.ev.is_key_event()).copied().collect();
+    let tail_from = inc.events.len().saturating_sub(MAX_INCIDENT_ROWS);
+    // Key events first (the causal chain), then the raw tail; dedup by seq
+    // so a key event inside the tail is not printed twice.
+    let mut rows: Vec<TraceRecord> = key;
+    for r in &inc.events[tail_from..] {
+        if !rows.iter().any(|k| k.seq == r.seq) {
+            rows.push(*r);
+        }
+    }
+    rows.sort_by_key(|r| r.seq);
+    if tail_from > 0 {
+        let _ = writeln!(
+            out,
+            "(showing key events + the last {} of {}; the full window is in the trace JSON)\n",
+            inc.events.len() - tail_from,
+            inc.events.len()
+        );
+    }
+    let (t, _) = event_table(rows.into_iter());
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn rec(ns: u64, seq: u64, ev: TraceEvent) -> TraceRecord {
+        TraceRecord { at: SimTime::ns(ns), seq, ev }
+    }
+
+    #[test]
+    fn timeline_keeps_only_key_events() {
+        let records = vec![
+            rec(1_000_000, 0, TraceEvent::WrPosted { qp: 0, port: 0, bytes: 1 }),
+            rec(4_000_000, 1, TraceEvent::PortDown { port: 0 }),
+            rec(4_100_000, 2, TraceEvent::FlowStalled { flow: 3 }),
+            rec(9_000_000, 3, TraceEvent::PointerMigrated { conn: 0, breakpoint: 2, rolled_back: 1 }),
+        ];
+        let s = key_event_timeline(&records);
+        assert!(s.contains("PortDown"));
+        assert!(s.contains("FlowStalled"));
+        assert!(s.contains("PointerMigrated"));
+        assert!(!s.contains("WrPosted"), "non-key events must be filtered:\n{s}");
+        // Fixed width: all table lines equal length.
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.len() >= 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn empty_timeline_says_healthy() {
+        let records =
+            vec![rec(1, 0, TraceEvent::FlowStarted { flow: 0, bytes: 8 })];
+        assert!(key_event_timeline(&records).contains("healthy"));
+    }
+
+    #[test]
+    fn incident_renders_full_window() {
+        let inc = Incident {
+            name: "failover-conn0".to_string(),
+            at: SimTime::ms(9),
+            events: vec![
+                rec(8_000_000, 0, TraceEvent::WrPosted { qp: 0, port: 0, bytes: 1 }),
+                rec(9_000_000, 1, TraceEvent::QpError { qp: 0, port: 0 }),
+            ],
+        };
+        let s = incident_table(&inc);
+        assert!(s.contains("failover-conn0"));
+        // Incidents keep every event, key or not.
+        assert!(s.contains("WrPosted"));
+        assert!(s.contains("QpError"));
+    }
+}

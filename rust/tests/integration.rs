@@ -266,6 +266,134 @@ fn bench_emits_four_json_files_with_metrics() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------
+// Flight recorder (trace subsystem)
+// ---------------------------------------------------------------------
+
+/// `vccl trace fig13a` captures the full §3.3 causal chain — PortDown →
+/// FlowStalled → PointerMigrated → FlowResumed — in order, with monotone
+/// timestamps, and the emitted Chrome trace JSON is valid and bit-identical
+/// across two runs at the same seed.
+#[test]
+fn trace_fig13a_causal_chain() {
+    if cfg!(debug_assertions) {
+        return; // fig13a is one of the heavy timelines: release-only (same
+                // policy as the experiment sweep above)
+    }
+    let dir = std::env::temp_dir().join(format!("vccl_trace_fig13a_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |name: &str| {
+        let path = dir.join(name);
+        let run = coordinator::trace::run_traced(
+            "fig13a",
+            &Config::paper_defaults(),
+            Some(path.as_path()),
+        )
+        .unwrap();
+        let json = std::fs::read_to_string(&path).unwrap();
+        vccl::trace::chrome::json_lint(&json)
+            .unwrap_or_else(|e| panic!("emitted trace is not valid JSON: {e}"));
+        (run, json)
+    };
+    let (r1, json1) = run("a.json");
+
+    // The causal chain, in order, with monotone timestamps.
+    let recs = &r1.records;
+    assert_eq!(r1.dropped, 0, "fig13a must fit the trace-command ring");
+    let pos = |k: &str| {
+        recs.iter()
+            .position(|r| r.ev.kind() == k)
+            .unwrap_or_else(|| panic!("no {k} event in the fig13a trace"))
+    };
+    let chain = [
+        pos("PortDown"),
+        pos("FlowStalled"),
+        pos("PointerMigrated"),
+        pos("FlowResumed"),
+    ];
+    assert!(chain.windows(2).all(|w| w[0] < w[1]), "chain out of order: {chain:?}");
+    assert!(
+        chain.windows(2).all(|w| recs[w[0]].at <= recs[w[1]].at),
+        "chain timestamps not monotone"
+    );
+    // The failover froze an incident snapshot containing the port flap.
+    assert!(
+        r1.incidents.iter().any(|i| i.name.starts_with("failover-conn")
+            && i.events.iter().any(|e| e.ev.kind() == "PortDown")),
+        "failover incident must capture the PortDown that caused it"
+    );
+
+    // Determinism: a second run at the same seed emits the identical file.
+    let (_r2, json2) = run("b.json");
+    assert_eq!(json1, json2, "trace JSON must be bit-identical across runs");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With `trace.enabled=false` (the default) the recorder holds no sink and
+/// allocates nothing — and `vccl bench` output is byte-identical whether
+/// tracing is off or on (the recorder observes, it never schedules).
+#[test]
+fn trace_disabled_allocates_nothing_and_bench_identical() {
+    // Zero-cost when disabled: no sink behind the handle.
+    let s = ClusterSim::new(Config::paper_defaults());
+    assert!(!s.tracer.enabled());
+    assert!(s.tracer.sink().is_none(), "disabled tracer must not allocate a ring");
+
+    let base = std::env::temp_dir().join(format!("vccl_trace_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let dir_off = base.join("off");
+    let dir_on = base.join("on");
+    let mut cfg_on = Config::paper_defaults();
+    cfg_on.trace.enabled = true;
+    cfg_on.trace.ring_capacity = 1 << 12;
+    bench::run_bench(&Config::paper_defaults(), &dir_off, &bench::BenchOpts { quick: true })
+        .unwrap();
+    bench::run_bench(&cfg_on, &dir_on, &bench::BenchOpts { quick: true }).unwrap();
+    for name in ["BENCH_p2p.json", "BENCH_failover.json", "BENCH_monitor.json", "BENCH_train.json"]
+    {
+        let off = std::fs::read(dir_off.join(name)).unwrap();
+        let on = std::fs::read(dir_on.join(name)).unwrap();
+        assert_eq!(off, on, "{name} must be byte-identical with tracing on vs off");
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------
+// Config-driven fabric rates
+// ---------------------------------------------------------------------
+
+/// `net.link_gbps` / `gpu.nvlink_gbps` reach the fabric: halving the line
+/// rate halves single-flow goodput (previously the fabric used hard-coded
+/// build rates and these keys were silently ignored).
+#[test]
+fn link_rate_config_scales_goodput() {
+    let inter_bw = |gbps: f64| {
+        let mut cfg = fast_cfg();
+        cfg.net.link_gbps = gbps;
+        let mut s = ClusterSim::new(cfg);
+        let (_, op) = s.run_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
+        op.algbw_gbps().unwrap()
+    };
+    let full = inter_bw(400.0);
+    let half = inter_bw(200.0);
+    assert!(half < 200.0, "half-rate goodput must respect the 200 Gbps line: {half}");
+    let ratio = full / half;
+    assert!((ratio - 2.0).abs() < 0.1, "expected ~2x, got {ratio} ({full} vs {half})");
+
+    let intra_bw = |gbps: f64| {
+        let mut cfg = fast_cfg();
+        cfg.gpu.nvlink_gbps = gbps;
+        let mut s = ClusterSim::new(cfg);
+        let (_, op) = s.run_p2p(RankId(0), RankId(1), ByteSize::mb(64).0);
+        op.algbw_gbps().unwrap()
+    };
+    let nv_full = intra_bw(3600.0);
+    let nv_half = intra_bw(1800.0);
+    let nv_ratio = nv_full / nv_half;
+    assert!((1.6..2.2).contains(&nv_ratio), "expected ~2x NVLink scaling, got {nv_ratio}");
+}
+
 /// Large-scale smoke: an 8-node (64-GPU) alltoall completes and stays
 /// deterministic (the §Perf events/s budget is what makes this fast).
 #[test]
