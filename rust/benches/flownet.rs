@@ -1,0 +1,170 @@
+//! §Perf L3 acceptance gate: the incremental, component-scoped max-min
+//! allocator must do **≥10× fewer flow-visits per network change** than the
+//! global reference allocator on a 64-node workload, and sustain a high
+//! reallocation rate in wall-clock.
+//!
+//! Two measurement modes:
+//! - default build: the reference cost is the conservative *analytic floor*
+//!   (live flows summed over changes — what a global pass settles/applies at
+//!   minimum; its water-fill rounds rescan every flow and visit more);
+//! - `--features ref-alloc`: a second net is driven through the identical
+//!   workload in `FlowNet::set_reference_mode`, so the comparison (work
+//!   counters *and* wall-clock) uses the real pre-L3 algorithm.
+//!
+//! Also emits `BENCH_simcore.json` (deterministic counters only — wall-clock
+//! is machine-dependent and stays on stdout) so the perf trajectory of the
+//! simulator core is tracked as a CI artifact.
+
+mod bench_util;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use vccl::config::TopologyConfig;
+use vccl::coordinator::bench::{bench_simcore, BenchOpts};
+use vccl::net::{FlowId, FlowMeta, FlowNet, FlowTimer};
+use vccl::sim::SimTime;
+use vccl::topology::{Fabric, NicId, NodeId, PortId};
+use vccl::util::Rng;
+
+const NODES: usize = 64;
+const RAILS: usize = 8;
+const OPS: usize = 6_000;
+const TARGET_LIVE: usize = 192;
+
+fn port(node: usize, nic: usize) -> PortId {
+    PortId { nic: NicId { node: NodeId(node), local: nic }, port: 0 }
+}
+
+/// Seeded churn on a 64-node fabric: mostly rail-aligned flows (the ring
+/// traffic shape), a slice of cross-rail spine traffic, and occasional port
+/// flaps. Deterministic, so the incremental and reference nets walk the
+/// exact same trajectory (their outputs are bit-identical by contract).
+/// Returns the number of completed flows.
+fn run_workload(net: &mut FlowNet, fabric: &Fabric) -> u64 {
+    let mut rng = Rng::new(0xF10A11);
+    let mut now = SimTime::ZERO;
+    let mut heap: BinaryHeap<Reverse<(SimTime, u64, u32)>> = BinaryHeap::new();
+    let mut live: Vec<FlowId> = Vec::new();
+    let mut down: Vec<PortId> = Vec::new();
+    let mut completed = 0u64;
+    let mut meta = 0u64;
+    fn push(heap: &mut BinaryHeap<Reverse<(SimTime, u64, u32)>>, ts: &[FlowTimer]) {
+        heap.extend(ts.iter().map(|t| Reverse((t.at, t.flow.0, t.gen))));
+    }
+    for _ in 0..OPS {
+        now = now + SimTime::ns(rng.range(50, 5_000));
+        if rng.below(100) < 4 {
+            // Port flap (batched tx+rx, like the RDMA layer does).
+            if !down.is_empty() && rng.chance(0.7) {
+                let p = down.swap_remove(rng.below(down.len() as u64) as usize);
+                let ts = net.set_links_up(&fabric.port_links(p), true, now);
+                push(&mut heap, &ts);
+            } else {
+                let p = port(rng.below(NODES as u64) as usize, rng.below(RAILS as u64) as usize);
+                if !down.contains(&p) {
+                    down.push(p);
+                    let ts = net.set_links_up(&fabric.port_links(p), false, now);
+                    push(&mut heap, &ts);
+                }
+            }
+        } else if live.len() < TARGET_LIVE || heap.is_empty() {
+            let node = rng.below(NODES as u64) as usize;
+            let rail = rng.below(RAILS as u64) as usize;
+            // 1 in 8 cross-rail: transits the spine trunks and merges
+            // components, so the walk is exercised beyond singletons.
+            let dst_rail = if rng.below(8) == 0 { (rail + 1) % RAILS } else { rail };
+            let dst = (node + 1 + rng.below(4) as usize) % NODES;
+            let path = fabric.path_inter(port(node, rail), port(dst, dst_rail));
+            meta += 1;
+            let (id, ts) =
+                net.start(now, path, rng.range(256 << 10, 4 << 20), rng.range(0, 5_000), FlowMeta(meta));
+            live.push(id);
+            push(&mut heap, &ts);
+        } else if let Some(Reverse((at, flow, gen))) = heap.pop() {
+            let fire = at.max(now);
+            now = fire;
+            let (m, ts) = net.try_finish(FlowId(flow), gen, fire);
+            if m.is_some() {
+                completed += 1;
+                live.retain(|&i| i != FlowId(flow));
+            }
+            push(&mut heap, &ts);
+        }
+    }
+    completed
+}
+
+fn fresh(fabric: &Fabric) -> FlowNet {
+    FlowNet::from_fabric(fabric, 0.97, 0.35)
+}
+
+fn main() {
+    println!("== flownet: incremental max-min allocator (§Perf L3) ==");
+    let fabric = Fabric::build(&TopologyConfig { num_nodes: NODES, ..Default::default() });
+
+    // Wall-clock: reallocation throughput of the incremental allocator.
+    bench_util::bench("flownet: 64-node churn, incremental", 5, || {
+        let mut net = fresh(&fabric);
+        let _ = run_workload(&mut net, &fabric);
+    });
+
+    // Work counters from one deterministic run.
+    let mut net = fresh(&fabric);
+    let completed = run_workload(&mut net, &fabric);
+    let a = net.alloc_stats();
+    assert!(completed > 500, "workload too idle: {completed} completions");
+    println!(
+        "   changes {}  incremental visits {}  (max component {} flows, {} completions)",
+        a.changes, a.flow_visits, a.max_component, completed
+    );
+
+    // The reference run is timed once, not bench-looped: being painfully
+    // slow at 64 nodes is precisely the point of this PR.
+    #[cfg(feature = "ref-alloc")]
+    let (ref_visits, ref_mode) = {
+        let t0 = std::time::Instant::now();
+        let mut refnet = fresh(&fabric);
+        refnet.set_reference_mode(true);
+        let ref_completed = run_workload(&mut refnet, &fabric);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("flownet: 64-node churn, global reference          single run {ms:>9.3} ms");
+        assert_eq!(
+            ref_completed, completed,
+            "reference and incremental trajectories must be identical"
+        );
+        (refnet.alloc_stats().flow_visits, "measured")
+    };
+    #[cfg(not(feature = "ref-alloc"))]
+    let (ref_visits, ref_mode) = (a.global_floor, "analytic-floor");
+
+    let reduction = ref_visits as f64 / a.flow_visits.max(1) as f64;
+    println!("=> reference visits ({ref_mode}): {ref_visits}  reduction: {reduction:.1}x (target ≥ 10x)");
+    assert!(
+        reduction >= 10.0,
+        "§Perf L3 target missed: {reduction:.1}x < 10x fewer flow-visits per change"
+    );
+
+    // BENCH_simcore.json: the library's deterministic allocator counters
+    // (16-node AllReduce) plus this bench's 64-node churn counters.
+    let mut report = bench_simcore(&vccl::config::Config::paper_defaults(), &BenchOpts::default());
+    report.push("simcore.flownet.changes", a.changes as f64, "count");
+    report.push("simcore.flownet.flow_visits_incremental", a.flow_visits as f64, "count");
+    report.push("simcore.flownet.flow_visits_reference", ref_visits as f64, "count");
+    report.push("simcore.flownet.visit_reduction_x", reduction, "ratio");
+    report.push("simcore.flownet.max_component_flows", a.max_component as f64, "count");
+    report.push("simcore.flownet.completed_flows", completed as f64, "count");
+    // NOTE: cargo runs bench binaries with cwd = the package root (rust/),
+    // so callers wanting a specific location should pass an absolute --out.
+    let out = std::env::args()
+        .skip_while(|arg| arg != "--out")
+        .nth(1)
+        .unwrap_or_else(|| "BENCH_simcore.json".to_string());
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).expect("creating BENCH output dir");
+        }
+    }
+    std::fs::write(&out, report.to_json()).expect("writing BENCH_simcore.json");
+    println!("wrote {out}");
+}

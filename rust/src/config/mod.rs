@@ -310,6 +310,23 @@ impl Config {
         c
     }
 
+    /// 64-node scaling preset (§Perf L3, the `scale64` experiment): the
+    /// paper cluster widened to 64 nodes (512 GPUs), one channel, monitor
+    /// off, and a shortened retry window + warm-up so the failover sweep
+    /// completes in bounded sim time. Only tractable with the incremental
+    /// component-scoped flow allocator — the global O(links × flows)
+    /// reference re-rates every flow on each of the ~10⁶ network changes.
+    pub fn scale64() -> Self {
+        let mut c = Self::paper_defaults();
+        c.topo.num_nodes = 64;
+        c.vccl.channels = 1;
+        c.vccl.monitor = false;
+        c.net.ib_timeout_exp = 10;
+        c.net.ib_retry_cnt = 2;
+        c.net.qp_warmup_ns = 100_000_000;
+        c
+    }
+
     /// NCCLX-like configuration (SM-free data path + 1-SM ordering kernel).
     pub fn ncclx_like() -> Self {
         let mut c = Self::paper_defaults();

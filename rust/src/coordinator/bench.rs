@@ -11,6 +11,7 @@
 //! | `BENCH_failover.json` | §3.3 recovery: failover gap, Fig 13b hang check  |
 //! | `BENCH_monitor.json`  | Fig 19 window sweep + Table 5 monitor overhead   |
 //! | `BENCH_train.json`    | Fig 11 1F1B training throughput per transport    |
+//! | `BENCH_simcore.json`  | §Perf L3 allocator work per network change       |
 //!
 //! Everything is simulated time, so the numbers are bit-stable across runs
 //! and machines (same config + seed ⇒ same JSON), which is what makes them
@@ -20,7 +21,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::ccl::ClusterSim;
+use crate::ccl::{ClusterSim, CollKind};
 use crate::config::Config;
 use crate::metrics::BenchReport;
 use crate::monitor::{MsgRecord, WindowEstimator};
@@ -48,6 +49,7 @@ pub fn run_bench(cfg: &Config, out_dir: &Path, opts: &BenchOpts) -> Result<Vec<P
         bench_failover(cfg, opts),
         bench_monitor(cfg, opts),
         bench_train(cfg, opts),
+        bench_simcore(cfg, opts),
     ];
     let mut paths = Vec::with_capacity(reports.len());
     for rep in &reports {
@@ -182,6 +184,39 @@ pub fn bench_failover(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     let idn = n.submit_p2p(RankId(0), RankId(8), bytes);
     n.run_to_idle(100_000_000);
     r.push("failover.nccl.hung", n.ops[idn.0].failed as u64 as f64, "bool");
+    r
+}
+
+/// §Perf L3: allocator work per network change, from the deterministic
+/// [`crate::net::AllocStats`] counters (pure functions of simulated
+/// activity, so the JSON stays bit-stable across machines). Wall-clock
+/// reallocation throughput — which is machine-dependent — lives in
+/// `benches/flownet.rs`, which also enforces the ≥10× visit-reduction
+/// acceptance gate against the reference allocator.
+pub fn bench_simcore(cfg: &Config, opts: &BenchOpts) -> BenchReport {
+    let mut r = BenchReport::new(
+        "simcore",
+        "§Perf L3 incremental flow allocator: visits per network change",
+    );
+    let nodes = if opts.quick { 4 } else { 16 };
+    let mut c = experiments::transport_cfg(cfg, "vccl", nodes, 1);
+    c.vccl.monitor = false;
+    let mut s = ClusterSim::new(c);
+    let id = s.submit(CollKind::AllReduce, 8 << 20);
+    s.run_to_idle(400_000_000);
+    assert!(s.ops[id.0].is_done(), "simcore allreduce must complete");
+    let a = s.rdma.flows.alloc_stats();
+    r.push("simcore.nodes", nodes as f64, "count");
+    r.push("simcore.events_dispatched", s.engine.dispatched() as f64, "count");
+    r.push("simcore.alloc.changes", a.changes as f64, "count");
+    r.push("simcore.alloc.flow_visits", a.flow_visits as f64, "count");
+    r.push("simcore.alloc.global_floor_visits", a.global_floor as f64, "count");
+    r.push(
+        "simcore.alloc.visit_reduction_x",
+        a.global_floor as f64 / a.flow_visits.max(1) as f64,
+        "ratio",
+    );
+    r.push("simcore.alloc.max_component_flows", a.max_component as f64, "count");
     r
 }
 
@@ -333,9 +368,30 @@ mod tests {
     fn suites_emit_metrics_quickly() {
         let cfg = Config::paper_defaults();
         let opts = BenchOpts { quick: true };
-        for rep in [bench_monitor(&cfg, &opts), bench_train(&cfg, &opts)] {
+        for rep in [bench_monitor(&cfg, &opts), bench_train(&cfg, &opts), bench_simcore(&cfg, &opts)]
+        {
             assert!(!rep.metrics.is_empty(), "{} empty", rep.bench);
             assert!(rep.metrics.iter().all(|m| m.value.is_finite()));
         }
+    }
+
+    /// The incremental allocator must beat the global floor even on the
+    /// quick 4-node workload (the 64-node gate lives in benches/flownet.rs).
+    #[test]
+    fn simcore_reports_visit_reduction() {
+        let rep = bench_simcore(&Config::paper_defaults(), &BenchOpts { quick: true });
+        let get = |name: &str| {
+            rep.metrics
+                .iter()
+                .find(|m| m.name == name)
+                .unwrap_or_else(|| panic!("missing {name}"))
+                .value
+        };
+        assert!(get("simcore.alloc.changes") > 1000.0);
+        assert!(
+            get("simcore.alloc.visit_reduction_x") > 2.0,
+            "even 4 nodes must show a component-scoping win: {}x",
+            get("simcore.alloc.visit_reduction_x")
+        );
     }
 }

@@ -118,6 +118,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("scaling", "§5 gain-decay model I=(Tn−Tv)/(Tv+α)"),
     ("hostfunc", "Fig 5 ablation: hostFunc ordering deadlock"),
     ("retrywin", "ablation: retry window before failover vs immediate"),
+    ("scale64", "64-node (512-GPU) allreduce + failover sweep (§Perf L3)"),
 ];
 
 /// Run one experiment by id; returns the report text.
@@ -141,6 +142,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         "scaling" => experiments::scaling_gain_decay(cfg),
         "hostfunc" => experiments::hostfunc_ablation(cfg),
         "retrywin" => reliability::retrywin_ablation(cfg),
+        "scale64" => experiments::scale64_cluster(cfg),
         "list" => {
             let mut out = String::new();
             for (id, desc) in EXPERIMENTS {
@@ -176,7 +178,7 @@ pub fn help_text() -> String {
          \x20                                          (chrome://tracing / Perfetto) and print\n\
          \x20                                          the incident timeline\n\
          \x20 vccl bench [--out-dir DIR] [--quick]     run the headline experiments and\n\
-         \x20                                          write BENCH_{p2p,failover,monitor,train}.json\n\
+         \x20                                          write BENCH_{p2p,failover,monitor,train,simcore}.json\n\
          \x20 vccl train [--preset tiny|e2e] [--steps N] [--transport vccl|nccl|ncclx]\n\
          \x20           [--out loss.csv]               real PJRT training run\n\
          \x20 vccl info                                print resolved config\n\n\

@@ -3,15 +3,40 @@
 //! Every transfer (an RDMA WR payload, an NVLink copy) is a **flow** with a
 //! byte count and a path. At any instant each flow has a rate; rates are the
 //! max-min fair allocation over link capacities. When the flow set changes
-//! (start / finish / link up / down) all affected completion times are
+//! (start / finish / link up / down) the affected completion times are
 //! re-derived; stale completion events are invalidated by a per-flow
 //! generation counter (the owner passes the generation back on dispatch).
 //!
 //! This is the standard "fluid" DES network model: accurate for the
-//! bandwidth-dominated regime the paper's figures live in, and fast — the
-//! allocator is O(links × flows) per change with tiny constants.
+//! bandwidth-dominated regime the paper's figures live in, and fast.
+//!
+//! # §Perf L3: incremental, component-scoped allocation
+//!
+//! Max-min water-filling decomposes over the connected components of the
+//! bipartite flow↔link graph: capacity never moves between flows that share
+//! no link (directly or transitively), so a change to one flow or link can
+//! only re-rate the flows in *its* component. The allocator exploits that:
+//!
+//! - a persistent reverse index `link → sorted flow ids` (plus per-receive-
+//!   port distinct-sender counts for the incast model) is maintained on
+//!   every start/finish/kill;
+//! - each change walks the component reachable from the mutated entity and
+//!   re-runs water-filling only inside it — O(component) instead of the old
+//!   O(links × flows) global pass;
+//! - flows outside the component keep their rates, generations and
+//!   outstanding timers untouched, and their progress accounting is *lazy*:
+//!   `remaining` is materialized only when the rate actually changes, so the
+//!   floating-point trajectory of an untouched flow is bit-identical whether
+//!   or not unrelated reallocations happened in between.
+//!
+//! The old global algorithm survives as `FlowNet::reference_rates` (under
+//! `cfg(any(test, debug_assertions, feature = "ref-alloc"))`): debug builds
+//! cross-check every incremental result against it bit-for-bit, and
+//! `FlowNet::set_reference_mode` forces a net to allocate globally so the
+//! equivalence tests and `benches/flownet.rs` can compare the two end to end.
+//! See DESIGN.md §"Perf L3: incremental allocation".
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::sim::SimTime;
 use crate::topology::{Fabric, LinkId, LinkKind, Path};
@@ -34,21 +59,88 @@ pub struct FlowTimer {
     pub at: SimTime,
 }
 
+/// §Perf L3 instrumentation: how much work the allocator does per change.
+/// Deterministic (pure counters over simulated activity), so the numbers are
+/// safe to emit into `BENCH_simcore.json`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AllocStats {
+    /// Reallocation passes (one per flow start/finish/kill or link batch).
+    pub changes: u64,
+    /// Flows examined across all passes (water-fill rounds + rate apply).
+    pub flow_visits: u64,
+    /// Lower bound on what the global reference allocator would have
+    /// examined: the live-flow count summed over changes (its settle+apply
+    /// floor — its water-fill rounds rescan every flow and visit more).
+    pub global_floor: u64,
+    /// Largest connected component (in flows) any pass walked.
+    pub max_component: u64,
+}
+
 #[derive(Debug, Clone)]
 struct Flow {
     path: Path,
-    remaining: f64, // bytes
+    /// Payload bytes left **as of `rate_since`** (the last materialization
+    /// point). The live value is `remaining - (now - rate_since) * rate`;
+    /// it is snapshotted exactly once per rate change, never on unrelated
+    /// reallocations — see the module docs on lazy progress.
+    remaining: f64,
     rate_bpns: f64, // bytes per ns (0 when stalled)
-    last_update: SimTime,
+    /// When the current rate took effect (and `remaining` was snapshotted).
+    rate_since: SimTime,
     gen: u32,
     meta: FlowMeta,
-    /// Extra fixed latency charged at the end (propagation + NIC setup);
-    /// already folded into the first completion estimate.
+    /// Fixed latency (propagation + NIC setup) charged **after** the last
+    /// payload byte drains. A completion deadline, never folded into the
+    /// byte account — folding made the tail stretch/shrink under re-rates.
     tail_latency_ns: u64,
-    tail_charged: bool,
+    /// The instant the payload finished draining (set on materialization);
+    /// completion fires at `drained_at + tail_latency_ns`.
+    drained_at: Option<SimTime>,
     /// Set while the flow is stalled by a dead link (drives the
     /// FlowStalled/FlowResumed trace transitions).
     was_stalled: bool,
+}
+
+impl Flow {
+    /// Payload bytes left at `now`, derived without mutating the snapshot.
+    fn remaining_at(&self, now: SimTime) -> f64 {
+        if self.rate_bpns <= 0.0 {
+            return self.remaining;
+        }
+        let dt = now.since(self.rate_since).as_ns() as f64;
+        (self.remaining - dt * self.rate_bpns).max(0.0)
+    }
+
+    /// When the payload drains (or drained). `None` while stalled with
+    /// bytes left.
+    fn drain_time(&self) -> Option<SimTime> {
+        if let Some(d) = self.drained_at {
+            return Some(d);
+        }
+        if self.rate_bpns > 0.0 {
+            let eta = (self.remaining / self.rate_bpns).ceil() as u64;
+            Some(self.rate_since + SimTime::ns(eta))
+        } else {
+            None
+        }
+    }
+
+    /// Snapshot progress at `now`. Called exactly once per rate change in
+    /// every allocation mode — the determinism contract depends on the
+    /// materialization points (and therefore the FP rounding sequence)
+    /// being identical between the incremental and reference allocators.
+    fn materialize(&mut self, now: SimTime) {
+        if self.rate_bpns > 0.0 {
+            let before = self.remaining;
+            let dt = now.since(self.rate_since).as_ns() as f64;
+            self.remaining = (before - dt * self.rate_bpns).max(0.0);
+            if self.remaining <= 0.0 && self.drained_at.is_none() {
+                let eta = (before / self.rate_bpns).ceil() as u64;
+                self.drained_at = Some(self.rate_since + SimTime::ns(eta));
+            }
+        }
+        self.rate_since = now;
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -63,19 +155,38 @@ struct LinkState {
 pub struct FlowNet {
     links: Vec<LinkState>,
     flows: HashMap<FlowId, Flow>,
+    /// Reverse index: link → flow ids crossing it, kept **sorted** so the
+    /// component walk and water-fill stay deterministic.
+    link_flows: Vec<Vec<FlowId>>,
+    /// Per-receive-port distinct-sender accounting for the incast model:
+    /// `(sender egress link, flows from it)` pairs; the distinct-sender
+    /// count is the vector length. Populated only for `NicUplinkRx` links.
+    rx_senders: Vec<Vec<(usize, u32)>>,
     next_id: u64,
     /// Many-to-one goodput degradation per extra distinct sender on a
     /// receive port (PFC backpressure; see `NetConfig::incast_penalty`).
     incast_penalty: f64,
     /// Flight recorder (disabled by default; install via `set_tracer`).
     tracer: Tracer,
+    /// Component-walk scratch: per-link visit stamps (epoch marking avoids
+    /// an O(links) clear per change).
+    link_stamp: Vec<u32>,
+    stamp: u32,
+    /// Water-fill scratch, valid only for the current component's links.
+    cap_scratch: Vec<f64>,
+    unfrozen_scratch: Vec<u32>,
+    alloc: AllocStats,
+    /// Force the global reference allocator for every pass (equivalence
+    /// tests and the `flownet` bench drive a mirror net in this mode).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    force_global: bool,
 }
 
 impl FlowNet {
     /// Build from the fabric: NIC links get scaled by `wire_efficiency`
     /// (headers/DCQCN overhead); NVLink and trunks are used as-is.
     pub fn from_fabric(fabric: &Fabric, wire_efficiency: f64, incast_penalty: f64) -> Self {
-        let links = (0..fabric.num_links())
+        let links: Vec<LinkState> = (0..fabric.num_links())
             .map(|i| {
                 let l = fabric.link(LinkId(i));
                 let eff = match l.kind {
@@ -89,12 +200,22 @@ impl FlowNet {
                 }
             })
             .collect();
+        let n = links.len();
         FlowNet {
             links,
             flows: HashMap::new(),
+            link_flows: vec![Vec::new(); n],
+            rx_senders: vec![Vec::new(); n],
             next_id: 0,
             incast_penalty,
             tracer: Tracer::disabled(),
+            link_stamp: vec![0; n],
+            stamp: 0,
+            cap_scratch: vec![0.0; n],
+            unfrozen_scratch: vec![0; n],
+            alloc: AllocStats::default(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            force_global: false,
         }
     }
 
@@ -103,14 +224,27 @@ impl FlowNet {
         self.tracer = tracer;
     }
 
+    /// Allocate with the global reference algorithm instead of the
+    /// component-scoped one. Output (rates, generations, timers, trace
+    /// order) is bit-identical by contract; only the work differs.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_reference_mode(&mut self, on: bool) {
+        self.force_global = on;
+    }
+
+    /// §Perf L3 work counters (see [`AllocStats`]).
+    pub fn alloc_stats(&self) -> AllocStats {
+        self.alloc
+    }
+
     pub fn active_flows(&self) -> usize {
         self.flows.len()
     }
 
     /// Start a flow of `bytes` over `path`; `tail_latency_ns` is the fixed
     /// (size-independent) component added to its completion time.
-    /// Returns the id plus re-rate timers for every live flow whose
-    /// completion moved (including the new one).
+    /// Returns the id plus re-rate timers for every flow whose completion
+    /// moved (including the new one).
     pub fn start(
         &mut self,
         now: SimTime,
@@ -121,23 +255,24 @@ impl FlowNet {
     ) -> (FlowId, Vec<FlowTimer>) {
         let id = FlowId(self.next_id);
         self.next_id += 1;
-        self.settle(now);
+        self.index_add(id, &path);
+        let seeds = path.links.clone();
         self.flows.insert(
             id,
             Flow {
                 path,
                 remaining: bytes as f64,
                 rate_bpns: 0.0,
-                last_update: now,
+                rate_since: now,
                 gen: 0,
                 meta,
                 tail_latency_ns,
-                tail_charged: false,
+                drained_at: None,
                 was_stalled: false,
             },
         );
         self.tracer.record(now, TraceEvent::FlowStarted { flow: id.0, bytes });
-        let timers = self.reallocate(now);
+        let timers = self.reallocate(now, &seeds);
         (id, timers)
     }
 
@@ -145,7 +280,7 @@ impl FlowNet {
     /// the flow really is done (and removes it); `None` if the event was
     /// stale (generation mismatch) or the flow still has bytes left
     /// (possible when it was stalled in between). The second element carries
-    /// re-rate timers for the surviving flows.
+    /// re-rate timers for the surviving flows of the flow's component.
     pub fn try_finish(
         &mut self,
         id: FlowId,
@@ -156,38 +291,43 @@ impl FlowNet {
         if f.gen != gen {
             return (None, Vec::new());
         }
-        self.settle(now);
-        let f = self.flows.get(&id).unwrap();
-        // Completion fires after the remaining bytes drained AND the tail
-        // latency elapsed; settle() guarantees progress accounting, so if
-        // remaining is ~0 we are done.
-        if f.remaining > 0.5 {
+        // Lazy progress: derive the live byte count, no settle pass.
+        if f.remaining_at(now) > 0.5 {
             // Stalled or re-rated after this event was scheduled; a fresher
             // timer exists (or the flow is stalled awaiting link-up).
             return (None, Vec::new());
         }
-        let meta = f.meta;
-        self.flows.remove(&id);
+        // Payload drained — the fixed tail must have elapsed too. The tail
+        // is a completion deadline anchored at the drain instant, so it is
+        // immune to re-rates (it used to be folded into `remaining` as
+        // rate-equivalent bytes, which stretched it under re-rating).
+        let drained = f.drain_time().unwrap_or(now);
+        if now < drained + SimTime::ns(f.tail_latency_ns) {
+            return (None, Vec::new());
+        }
+        let f = self.flows.remove(&id).unwrap();
+        self.index_remove(id, &f.path);
         self.tracer.record(now, TraceEvent::FlowFinished { flow: id.0 });
-        let timers = self.reallocate(now);
-        (Some(meta), timers)
+        let timers = self.reallocate(now, &f.path.links);
+        (Some(f.meta), timers)
     }
 
     /// Abort a flow (failover kills the primary-QP flows). Returns re-rate
     /// timers for the survivors.
     pub fn kill(&mut self, id: FlowId, now: SimTime) -> Vec<FlowTimer> {
-        self.settle(now);
-        if self.flows.remove(&id).is_some() {
-            self.tracer.record(now, TraceEvent::FlowKilled { flow: id.0 });
-            self.reallocate(now)
-        } else {
-            Vec::new()
-        }
+        // O(1) membership check first: failover double-kills are routine
+        // and must not trigger an allocation pass (this used to settle
+        // every live flow before discovering the id was gone).
+        let Some(f) = self.flows.remove(&id) else { return Vec::new() };
+        self.index_remove(id, &f.path);
+        self.tracer.record(now, TraceEvent::FlowKilled { flow: id.0 });
+        self.reallocate(now, &f.path.links)
     }
 
-    /// Bytes still to drain for an in-flight flow (None if finished/killed).
-    pub fn remaining(&self, id: FlowId) -> Option<u64> {
-        self.flows.get(&id).map(|f| f.remaining.max(0.0) as u64)
+    /// Bytes still to drain for an in-flight flow at `now`
+    /// (None if finished/killed).
+    pub fn remaining(&self, id: FlowId, now: SimTime) -> Option<u64> {
+        self.flows.get(&id).map(|f| f.remaining_at(now) as u64)
     }
 
     /// Is the flow currently stalled (rate 0, e.g. its path has a dead link)?
@@ -198,9 +338,17 @@ impl FlowNet {
     /// Bring a link up or down. Down links stall their flows (rate 0) —
     /// the RDMA layer owns the retry/timeout semantics on top.
     pub fn set_link_up(&mut self, link: LinkId, up: bool, now: SimTime) -> Vec<FlowTimer> {
-        self.settle(now);
-        self.links[link.0].up = up;
-        self.reallocate(now)
+        self.set_links_up(&[link], up, now)
+    }
+
+    /// Batch form: links that change state together (a physical port flap
+    /// is tx + rx at once) trigger **one** component recompute, not one per
+    /// link.
+    pub fn set_links_up(&mut self, links: &[LinkId], up: bool, now: SimTime) -> Vec<FlowTimer> {
+        for &l in links {
+            self.links[l.0].up = up;
+        }
+        self.reallocate(now, links)
     }
 
     pub fn link_up(&self, link: LinkId) -> bool {
@@ -212,24 +360,293 @@ impl FlowNet {
         self.flows.get(&id).map(|f| f.rate_bpns * 8.0)
     }
 
-    /// Advance every flow's progress to `now` at its current rate.
-    fn settle(&mut self, now: SimTime) {
-        for f in self.flows.values_mut() {
-            let dt = now.since(f.last_update).as_ns() as f64;
-            f.remaining = (f.remaining - dt * f.rate_bpns).max(0.0);
-            f.last_update = now;
+    // ------------------------------------------------------------------
+    // Reverse index maintenance
+    // ------------------------------------------------------------------
+
+    fn index_add(&mut self, id: FlowId, path: &Path) {
+        for l in &path.links {
+            let v = &mut self.link_flows[l.0];
+            if let Err(pos) = v.binary_search(&id) {
+                v.insert(pos, id);
+            }
+        }
+        if let Some(first) = path.links.first() {
+            for l in &path.links {
+                if matches!(self.links[l.0].kind, LinkKind::NicUplinkRx) {
+                    let senders = &mut self.rx_senders[l.0];
+                    match senders.iter_mut().find(|(s, _)| *s == first.0) {
+                        Some((_, n)) => *n += 1,
+                        None => senders.push((first.0, 1)),
+                    }
+                }
+            }
         }
     }
 
-    /// Recompute max-min fair rates; bump generations; emit fresh timers.
-    fn reallocate(&mut self, now: SimTime) -> Vec<FlowTimer> {
-        // Effective capacity per link: 0 when down; incast-degraded on
-        // receive ports fed by multiple *distinct sender ports*. Chunks of
-        // one sender share its egress serially and are not incast — only a
+    fn index_remove(&mut self, id: FlowId, path: &Path) {
+        for l in &path.links {
+            let v = &mut self.link_flows[l.0];
+            if let Ok(pos) = v.binary_search(&id) {
+                v.remove(pos);
+            }
+        }
+        if let Some(first) = path.links.first() {
+            for l in &path.links {
+                if matches!(self.links[l.0].kind, LinkKind::NicUplinkRx) {
+                    let senders = &mut self.rx_senders[l.0];
+                    if let Some(i) = senders.iter().position(|(s, _)| *s == first.0) {
+                        senders[i].1 -= 1;
+                        if senders[i].1 == 0 {
+                            senders.remove(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Component-scoped allocation
+    // ------------------------------------------------------------------
+
+    /// Connected component of the flow↔link graph reachable from `seeds`,
+    /// walked over the persistent reverse index. Returns sorted flow ids
+    /// (the deterministic allocation order) and sorted link indices.
+    fn component(&mut self, seeds: &[LinkId]) -> (Vec<FlowId>, Vec<usize>) {
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            // u32 wrap: clear stale stamps once every 4B passes.
+            self.link_stamp.iter_mut().for_each(|s| *s = 0);
+            self.stamp = 1;
+        }
+        let stamp = self.stamp;
+        let mut links: Vec<usize> = Vec::new();
+        let mut flow_ids: Vec<FlowId> = Vec::new();
+        let mut seen = HashSet::new();
+        let mut queue: Vec<usize> = Vec::new();
+        for &LinkId(l) in seeds {
+            if self.link_stamp[l] != stamp {
+                self.link_stamp[l] = stamp;
+                links.push(l);
+                queue.push(l);
+            }
+        }
+        while let Some(l) = queue.pop() {
+            for &fid in &self.link_flows[l] {
+                if !seen.insert(fid) {
+                    continue;
+                }
+                flow_ids.push(fid);
+                for &LinkId(fl) in &self.flows[&fid].path.links {
+                    if self.link_stamp[fl] != stamp {
+                        self.link_stamp[fl] = stamp;
+                        links.push(fl);
+                        queue.push(fl);
+                    }
+                }
+            }
+        }
+        flow_ids.sort_unstable();
+        links.sort_unstable();
+        (flow_ids, links)
+    }
+
+    /// Recompute rates for the component touched by a change, apply them,
+    /// and emit fresh timers. Flows outside the component are untouched.
+    fn reallocate(&mut self, now: SimTime, seeds: &[LinkId]) -> Vec<FlowTimer> {
+        self.alloc.changes += 1;
+        self.alloc.global_floor += self.flows.len() as u64;
+
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.force_global {
+            let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
+            ids.sort_unstable();
+            self.alloc.max_component = self.alloc.max_component.max(ids.len() as u64);
+            let (rates, visits) = self.reference_rates();
+            self.alloc.flow_visits += visits;
+            return self.apply_rates(now, &ids, &rates);
+        }
+
+        let (ids, comp_links) = self.component(seeds);
+        self.alloc.max_component = self.alloc.max_component.max(ids.len() as u64);
+        let rates = self.waterfill(&ids, &comp_links);
+        let timers = self.apply_rates(now, &ids, &rates);
+        #[cfg(debug_assertions)]
+        self.cross_check(&ids, &rates);
+        timers
+    }
+
+    /// Max-min water filling over one component. Ids are SORTED: the
+    /// allocation itself is order-independent, but the floating-point
+    /// residual-capacity bookkeeping and the order timers (and trace
+    /// records) are emitted are not — iterating in HashMap order would leak
+    /// the per-process hasher seed into event tie-breaking and break the
+    /// bit-identical trace contract (DESIGN.md, "Determinism contract").
+    fn waterfill(&mut self, ids: &[FlowId], comp_links: &[usize]) -> HashMap<FlowId, f64> {
+        // Effective capacity per component link: 0 when down; incast-
+        // degraded on receive ports fed by multiple *distinct sender
+        // ports* (count read off the persistent index). Chunks of one
+        // sender share its egress serially and are not incast — only a
         // true many-to-one fan-in triggers PFC backpressure (§Appendix G
-        // phase 2).
+        // phase 2). `cap_scratch` then doubles as the residual capacity.
+        for &l in comp_links {
+            let st = &self.links[l];
+            self.cap_scratch[l] = if !st.up {
+                0.0
+            } else {
+                let n = self.rx_senders[l].len();
+                if n > 1 && matches!(st.kind, LinkKind::NicUplinkRx) {
+                    st.capacity_bpns / (1.0 + self.incast_penalty * (n - 1) as f64)
+                } else {
+                    st.capacity_bpns
+                }
+            };
+        }
+        let mut rate: HashMap<FlowId, f64> = HashMap::with_capacity(ids.len());
+        let mut frozen: HashMap<FlowId, bool> = ids.iter().map(|&i| (i, false)).collect();
+        // Flows crossing any dead link are stalled outright.
+        for &id in ids {
+            let f = &self.flows[&id];
+            if f.path.links.iter().any(|l| self.cap_scratch[l.0] <= 0.0) {
+                rate.insert(id, 0.0);
+                frozen.insert(id, true);
+            }
+        }
+        loop {
+            // Count unfrozen flows per component link.
+            for &l in comp_links {
+                self.unfrozen_scratch[l] = 0;
+            }
+            let mut any_unfrozen = false;
+            for &id in ids {
+                self.alloc.flow_visits += 1;
+                if frozen[&id] {
+                    continue;
+                }
+                any_unfrozen = true;
+                for l in &self.flows[&id].path.links {
+                    self.unfrozen_scratch[l.0] += 1;
+                }
+            }
+            if !any_unfrozen {
+                break;
+            }
+            // Bottleneck link: minimal fair share (ties → lowest link id,
+            // identical to the reference's ascending full-table scan).
+            let mut best: Option<(usize, f64)> = None;
+            for &i in comp_links {
+                let n = self.unfrozen_scratch[i];
+                if n == 0 {
+                    continue;
+                }
+                let share = self.cap_scratch[i] / n as f64;
+                if best.map_or(true, |(_, s)| share < s) {
+                    best = Some((i, share));
+                }
+            }
+            let Some((bottleneck, share)) = best else { break };
+            // Freeze every unfrozen flow crossing the bottleneck at `share`.
+            let freezing: Vec<FlowId> = ids
+                .iter()
+                .copied()
+                .filter(|id| {
+                    !frozen[id]
+                        && self.flows[id].path.links.iter().any(|l| l.0 == bottleneck)
+                })
+                .collect();
+            for id in freezing {
+                rate.insert(id, share);
+                frozen.insert(id, true);
+                for l in &self.flows[&id].path.links {
+                    self.cap_scratch[l.0] = (self.cap_scratch[l.0] - share).max(0.0);
+                }
+            }
+        }
+        rate
+    }
+
+    /// Apply freshly computed rates to `ids` (sorted), bump generations and
+    /// emit timers — but ONLY for flows whose rate actually changed (>0.1%
+    /// relative): an unchanged rate means the outstanding completion timer
+    /// is still exact, and skipping the re-emit keeps untouched flows
+    /// bit-identical across allocation modes (and removes the O(flows)
+    /// stale-event storm per network change).
+    fn apply_rates(
+        &mut self,
+        now: SimTime,
+        ids: &[FlowId],
+        rates: &HashMap<FlowId, f64>,
+    ) -> Vec<FlowTimer> {
+        let mut timers = Vec::with_capacity(ids.len());
+        for &id in ids {
+            self.alloc.flow_visits += 1;
+            let f = self.flows.get_mut(&id).expect("component ids are current");
+            let r = rates.get(&id).copied().unwrap_or(0.0);
+            let old = f.rate_bpns;
+            let unchanged = if old > 0.0 {
+                (r - old).abs() <= 1e-3 * old
+            } else {
+                r <= 0.0
+            };
+            if unchanged {
+                continue;
+            }
+            // Snapshot progress at the old rate before switching.
+            f.materialize(now);
+            // Trace only meaningful transitions: stall (>0 → 0 with bytes
+            // left), resume (stalled → moving), and re-rates beyond 10 % —
+            // the fair-share wobble every start/finish causes would
+            // otherwise dominate the ring.
+            if self.tracer.enabled() {
+                if old > 0.0 && r <= 0.0 && f.remaining > 0.5 {
+                    self.tracer.record(now, TraceEvent::FlowStalled { flow: id.0 });
+                } else if old <= 0.0 && r > 0.0 && f.was_stalled {
+                    self.tracer
+                        .record(now, TraceEvent::FlowResumed { flow: id.0, scope: "flow" });
+                } else if old > 0.0 && r > 0.0 && (r - old).abs() > 0.10 * old {
+                    self.tracer.record(now, TraceEvent::FlowRerated { flow: id.0, gbps: r * 8.0 });
+                }
+            }
+            if r <= 0.0 && old > 0.0 {
+                f.was_stalled = true;
+            } else if r > 0.0 {
+                f.was_stalled = false;
+            }
+            f.rate_bpns = r;
+            f.gen += 1;
+            if let Some(drained) = f.drained_at {
+                // Payload already drained: only the fixed tail is owed.
+                // The deadline survives re-rates (and even stalls) at the
+                // same absolute instant.
+                let at = (drained + SimTime::ns(f.tail_latency_ns)).max(now);
+                timers.push(FlowTimer { flow: id, gen: f.gen, at });
+            } else if r > 0.0 {
+                let eta_ns = (f.remaining / r).ceil() as u64 + f.tail_latency_ns;
+                timers.push(FlowTimer { flow: id, gen: f.gen, at: now + SimTime::ns(eta_ns) });
+            }
+            // Stalled flows get no timer — the RDMA retry layer owns them.
+        }
+        timers
+    }
+
+    // ------------------------------------------------------------------
+    // Reference allocator (the original global algorithm)
+    // ------------------------------------------------------------------
+
+    /// The pre-§Perf-L3 global allocator, kept verbatim as the reference
+    /// implementation: recomputes distinct-sender counts from scratch and
+    /// water-fills over **every** link and flow — O(links × flows) per
+    /// change. Returns the ideal rate map plus the flows-examined count.
+    /// Debug builds cross-check every incremental pass against it; enable
+    /// the `ref-alloc` cargo feature to keep it in release builds (the
+    /// `flownet` bench uses that for the measured work comparison).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    fn reference_rates(&self) -> (HashMap<FlowId, f64>, u64) {
+        let mut visits = 0u64;
         let mut senders_per_link: HashMap<usize, Vec<usize>> = HashMap::new();
         for f in self.flows.values() {
+            visits += 1;
             let Some(first) = f.path.links.first() else { continue };
             for l in &f.path.links {
                 if matches!(self.links[l.0].kind, LinkKind::NicUplinkRx) {
@@ -257,18 +674,10 @@ impl FlowNet {
             })
             .collect();
 
-        // Max-min water filling. Ids are SORTED: the allocation itself is
-        // order-independent, but the floating-point residual-capacity
-        // bookkeeping and the order timers (and trace records) are emitted
-        // are not — iterating in HashMap order would leak the per-process
-        // hasher seed into event tie-breaking and break the bit-identical
-        // trace contract (DESIGN.md, "Determinism contract").
         let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
         ids.sort_unstable();
         let mut rate: HashMap<FlowId, f64> = HashMap::with_capacity(ids.len());
-        let mut frozen: HashMap<FlowId, bool> =
-            ids.iter().map(|&i| (i, false)).collect();
-        // Flows crossing any dead link are stalled outright.
+        let mut frozen: HashMap<FlowId, bool> = ids.iter().map(|&i| (i, false)).collect();
         for &id in &ids {
             let f = &self.flows[&id];
             if f.path.links.iter().any(|l| eff_cap[l.0] <= 0.0) {
@@ -276,12 +685,12 @@ impl FlowNet {
                 frozen.insert(id, true);
             }
         }
-        let mut remaining_cap = eff_cap.clone();
+        let mut remaining_cap = eff_cap;
         loop {
-            // Count unfrozen flows per link.
             let mut unfrozen_per_link = vec![0u32; self.links.len()];
             let mut any_unfrozen = false;
             for &id in &ids {
+                visits += 1;
                 if frozen[&id] {
                     continue;
                 }
@@ -293,7 +702,6 @@ impl FlowNet {
             if !any_unfrozen {
                 break;
             }
-            // Bottleneck link: minimal fair share.
             let mut best: Option<(usize, f64)> = None;
             for (i, &n) in unfrozen_per_link.iter().enumerate() {
                 if n == 0 {
@@ -305,7 +713,6 @@ impl FlowNet {
                 }
             }
             let Some((bottleneck, share)) = best else { break };
-            // Freeze every unfrozen flow crossing the bottleneck at `share`.
             let freezing: Vec<FlowId> = ids
                 .iter()
                 .copied()
@@ -322,61 +729,41 @@ impl FlowNet {
                 }
             }
         }
+        (rate, visits)
+    }
 
-        // Apply rates, bump generations, emit timers — but ONLY for flows
-        // whose rate actually changed (>0.1% relative): an unchanged rate
-        // means the outstanding completion timer is still exact, and
-        // skipping the re-emit removes the O(flows) stale-event storm per
-        // network change (§Perf L3: this is the simulator's hot path).
-        let mut timers = Vec::with_capacity(ids.len());
-        for &id in &ids {
-            let f = self.flows.get_mut(&id).expect("ids snapshot is current");
-            let r = rate.get(&id).copied().unwrap_or(0.0);
-            let unchanged = f.tail_charged
-                && f.rate_bpns > 0.0
-                && (r - f.rate_bpns).abs() <= 1e-3 * f.rate_bpns;
-            if unchanged {
-                continue;
-            }
-            let old = f.rate_bpns;
-            // Trace only meaningful transitions: stall (>0 → 0 with bytes
-            // left), resume (stalled → moving), and re-rates beyond 10 % —
-            // the fair-share wobble every start/finish causes would
-            // otherwise dominate the ring.
-            if self.tracer.enabled() {
-                if old > 0.0 && r <= 0.0 && f.remaining > 0.5 {
-                    self.tracer.record(now, TraceEvent::FlowStalled { flow: id.0 });
-                } else if old <= 0.0 && r > 0.0 && f.was_stalled {
-                    self.tracer
-                        .record(now, TraceEvent::FlowResumed { flow: id.0, scope: "flow" });
-                } else if old > 0.0 && r > 0.0 && (r - old).abs() > 0.10 * old {
-                    self.tracer.record(now, TraceEvent::FlowRerated { flow: id.0, gbps: r * 8.0 });
-                }
-            }
-            if r <= 0.0 && old > 0.0 {
-                f.was_stalled = true;
-            } else if r > 0.0 {
-                f.was_stalled = false;
-            }
-            f.rate_bpns = r;
-            f.gen += 1;
-            if r > 0.0 {
-                let mut eta_ns = (f.remaining / r).ceil() as u64;
-                if !f.tail_charged {
-                    eta_ns += f.tail_latency_ns;
-                    // The tail is charged once; if re-rated later the
-                    // remaining-bytes math still owes it, so mark only when
-                    // the first timer includes it. To stay conservative we
-                    // fold the tail into `remaining` as rate-equivalent
-                    // bytes instead: simpler — extend remaining.
-                    f.remaining += f.tail_latency_ns as f64 * r;
-                    f.tail_charged = true;
-                }
-                timers.push(FlowTimer { flow: id, gen: f.gen, at: now + SimTime::ns(eta_ns) });
-            }
-            // Stalled flows get no timer — the RDMA retry layer owns them.
+    /// Debug-build invariant: the component-scoped result must match the
+    /// global reference bit-for-bit inside the component, and every stored
+    /// rate (including flows the pass never visited) must sit within the
+    /// re-rate tolerance of the global ideal.
+    #[cfg(debug_assertions)]
+    fn cross_check(&self, ids: &[FlowId], scoped: &HashMap<FlowId, f64>) {
+        if self.force_global {
+            return;
         }
-        timers
+        let (global, _) = self.reference_rates();
+        for &id in ids {
+            let a = scoped.get(&id).copied().unwrap_or(0.0);
+            let b = global.get(&id).copied().unwrap_or(0.0);
+            debug_assert!(
+                a.to_bits() == b.to_bits(),
+                "component allocation diverged from the global reference for {id:?}: {a} vs {b}"
+            );
+        }
+        for (&id, f) in &self.flows {
+            let b = global.get(&id).copied().unwrap_or(0.0);
+            let ok = if f.rate_bpns > 0.0 {
+                (b - f.rate_bpns).abs() <= 1e-3 * f.rate_bpns
+            } else {
+                b <= 0.0
+            };
+            debug_assert!(
+                ok,
+                "stored rate drifted outside tolerance of the global ideal for {id:?}: \
+                 stored {} vs ideal {b}",
+                f.rate_bpns
+            );
+        }
     }
 }
 
@@ -385,6 +772,9 @@ mod tests {
     use super::*;
     use crate::config::TopologyConfig;
     use crate::topology::{NicId, NodeId, PortId};
+    use crate::util::Rng;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
 
     fn fabric() -> Fabric {
         Fabric::build(&TopologyConfig { num_nodes: 2, ..Default::default() })
@@ -394,17 +784,20 @@ mod tests {
         PortId { nic: NicId { node: NodeId(node), local: nic }, port: 0 }
     }
 
-    /// Drive the net to completion of a single flow, returning finish time.
+    /// Drive the net to completion, returning (time, meta) per finish.
+    /// Heap-based (O(log n) per event): the randomized equivalence sweep
+    /// pushes thousands of timers, and the old linear-scan-min + retain
+    /// loop was O(n²).
     fn run_to_completion(net: &mut FlowNet, timers: Vec<FlowTimer>) -> Vec<(SimTime, FlowMeta)> {
-        let mut queue = timers;
+        let mut queue: BinaryHeap<Reverse<(SimTime, u64, u32)>> =
+            timers.iter().map(|t| Reverse((t.at, t.flow.0, t.gen))).collect();
         let mut done = Vec::new();
-        while let Some(t) = queue.iter().min_by_key(|t| t.at).copied() {
-            queue.retain(|x| *x != t);
-            let (meta, more) = net.try_finish(t.flow, t.gen, t.at);
+        while let Some(Reverse((at, flow, gen))) = queue.pop() {
+            let (meta, more) = net.try_finish(FlowId(flow), gen, at);
             if let Some(m) = meta {
-                done.push((t.at, m));
+                done.push((at, m));
             }
-            queue.extend(more);
+            queue.extend(more.iter().map(|t| Reverse((t.at, t.flow.0, t.gen))));
         }
         done
     }
@@ -460,6 +853,26 @@ mod tests {
         }
     }
 
+    /// Disjoint flows live in disjoint components: starting the second one
+    /// must not visit (or re-rate) the first.
+    #[test]
+    fn disjoint_flows_are_separate_components() {
+        let f = fabric();
+        let mut net = FlowNet::from_fabric(&f, 1.0, 0.0);
+        let bytes = 4 << 20;
+        let (_, _t1) =
+            net.start(SimTime::ZERO, f.path_inter(port(0, 0), port(1, 0)), bytes, 0, FlowMeta(1));
+        let (_, t2) =
+            net.start(SimTime::ZERO, f.path_inter(port(0, 1), port(1, 1)), bytes, 0, FlowMeta(2));
+        assert_eq!(t2.len(), 1, "only the new flow may be re-rated");
+        assert_eq!(net.alloc_stats().max_component, 1);
+        // A third flow sharing the first pair's links merges components.
+        let (_, t3) =
+            net.start(SimTime::ns(10), f.path_inter(port(0, 0), port(1, 0)), bytes, 0, FlowMeta(3));
+        assert_eq!(t3.len(), 2, "both flows of the shared component re-rate");
+        assert_eq!(net.alloc_stats().max_component, 2);
+    }
+
     #[test]
     fn link_down_stalls_and_up_resumes() {
         let f = fabric();
@@ -484,6 +897,25 @@ mod tests {
         assert_eq!(done.len(), 1);
         let expect_ns = 1_000_000.0 + (bytes as f64 / 2.0) / (400.0 * 0.125);
         assert!((done[0].0.as_ns() as f64 - expect_ns).abs() < 100.0);
+    }
+
+    /// A physical port flap (tx + rx together) is one batched recompute.
+    #[test]
+    fn port_flap_batches_one_recompute() {
+        let f = fabric();
+        let mut net = FlowNet::from_fabric(&f, 1.0, 0.0);
+        let (_, _t) = net.start(
+            SimTime::ZERO,
+            f.path_inter(port(0, 0), port(1, 0)),
+            8 << 20,
+            0,
+            FlowMeta(1),
+        );
+        let before = net.alloc_stats().changes;
+        let links = f.port_links(port(0, 0));
+        let _ = net.set_links_up(&links, false, SimTime::us(10));
+        assert_eq!(net.alloc_stats().changes, before + 1, "one pass for both directions");
+        assert!(!net.link_up(links[0]) && !net.link_up(links[1]));
     }
 
     #[test]
@@ -559,6 +991,56 @@ mod tests {
         assert!((5_015..5_030).contains(&ns), "ns={ns}");
     }
 
+    /// Regression (tail-fold bug): re-rating a flow mid-payload must not
+    /// stretch its tail. The tail used to be folded into `remaining` as
+    /// rate-equivalent bytes at the first rate, so a later rate drop
+    /// stretched it proportionally.
+    #[test]
+    fn rerate_does_not_stretch_tail() {
+        let f = fabric();
+        let mut net = FlowNet::from_fabric(&f, 1.0, 0.0);
+        let path = f.path_inter(port(0, 0), port(1, 0));
+        let bytes = 8 * 1024 * 1024u64; // 8MiB at 50 B/ns → drains in ~167773ns
+        let tail = 1_000_000u64; // 1ms tail — the old fold was 50MB of "bytes"
+        let (_, mut ts) = net.start(SimTime::ZERO, path.clone(), bytes, tail, FlowMeta(1));
+        // Halve A's rate at ~half drain by starting B on the same links.
+        let half = SimTime::ns(83_886);
+        let (_, t2) = net.start(half, path, bytes, 0, FlowMeta(2));
+        ts.extend(t2);
+        let done = run_to_completion(&mut net, ts);
+        assert_eq!(done.len(), 2);
+        let at = |m: u64| done.iter().find(|(_, meta)| meta.0 == m).unwrap().0.as_ns();
+        // A: 4194308 bytes left at 25 B/ns → drains at ≈251659ns, plus the
+        // UNSCALED 1ms tail. The old fold would have pushed this past 2.2ms.
+        let a = at(1);
+        assert!(
+            (1_251_650..=1_251_670).contains(&a),
+            "tail must not stretch under re-rate: a={a}"
+        );
+        // B drains alone after A's payload is done (A's share frees once A
+        // is removed at its tail deadline; B finishes well before that).
+        assert!(at(2) < a);
+    }
+
+    /// Regression (tail-fold bug, second shape): a re-rate AFTER the
+    /// payload drained — during the tail wait — must not move the
+    /// completion deadline at all.
+    #[test]
+    fn rerate_after_drain_keeps_tail_deadline() {
+        let f = fabric();
+        let mut net = FlowNet::from_fabric(&f, 1.0, 0.0);
+        let path = f.path_inter(port(0, 0), port(1, 0));
+        // A: 1KB drains in ~21ns, then waits a 5μs tail.
+        let (_, mut ts) = net.start(SimTime::ZERO, path.clone(), 1024, 5_000, FlowMeta(1));
+        // B starts at t=1μs — A is drained but not complete; A gets
+        // re-rated to the fair half. Its completion must stay ≈5021ns.
+        let (_, t2) = net.start(SimTime::us(1), path, 8 << 20, 0, FlowMeta(2));
+        ts.extend(t2);
+        let done = run_to_completion(&mut net, ts);
+        let a = done.iter().find(|(_, m)| m.0 == 1).unwrap().0.as_ns();
+        assert!((5_015..5_030).contains(&a), "tail deadline moved: a={a}");
+    }
+
     #[test]
     fn kill_removes_flow_and_rerates_survivors() {
         let f = fabric();
@@ -579,6 +1061,21 @@ mod tests {
         assert_eq!(done[0].1, FlowMeta(2));
     }
 
+    /// Killing an already-gone flow is a constant-time no-op: no settle, no
+    /// allocation pass (it used to pay a full O(flows) settle regardless).
+    #[test]
+    fn kill_missing_flow_is_noop() {
+        let f = fabric();
+        let mut net = FlowNet::from_fabric(&f, 1.0, 0.0);
+        let (a, _) =
+            net.start(SimTime::ZERO, f.path_inter(port(0, 0), port(1, 0)), 1 << 20, 0, FlowMeta(1));
+        let _ = net.kill(a, SimTime::ns(10));
+        let changes = net.alloc_stats().changes;
+        assert!(net.kill(a, SimTime::ns(20)).is_empty());
+        assert!(net.kill(FlowId(999), SimTime::ns(30)).is_empty());
+        assert_eq!(net.alloc_stats().changes, changes, "no pass for a missing id");
+    }
+
     #[test]
     fn stale_generation_ignored() {
         let f = fabric();
@@ -590,5 +1087,149 @@ mod tests {
             net.start(SimTime::ns(10), f.path_inter(port(0, 0), port(1, 0)), 1 << 20, 0, FlowMeta(2));
         let (meta, _) = net.try_finish(id, t1[0].gen, t1[0].at);
         assert!(meta.is_none(), "stale timer must not complete the flow");
+    }
+
+    // ------------------------------------------------------------------
+    // Incremental vs reference equivalence
+    // ------------------------------------------------------------------
+
+    /// One op applied to both the incremental net and the reference-mode
+    /// mirror; every mutating call must return identical timers.
+    struct Mirror {
+        inc: FlowNet,
+        refn: FlowNet,
+        live: Vec<FlowId>,
+        queue: BinaryHeap<Reverse<(SimTime, u64, u32)>>,
+    }
+
+    impl Mirror {
+        fn new(f: &Fabric) -> Self {
+            let inc = FlowNet::from_fabric(f, 0.97, 0.35);
+            let mut refn = FlowNet::from_fabric(f, 0.97, 0.35);
+            refn.set_reference_mode(true);
+            Mirror { inc, refn, live: Vec::new(), queue: BinaryHeap::new() }
+        }
+
+        fn push_timers(&mut self, ts: &[FlowTimer]) {
+            self.queue.extend(ts.iter().map(|t| Reverse((t.at, t.flow.0, t.gen))));
+        }
+
+        fn check(&self, step: usize, a: &[FlowTimer], b: &[FlowTimer]) {
+            assert_eq!(a, b, "step {step}: timers diverged");
+            for &id in &self.live {
+                let ra = self.inc.rate_gbps(id).map(f64::to_bits);
+                let rb = self.refn.rate_gbps(id).map(f64::to_bits);
+                assert_eq!(ra, rb, "step {step}: rate of {id:?} diverged");
+                assert_eq!(
+                    self.inc.is_stalled(id),
+                    self.refn.is_stalled(id),
+                    "step {step}: stall state of {id:?} diverged"
+                );
+            }
+        }
+    }
+
+    /// The acceptance gate for §Perf L3: ~1k seeded random start / finish /
+    /// kill / link-flap operations, with the incremental allocator's rates
+    /// and timers asserted **bit-identical** to the reference global
+    /// allocator at every step. (Debug builds additionally cross-check
+    /// every pass inside `reallocate` itself.)
+    #[test]
+    fn randomized_equivalence_with_reference_allocator() {
+        let f = Fabric::build(&TopologyConfig { num_nodes: 4, ..Default::default() });
+        let mut m = Mirror::new(&f);
+        let mut rng = Rng::new(0x51CA1E);
+        let mut now = SimTime::ZERO;
+        let mut next_meta = 0u64;
+        // Track port states so flaps toggle coherently.
+        let mut down_ports: Vec<PortId> = Vec::new();
+        let ops = if cfg!(debug_assertions) { 400 } else { 1000 };
+        for step in 0..ops {
+            now = now + SimTime::ns(rng.range(1, 20_000));
+            match rng.below(10) {
+                // 0-4: fire the earliest pending completion timer.
+                0..=4 if !m.queue.is_empty() => {
+                    let Reverse((at, flow, gen)) = m.queue.pop().unwrap();
+                    let fire_at = at.max(now);
+                    now = fire_at;
+                    let (ma, ta) = m.inc.try_finish(FlowId(flow), gen, fire_at);
+                    let (mb, tb) = m.refn.try_finish(FlowId(flow), gen, fire_at);
+                    assert_eq!(ma, mb, "step {step}: finish verdict diverged");
+                    if ma.is_some() {
+                        m.live.retain(|&i| i != FlowId(flow));
+                    }
+                    m.check(step, &ta, &tb);
+                    m.push_timers(&ta);
+                }
+                // 5-6 (plus 0-4 while no timer is pending): start a flow
+                // on a random inter-node path (same- or cross-rail).
+                0..=6 => {
+                    let nodes = 4;
+                    let src = rng.below(nodes) as usize;
+                    let mut dst = rng.below(nodes) as usize;
+                    if dst == src {
+                        dst = (dst + 1) % nodes as usize;
+                    }
+                    let path = f.path_inter(
+                        port(src, rng.below(8) as usize),
+                        port(dst, rng.below(8) as usize),
+                    );
+                    let bytes = rng.range(1 << 10, 4 << 20);
+                    let tail = rng.range(0, 10_000);
+                    next_meta += 1;
+                    let (ia, ta) =
+                        m.inc.start(now, path.clone(), bytes, tail, FlowMeta(next_meta));
+                    let (ib, tb) = m.refn.start(now, path, bytes, tail, FlowMeta(next_meta));
+                    assert_eq!(ia, ib, "step {step}: flow ids diverged");
+                    m.live.push(ia);
+                    m.check(step, &ta, &tb);
+                    m.push_timers(&ta);
+                }
+                // 7: kill a random live flow.
+                7 if !m.live.is_empty() => {
+                    let id = m.live[rng.below(m.live.len() as u64) as usize];
+                    m.live.retain(|&i| i != id);
+                    let ta = m.inc.kill(id, now);
+                    let tb = m.refn.kill(id, now);
+                    m.check(step, &ta, &tb);
+                    m.push_timers(&ta);
+                }
+                // 8-9: flap a port (batched tx+rx, like the RDMA layer).
+                _ => {
+                    if !down_ports.is_empty() && rng.chance(0.6) {
+                        let p = down_ports.remove(rng.below(down_ports.len() as u64) as usize);
+                        let links = f.port_links(p);
+                        let ta = m.inc.set_links_up(&links, true, now);
+                        let tb = m.refn.set_links_up(&links, true, now);
+                        m.check(step, &ta, &tb);
+                        m.push_timers(&ta);
+                    } else {
+                        let p = port(rng.below(4) as usize, rng.below(8) as usize);
+                        if !down_ports.contains(&p) {
+                            down_ports.push(p);
+                            let links = f.port_links(p);
+                            let ta = m.inc.set_links_up(&links, false, now);
+                            let tb = m.refn.set_links_up(&links, false, now);
+                            m.check(step, &ta, &tb);
+                            m.push_timers(&ta);
+                        }
+                    }
+                }
+            }
+            assert_eq!(
+                m.inc.active_flows(),
+                m.refn.active_flows(),
+                "step {step}: live-flow sets diverged"
+            );
+        }
+        // The workload must have actually exercised the incremental path.
+        let a = m.inc.alloc_stats();
+        assert!(a.changes as usize > ops / 3, "changes={}", a.changes);
+        assert!(
+            a.flow_visits < m.refn.alloc_stats().flow_visits,
+            "incremental must do less work than the reference: {} vs {}",
+            a.flow_visits,
+            m.refn.alloc_stats().flow_visits
+        );
     }
 }

@@ -19,5 +19,5 @@
 pub mod flow;
 pub mod rdma;
 
-pub use flow::{FlowId, FlowMeta, FlowNet, FlowTimer};
+pub use flow::{AllocStats, FlowId, FlowMeta, FlowNet, FlowTimer};
 pub use rdma::{CompletionStatus, NetOutput, Qp, QpId, QpState, RdmaNet, WorkCompletion, WrId};

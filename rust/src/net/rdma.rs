@@ -497,10 +497,10 @@ impl RdmaNet {
         now: SimTime,
     ) -> NetOutput {
         let mut out = NetOutput::default();
-        let tx = fabric.port_tx(port);
-        let rx = fabric.port_rx(port);
-        out.timers.extend(self.flows.set_link_up(tx, up, now));
-        out.timers.extend(self.flows.set_link_up(rx, up, now));
+        // Both directions flap as one batch: a single component recompute
+        // (and one generation bump per affected flow) instead of two.
+        let links = fabric.port_links(port);
+        out.timers.extend(self.flows.set_links_up(&links, up, now));
         // Sorted for determinism: retry windows armed here schedule engine
         // events, and HashMap order would leak into timestamp tie-breaks.
         let mut qp_ids: Vec<QpId> = self.qps.keys().copied().collect();

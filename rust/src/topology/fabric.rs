@@ -144,6 +144,19 @@ impl Fabric {
         LinkId(self.port_index(p) * 2 + 1)
     }
 
+    /// Both unidirectional links of a NIC port `(tx, rx)` — the unit a
+    /// physical port flap touches, and the seed set for one batched
+    /// component recompute in the fluid allocator.
+    ///
+    /// Link ids are dense, stable and never reused for the lifetime of the
+    /// fabric (the layout offsets above are fixed at build time). That
+    /// stability is load-bearing: `net::FlowNet` keeps `Vec`-indexed
+    /// per-link state (reverse flow index, incast sender counts, component
+    /// stamps) keyed directly by `LinkId` and walks adjacency through it.
+    pub fn port_links(&self, p: PortId) -> [LinkId; 2] {
+        [self.port_tx(p), self.port_rx(p)]
+    }
+
     fn leaf_index(&self, rail: usize, plane: usize) -> usize {
         rail * self.ports_per_nic + plane
     }

@@ -14,9 +14,21 @@ use super::{Cluster, RankId};
 pub struct Ring {
     pub order: Vec<RankId>,
     pub rail: usize,
+    /// rank → index into `order`. Collectives call `next`/`prev` for every
+    /// rank of every step; a linear scan here made step issue O(ranks²),
+    /// which the 64-node (512-rank) experiments cannot afford.
+    pos_of: Vec<usize>,
 }
 
 impl Ring {
+    fn new(order: Vec<RankId>, rail: usize) -> Self {
+        let mut pos_of = vec![0; order.len()];
+        for (i, r) in order.iter().enumerate() {
+            pos_of[r.0] = i;
+        }
+        Ring { order, rail, pos_of }
+    }
+
     /// Successor of `r` on the ring.
     pub fn next(&self, r: RankId) -> RankId {
         let i = self.pos(r);
@@ -30,7 +42,7 @@ impl Ring {
     }
 
     fn pos(&self, r: RankId) -> usize {
-        self.order.iter().position(|&x| x == r).expect("rank not in ring")
+        self.pos_of[r.0]
     }
 }
 
@@ -56,7 +68,7 @@ pub fn build_rings(cluster: &Cluster, channels: usize) -> Vec<Ring> {
                     order.push(RankId(node * per + local));
                 }
             }
-            Ring { order, rail }
+            Ring::new(order, rail)
         })
         .collect()
 }

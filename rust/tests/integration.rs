@@ -214,10 +214,11 @@ fn every_experiment_id_parses_and_reports() {
         let (cmd, _) = coordinator::parse_args(&["exp".to_string(), id.to_string()]).unwrap();
         assert!(matches!(cmd, Command::Exp { id: parsed } if parsed == *id));
     }
-    // Debug builds skip the four slowest timeline experiments (the
-    // un-optimized simulator is ~10× slower; full coverage is a release
-    // concern — same policy as `large_cluster_alltoall`).
-    let heavy = ["fig13a", "fig18", "fig11", "fig13b"];
+    // Debug builds skip the slowest timeline experiments (the un-optimized
+    // simulator is ~10× slower and every allocation pass additionally
+    // cross-checks against the global reference allocator; full coverage
+    // is a release concern — same policy as `large_cluster_alltoall`).
+    let heavy = ["fig13a", "fig18", "fig11", "fig13b", "scale64"];
     let cfg = Config::paper_defaults();
     for (id, _) in EXPERIMENTS {
         if cfg!(debug_assertions) && heavy.contains(id) {
@@ -240,18 +241,23 @@ fn every_experiment_id_parses_and_reports() {
     assert!(coordinator::run_experiment("definitely-not-an-id", &cfg).is_err());
 }
 
-/// `vccl bench` must emit all four BENCH_*.json files with non-empty,
+/// `vccl bench` must emit all five BENCH_*.json files with non-empty,
 /// finite metric arrays (the acceptance gate for the perf trajectory).
 #[test]
-fn bench_emits_four_json_files_with_metrics() {
+fn bench_emits_json_files_with_metrics() {
     let dir = std::env::temp_dir().join(format!("vccl_bench_test_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let paths =
         bench::run_bench(&Config::paper_defaults(), &dir, &bench::BenchOpts { quick: true })
             .unwrap();
-    assert_eq!(paths.len(), 4);
-    for name in ["BENCH_p2p.json", "BENCH_failover.json", "BENCH_monitor.json", "BENCH_train.json"]
-    {
+    assert_eq!(paths.len(), 5);
+    for name in [
+        "BENCH_p2p.json",
+        "BENCH_failover.json",
+        "BENCH_monitor.json",
+        "BENCH_train.json",
+        "BENCH_simcore.json",
+    ] {
         let path = dir.join(name);
         assert!(paths.contains(&path), "missing {name}");
         let text = std::fs::read_to_string(&path).unwrap();
@@ -263,6 +269,9 @@ fn bench_emits_four_json_files_with_metrics() {
     let failover = std::fs::read_to_string(dir.join("BENCH_failover.json")).unwrap();
     assert!(failover.contains("failover.vccl.completed"));
     assert!(failover.contains("failover.nccl.hung"));
+    // §Perf L3 trajectory: the allocator work counters are tracked.
+    let simcore = std::fs::read_to_string(dir.join("BENCH_simcore.json")).unwrap();
+    assert!(simcore.contains("simcore.alloc.visit_reduction_x"));
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -357,6 +366,64 @@ fn trace_disabled_allocates_nothing_and_bench_identical() {
         assert_eq!(off, on, "{name} must be byte-identical with tracing on vs off");
     }
     let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------
+// Incremental allocator (§Perf L3)
+// ---------------------------------------------------------------------
+
+/// Full-stack equivalence: an entire failover scenario — chunked transfer,
+/// port death, retry window, failover, completion — driven once with the
+/// incremental component-scoped allocator and once with the global
+/// reference allocator must be *identical*: same finish time, same event
+/// count, same failover count. (`set_reference_mode` only exists in
+/// debug/test builds, so this test is debug-gated; the flow-level
+/// randomized bit-equivalence test in `net::flow` runs everywhere.)
+#[cfg(debug_assertions)]
+#[test]
+fn cluster_identical_under_reference_allocator() {
+    let run = |reference: bool| {
+        let mut cfg = fast_cfg();
+        cfg.vccl.channels = 1;
+        let mut s = ClusterSim::new(cfg);
+        if reference {
+            s.rdma.flows.set_reference_mode(true);
+        }
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        // 256MB (~5.5s at line rate) so the 2ms port-down lands
+        // mid-transfer and the full failover path runs.
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done());
+        (
+            s.ops[id.0].finished_at.unwrap().as_ns(),
+            s.engine.dispatched(),
+            s.stats.failovers,
+        )
+    };
+    let inc = run(false);
+    let refr = run(true);
+    assert_eq!(inc, refr, "incremental vs reference cluster trajectories diverged");
+    assert_eq!(inc.2, 1, "the scenario must actually fail over");
+}
+
+/// The allocator's work counters show the component win on a real
+/// collective: far fewer flow visits than the global floor.
+#[test]
+fn allocator_visits_stay_below_global_floor() {
+    let mut s = ClusterSim::new(fast_cfg());
+    let id = s.submit(CollKind::AllReduce, 8 << 20);
+    s.run_to_idle(100_000_000);
+    assert!(s.ops[id.0].is_done());
+    let a = s.rdma.flows.alloc_stats();
+    assert!(a.changes > 100, "changes={}", a.changes);
+    assert!(
+        a.flow_visits < a.global_floor,
+        "incremental visits {} must undercut the global floor {}",
+        a.flow_visits,
+        a.global_floor
+    );
 }
 
 // ---------------------------------------------------------------------
