@@ -1,0 +1,225 @@
+//! §Perf L4 acceptance gate: the RDMA layer's O(1) hot-path accounting —
+//! the per-port running backlog counter read on every successful WC and the
+//! port→QP reverse index walked on every flap — must do **≥10× fewer QP
+//! visits** than the scan-based reference paths on a 64-node flap-churn
+//! workload, and sustain a high event rate in wall-clock.
+//!
+//! Two measurement modes (mirroring `benches/flownet.rs`):
+//! - default build: the reference cost is the conservative *analytic floor*
+//!   (live QPs summed over backlog reads and flaps — exactly what the
+//!   pre-L4 scans examined);
+//! - `--features ref-alloc`: a second net is driven through the identical
+//!   workload in `RdmaNet::set_reference_mode`, so the comparison (work
+//!   counters *and* wall-clock) uses the real scans. Outputs are identical
+//!   by contract — the run asserts the success counts match.
+//!
+//! The deterministic counters behind the gate are also emitted into
+//! `BENCH_simcore.json` by `coordinator::bench::bench_simcore` (the
+//! `simcore.rdma.*` suite), which CI uploads as the perf-trajectory
+//! artifact.
+
+mod bench_util;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use vccl::config::{NetConfig, TopologyConfig};
+use vccl::net::{CompletionStatus, NetOutput, QpId, RdmaNet};
+use vccl::sim::SimTime;
+use vccl::topology::{Fabric, NicId, NodeId, PortId};
+use vccl::util::Rng;
+
+const NODES: usize = 64;
+const RAILS: usize = 8;
+const OPS: usize = 8_000;
+
+fn port(node: usize, nic: usize) -> PortId {
+    PortId { nic: NicId { node: NodeId(node), local: nic }, port: 0 }
+}
+
+/// Heap entry: (time, kind, a, b) with kind 0 = flow timer (flow, gen),
+/// 1 = retry deadline (qp, epoch), 2 = warm-up release (qp, 0).
+type Ev = Reverse<(SimTime, u8, u64, u32)>;
+
+/// Seeded churn on a 64-node fabric: rail-aligned ring QPs (the collective
+/// traffic shape), a steady stream of posts, port flaps whose heal times
+/// straddle the hardware retry window (so some recover silently and some
+/// drive QPs to error + proactive reset), and — like the monitor — one
+/// `port_backlog_bytes` read per successful WC. Deterministic, so the
+/// incremental and reference nets walk the exact same trajectory.
+/// Returns (successful WCs, retry-exceeded WCs, summed backlog reads).
+fn run_workload(net: &mut RdmaNet, fabric: &Fabric) -> (u64, u64, u64) {
+    let mut rng = Rng::new(0x9DAA64);
+    let qps: Vec<QpId> = (0..NODES)
+        .flat_map(|n| (0..RAILS).map(move |r| (n, r)))
+        .map(|(n, r)| net.create_qp(fabric, port(n, r), port((n + 1) % NODES, r)))
+        .collect();
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut now = SimTime::ZERO;
+    let mut down: Vec<(PortId, SimTime)> = Vec::new(); // (port, heals at)
+    let (mut successes, mut errors, mut backlog_sum) = (0u64, 0u64, 0u64);
+
+    // Route one NetOutput (and whatever the WC handling spawns) fully.
+    fn absorb(
+        net: &mut RdmaNet,
+        heap: &mut BinaryHeap<Ev>,
+        now: SimTime,
+        first: NetOutput,
+        successes: &mut u64,
+        errors: &mut u64,
+        backlog_sum: &mut u64,
+    ) {
+        let mut pending = vec![first];
+        while let Some(out) = pending.pop() {
+            for t in out.timers {
+                heap.push(Reverse((t.at, 0, t.flow.0, t.gen)));
+            }
+            for (qp, epoch, at) in out.retry_deadlines {
+                heap.push(Reverse((at, 1, qp.0, epoch)));
+            }
+            for (qp, at) in out.warmups {
+                heap.push(Reverse((at, 2, qp.0, 0)));
+            }
+            for wc in out.wcs {
+                match wc.status {
+                    CompletionStatus::Success => {
+                        *successes += 1;
+                        // The monitor's per-WC remaining-to-send read.
+                        let src = net.qp_src(wc.qp);
+                        *backlog_sum += net.port_backlog_bytes(src);
+                    }
+                    CompletionStatus::RetryExceeded => {
+                        *errors += 1;
+                        // VCCL's proactive reset keeps the QP in play.
+                        pending.push(net.reset_to_rts(wc.qp, now));
+                    }
+                    CompletionStatus::WrFlushed => {}
+                }
+            }
+        }
+    }
+
+    for _ in 0..OPS {
+        now = now + SimTime::ns(rng.range(500, 40_000));
+        // Heal every port whose flap expired.
+        while let Some(pos) = down.iter().position(|&(_, at)| at <= now) {
+            let (p, at) = down.swap_remove(pos);
+            let out = net.set_port_up(fabric, p, true, at.max(now));
+            absorb(net, &mut heap, now, out, &mut successes, &mut errors, &mut backlog_sum);
+        }
+        let roll = rng.below(100);
+        if roll < 4 {
+            // Port flap; heal times straddle the ≈8.4ms retry window, so
+            // some flaps recover silently and some exhaust the window.
+            let p = port(rng.below(NODES as u64) as usize, rng.below(RAILS as u64) as usize);
+            if !down.iter().any(|&(d, _)| d == p) {
+                let heal = now + SimTime::ns(rng.range(2_000_000, 30_000_000));
+                down.push((p, heal));
+                let out = net.set_port_up(fabric, p, false, now);
+                absorb(net, &mut heap, now, out, &mut successes, &mut errors, &mut backlog_sum);
+            }
+        } else if roll < 55 || heap.is_empty() {
+            let qp = qps[rng.below(qps.len() as u64) as usize];
+            let (_, out) = net.post_send(qp, rng.range(128 << 10, 2 << 20), now, 0);
+            absorb(net, &mut heap, now, out, &mut successes, &mut errors, &mut backlog_sum);
+        } else if let Some(Reverse((at, kind, a, b))) = heap.pop() {
+            now = now.max(at);
+            let out = match kind {
+                0 => net.on_flow_timer(vccl::net::FlowId(a), b, now),
+                1 => net.on_retry_deadline(QpId(a), b, now),
+                _ => net.on_warm(QpId(a), now),
+            };
+            absorb(net, &mut heap, now, out, &mut successes, &mut errors, &mut backlog_sum);
+        }
+    }
+    // Drain the tail: no new posts, so the heap converges — in-flight flows
+    // finish, stranded-on-dead-port QPs exhaust their windows and flush.
+    // (Bounded as a runaway backstop; the workload converges far earlier.)
+    let mut drain_budget = 200_000u32;
+    while let Some(Reverse((at, kind, a, b))) = heap.pop() {
+        now = now.max(at);
+        let out = match kind {
+            0 => net.on_flow_timer(vccl::net::FlowId(a), b, now),
+            1 => net.on_retry_deadline(QpId(a), b, now),
+            _ => net.on_warm(QpId(a), now),
+        };
+        absorb(net, &mut heap, now, out, &mut successes, &mut errors, &mut backlog_sum);
+        drain_budget -= 1;
+        if drain_budget == 0 {
+            break;
+        }
+    }
+    (successes, errors, backlog_sum)
+}
+
+fn fresh(fabric: &Fabric) -> RdmaNet {
+    // Shrink the retry window (4.096us × 2^10 × 2 ≈ 8.4ms) and warm-up so
+    // errors and resets actually cycle inside the sweep.
+    let cfg = NetConfig {
+        ib_timeout_exp: 10,
+        ib_retry_cnt: 2,
+        qp_warmup_ns: 5_000_000,
+        ..Default::default()
+    };
+    RdmaNet::new(fabric, cfg)
+}
+
+fn main() {
+    println!("== rdma: O(1) hot-path accounting (§Perf L4) ==");
+    let fabric = Fabric::build(&TopologyConfig { num_nodes: NODES, ..Default::default() });
+
+    // Wall-clock: churn throughput with the counter + index.
+    bench_util::bench("rdma: 64-node flap churn, incremental", 5, || {
+        let mut net = fresh(&fabric);
+        let _ = run_workload(&mut net, &fabric);
+    });
+
+    // Work counters from one deterministic run.
+    let mut net = fresh(&fabric);
+    let (successes, errors, _) = run_workload(&mut net, &fabric);
+    let w = net.rdma_stats();
+    assert!(successes > 1_000, "workload too idle: {successes} successful WCs");
+    assert!(errors > 20, "flaps must drive some QPs to error: {errors}");
+    assert!(w.flap_events > 200, "flap churn too light: {}", w.flap_events);
+    println!(
+        "   qps {}  backlog reads {} (visits {})  flaps {} (visits {})  successes {}  errors {}",
+        net.num_qps(),
+        w.backlog_reads,
+        w.backlog_qp_visits,
+        w.flap_events,
+        w.flap_qp_visits,
+        successes,
+        errors
+    );
+
+    // The reference run is timed once, not bench-looped: being painfully
+    // slow at 512 QPs is precisely the point of this PR.
+    #[cfg(feature = "ref-alloc")]
+    let (ref_visits, ref_mode) = {
+        let t0 = std::time::Instant::now();
+        let mut refnet = fresh(&fabric);
+        refnet.set_reference_mode(true);
+        let (ref_successes, ref_errors, _) = run_workload(&mut refnet, &fabric);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("rdma: 64-node flap churn, reference scans          single run {ms:>9.3} ms");
+        assert_eq!(
+            (ref_successes, ref_errors),
+            (successes, errors),
+            "reference and incremental trajectories must be identical"
+        );
+        let rw = refnet.rdma_stats();
+        (rw.backlog_qp_visits + rw.flap_qp_visits, "measured")
+    };
+    #[cfg(not(feature = "ref-alloc"))]
+    let (ref_visits, ref_mode) = (w.backlog_scan_floor + w.flap_scan_floor, "analytic-floor");
+
+    let visits = w.backlog_qp_visits + w.flap_qp_visits;
+    let reduction = ref_visits as f64 / visits.max(1) as f64;
+    println!(
+        "=> reference QP visits ({ref_mode}): {ref_visits}  reduction: {reduction:.1}x (target ≥ 10x)"
+    );
+    assert!(
+        reduction >= 10.0,
+        "§Perf L4 target missed: {reduction:.1}x < 10x fewer QP visits per WC/flap"
+    );
+}

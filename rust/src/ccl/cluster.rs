@@ -227,9 +227,11 @@ pub struct Stats {
     pub ce_ops: u64,
     /// Total payload bytes completed on the wire.
     pub wire_bytes: u64,
-    /// Per-port completion trace: (ns, port ordinal, bytes). Feeds the
-    /// bandwidth-timeline figures (13a, 18).
-    pub port_trace: Vec<(u64, usize, u64)>,
+    /// Per-port completion traffic, aggregated into monitor-window-sized
+    /// buckets (§Perf L4: O(ports × windows) memory, not one entry per
+    /// chunk). Feeds the bandwidth-timeline figures (13a, 18) and the
+    /// §3.3 recovery-gap metric.
+    pub port_traffic: crate::monitor::PortTraffic,
     /// Failovers and failbacks executed.
     pub failovers: u64,
     pub failbacks: u64,
@@ -309,6 +311,7 @@ impl ClusterSim {
             None
         };
         let seed = cfg.seed;
+        let trailing_ns = cfg.vccl.trailing_ns.max(1);
         tracer.record(
             SimTime::ZERO,
             TraceEvent::SimStarted { nodes: cfg.topo.num_nodes, ranks: n_ranks },
@@ -328,7 +331,13 @@ impl ClusterSim {
             monitor,
             rings,
             mempools,
-            stats: Stats { proxy_cpu_ns: vec![0; n_ranks], ..Default::default() },
+            stats: Stats {
+                proxy_cpu_ns: vec![0; n_ranks],
+                // Bucket the per-port completion traffic at the monitor's
+                // trailing-window granularity (§Perf L4 bounded stats).
+                port_traffic: crate::monitor::PortTraffic::new(trailing_ns),
+                ..Default::default()
+            },
             rng: Rng::new(seed),
             tracer,
             op_sms: HashMap::new(),
@@ -639,17 +648,22 @@ impl ClusterSim {
                 // new chunks already flow on the primary.
                 let port = self.rdma.qp_src(wc.qp);
                 let ordinal = self.topo.fabric.port_ordinal(port);
-                let backlog = self.rdma.port_backlog_bytes(port);
                 if let Some(mon) = &mut self.monitor {
+                    // §Perf L4: the remaining-to-send signal (§3.4 cond ii)
+                    // is an O(1) counter read, and only the monitor needs it.
+                    let backlog = self.rdma.port_backlog_bytes(port);
                     let _ = mon.on_wc(ordinal, wc.posted_at, wc.completed_at, wc.bytes, backlog);
                 }
-                self.stats.port_trace.push((wc.completed_at.as_ns(), ordinal, wc.bytes));
+                self.stats.port_traffic.record(wc.completed_at.as_ns(), ordinal, wc.bytes);
                 self.stats.wire_bytes += wc.bytes;
                 let Some(xid) = conn.cur_xfer() else { return };
                 self.on_chunk_complete(xid, conn_id);
             }
             CompletionStatus::RetryExceeded => {
-                self.stats.probe_dead += 0; // (case-1 path; probes counted separately)
+                // Case 1 (§3.3): the sender's own WC error. `probe_dead`
+                // deliberately does NOT move here — it counts only case-2
+                // δ-probe LinkDead verdicts (see `on_delta_check`); case-1
+                // failovers are visible as `stats.failovers`.
                 self.on_conn_failure(conn_id, wc.qp);
             }
             CompletionStatus::WrFlushed => {
@@ -1045,24 +1059,13 @@ impl ClusterSim {
         self.ops[op.0].is_done()
     }
 
-    /// Bandwidth timeline of a port: bucketed Gbps series from the WC trace.
+    /// Bandwidth timeline of a port: bucketed Gbps series from the windowed
+    /// per-port traffic aggregation (§Perf L4). Exact whenever `bucket` is
+    /// a multiple of the aggregation granularity (the monitor trailing
+    /// window — figures plot 1 s bins over the default 10 ms buckets).
     pub fn port_bandwidth_series(&self, port: PortId, bucket: SimTime) -> Vec<(f64, f64)> {
         let ordinal = self.topo.fabric.port_ordinal(port);
-        let b = bucket.as_ns().max(1);
-        let mut buckets: HashMap<u64, u64> = HashMap::new();
-        for &(t, p, bytes) in &self.stats.port_trace {
-            if p == ordinal {
-                *buckets.entry(t / b).or_default() += bytes;
-            }
-        }
-        let mut out: Vec<(f64, f64)> = buckets
-            .into_iter()
-            .map(|(k, bytes)| {
-                ((k * b) as f64 / 1e9, bytes as f64 * 8.0 / b as f64)
-            })
-            .collect();
-        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        out
+        self.stats.port_traffic.series_gbps(ordinal, bucket.as_ns())
     }
 }
 
@@ -1099,6 +1102,58 @@ mod tests {
         let t = op.finished_at.unwrap().since(op.started_at);
         let window = s.cfg.net.retry_window_ns();
         assert!(t.as_ns() > window, "t={t} must include the retry window");
+    }
+
+    /// Counter-semantics pin: `probe_dead` counts ONLY case-2 δ-probe
+    /// LinkDead verdicts. A case-1 failover — the sender's own
+    /// `RetryExceeded` WC — must leave it untouched (it used to carry a
+    /// dead `probe_dead += 0` statement on that path) and be visible as
+    /// `failovers` instead.
+    #[test]
+    fn retry_exceeded_failover_does_not_count_as_probe_death() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done());
+        assert_eq!(s.stats.failovers, 1, "case 1 must fail over");
+        assert_eq!(s.stats.probe_dead, 0, "case 1 is not a probe death");
+    }
+
+    /// §Perf L4 regression: the failed primary port's running backlog
+    /// drops to zero the moment its WRs are flushed and the pointers
+    /// migrate, and the re-posted window shows up on the backup port.
+    #[test]
+    fn pointer_migration_rollback_drops_primary_backlog() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        let down_at = SimTime::ms(2);
+        s.inject_port_down(port, down_at);
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        // Mid-transfer, pre-failure: the primary carries a live window.
+        s.run_until(SimTime::ms(1));
+        assert!(s.rdma.port_backlog_bytes(port) > 0, "window must be outstanding");
+        // Ride just past the retry window: QP errors, WRs flush, pointers
+        // migrate, the rolled-back window re-posts on the backup (1 ms in —
+        // well before the ~5 ms the remaining 246 MB needs to drain).
+        let window = SimTime::ns(s.cfg.net.retry_window_ns());
+        s.run_until(down_at + window + SimTime::ms(1));
+        assert_eq!(s.stats.failovers, 1, "failover must have happened");
+        assert!(!s.ops[id.0].is_done(), "transfer still in flight on the backup");
+        assert_eq!(
+            s.rdma.port_backlog_bytes(port),
+            0,
+            "rollback must drop the dead primary port's backlog"
+        );
+        let bport = s.conns.iter().find_map(|c| c.backup_port).unwrap();
+        assert!(
+            s.rdma.port_backlog_bytes(bport) > 0,
+            "re-posted window must be outstanding on the backup port"
+        );
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done());
+        assert_eq!(s.rdma.port_backlog_bytes(bport), 0);
     }
 
     #[test]

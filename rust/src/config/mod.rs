@@ -327,6 +327,21 @@ impl Config {
         c
     }
 
+    /// 256-node scaling preset (§Perf L4, the `scale256` experiment):
+    /// `scale64` widened to 256 nodes (2048 GPUs) — and, unlike `scale64`,
+    /// the in-band monitor stays ON: its per-WC remaining-to-send read is
+    /// an O(1) counter lookup now (`RdmaNet::port_backlog_bytes`), so the
+    /// §3.4 observability pillar is affordable at the scale the paper's
+    /// reliability results actually live in. Only tractable with both the
+    /// incremental flow allocator (§Perf L3) and the O(1) RDMA accounting
+    /// (§Perf L4) — the pre-L4 scans cost O(QPs) per WC and per flap.
+    pub fn scale256() -> Self {
+        let mut c = Self::scale64();
+        c.topo.num_nodes = 256;
+        c.vccl.monitor = true;
+        c
+    }
+
     /// NCCLX-like configuration (SM-free data path + 1-SM ordering kernel).
     pub fn ncclx_like() -> Self {
         let mut c = Self::paper_defaults();
@@ -467,6 +482,23 @@ mod tests {
         assert_eq!(x.vccl.transport, Transport::NcclxLike);
         assert!(v.vccl.fault_tolerance && !n.vccl.fault_tolerance);
         assert!(v.vccl.zero_copy && !n.vccl.zero_copy);
+    }
+
+    #[test]
+    fn scale_presets_widen_the_cluster() {
+        let s64 = Config::scale64();
+        let s256 = Config::scale256();
+        assert_eq!(s64.topo.num_nodes, 64);
+        assert_eq!(s256.topo.num_nodes, 256);
+        assert_eq!(s256.topo.gpus_per_node * s256.topo.num_nodes, 2048);
+        // scale64 predates the O(1) backlog counter and turns the monitor
+        // off; scale256 exists to show the monitor is affordable at scale.
+        assert!(!s64.vccl.monitor && s256.vccl.monitor);
+        // Both shrink the failure machinery's time constants identically.
+        assert_eq!(s64.net.ib_timeout_exp, s256.net.ib_timeout_exp);
+        assert_eq!(s64.net.qp_warmup_ns, s256.net.qp_warmup_ns);
+        assert_eq!(s64.vccl.channels, 1);
+        assert_eq!(s256.vccl.channels, 1);
     }
 
     #[test]

@@ -154,16 +154,12 @@ pub fn bench_failover(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     r.push("failover.vccl.completion_ms", finished_ms, "ms");
     r.push("failover.vccl.failovers", s.stats.failovers as f64, "count");
     // Recovery gap: port-down → first chunk completion on the backup port.
+    // Exact even under the §Perf L4 windowed aggregation: the backup port
+    // is silent before failover, so its first completion is stored exactly.
     if let Some(bp) = s.conns.iter().find_map(|c| c.backup_port) {
         let ord = s.topo.fabric.port_ordinal(bp);
-        let first = s
-            .stats
-            .port_trace
-            .iter()
-            .filter(|&&(t, p, _)| p == ord && t >= down_at.as_ns())
-            .map(|&(t, _, _)| t)
-            .min();
-        if let Some(t) = first {
+        if let Some(t) = s.stats.port_traffic.first_completion_at_or_after(ord, down_at.as_ns())
+        {
             r.push(
                 "failover.vccl.recovery_gap_ms",
                 (t - down_at.as_ns()) as f64 / 1e6,
@@ -187,16 +183,16 @@ pub fn bench_failover(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     r
 }
 
-/// §Perf L3: allocator work per network change, from the deterministic
-/// [`crate::net::AllocStats`] counters (pure functions of simulated
-/// activity, so the JSON stays bit-stable across machines). Wall-clock
-/// reallocation throughput — which is machine-dependent — lives in
-/// `benches/flownet.rs`, which also enforces the ≥10× visit-reduction
-/// acceptance gate against the reference allocator.
+/// §Perf L3 + L4: simulator-core work per change, from the deterministic
+/// [`crate::net::AllocStats`] and [`crate::net::RdmaStats`] counters (pure
+/// functions of simulated activity, so the JSON stays bit-stable across
+/// machines). Wall-clock throughput — which is machine-dependent — lives in
+/// `benches/flownet.rs` and `benches/rdma.rs`, which also enforce the ≥10×
+/// visit-reduction acceptance gates against the reference algorithms.
 pub fn bench_simcore(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     let mut r = BenchReport::new(
         "simcore",
-        "§Perf L3 incremental flow allocator: visits per network change",
+        "§Perf L3/L4 simulator core: allocator flow-visits + RDMA QP-visits per change",
     );
     let nodes = if opts.quick { 4 } else { 16 };
     let mut c = experiments::transport_cfg(cfg, "vccl", nodes, 1);
@@ -217,6 +213,40 @@ pub fn bench_simcore(cfg: &Config, opts: &BenchOpts) -> BenchReport {
         "ratio",
     );
     r.push("simcore.alloc.max_component_flows", a.max_component as f64, "count");
+
+    // §Perf L4 (`bench_rdma` suite): RDMA hot-path accounting work on a
+    // monitored flap-churn workload — every successful WC reads the
+    // per-port backlog (§3.4 condition ii) and every flap walks the
+    // port→QP index. The flaps heal inside the retry window ("about half
+    // of flaps recover within seconds" — §3.3) so all transfers complete.
+    let mut c = experiments::transport_cfg(cfg, "vccl", nodes, 1);
+    c.net.ib_timeout_exp = 10;
+    c.net.ib_retry_cnt = 2;
+    c.vccl.monitor = true;
+    let mut s = ClusterSim::new(c);
+    let mut ids = Vec::new();
+    for pair in 0..nodes / 2 {
+        let src = RankId(pair * 2 * 8);
+        let dst = RankId((pair * 2 + 1) * 8);
+        ids.push(s.submit_p2p(src, dst, 32 << 20));
+    }
+    for pair in 0..(nodes / 2).min(4) {
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(pair * 2 * 8)));
+        let down = SimTime::us(200 + 150 * pair as u64);
+        s.inject_port_down(port, down);
+        s.inject_port_up(port, down + SimTime::ms(3));
+    }
+    s.run_to_idle(100_000_000);
+    assert!(ids.iter().all(|id| s.ops[id.0].is_done()), "rdma churn transfers must complete");
+    let w = s.rdma.rdma_stats();
+    r.push("simcore.rdma.qps", s.rdma.num_qps() as f64, "count");
+    r.push("simcore.rdma.backlog_reads", w.backlog_reads as f64, "count");
+    r.push("simcore.rdma.backlog_qp_visits", w.backlog_qp_visits as f64, "count");
+    r.push("simcore.rdma.backlog_scan_floor_visits", w.backlog_scan_floor as f64, "count");
+    r.push("simcore.rdma.flap_events", w.flap_events as f64, "count");
+    r.push("simcore.rdma.flap_qp_visits", w.flap_qp_visits as f64, "count");
+    r.push("simcore.rdma.flap_scan_floor_visits", w.flap_scan_floor as f64, "count");
+    r.push("simcore.rdma.visit_reduction_x", w.visit_reduction(), "ratio");
     r
 }
 
@@ -375,8 +405,9 @@ mod tests {
         }
     }
 
-    /// The incremental allocator must beat the global floor even on the
-    /// quick 4-node workload (the 64-node gate lives in benches/flownet.rs).
+    /// The incremental allocator and the O(1) RDMA accounting must beat
+    /// their scan floors even on the quick 4-node workload (the 64-node
+    /// gates live in benches/flownet.rs and benches/rdma.rs).
     #[test]
     fn simcore_reports_visit_reduction() {
         let rep = bench_simcore(&Config::paper_defaults(), &BenchOpts { quick: true });
@@ -392,6 +423,14 @@ mod tests {
             get("simcore.alloc.visit_reduction_x") > 2.0,
             "even 4 nodes must show a component-scoping win: {}x",
             get("simcore.alloc.visit_reduction_x")
+        );
+        // §Perf L4: the monitored churn workload exercises both hot paths.
+        assert!(get("simcore.rdma.backlog_reads") > 50.0);
+        assert!(get("simcore.rdma.flap_events") >= 4.0);
+        assert!(
+            get("simcore.rdma.visit_reduction_x") > 2.0,
+            "even 4 QPs must show the counter/index win: {}x",
+            get("simcore.rdma.visit_reduction_x")
         );
     }
 }

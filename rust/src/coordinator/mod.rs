@@ -119,6 +119,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("hostfunc", "Fig 5 ablation: hostFunc ordering deadlock"),
     ("retrywin", "ablation: retry window before failover vs immediate"),
     ("scale64", "64-node (512-GPU) allreduce + failover sweep (§Perf L3)"),
+    ("scale256", "256-node (2048-GPU) monitored allreduce + multi-failure sweep (§Perf L4)"),
 ];
 
 /// Run one experiment by id; returns the report text.
@@ -143,6 +144,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         "hostfunc" => experiments::hostfunc_ablation(cfg),
         "retrywin" => reliability::retrywin_ablation(cfg),
         "scale64" => experiments::scale64_cluster(cfg),
+        "scale256" => experiments::scale256_cluster(cfg),
         "list" => {
             let mut out = String::new();
             for (id, desc) in EXPERIMENTS {

@@ -17,9 +17,11 @@ use crate::trace::chrome::{self, ChromeMeta};
 use crate::trace::{timeline, Incident, TraceRecord, TraceSink};
 
 /// Ring floor for traced experiment runs: big enough to hold every event a
-/// full `fig13a` timeline emits (~300 k), so the causal chain is never
-/// evicted mid-run. `--set trace.ring_capacity=N` can only raise it.
-const TRACE_CMD_RING_FLOOR: usize = 1 << 19;
+/// full `fig13a` timeline emits (~300 k instants plus one `AllocPass` per
+/// network change since the allocator got trace-spanned), so the causal
+/// chain is never evicted mid-run. `--set trace.ring_capacity=N` can only
+/// raise it.
+const TRACE_CMD_RING_FLOOR: usize = 1 << 20;
 
 /// Everything one traced run produced.
 #[derive(Debug)]

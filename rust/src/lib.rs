@@ -21,7 +21,8 @@
 //!   Chrome-trace export and anomaly snapshots (`vccl trace <id>`).
 //! - [`topology`] — servers, GPUs, RNICs, NVLink, two-tier rail-optimized CLOS.
 //! - [`net`] — RDMA verbs simulation: QPs, WR/WC/CQ, retry-timeout, CTS
-//!   credits, max-min fair link sharing, incast/PFC behaviour, port failures.
+//!   credits, max-min fair link sharing, incast/PFC behaviour, port failures;
+//!   hot paths are O(changed-entities), not O(cluster) (DESIGN.md §Perf L3/L4).
 //! - [`gpu`] — SM pool + block scheduler, GEMM wave/straggler model
 //!   (paper Appendix E), copy engines, CUDA streams and ordering primitives.
 //! - [`ccl`] — the collective library itself: communicators, transports

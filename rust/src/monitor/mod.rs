@@ -31,6 +31,140 @@ use crate::sim::SimTime;
 use crate::trace::{TraceEvent, Tracer};
 use std::collections::HashMap;
 
+/// §Perf L4: bounded per-port completion-traffic aggregation.
+///
+/// Replaces the unbounded per-WC `(ns, port, bytes)` trace the cluster kept
+/// for the bandwidth-timeline figures (13a, 18): completions are folded
+/// into fixed-width time buckets sized to the monitor's trailing window
+/// (`vccl.trailing_ns`), so memory is **O(ports × elapsed windows)** instead
+/// of O(total chunks). Exact per-port first/last completion instants are
+/// retained for gap measurements (the §3.3 recovery-gap metric).
+#[derive(Debug, Clone)]
+pub struct PortTraffic {
+    bucket_ns: u64,
+    ports: HashMap<usize, PortBuckets>,
+}
+
+/// One port's aggregated completion traffic.
+#[derive(Debug, Clone)]
+pub struct PortBuckets {
+    /// Exact instant of the port's first recorded completion.
+    pub first_ns: u64,
+    /// Exact instant of the port's latest recorded completion.
+    pub last_ns: u64,
+    /// Total completed bytes on the port.
+    pub total_bytes: u64,
+    /// `(bucket index, bytes)`, ascending. Per-port completion times are
+    /// nondecreasing (the event loop's clock is monotone), so appends keep
+    /// the vec sorted; an out-of-order record falls back to insertion.
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl Default for PortTraffic {
+    fn default() -> Self {
+        // The monitor's default trailing window — read off the config
+        // default so the two can never silently diverge.
+        PortTraffic::new(crate::config::VcclConfig::default().trailing_ns)
+    }
+}
+
+impl PortTraffic {
+    pub fn new(bucket_ns: u64) -> Self {
+        PortTraffic { bucket_ns: bucket_ns.max(1), ports: HashMap::new() }
+    }
+
+    /// Aggregation granularity in nanoseconds.
+    pub fn bucket_ns(&self) -> u64 {
+        self.bucket_ns
+    }
+
+    /// Fold one completion into its port's current bucket. O(1) amortized.
+    pub fn record(&mut self, at_ns: u64, port: usize, bytes: u64) {
+        let idx = at_ns / self.bucket_ns;
+        let p = self.ports.entry(port).or_insert_with(|| PortBuckets {
+            first_ns: at_ns,
+            last_ns: at_ns,
+            total_bytes: 0,
+            buckets: Vec::new(),
+        });
+        p.first_ns = p.first_ns.min(at_ns);
+        p.last_ns = p.last_ns.max(at_ns);
+        p.total_bytes += bytes;
+        match p.buckets.last_mut() {
+            Some((i, b)) if *i == idx => *b += bytes,
+            Some((i, _)) if *i > idx => match p.buckets.binary_search_by_key(&idx, |e| e.0) {
+                Ok(pos) => p.buckets[pos].1 += bytes,
+                Err(pos) => p.buckets.insert(pos, (idx, bytes)),
+            },
+            _ => p.buckets.push((idx, bytes)),
+        }
+    }
+
+    /// A port's aggregated record, if it saw any traffic.
+    pub fn port(&self, port: usize) -> Option<&PortBuckets> {
+        self.ports.get(&port)
+    }
+
+    /// Bandwidth series of a port re-bucketed to `bucket_ns`-wide bins:
+    /// `(bin start in seconds, Gbps)`, ascending. Exact when `bucket_ns`
+    /// is a multiple of the aggregation granularity (the usual case — the
+    /// figures plot 1 s bins over 10 ms buckets); otherwise bytes are
+    /// attributed by fine-bucket start. A request finer than the
+    /// aggregation granularity is clamped up to it — the per-completion
+    /// times are gone, and dividing a whole fine bucket's bytes by a
+    /// smaller bin width would inflate the Gbps values.
+    pub fn series_gbps(&self, port: usize, bucket_ns: u64) -> Vec<(f64, f64)> {
+        let b = bucket_ns.max(self.bucket_ns).max(1);
+        let Some(p) = self.ports.get(&port) else { return Vec::new() };
+        let mut coarse: Vec<(u64, u64)> = Vec::new();
+        for &(idx, bytes) in &p.buckets {
+            let c = idx * self.bucket_ns / b;
+            match coarse.last_mut() {
+                Some((ci, cb)) if *ci == c => *cb += bytes,
+                _ => coarse.push((c, bytes)),
+            }
+        }
+        coarse
+            .into_iter()
+            .map(|(c, bytes)| ((c * b) as f64 / 1e9, bytes as f64 * 8.0 / b as f64))
+            .collect()
+    }
+
+    /// First completion at or after `ns` on a port. Exact when the port's
+    /// very first completion qualifies (the §3.3 recovery-gap case: a
+    /// backup port is silent until failover). Otherwise a **lower bound**:
+    /// the first bucket that could still contain qualifying completions is
+    /// reported, clamped to the cutoff. A bucket straddling the cutoff is
+    /// attributed conservatively (its per-completion times are gone), so
+    /// the answer never skips past real traffic, is within one bucket
+    /// width of the truth when that bucket holds a qualifying completion —
+    /// and can be earlier than the truth when it doesn't. Derived metrics
+    /// (the recovery gap) inherit the lower-bound reading in that case.
+    pub fn first_completion_at_or_after(&self, port: usize, ns: u64) -> Option<u64> {
+        let p = self.ports.get(&port)?;
+        if p.first_ns >= ns {
+            return Some(p.first_ns);
+        }
+        if p.last_ns < ns {
+            return None;
+        }
+        p.buckets
+            .iter()
+            .map(|&(i, _)| i * self.bucket_ns)
+            .find(|&t| t + self.bucket_ns > ns)
+            .map(|t| t.max(ns))
+    }
+
+    /// Approximate resident size (the bounded-memory guarantee's witness).
+    pub fn memory_bytes(&self) -> usize {
+        self.ports
+            .values()
+            .map(|p| std::mem::size_of::<PortBuckets>() + p.buckets.len() * 16)
+            .sum::<usize>()
+            + std::mem::size_of::<Self>()
+    }
+}
+
 /// Per-port monitor bundle: one estimator + one pinpointer per RNIC port,
 /// keyed by an opaque port index (the cluster maps `PortId` → index).
 #[derive(Debug)]
@@ -142,6 +276,63 @@ mod tests {
     use super::*;
     use crate::config::VcclConfig;
     use crate::trace::{TraceSink, Tracer};
+
+    /// §Perf L4: memory is bounded by elapsed windows, not completions —
+    /// 100k completions inside one window collapse into one bucket.
+    #[test]
+    fn port_traffic_memory_is_window_bounded() {
+        let mut t = PortTraffic::new(10_000_000); // 10ms buckets
+        for i in 0..100_000u64 {
+            t.record(i * 50, 3, 1 << 20); // all inside the first 5ms
+        }
+        let p = t.port(3).unwrap();
+        assert_eq!(p.buckets.len(), 1, "one window → one bucket");
+        assert_eq!(p.total_bytes, 100_000 << 20);
+        assert_eq!(p.first_ns, 0);
+        assert_eq!(p.last_ns, 99_999 * 50);
+        // Spread over 50 windows → at most 50 buckets.
+        let mut t = PortTraffic::new(10_000_000);
+        for i in 0..100_000u64 {
+            t.record(i * 5_000, 3, 1);
+        }
+        assert_eq!(t.port(3).unwrap().buckets.len(), 50);
+    }
+
+    /// Re-bucketing to a coarser series is exact when the coarse bin is a
+    /// multiple of the aggregation granularity.
+    #[test]
+    fn port_traffic_series_rebuckets_exactly() {
+        let mut t = PortTraffic::new(10_000_000);
+        // 1 GB in second 0, 2 GB in second 2, nothing in second 1.
+        t.record(400_000_000, 7, 1 << 30);
+        t.record(2_100_000_000, 7, 1 << 30);
+        t.record(2_900_000_000, 7, 1 << 30);
+        let s = t.series_gbps(7, 1_000_000_000);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0, 0.0);
+        assert!((s[0].1 - (1u64 << 30) as f64 * 8.0 / 1e9).abs() < 1e-9);
+        assert_eq!(s[1].0, 2.0);
+        assert!((s[1].1 - 2.0 * (1u64 << 30) as f64 * 8.0 / 1e9).abs() < 1e-9);
+        assert!(t.series_gbps(8, 1_000_000_000).is_empty(), "silent port → empty series");
+    }
+
+    /// The recovery-gap query: exact for a port whose first completion is
+    /// past the cutoff (the backup-port case), bucket-granular otherwise —
+    /// and a bucket straddling the cutoff must not be skipped past.
+    #[test]
+    fn port_traffic_first_completion_query() {
+        let mut t = PortTraffic::new(1_000);
+        t.record(12_345, 0, 1);
+        t.record(12_900, 0, 1);
+        t.record(20_000, 0, 1);
+        assert_eq!(t.first_completion_at_or_after(0, 1_000), Some(12_345), "exact first");
+        assert_eq!(t.first_completion_at_or_after(0, 15_000), Some(20_000), "bucket start");
+        // Cutoff inside a bucket that holds qualifying traffic (12_900):
+        // the straddling bucket is reported (clamped), never skipped.
+        assert_eq!(t.first_completion_at_or_after(0, 12_500), Some(12_500), "straddle");
+        assert_eq!(t.first_completion_at_or_after(0, 25_000), None, "past all traffic");
+        assert_eq!(t.first_completion_at_or_after(9, 0), None, "unknown port");
+    }
 
     #[test]
     fn non_healthy_verdicts_reach_the_flight_recorder() {

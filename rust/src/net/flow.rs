@@ -463,6 +463,12 @@ impl FlowNet {
             let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
             ids.sort_unstable();
             self.alloc.max_component = self.alloc.max_component.max(ids.len() as u64);
+            // Reference mode walks the whole net — the AllocPass payload
+            // reports that honestly (see the TraceEvent doc).
+            self.tracer.record(
+                now,
+                TraceEvent::AllocPass { flows: ids.len(), links: self.links.len() },
+            );
             let (rates, visits) = self.reference_rates();
             self.alloc.flow_visits += visits;
             return self.apply_rates(now, &ids, &rates);
@@ -470,6 +476,11 @@ impl FlowNet {
 
         let (ids, comp_links) = self.component(seeds);
         self.alloc.max_component = self.alloc.max_component.max(ids.len() as u64);
+        // Flight-recorder span of the allocator's locality: one record per
+        // pass, folded into a component-size histogram by the Chrome
+        // exporter. Pure observation — counters and rates are unaffected.
+        self.tracer
+            .record(now, TraceEvent::AllocPass { flows: ids.len(), links: comp_links.len() });
         let rates = self.waterfill(&ids, &comp_links);
         let timers = self.apply_rates(now, &ids, &rates);
         #[cfg(debug_assertions)]

@@ -20,4 +20,6 @@ pub mod flow;
 pub mod rdma;
 
 pub use flow::{AllocStats, FlowId, FlowMeta, FlowNet, FlowTimer};
-pub use rdma::{CompletionStatus, NetOutput, Qp, QpId, QpState, RdmaNet, WorkCompletion, WrId};
+pub use rdma::{
+    CompletionStatus, NetOutput, Qp, QpId, QpState, RdmaNet, RdmaStats, WorkCompletion, WrId,
+};

@@ -16,13 +16,42 @@
 //!
 //! The layer is engine-agnostic: every mutating call returns a [`NetOutput`]
 //! of timers the owner must schedule and WCs to deliver.
+//!
+//! # §Perf L4: O(1) hot-path accounting
+//!
+//! Two operations used to scan every QP in the net:
+//!
+//! - [`RdmaNet::port_backlog_bytes`] — the monitor's "remaining-to-send"
+//!   signal, read once per successful WC (§3.4 condition ii) — summed all
+//!   outstanding WRs of all QPs on the port. It is now a per-port running
+//!   counter maintained on `post_send` / WC success / error flush, so every
+//!   read is one hash lookup.
+//! - [`RdmaNet::set_port_up`] — the failover trigger (§3.3) — armed/disarmed
+//!   retry windows by iterating *every* QP on each flap. It now walks a
+//!   persistent `link → crossing QPs` reverse index (built from each QP's
+//!   path at creation; paths are immutable for a QP's lifetime, so the
+//!   index is append-only) and visits only the QPs whose path actually
+//!   crosses the flapped port. Skipped QPs provably contribute no output:
+//!   between events, an RTS QP is armed **iff** it is stalled, and only a
+//!   crossing QP's stall state can change on a flap.
+//!
+//! Both keep the scan-based implementations as reference paths under
+//! `cfg(any(test, debug_assertions, feature = "ref-alloc"))`: debug builds
+//! cross-check the counter and the index against the scans on every call,
+//! and `RdmaNet::set_reference_mode` forces the scans so
+//! `benches/rdma.rs` can measure the work ratio (≥10× fewer QP visits is
+//! the acceptance gate, tracked by [`RdmaStats`] in `BENCH_simcore.json`).
+//! Outputs are identical in both modes by contract — the sorted-iteration
+//! determinism guarantee from the flight-recorder PR is unchanged because
+//! the crossing set is iterated in the same sorted order as the full scan,
+//! restricted to the QPs that produce output. See DESIGN.md "§Perf L4".
 
 use std::collections::HashMap;
 
 use super::flow::{FlowId, FlowMeta, FlowNet, FlowTimer};
 use crate::config::NetConfig;
 use crate::sim::SimTime;
-use crate::topology::{Fabric, Path, PortId};
+use crate::topology::{Fabric, LinkId, Path, PortId};
 use crate::trace::{TraceEvent, Tracer};
 
 /// Queue-pair identifier.
@@ -53,7 +82,7 @@ pub enum CompletionStatus {
 }
 
 /// A work completion, timestamped for the monitor.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WorkCompletion {
     pub qp: QpId,
     pub wr: WrId,
@@ -128,6 +157,35 @@ impl Qp {
     }
 }
 
+/// §Perf L4 instrumentation: how much work the RDMA hot paths do.
+/// Deterministic (pure counters over simulated activity), so the numbers
+/// are safe to emit into `BENCH_simcore.json` (the `simcore.rdma.*` suite).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RdmaStats {
+    /// `port_backlog_bytes` reads (one per successful WC from the monitor).
+    pub backlog_reads: u64,
+    /// QPs examined by those reads: 1 per read incrementally; all QPs per
+    /// read in reference mode.
+    pub backlog_qp_visits: u64,
+    /// What the pre-L4 scan would have examined: live QPs summed over reads.
+    pub backlog_scan_floor: u64,
+    /// `set_port_up` calls (one per port state change).
+    pub flap_events: u64,
+    /// QPs visited by those calls: the crossing set incrementally; every QP
+    /// in the net in reference mode.
+    pub flap_qp_visits: u64,
+    /// What the pre-L4 scan would have examined: live QPs summed over flaps.
+    pub flap_scan_floor: u64,
+}
+
+impl RdmaStats {
+    /// Total QP visits vs what the scans would have cost (the ≥10× gate).
+    pub fn visit_reduction(&self) -> f64 {
+        (self.backlog_scan_floor + self.flap_scan_floor) as f64
+            / (self.backlog_qp_visits + self.flap_qp_visits).max(1) as f64
+    }
+}
+
 /// The RDMA network: QPs over a [`FlowNet`].
 pub struct RdmaNet {
     pub flows: FlowNet,
@@ -135,6 +193,20 @@ pub struct RdmaNet {
     qps: HashMap<QpId, Qp>,
     next_qp: u64,
     flow_owner: HashMap<FlowId, (QpId, WrId)>,
+    /// §Perf L4: per-source-port un-ACKed bytes, maintained incrementally
+    /// (post adds, WC success / error flush subtract). The monitor's RTS
+    /// signal is one lookup here instead of an all-QP scan.
+    port_backlog: HashMap<PortId, u64>,
+    /// §Perf L4: link → QPs whose path crosses it, kept sorted (QP ids are
+    /// allocated monotonically and paths are immutable, so plain appends
+    /// preserve the order). Indexed by dense `LinkId` like the flow layer's
+    /// reverse index — `Fabric::port_links` documents the id stability.
+    link_qps: Vec<Vec<QpId>>,
+    stats: RdmaStats,
+    /// Force the scan-based reference paths (work-ratio measurement in
+    /// `benches/rdma.rs`; outputs are identical by contract).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    force_scan: bool,
     /// Flight recorder (disabled by default; install via `set_tracer`).
     tracer: Tracer,
 }
@@ -148,8 +220,31 @@ impl RdmaNet {
             qps: HashMap::new(),
             next_qp: 0,
             flow_owner: HashMap::new(),
+            port_backlog: HashMap::new(),
+            link_qps: vec![Vec::new(); fabric.num_links()],
+            stats: RdmaStats::default(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            force_scan: false,
             tracer: Tracer::disabled(),
         }
+    }
+
+    /// §Perf L4 work counters (see [`RdmaStats`]).
+    pub fn rdma_stats(&self) -> RdmaStats {
+        self.stats
+    }
+
+    /// Number of live QPs (the scan cost the incremental paths avoid).
+    pub fn num_qps(&self) -> usize {
+        self.qps.len()
+    }
+
+    /// Answer hot-path queries with the scan-based reference algorithms
+    /// instead of the counter/index. Outputs are identical by contract;
+    /// only the work (and [`RdmaStats`]) differs.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_reference_mode(&mut self, on: bool) {
+        self.force_scan = on;
     }
 
     /// Install a flight-recorder handle on this layer AND the fluid-flow
@@ -171,6 +266,13 @@ impl RdmaNet {
         self.next_qp += 1;
         let path = fabric.path_inter(src, dst);
         let src_ordinal = fabric.port_ordinal(src);
+        // §Perf L4 reverse index: ids are monotone, so appends stay sorted.
+        // A QP's path never changes after creation (failover activates a
+        // *different* QP; reset keeps the path), so entries are permanent.
+        for l in &path.links {
+            debug_assert!(self.link_qps[l.0].last().map_or(true, |&q| q < id));
+            self.link_qps[l.0].push(id);
+        }
         self.qps.insert(
             id,
             Qp {
@@ -214,13 +316,64 @@ impl RdmaNet {
 
     /// Total un-ACKed bytes on a port's QPs — the monitor's
     /// "remaining-to-send" (RTS) signal (§3.4 pinpointing condition ii).
-    pub fn port_backlog_bytes(&self, port: PortId) -> u64 {
+    /// §Perf L4: one counter lookup, called once per successful WC; debug
+    /// builds cross-check against `reference_port_backlog` (the retained
+    /// scan) on every read.
+    pub fn port_backlog_bytes(&mut self, port: PortId) -> u64 {
+        self.stats.backlog_reads += 1;
+        self.stats.backlog_scan_floor += self.qps.len() as u64;
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.force_scan {
+            self.stats.backlog_qp_visits += self.qps.len() as u64;
+            return self.reference_port_backlog(port);
+        }
+        self.stats.backlog_qp_visits += 1;
+        let bytes = self.port_backlog.get(&port).copied().unwrap_or(0);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            bytes,
+            self.reference_port_backlog(port),
+            "backlog counter diverged from the all-QP scan for {port}"
+        );
+        bytes
+    }
+
+    /// The pre-§Perf-L4 backlog computation, kept verbatim as the reference
+    /// the running counter is checked against (debug builds: every read).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn reference_port_backlog(&self, port: PortId) -> u64 {
         self.qps
             .values()
             .filter(|q| q.src == port)
             .flat_map(|q| q.outstanding.iter())
             .map(|w| w.bytes)
             .sum()
+    }
+
+    /// Sorted QPs whose path crosses any of `links`, read off the
+    /// persistent reverse index (O(crossing QPs), not O(all QPs)).
+    fn crossing_qps(&self, links: &[LinkId]) -> Vec<QpId> {
+        let mut ids: Vec<QpId> = links
+            .iter()
+            .flat_map(|l| self.link_qps[l.0].iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// The pre-§Perf-L4 crossing-set computation (scan every QP's path),
+    /// kept as the reference the index is checked against.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn reference_crossing_qps(&self, links: &[LinkId]) -> Vec<QpId> {
+        let mut ids: Vec<QpId> = self
+            .qps
+            .values()
+            .filter(|q| q.path.links.iter().any(|l| links.contains(l)))
+            .map(|q| q.id)
+            .collect();
+        ids.sort_unstable();
+        ids
     }
 
     /// Post a send WR. `extra_tail_ns` adds caller-level fixed latency to
@@ -274,6 +427,8 @@ impl RdmaNet {
                 flow: None,
                 extra_tail_ns,
             });
+            // §Perf L4: the WR entered the outstanding set → count it.
+            *self.port_backlog.entry(qp.src).or_insert(0) += bytes;
             (wr_id, start_at, tail, qp.path.clone())
         };
         if start_at > now {
@@ -335,6 +490,13 @@ impl RdmaNet {
         if let Some(qp) = self.qps.get_mut(&qp_id) {
             if let Some(pos) = qp.outstanding.iter().position(|w| w.wr == wr_id) {
                 let w = qp.outstanding.remove(pos);
+                // §Perf L4: the WR left the outstanding set → uncount it.
+                let backlog = self
+                    .port_backlog
+                    .get_mut(&qp.src)
+                    .expect("completed WR must have been counted");
+                debug_assert!(*backlog >= w.bytes, "backlog underflow on {}", qp.src);
+                *backlog = backlog.saturating_sub(w.bytes);
                 self.tracer.record(
                     now,
                     TraceEvent::WrCompleted {
@@ -431,6 +593,18 @@ impl RdmaNet {
         let ordinal = qp.src_ordinal;
         self.tracer.record(now, TraceEvent::QpError { qp: qp_id.0, port: ordinal });
         let drained: Vec<Wr> = qp.outstanding.drain(..).collect();
+        // §Perf L4: every flushed WR leaves the outstanding set at once —
+        // this is what drops the failed primary port's backlog to zero on
+        // pointer-migration rollback.
+        if !drained.is_empty() {
+            let flushed: u64 = drained.iter().map(|w| w.bytes).sum();
+            let backlog = self
+                .port_backlog
+                .get_mut(&qp.src)
+                .expect("flushed WRs must have been counted");
+            debug_assert!(*backlog >= flushed, "backlog underflow on {}", qp.src);
+            *backlog = backlog.saturating_sub(flushed);
+        }
         for (i, w) in drained.iter().enumerate() {
             if let Some(f) = w.flow {
                 self.flow_owner.remove(&f);
@@ -489,6 +663,14 @@ impl RdmaNet {
 
     /// Port state change: stalls / resumes flows; arms retry windows on
     /// every QP whose path crosses the port.
+    ///
+    /// §Perf L4: the QPs to touch come from the `link → QPs` reverse index
+    /// instead of an all-QP scan. This is output-equivalent: between
+    /// events, an RTS QP is armed **iff** it is stalled (arming happens at
+    /// every stall source: post, warm-up release, flap; disarming at every
+    /// unstall source: WC progress, deadline check, flap recovery), and
+    /// only a QP crossing the flapped port can change stall state here —
+    /// so every skipped QP would have been a no-op in the old loop.
     pub fn set_port_up(
         &mut self,
         fabric: &Fabric,
@@ -501,11 +683,16 @@ impl RdmaNet {
         // (and one generation bump per affected flow) instead of two.
         let links = fabric.port_links(port);
         out.timers.extend(self.flows.set_links_up(&links, up, now));
+        self.stats.flap_events += 1;
+        self.stats.flap_scan_floor += self.qps.len() as u64;
         // Sorted for determinism: retry windows armed here schedule engine
         // events, and HashMap order would leak into timestamp tie-breaks.
-        let mut qp_ids: Vec<QpId> = self.qps.keys().copied().collect();
-        qp_ids.sort_unstable();
+        // The crossing set is already sorted (index invariant), so the
+        // iteration order matches the old sorted full scan restricted to
+        // the QPs that produce output.
+        let qp_ids = self.affected_qps(&links);
         for qp_id in qp_ids {
+            self.stats.flap_qp_visits += 1;
             if self.qps[&qp_id].state != QpState::Rts {
                 continue;
             }
@@ -522,6 +709,32 @@ impl RdmaNet {
             }
         }
         out
+    }
+
+    /// The QPs a flap of `links` must visit: the sorted crossing set from
+    /// the reverse index (reference mode: every QP, like the old scan).
+    fn affected_qps(&self, links: &[LinkId]) -> Vec<QpId> {
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.force_scan {
+            let mut ids: Vec<QpId> = self.qps.keys().copied().collect();
+            ids.sort_unstable();
+            return ids;
+        }
+        let ids = self.crossing_qps(links);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            ids,
+            self.reference_crossing_qps(links),
+            "port→QP index diverged from the per-path scan"
+        );
+        ids
+    }
+
+    /// The index-derived crossing set (release-build equivalence tests;
+    /// debug builds cross-check it on every flap anyway).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn indexed_crossing_qps(&self, links: &[LinkId]) -> Vec<QpId> {
+        self.crossing_qps(links)
     }
 }
 
@@ -702,6 +915,202 @@ mod tests {
         assert_eq!(statuses[0], CompletionStatus::RetryExceeded);
         assert!(statuses[1..].iter().all(|s| *s == CompletionStatus::WrFlushed));
         assert_eq!(net.port_backlog_bytes(port(0, 0)), 0);
+    }
+
+    /// §Perf L4: a flap visits only the QPs whose path crosses the flapped
+    /// port (the reverse index), never the whole net.
+    #[test]
+    fn flap_visits_only_crossing_qps() {
+        let (fabric, mut net) = setup();
+        // One rail-aligned QP per NIC pair: 8 QPs, disjoint 2-link paths.
+        let qps: Vec<QpId> =
+            (0..8).map(|nic| net.create_qp(&fabric, port(0, nic), port(1, nic))).collect();
+        let mut lp = Loop::new();
+        for &qp in &qps {
+            let (_, out) = net.post_send(qp, 1 << 20, SimTime::ZERO, 0);
+            lp.absorb(out);
+        }
+        let before = net.rdma_stats();
+        let out = net.set_port_up(&fabric, port(0, 3), false, SimTime::us(10));
+        lp.absorb(out);
+        let s = net.rdma_stats();
+        assert_eq!(s.flap_events - before.flap_events, 1);
+        assert_eq!(s.flap_qp_visits - before.flap_qp_visits, 1, "only QP 3 crosses the port");
+        assert_eq!(s.flap_scan_floor - before.flap_scan_floor, 8, "the old scan touched all 8");
+        // And the flap still armed exactly the crossing QP's retry window.
+        assert_eq!(lp.deadlines.len(), 1);
+        assert_eq!(lp.deadlines[0].0, qps[3]);
+    }
+
+    /// §Perf L4: every backlog read costs one QP-visit, not one per QP.
+    #[test]
+    fn backlog_reads_are_constant_work() {
+        let (fabric, mut net) = setup();
+        for nic in 0..4 {
+            let qp = net.create_qp(&fabric, port(0, nic), port(1, nic));
+            let _ = net.post_send(qp, 1 << 20, SimTime::ZERO, 0);
+        }
+        let before = net.rdma_stats();
+        for nic in 0..4 {
+            assert_eq!(net.port_backlog_bytes(port(0, nic)), 1 << 20);
+        }
+        let s = net.rdma_stats();
+        assert_eq!(s.backlog_reads - before.backlog_reads, 4);
+        assert_eq!(s.backlog_qp_visits - before.backlog_qp_visits, 4, "one visit per read");
+        assert_eq!(s.backlog_scan_floor - before.backlog_scan_floor, 16, "scan floor: 4 QPs × 4");
+    }
+
+    /// §Perf L4 acceptance: ~1k seeded random post / complete / flush /
+    /// flap / error+reset (failover) operations, with the incremental net's
+    /// outputs asserted identical to a reference-mode mirror at every step,
+    /// and the running backlog counter and port→QP index asserted
+    /// bit-identical to the reference scans throughout. (Debug builds
+    /// additionally cross-check both inside every call.)
+    #[test]
+    fn randomized_equivalence_with_reference_scans() {
+        use crate::util::Rng;
+        let fabric =
+            Fabric::build(&crate::config::TopologyConfig { num_nodes: 4, ..Default::default() });
+        // Short windows so errors and warm-ups actually cycle in-sweep.
+        let cfg = NetConfig {
+            ib_timeout_exp: 10,
+            ib_retry_cnt: 2,
+            qp_warmup_ns: 2_000_000,
+            ..Default::default()
+        };
+        let mut inc = RdmaNet::new(&fabric, cfg.clone());
+        let mut refn = RdmaNet::new(&fabric, cfg);
+        refn.set_reference_mode(true);
+
+        let all_ports: Vec<PortId> =
+            (0..4).flat_map(|n| (0..8).map(move |nic| port(n, nic))).collect();
+        let mut qps: Vec<QpId> = Vec::new();
+        // Seed QPs: rail-aligned ring (node n → n+1, same nic) — 32 QPs
+        // whose 2-link paths overlap pairwise on every port.
+        for n in 0..4 {
+            for nic in 0..8 {
+                let (s, d) = (port(n, nic), port((n + 1) % 4, nic));
+                let a = inc.create_qp(&fabric, s, d);
+                let b = refn.create_qp(&fabric, s, d);
+                assert_eq!(a, b);
+                qps.push(a);
+            }
+        }
+        let assert_out = |step: usize, a: &NetOutput, b: &NetOutput| {
+            assert_eq!(a.timers, b.timers, "step {step}: timers diverged");
+            assert_eq!(a.wcs, b.wcs, "step {step}: WCs diverged");
+            assert_eq!(a.retry_deadlines, b.retry_deadlines, "step {step}: deadlines diverged");
+            assert_eq!(a.warmups, b.warmups, "step {step}: warm-ups diverged");
+        };
+
+        let mut rng = Rng::new(0x9D4A_11);
+        let mut now = SimTime::ZERO;
+        let mut timers: Vec<FlowTimer> = Vec::new();
+        let mut deadlines: Vec<(QpId, u32, SimTime)> = Vec::new();
+        let mut warmups: Vec<(QpId, SimTime)> = Vec::new();
+        let mut down: Vec<PortId> = Vec::new();
+        let ops = if cfg!(debug_assertions) { 400 } else { 1000 };
+        for step in 0..ops {
+            now = now + SimTime::ns(rng.range(1, 50_000));
+            let (a, b) = match rng.below(10) {
+                // 0-4: fire the earliest pending net event on both nets.
+                0..=4 if !(timers.is_empty() && deadlines.is_empty() && warmups.is_empty()) => {
+                    let tt = timers.iter().map(|t| t.at).min();
+                    let dt = deadlines.iter().map(|d| d.2).min();
+                    let wt = warmups.iter().map(|w| w.1).min();
+                    let at = [tt, dt, wt].into_iter().flatten().min().unwrap();
+                    now = now.max(at);
+                    if tt == Some(at) {
+                        let i = timers.iter().position(|t| t.at == at).unwrap();
+                        let t = timers.remove(i);
+                        (inc.on_flow_timer(t.flow, t.gen, now),
+                         refn.on_flow_timer(t.flow, t.gen, now))
+                    } else if dt == Some(at) {
+                        let i = deadlines.iter().position(|d| d.2 == at).unwrap();
+                        let d = deadlines.remove(i);
+                        (inc.on_retry_deadline(d.0, d.1, now),
+                         refn.on_retry_deadline(d.0, d.1, now))
+                    } else {
+                        let i = warmups.iter().position(|w| w.1 == at).unwrap();
+                        let w = warmups.remove(i);
+                        (inc.on_warm(w.0, now), refn.on_warm(w.0, now))
+                    }
+                }
+                // 5-6 (plus 0-4 when idle): post a send on a random QP.
+                0..=6 => {
+                    let qp = qps[rng.below(qps.len() as u64) as usize];
+                    let bytes = rng.range(64 << 10, 4 << 20);
+                    let tail = rng.range(0, 5_000);
+                    let (wa, oa) = inc.post_send(qp, bytes, now, tail);
+                    let (wb, ob) = refn.post_send(qp, bytes, now, tail);
+                    assert_eq!(wa, wb, "step {step}: WR ids diverged");
+                    (oa, ob)
+                }
+                // 7: failover churn — error a random QP, proactively reset.
+                7 => {
+                    let qp = qps[rng.below(qps.len() as u64) as usize];
+                    let oa = inc.force_error(qp, now);
+                    let ob = refn.force_error(qp, now);
+                    assert_out(step, &oa, &ob);
+                    (merge2(oa, inc.reset_to_rts(qp, now)),
+                     merge2(ob, refn.reset_to_rts(qp, now)))
+                }
+                // 8-9: flap a port (batched tx+rx, like the cluster layer).
+                _ => {
+                    if !down.is_empty() && rng.chance(0.6) {
+                        let p = down.remove(rng.below(down.len() as u64) as usize);
+                        (inc.set_port_up(&fabric, p, true, now),
+                         refn.set_port_up(&fabric, p, true, now))
+                    } else {
+                        let p = all_ports[rng.below(all_ports.len() as u64) as usize];
+                        if down.contains(&p) {
+                            continue;
+                        }
+                        down.push(p);
+                        (inc.set_port_up(&fabric, p, false, now),
+                         refn.set_port_up(&fabric, p, false, now))
+                    }
+                }
+            };
+            assert_out(step, &a, &b);
+            timers.extend(a.timers);
+            deadlines.extend(a.retry_deadlines);
+            warmups.extend(a.warmups);
+            // The running counter and the reverse index must match the
+            // reference scans bit-for-bit at every step, on every port.
+            for &p in &all_ports {
+                let scanned = inc.reference_port_backlog(p);
+                assert_eq!(
+                    inc.port_backlog_bytes(p), scanned,
+                    "step {step}: backlog counter diverged on {p}"
+                );
+                assert_eq!(
+                    refn.port_backlog_bytes(p), scanned,
+                    "step {step}: reference-mode backlog diverged on {p}"
+                );
+                let links = fabric.port_links(p);
+                assert_eq!(
+                    inc.indexed_crossing_qps(&links),
+                    inc.reference_crossing_qps(&links),
+                    "step {step}: port→QP index diverged on {p}"
+                );
+            }
+        }
+        // The sweep must have exercised the incremental paths — and done
+        // far less work than the reference scans.
+        let (si, sr) = (inc.rdma_stats(), refn.rdma_stats());
+        assert!(si.flap_events > 20, "flap_events={}", si.flap_events);
+        assert!(si.backlog_reads > 1_000);
+        assert!(si.visit_reduction() > 8.0, "reduction={:.1}", si.visit_reduction());
+        assert!(
+            si.backlog_qp_visits + si.flap_qp_visits < sr.backlog_qp_visits + sr.flap_qp_visits,
+            "incremental must do less work than the reference"
+        );
+    }
+
+    fn merge2(mut a: NetOutput, b: NetOutput) -> NetOutput {
+        a.merge(b);
+        a
     }
 
     #[test]

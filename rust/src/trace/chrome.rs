@@ -9,8 +9,15 @@
 //!   events; pseudo-processes for the port-less layers (`net.flow`,
 //!   `ccl`, `fault`, `sim`).
 //! - **tid** = the lane inside the process: port ordinal, flow id, op id,
-//!   connection id.
-//! - every record is an instant event (`"ph": "i"`, thread-scoped);
+//!   connection id. Collective steps get a per-(op, channel) lane so their
+//!   spans nest correctly.
+//! - flow lifetimes and collective-step durations are **span pairs**
+//!   (`"ph": "B"`/`"E"`: `FlowStarted` opens a `Flow` span that
+//!   `FlowFinished`/`FlowKilled` closes; `StepBegin`/`StepEnd` bracket a
+//!   `Step` span), so chrome://tracing renders them as bars with real
+//!   durations. `AllocPass` records become a `"ph": "C"` counter track
+//!   (component size over time) plus one summary histogram event. Every
+//!   other record is an instant event (`"ph": "i"`, thread-scoped);
 //!   `"ph": "M"` metadata events name the processes.
 //!
 //! Timestamps are simulated microseconds (the spec's unit), so exports are
@@ -53,6 +60,8 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         | TraceEvent::FlowStalled { flow }
         | TraceEvent::FlowFinished { flow }
         | TraceEvent::FlowKilled { flow } => (PID_NET, flow),
+        // One counter lane for the whole allocator.
+        TraceEvent::AllocPass { .. } => (PID_NET, 0),
         // A failover resume carries a TRANSFER id, not a net-flow id — it
         // belongs on the fault process next to the pointer migration, not
         // on some unrelated flow's lane.
@@ -70,10 +79,41 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         TraceEvent::PointerMigrated { conn, .. } | TraceEvent::Failback { conn } => {
             (PID_FAULT, conn as u64)
         }
-        TraceEvent::OpSubmitted { op, .. }
-        | TraceEvent::OpFinished { op }
-        | TraceEvent::StepBegin { op, .. }
-        | TraceEvent::StepEnd { op, .. } => (PID_CCL, op as u64),
+        TraceEvent::OpSubmitted { op, .. } | TraceEvent::OpFinished { op } => {
+            (PID_CCL, op as u64)
+        }
+        // Steps of the same op run concurrently across channels; give each
+        // (op, channel) its own lane so the B/E spans nest correctly
+        // (within one channel, steps are strictly sequential).
+        TraceEvent::StepBegin { op, channel, .. } | TraceEvent::StepEnd { op, channel, .. } => {
+            (PID_CCL, ((op as u64) << 16) | channel as u64)
+        }
+    }
+}
+
+/// Trace-event phase of one record: span begin/end for flow lifetimes and
+/// collective steps, a counter sample for allocator passes, instant else.
+fn phase(ev: &TraceEvent) -> &'static str {
+    match ev {
+        TraceEvent::FlowStarted { .. } | TraceEvent::StepBegin { .. } => "B",
+        TraceEvent::FlowFinished { .. }
+        | TraceEvent::FlowKilled { .. }
+        | TraceEvent::StepEnd { .. } => "E",
+        TraceEvent::AllocPass { .. } => "C",
+        _ => "i",
+    }
+}
+
+/// Display name: span pairs must share one name per lane so the viewer
+/// matches B to E; everything else keeps its event kind.
+fn display_name(ev: &TraceEvent) -> &'static str {
+    match ev {
+        TraceEvent::FlowStarted { .. }
+        | TraceEvent::FlowFinished { .. }
+        | TraceEvent::FlowKilled { .. } => "Flow",
+        TraceEvent::StepBegin { .. } | TraceEvent::StepEnd { .. } => "Step",
+        TraceEvent::AllocPass { .. } => "alloc.component",
+        other => other.kind(),
     }
 }
 
@@ -92,6 +132,9 @@ fn args_json(ev: &TraceEvent) -> String {
         TraceEvent::FlowStalled { flow }
         | TraceEvent::FlowFinished { flow }
         | TraceEvent::FlowKilled { flow } => format!("{{\"flow\": {flow}}}"),
+        TraceEvent::AllocPass { flows, links } => {
+            format!("{{\"flows\": {flows}, \"links\": {links}}}")
+        }
         TraceEvent::FlowResumed { flow, scope } => {
             format!("{{\"flow\": {flow}, \"scope\": {}}}", json_string(scope))
         }
@@ -174,17 +217,60 @@ pub fn export(records: &[TraceRecord], meta: &ChromeMeta) -> String {
     }
     for r in records {
         let (pid, tid) = lane(&r.ev, meta);
+        let ph = phase(&r.ev);
+        // The scope field is only meaningful on instant events.
+        let scope = if ph == "i" { "\"s\": \"t\", " } else { "" };
         let mut line = String::with_capacity(128);
         let _ = write!(
             line,
-            "{{\"name\": {}, \"cat\": {}, \"ph\": \"i\", \"s\": \"t\", \"ts\": {}, \
+            "{{\"name\": {}, \"cat\": {}, \"ph\": \"{ph}\", {scope}\"ts\": {}, \
              \"pid\": {pid}, \"tid\": {tid}, \"args\": {}}}",
-            json_string(r.ev.kind()),
+            json_string(display_name(&r.ev)),
             json_string(r.ev.layer()),
             json_number(r.at.as_ns() as f64 / 1e3),
             args_json(&r.ev),
         );
         push_ev(&mut out, &line);
+    }
+    // §Perf L3 observability: fold every AllocPass into a component-size
+    // histogram (power-of-two buckets over the flow count) appended as one
+    // summary event, so the "how local are reallocations?" answer is one
+    // click instead of a counter-track scrub.
+    let mut hist = [0u64; 8]; // 1, 2, ≤4, ≤8, ≤16, ≤32, ≤64, >64
+    let (mut passes, mut last_ts) = (0u64, 0.0f64);
+    for r in records {
+        if let TraceEvent::AllocPass { flows, .. } = r.ev {
+            passes += 1;
+            last_ts = r.at.as_ns() as f64 / 1e3;
+            let b = match flows {
+                0 | 1 => 0,
+                2 => 1,
+                3..=4 => 2,
+                5..=8 => 3,
+                9..=16 => 4,
+                17..=32 => 5,
+                33..=64 => 6,
+                _ => 7,
+            };
+            hist[b] += 1;
+        }
+    }
+    if passes > 0 {
+        let labels = ["le_1", "le_2", "le_4", "le_8", "le_16", "le_32", "le_64", "gt_64"];
+        let mut args = format!("{{\"passes\": {passes}");
+        for (l, n) in labels.iter().zip(hist) {
+            let _ = write!(args, ", \"flows_{l}\": {n}");
+        }
+        args.push('}');
+        push_ev(
+            &mut out,
+            &format!(
+                "{{\"name\": \"AllocComponentHistogram\", \"cat\": \"net.flow\", \
+                 \"ph\": \"i\", \"s\": \"t\", \"ts\": {}, \"pid\": {PID_NET}, \"tid\": 0, \
+                 \"args\": {args}}}",
+                json_number(last_ts)
+            ),
+        );
     }
     out.push_str("\n  ]\n}\n");
     out
@@ -425,6 +511,40 @@ mod tests {
         assert_eq!(export(&records, &meta()), export(&records, &meta()));
     }
 
+    /// Flow lifetimes and collective steps export as B/E span pairs on
+    /// stable lanes; allocator passes become a counter track plus one
+    /// component-size histogram summary. The whole export stays valid JSON.
+    #[test]
+    fn spans_counters_and_histogram_export() {
+        let records = vec![
+            rec(0, 0, TraceEvent::FlowStarted { flow: 5, bytes: 1 << 20 }),
+            rec(10, 1, TraceEvent::AllocPass { flows: 1, links: 2 }),
+            rec(20, 2, TraceEvent::StepBegin { op: 2, channel: 1, step: 0 }),
+            rec(700, 3, TraceEvent::AllocPass { flows: 9, links: 4 }),
+            rec(900, 4, TraceEvent::StepEnd { op: 2, channel: 1, step: 0 }),
+            rec(1_000, 5, TraceEvent::FlowFinished { flow: 5 }),
+            rec(1_100, 6, TraceEvent::FlowKilled { flow: 6 }),
+        ];
+        let json = export(&records, &meta());
+        json_lint(&json).unwrap();
+        // Flow span pair on the flow's lane, matching names.
+        assert!(json.contains("\"name\": \"Flow\", \"cat\": \"net.flow\", \"ph\": \"B\""));
+        assert!(json.contains("\"name\": \"Flow\", \"cat\": \"net.flow\", \"ph\": \"E\""));
+        // Step span pair on the (op, channel) lane: 2<<16 | 1.
+        let step_tid = (2u64 << 16) | 1;
+        assert!(json.contains(&format!("\"ph\": \"B\", \"ts\": 0.02, \"pid\": {PID_CCL}, \"tid\": {step_tid}")));
+        assert!(json.contains(&format!("\"ph\": \"E\", \"ts\": 0.9, \"pid\": {PID_CCL}, \"tid\": {step_tid}")));
+        // Allocator counter samples + the appended histogram.
+        assert!(json.contains("\"name\": \"alloc.component\""));
+        assert!(json.contains("\"ph\": \"C\""));
+        assert!(json.contains("\"name\": \"AllocComponentHistogram\""));
+        assert!(json.contains("\"passes\": 2"));
+        assert!(json.contains("\"flows_le_1\": 1"));
+        assert!(json.contains("\"flows_le_16\": 1"));
+        // Instant events keep their thread scope; spans must not carry one.
+        assert!(!json.contains("\"ph\": \"B\", \"s\""));
+    }
+
     #[test]
     fn json_lint_accepts_and_rejects() {
         for good in [
@@ -466,6 +586,7 @@ mod tests {
             TraceEvent::FlowResumed { flow: 1, scope: "xfer" },
             TraceEvent::FlowFinished { flow: 1 },
             TraceEvent::FlowKilled { flow: 1 },
+            TraceEvent::AllocPass { flows: 3, links: 7 },
             TraceEvent::WrPosted { qp: 1, port: 2, bytes: 3 },
             TraceEvent::WrCompleted { qp: 1, port: 2, bytes: 3, status: "success" },
             TraceEvent::QpRetryArmed { qp: 1, port: 2, deadline_ns: 3 },

@@ -64,6 +64,14 @@ pub enum TraceEvent {
     FlowFinished { flow: u64 },
     /// A flow was killed (failover flushes the primary QP's flows).
     FlowKilled { flow: u64 },
+    /// One incremental allocation pass (§Perf L3): the connected component
+    /// the max-min water-fill walked, in flows and links. The Chrome
+    /// exporter turns these into a counter track plus a component-size
+    /// histogram. Reports the work *actually done*, so reference-mode
+    /// (force-global) runs record the full net here by design — the only
+    /// event kind whose payload legitimately differs between allocation
+    /// modes (everything simulation-affecting stays bit-identical).
+    AllocPass { flows: usize, links: usize },
     /// The proxy posted a send WR on a QP (`net::rdma`).
     WrPosted { qp: u64, port: usize, bytes: u64 },
     /// A WC was delivered: `status` ∈ success / retry-exceeded / flushed.
@@ -104,6 +112,7 @@ impl TraceEvent {
             TraceEvent::FlowResumed { .. } => "FlowResumed",
             TraceEvent::FlowFinished { .. } => "FlowFinished",
             TraceEvent::FlowKilled { .. } => "FlowKilled",
+            TraceEvent::AllocPass { .. } => "AllocPass",
             TraceEvent::WrPosted { .. } => "WrPosted",
             TraceEvent::WrCompleted { .. } => "WrCompleted",
             TraceEvent::QpRetryArmed { .. } => "QpRetryArmed",
@@ -130,7 +139,8 @@ impl TraceEvent {
             | TraceEvent::FlowStalled { .. }
             | TraceEvent::FlowResumed { .. }
             | TraceEvent::FlowFinished { .. }
-            | TraceEvent::FlowKilled { .. } => "net.flow",
+            | TraceEvent::FlowKilled { .. }
+            | TraceEvent::AllocPass { .. } => "net.flow",
             TraceEvent::WrPosted { .. }
             | TraceEvent::WrCompleted { .. }
             | TraceEvent::QpRetryArmed { .. }

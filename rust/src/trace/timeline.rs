@@ -28,6 +28,9 @@ pub fn describe(ev: &TraceEvent) -> String {
         }
         TraceEvent::FlowFinished { flow } => format!("flow {flow} drained"),
         TraceEvent::FlowKilled { flow } => format!("flow {flow} aborted"),
+        TraceEvent::AllocPass { flows, links } => {
+            format!("component: {flows} flow(s) / {links} link(s)")
+        }
         TraceEvent::WrPosted { qp, bytes, .. } => format!("qp {qp}: {bytes} B"),
         TraceEvent::WrCompleted { qp, status, .. } => format!("qp {qp}: {status}"),
         TraceEvent::QpRetryArmed { qp, deadline_ns, .. } => {

@@ -218,7 +218,7 @@ fn every_experiment_id_parses_and_reports() {
     // simulator is ~10× slower and every allocation pass additionally
     // cross-checks against the global reference allocator; full coverage
     // is a release concern — same policy as `large_cluster_alltoall`).
-    let heavy = ["fig13a", "fig18", "fig11", "fig13b", "scale64"];
+    let heavy = ["fig13a", "fig18", "fig11", "fig13b", "scale64", "scale256"];
     let cfg = Config::paper_defaults();
     for (id, _) in EXPERIMENTS {
         if cfg!(debug_assertions) && heavy.contains(id) {
@@ -269,9 +269,11 @@ fn bench_emits_json_files_with_metrics() {
     let failover = std::fs::read_to_string(dir.join("BENCH_failover.json")).unwrap();
     assert!(failover.contains("failover.vccl.completed"));
     assert!(failover.contains("failover.nccl.hung"));
-    // §Perf L3 trajectory: the allocator work counters are tracked.
+    // §Perf L3/L4 trajectory: allocator flow-visit and RDMA QP-visit work
+    // counters are both tracked.
     let simcore = std::fs::read_to_string(dir.join("BENCH_simcore.json")).unwrap();
     assert!(simcore.contains("simcore.alloc.visit_reduction_x"));
+    assert!(simcore.contains("simcore.rdma.visit_reduction_x"));
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -405,6 +407,42 @@ fn cluster_identical_under_reference_allocator() {
     let inc = run(false);
     let refr = run(true);
     assert_eq!(inc, refr, "incremental vs reference cluster trajectories diverged");
+    assert_eq!(inc.2, 1, "the scenario must actually fail over");
+}
+
+/// §Perf L4 mirror of the test above: a full failover scenario driven once
+/// with the O(1) backlog counter + port→QP index and once with the
+/// scan-based reference paths must be *identical* — same finish time, same
+/// event count, same failover count, and (monitor on) same backlog values
+/// fed to the pinpointer. (`RdmaNet::set_reference_mode` only exists in
+/// debug/test builds, so this test is debug-gated; the randomized
+/// bit-equivalence test in `net::rdma` runs everywhere.)
+#[cfg(debug_assertions)]
+#[test]
+fn cluster_identical_under_reference_rdma_scans() {
+    let run = |reference: bool| {
+        let mut cfg = fast_cfg();
+        cfg.vccl.channels = 1;
+        let mut s = ClusterSim::new(cfg);
+        if reference {
+            s.rdma.set_reference_mode(true);
+        }
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        assert!(s.ops[id.0].is_done());
+        let mon = s.monitor.as_ref().expect("fast_cfg keeps the monitor on");
+        (
+            s.ops[id.0].finished_at.unwrap().as_ns(),
+            s.engine.dispatched(),
+            s.stats.failovers,
+            mon.processed_wcs,
+        )
+    };
+    let inc = run(false);
+    let refr = run(true);
+    assert_eq!(inc, refr, "incremental vs reference RDMA accounting diverged");
     assert_eq!(inc.2, 1, "the scenario must actually fail over");
 }
 
