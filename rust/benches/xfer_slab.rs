@@ -1,0 +1,119 @@
+//! §Perf L5 acceptance gate: transfer bookkeeping must be **O(active)**,
+//! not O(history) — on a scale64 (64-node / 512-rank) ring AllReduce the
+//! peak number of live `Xfer` slots must be **≥100× below** the total
+//! transfers created. Before the recycling slab, every chunked transfer
+//! stayed resident in `ClusterSim::xfers` forever (~8.4M records per
+//! scale256 AllReduce), which made memory the 256-node ceiling; the
+//! `scale512` experiment (~33.5M transfers) is what this gate unlocks.
+//!
+//! Two measurement modes (mirroring `benches/flownet.rs` / `benches/rdma.rs`):
+//! - default build: the recycling slab runs and the gate compares its peak
+//!   live count against the created count (both deterministic);
+//! - `--features ref-alloc`: a second simulation is driven through the
+//!   identical workload in retain-everything reference mode
+//!   (`ClusterSim::set_xfer_retain_all`). Outputs are identical by
+//!   contract — the run asserts completion time and event counts match —
+//!   and the reference's resident slot count equals the created count,
+//!   which is exactly the memory the recycling build does NOT pay.
+//!
+//! The deterministic counters behind the gate also ship in
+//! `BENCH_simcore.json` (the `simcore.mem.*` / `simcore.mem64.*` suites
+//! emitted by `coordinator::bench::bench_simcore`), which CI uploads as
+//! the perf-trajectory artifact.
+
+mod bench_util;
+
+use vccl::ccl::{ClusterSim, CollKind, XferMemStats};
+use vccl::config::Config;
+use vccl::util::ByteSize;
+
+/// One scale64 ring AllReduce. Returns the slab counters plus the outputs
+/// the reference-mode comparison pins (finish time, dispatched events).
+fn run_scale64_allreduce(retain: bool) -> (XferMemStats, u64, u64) {
+    let mut s = ClusterSim::new(Config::scale64());
+    if retain {
+        #[cfg(feature = "ref-alloc")]
+        s.set_xfer_retain_all(true);
+        #[cfg(not(feature = "ref-alloc"))]
+        unreachable!("retain-everything mode needs --features ref-alloc");
+    }
+    let id = s.submit(CollKind::AllReduce, ByteSize::mb(32).0);
+    s.run_to_idle(400_000_000);
+    assert!(s.ops[id.0].is_done(), "scale64 allreduce must complete");
+    // The per-op roll-up carries the figures the retired records used to:
+    // with no failure injected, wire chunks == delivered chunks exactly
+    // (a phantom transmission into a recycled slot would break this).
+    let o = &s.ops[id.0];
+    let wire: u64 = o.chan_rollup.iter().map(|c| c.chunks_wire).sum();
+    let delivered: u64 = o.chan_rollup.iter().map(|c| c.chunks).sum();
+    assert_eq!(wire, delivered, "roll-up chunk conservation must balance");
+    (
+        s.xfers.mem_stats(),
+        o.finished_at.expect("finished").as_ns(),
+        s.engine.dispatched(),
+    )
+}
+
+fn main() {
+    println!("== xfer_slab: O(active) transfer bookkeeping (§Perf L5) ==");
+
+    // Wall-clock: the recycling slab on the gate workload.
+    bench_util::bench("xfer_slab: scale64 allreduce, recycling", 3, || {
+        let _ = run_scale64_allreduce(false);
+    });
+
+    // Deterministic counters from one run.
+    let (m, finish_ns, dispatched) = run_scale64_allreduce(false);
+    println!(
+        "   created {}  retired {}  peak live {}  resident slots {}",
+        m.created, m.retired, m.high_water, m.slots_resident
+    );
+    assert!(m.created > 100_000, "workload too small: {} transfers", m.created);
+    assert_eq!(m.live, 0, "every transfer must retire at quiescence");
+    assert!(
+        m.slots_resident <= m.high_water,
+        "recycling must cap resident slots at the live peak"
+    );
+
+    // The reference run is timed once, not bench-looped: retaining ~0.5M
+    // records is precisely the cost this PR removes.
+    #[cfg(feature = "ref-alloc")]
+    {
+        let t0 = std::time::Instant::now();
+        let (rm, rfinish, rdispatched) = run_scale64_allreduce(true);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("xfer_slab: scale64 allreduce, retain-everything    single run {ms:>9.3} ms");
+        assert_eq!(
+            (rfinish, rdispatched),
+            (finish_ns, dispatched),
+            "retained and recycling trajectories must be identical"
+        );
+        assert_eq!(
+            (rm.created, rm.retired, rm.live, rm.high_water),
+            (m.created, m.retired, m.live, m.high_water),
+            "live accounting is mode-independent"
+        );
+        assert_eq!(
+            rm.slots_resident, rm.created,
+            "the reference retains every record"
+        );
+        println!(
+            "   reference resident slots: {} ({}x the recycling build's {})",
+            rm.slots_resident,
+            rm.slots_resident / m.slots_resident.max(1),
+            m.slots_resident
+        );
+    }
+
+    let ratio = m.created as f64 / m.high_water.max(1) as f64;
+    println!(
+        "=> transfers created: {}  peak live slots: {}  ratio: {ratio:.1}x (target ≥ 100x)",
+        m.created, m.high_water
+    );
+    assert!(
+        ratio >= 100.0,
+        "§Perf L5 target missed: {ratio:.1}x < 100x fewer live slots than transfers created"
+    );
+    let _ = finish_ns;
+    let _ = dispatched;
+}

@@ -31,9 +31,20 @@ use super::transport::{locality_of, DataPath, Locality, TransportProfile};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConnId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct XferId(pub usize);
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct OpId(pub usize);
+
+/// Generation-stamped handle into the transfer slab (§Perf L5). `slot`
+/// indexes [`XferSlab`]; `gen` must match the slot's current generation.
+/// Completed transfers are recycled, so an event queued against a transfer
+/// that has since finished (a late `ChunkReady`, a failover re-post) can
+/// fire after its slot holds a *different* transfer — the generation
+/// mismatch detects that staleness and the event is ignored instead of
+/// misrouted to the new occupant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct XferId {
+    pub slot: u32,
+    pub gen: u32,
+}
 
 /// The one event type of the simulation.
 #[derive(Debug, Clone, Copy)]
@@ -118,6 +129,12 @@ impl Conn {
 #[derive(Debug)]
 pub struct Xfer {
     pub id: XferId,
+    /// Stable creation ordinal (how many transfers existed before this
+    /// one). Slot indices are recycled, so trace events and intra-node
+    /// flow metadata carry this id instead: it is unique for the
+    /// simulation's lifetime and identical whether recycling is on or the
+    /// retain-everything reference path is (§Perf L5 equivalence).
+    pub seq: u64,
     pub op: OpId,
     pub channel: usize,
     pub conn: ConnId,
@@ -134,6 +151,15 @@ pub struct Xfer {
     /// Per-side SMs we actually acquired (released on completion).
     sms_src: u32,
     sms_dst: u32,
+    /// Failover stalls ridden by this transfer: one hardware retry window
+    /// per pointer migration (folded into the roll-up's `stall_ns`).
+    pub stall_ns: u64,
+    /// Chunks put on the wire, monotone — unlike `send.transmitted`, this
+    /// is never rolled back by pointer migration, so it exceeds
+    /// `chunks_total` by exactly the retransmitted window(s) after a
+    /// failover and equals it otherwise (the falsifiable conservation
+    /// witness the roll-up carries as `chunks_wire`).
+    pub wire_chunks: u64,
     pub done: bool,
     pub started_at: SimTime,
     pub finished_at: Option<SimTime>,
@@ -142,6 +168,216 @@ pub struct Xfer {
 impl Xfer {
     fn inflight(&self) -> u64 {
         self.send.posted - self.send.acked
+    }
+}
+
+/// §Perf L5 memory counters — the witnesses of the O(active) bookkeeping
+/// guarantee, surfaced as `simcore.mem.*` in `BENCH_simcore.json`. All of
+/// `created`/`retired`/`live`/`high_water` are mode-independent (retaining
+/// a finished record does not make it live); only `slots_resident` differs
+/// between recycling and the retain-everything reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XferMemStats {
+    /// Transfers ever created.
+    pub created: u64,
+    /// Transfers finished and folded into their op's roll-up.
+    pub retired: u64,
+    /// Transfers currently in flight (`created − retired`).
+    pub live: u64,
+    /// Peak of `live` — what the ≥100× memory gate compares `created` to.
+    pub high_water: u64,
+    /// Slab slots actually allocated. Equals `high_water` when recycling
+    /// (slots grow only when no freed slot exists) and `created` in
+    /// retain-everything reference mode.
+    pub slots_resident: u64,
+}
+
+/// §Perf L5: the transfer table, recycled through a free list so memory is
+/// O(active transfers), not O(transfers ever created). Before this, the
+/// plain `Vec<Xfer>` grew one record per chunked transfer forever (~8.4M
+/// per `scale256` AllReduce) and was the 256-node memory ceiling.
+///
+/// Slots are generation-stamped: [`XferSlab::retire`] bumps the slot's
+/// generation, so a stale [`XferId`] held by a queued event resolves to
+/// `None` instead of the slot's new occupant. The free list is LIFO —
+/// deterministic reuse order, and the hottest slots stay cache-resident.
+///
+/// The pre-L5 retain-everything behaviour survives as a reference mode
+/// (`set_retain_all`, gated like the §Perf L3/L4 reference paths): retired
+/// records are kept and slots never reused. Outputs are identical in both
+/// modes by contract — `randomized_equivalence_with_retained_reference`
+/// pins completion timers, roll-ups, BENCH JSON and trace exports, and
+/// debug builds cross-check every roll-up fold against the retained
+/// records while they are cheap to rescan.
+#[derive(Debug, Default)]
+pub struct XferSlab {
+    slots: Vec<XferSlot>,
+    /// Freed slot indices, reused LIFO.
+    free: Vec<u32>,
+    created: u64,
+    retired: u64,
+    high_water: u64,
+    /// Reference mode: keep retired records, never reuse slots.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    retain_all: bool,
+}
+
+#[derive(Debug, Default)]
+struct XferSlot {
+    gen: u32,
+    x: Option<Xfer>,
+}
+
+impl XferSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a slot (recycling the most recently freed one) and insert
+    /// the transfer `make` builds from its id and stable creation ordinal.
+    pub(crate) fn insert(&mut self, make: impl FnOnce(XferId, u64) -> Xfer) -> XferId {
+        let seq = self.created;
+        self.created += 1;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(XferSlot::default());
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let s = &mut self.slots[slot as usize];
+        debug_assert!(s.x.is_none(), "allocated an occupied slot");
+        let id = XferId { slot, gen: s.gen };
+        s.x = Some(make(id, seq));
+        self.high_water = self.high_water.max(self.live());
+        id
+    }
+
+    /// The transfer behind `id`, if the slot still holds that generation.
+    /// Stale ids (slot recycled) resolve to `None`; in retain-everything
+    /// mode the finished record is returned instead — callers' `done`
+    /// checks make both read as the same no-op.
+    pub fn get(&self, id: XferId) -> Option<&Xfer> {
+        let s = self.slots.get(id.slot as usize)?;
+        if s.gen != id.gen {
+            return None;
+        }
+        s.x.as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: XferId) -> Option<&mut Xfer> {
+        let s = self.slots.get_mut(id.slot as usize)?;
+        if s.gen != id.gen {
+            return None;
+        }
+        s.x.as_mut()
+    }
+
+    /// Retire a finished transfer: drop the record and put the slot on the
+    /// free list with a bumped generation, so ids queued before the finish
+    /// now mismatch. The retain-everything reference keeps the record and
+    /// never reuses the slot.
+    pub(crate) fn retire(&mut self, id: XferId) {
+        self.retired += 1;
+        let s = &mut self.slots[id.slot as usize];
+        debug_assert_eq!(s.gen, id.gen, "retiring a stale XferId");
+        debug_assert!(
+            s.x.as_ref().is_some_and(|x| x.done),
+            "retiring an unfinished transfer"
+        );
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.retain_all {
+            return;
+        }
+        s.x = None;
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(id.slot);
+    }
+
+    /// Transfers currently in flight.
+    pub fn live(&self) -> u64 {
+        self.created - self.retired
+    }
+
+    /// Live (not yet finished) transfers, ascending slot order.
+    pub fn iter_live(&self) -> impl Iterator<Item = &Xfer> {
+        self.slots.iter().filter_map(|s| s.x.as_ref()).filter(|x| !x.done)
+    }
+
+    /// Every retained record, live and finished — meaningful in
+    /// retain-everything mode (recycling drops finished records).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn iter_retained(&self) -> impl Iterator<Item = &Xfer> {
+        self.slots.iter().filter_map(|s| s.x.as_ref())
+    }
+
+    /// Switch to the retain-everything reference mode (before any
+    /// transfer exists — mixing modes mid-run would corrupt the free
+    /// list's invariants).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_retain_all(&mut self, on: bool) {
+        assert_eq!(self.created, 0, "switch slab modes before the first transfer");
+        self.retain_all = on;
+    }
+
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn retain_all(&self) -> bool {
+        self.retain_all
+    }
+
+    /// §Perf L5 memory counters (see [`XferMemStats`]).
+    pub fn mem_stats(&self) -> XferMemStats {
+        XferMemStats {
+            created: self.created,
+            retired: self.retired,
+            live: self.live(),
+            high_water: self.high_water,
+            slots_resident: self.slots.len() as u64,
+        }
+    }
+}
+
+/// §Perf L5: per-(op, channel) roll-up, folded at `finish_xfer` so every
+/// figure the reports and benches read survives the transfer record being
+/// recycled. Readers (trace `OpFinished`, benches, tests) consume this —
+/// never retired `Xfer`s.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ChanRollup {
+    /// Transfers finished on this (op, channel).
+    pub xfers: u64,
+    /// Chunks delivered, exactly once each: the sum of the finished
+    /// transfers' `chunks_total` (a transfer finishes precisely when its
+    /// acked pointer reaches that count).
+    pub chunks: u64,
+    /// Chunks put on the wire (monotone across failover rollbacks, from
+    /// [`Xfer::wire_chunks`]): equals `chunks` exactly on a failover-free
+    /// channel and exceeds it by the retransmitted window(s) otherwise.
+    /// Divergence without a failover is a real bug — a stale event drove
+    /// a recycled slot, or a chunk was pumped twice — which is what makes
+    /// this pair a falsifiable conservation witness.
+    pub chunks_wire: u64,
+    /// Payload bytes of the finished transfers.
+    pub bytes: u64,
+    /// Earliest transfer start on the channel (ns).
+    pub first_start_ns: Option<u64>,
+    /// Latest transfer finish on the channel (ns).
+    pub last_finish_ns: Option<u64>,
+    /// Failover stall ridden by the channel's transfers: one hardware
+    /// retry window per pointer migration (§3.3).
+    pub stall_ns: u64,
+}
+
+impl ChanRollup {
+    /// Fold one finished transfer into the roll-up.
+    fn fold(&mut self, x: &Xfer, finished_at: SimTime) {
+        self.xfers += 1;
+        self.chunks += x.chunks_total;
+        self.chunks_wire += x.wire_chunks;
+        self.bytes += x.bytes;
+        self.stall_ns += x.stall_ns;
+        let (s, f) = (x.started_at.as_ns(), finished_at.as_ns());
+        self.first_start_ns = Some(self.first_start_ns.map_or(s, |v| v.min(s)));
+        self.last_finish_ns = Some(self.last_finish_ns.map_or(f, |v| v.max(f)));
     }
 }
 
@@ -184,6 +420,10 @@ pub struct Op {
     pub steps_total: usize,
     pub chan_step: Vec<usize>,
     pub chan_pending: Vec<usize>,
+    /// §Perf L5: per-channel transfer roll-up (counts, bytes, start/finish
+    /// instants, failover stall) — folded as transfers finish, so the op's
+    /// figures outlive the recycled transfer records.
+    pub chan_rollup: Vec<ChanRollup>,
     pub channels_done: usize,
     pub failed: bool,
     pub started_at: SimTime,
@@ -251,7 +491,9 @@ pub struct ClusterSim {
     pub gpus: Vec<GpuUnit>,
     pub conns: Vec<Conn>,
     conn_by_key: HashMap<(usize, usize, usize), ConnId>,
-    pub xfers: Vec<Xfer>,
+    /// §Perf L5: completed transfers are recycled through this slab —
+    /// bookkeeping is O(active transfers), not O(history).
+    pub xfers: XferSlab,
     pub ops: Vec<Op>,
     qp_conn: HashMap<QpId, ConnId>,
     intra_flows: HashMap<FlowId, XferId>,
@@ -324,7 +566,7 @@ impl ClusterSim {
             gpus,
             conns: Vec::new(),
             conn_by_key: HashMap::new(),
-            xfers: Vec::new(),
+            xfers: XferSlab::new(),
             ops: Vec::new(),
             qp_conn: HashMap::new(),
             intra_flows: HashMap::new(),
@@ -428,7 +670,6 @@ impl ClusterSim {
         let now = self.now();
         let chunk = self.cfg.vccl.chunk_bytes.min(bytes.max(1));
         let chunks_total = bytes.div_ceil(chunk).max(1);
-        let xid = XferId(self.xfers.len());
 
         // Lazy-mempool first-use accounting.
         if !self.conns[conn_id.0].used {
@@ -443,8 +684,9 @@ impl ClusterSim {
         self.op_sm_acquire(op, dst.0, sms_dst, now);
 
         let setup = profile.setup_ns;
-        self.xfers.push(Xfer {
-            id: xid,
+        let xid = self.xfers.insert(|id, seq| Xfer {
+            id,
+            seq,
             op,
             channel,
             conn: conn_id,
@@ -459,6 +701,8 @@ impl ClusterSim {
             stage_free_at: now + SimTime::ns(setup),
             sms_src,
             sms_dst,
+            stall_ns: 0,
+            wire_chunks: 0,
             done: false,
             started_at: now,
             finished_at: None,
@@ -477,7 +721,7 @@ impl ClusterSim {
         const SLOTS: u64 = 8; // NCCL FIFO depth / CTS credits
         let now = self.now();
         loop {
-            let x = &self.xfers[xid.0];
+            let Some(x) = self.xfers.get(xid) else { return };
             if x.done || x.send.posted >= x.chunks_total || x.inflight() >= SLOTS {
                 return;
             }
@@ -523,7 +767,7 @@ impl ClusterSim {
                 };
                 base + SimTime::ns(stage_ns + x.profile.per_chunk_sync_ns)
             };
-            let x = &mut self.xfers[xid.0];
+            let x = self.xfers.get_mut(xid).expect("pumped transfer is live");
             x.stage_free_at = ready_at;
             x.send.posted += 1;
             // Proxy CPU cost per chunk (Fig 17: SM-free shifts work to CPU).
@@ -540,15 +784,21 @@ impl ClusterSim {
     /// A staged chunk is ready: put it on the wire (QP or NVLink flow).
     fn on_chunk_ready(&mut self, xid: XferId) {
         let now = self.now();
-        let x = &self.xfers[xid.0];
-        if x.done || x.send.transmitted >= x.chunks_total {
-            return;
-        }
-        let conn_id = x.conn;
-        let chunk = x
-            .chunk_bytes
-            .min(x.bytes.saturating_sub(x.send.transmitted * x.chunk_bytes))
-            .max(1);
+        // §Perf L5 stale-id gate: a ChunkReady queued before the transfer
+        // finished can fire after its slot was recycled — the generation
+        // mismatch (or, in retain-everything mode, the `done` record)
+        // makes it the same no-op instead of driving the new occupant.
+        let (conn_id, op, chunk, seq, intra_efficiency, recv_copy) = {
+            let Some(x) = self.xfers.get(xid) else { return };
+            if x.done || x.send.transmitted >= x.chunks_total {
+                return;
+            }
+            let chunk = x
+                .chunk_bytes
+                .min(x.bytes.saturating_sub(x.send.transmitted * x.chunk_bytes))
+                .max(1);
+            (x.conn, x.op, chunk, x.seq, x.profile.intra_efficiency, x.profile.recv_copy)
+        };
         let conn = &self.conns[conn_id.0];
         match conn.locality {
             Locality::IntraNode => {
@@ -557,25 +807,29 @@ impl ClusterSim {
                 let path = self.topo.fabric.path_nvlink(src_gpu, dst_gpu);
                 // SM copies move fewer bytes/s on the same link: inflate the
                 // byte count by 1/efficiency (time-equivalent).
-                let eff_bytes = (chunk as f64 / self.xfers[xid.0].profile.intra_efficiency) as u64;
+                let eff_bytes = (chunk as f64 / intra_efficiency) as u64;
                 // Handshake tail: device-side flag for the copy kernel,
                 // shared-memory P2pRegInfo flags for the CE path (§3.2-1).
                 let tail = match self.cfg.vccl.transport {
                     Transport::Kernel => 500,
                     _ => 300,
                 };
+                // Flow metadata carries the transfer's stable `seq`, not
+                // its recyclable slot index (§Perf L5 identity).
                 let (flow, timers) = self.rdma.flows.start(
                     now,
                     path,
                     eff_bytes,
                     tail,
-                    crate::net::FlowMeta(xid.0 as u64),
+                    crate::net::FlowMeta(seq),
                 );
                 self.intra_flows.insert(flow, xid);
                 for t in timers {
                     self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
                 }
-                self.xfers[xid.0].send.transmitted += 1;
+                let x = self.xfers.get_mut(xid).expect("transfer is live");
+                x.send.transmitted += 1;
+                x.wire_chunks += 1;
             }
             _ => {
                 let Some(mut qp) = conn.active_qp() else { return };
@@ -587,7 +841,6 @@ impl ClusterSim {
                         Some(q) if self.rdma.qp_state(q) == QpState::Rts => qp = q,
                         _ => {
                             // Both paths dead (§6 limitation): the op hangs.
-                            let op = self.xfers[xid.0].op;
                             if !self.ops[op.0].failed {
                                 self.ops[op.0].failed = true;
                                 self.stats.hung_ops += 1;
@@ -596,7 +849,7 @@ impl ClusterSim {
                         }
                     }
                 }
-                let extra_tail = if self.xfers[xid.0].profile.recv_copy {
+                let extra_tail = if recv_copy {
                     // Receiver chunk→app copy + its poll.
                     (chunk as f64 / (self.cfg.gpu.hbm_gbps * 0.125)) as u64
                         + self.cfg.gpu.gpu_cpu_poll_ns
@@ -604,7 +857,11 @@ impl ClusterSim {
                     0
                 };
                 let (_wr, out) = self.rdma.post_send(qp, chunk, now, extra_tail);
-                self.xfers[xid.0].send.transmitted += 1;
+                {
+                    let x = self.xfers.get_mut(xid).expect("transfer is live");
+                    x.send.transmitted += 1;
+                    x.wire_chunks += 1;
+                }
                 // Arm the receiver's δ-probe (case 2) on first outstanding.
                 let deadline = self.conns[conn_id.0]
                     .probe
@@ -675,8 +932,8 @@ impl ClusterSim {
 
     fn on_chunk_complete(&mut self, xid: XferId, conn_id: ConnId) {
         let now = self.now();
-        {
-            let x = &mut self.xfers[xid.0];
+        let more = {
+            let Some(x) = self.xfers.get_mut(xid) else { return };
             if x.done {
                 return;
             }
@@ -684,12 +941,9 @@ impl ClusterSim {
             x.recv.received += 1;
             x.recv.done += 1;
             x.recv.posted = x.recv.posted.max(x.recv.done);
-        }
-        // Progress the δ-probe.
-        let more = {
-            let x = &self.xfers[xid.0];
             x.send.acked < x.chunks_total
         };
+        // Progress the δ-probe.
         let redeadline = self.conns[conn_id.0]
             .probe
             .as_mut()
@@ -697,21 +951,30 @@ impl ClusterSim {
         if let Some((at, epoch)) = redeadline {
             self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch });
         }
-        if self.xfers[xid.0].send.acked >= self.xfers[xid.0].chunks_total {
-            self.finish_xfer(xid);
-        } else {
+        if more {
             self.pump_xfer(xid);
+        } else {
+            self.finish_xfer(xid);
         }
     }
 
     fn finish_xfer(&mut self, xid: XferId) {
         let now = self.now();
         let (conn_id, op, channel, sms_src, sms_dst) = {
-            let x = &mut self.xfers[xid.0];
+            let x = self.xfers.get_mut(xid).expect("finishing a live transfer");
             x.done = true;
             x.finished_at = Some(now);
             (x.conn, x.op, x.channel, x.sms_src, x.sms_dst)
         };
+        // §Perf L5: fold the completed transfer into its op's per-channel
+        // roll-up BEFORE the record is recycled — reports, benches and the
+        // OpFinished trace event read these, never retired `Xfer`s.
+        {
+            let x = self.xfers.get(xid).expect("just finished");
+            self.ops[op.0].chan_rollup[channel].fold(x, now);
+        }
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        self.debug_check_rollup(op, channel);
         let (src, dst, next) = {
             let c = &mut self.conns[conn_id.0];
             debug_assert_eq!(c.pending.front(), Some(&xid));
@@ -727,7 +990,36 @@ impl ClusterSim {
         }
         self.op_sm_release(op, src.0, sms_src, now);
         self.op_sm_release(op, dst.0, sms_dst, now);
+        // §Perf L5: the figures are folded — recycle the slot (bumping its
+        // generation so queued stale ids are detected). The next step's
+        // transfers reuse it, which is what keeps bookkeeping O(active).
+        self.xfers.retire(xid);
         self.on_xfer_done(op, channel);
+    }
+
+    /// Debug cross-check (§Perf L5): in retain-everything reference mode,
+    /// the incremental roll-up must equal a recomputation over the
+    /// retained records at every fold. Bounded — rescanning is skipped
+    /// once the retained set outgrows a cheap cap (the randomized
+    /// equivalence test pins large runs end-to-end instead).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    fn debug_check_rollup(&self, op: OpId, channel: usize) {
+        if !self.xfers.retain_all() || self.xfers.mem_stats().retired > 4_096 {
+            return;
+        }
+        let mut reference = ChanRollup::default();
+        for x in self
+            .xfers
+            .iter_retained()
+            .filter(|x| x.done && x.op == op && x.channel == channel)
+        {
+            reference.fold(x, x.finished_at.expect("done transfers carry a finish time"));
+        }
+        assert_eq!(
+            reference, self.ops[op.0].chan_rollup[channel],
+            "roll-up diverged from the retained records for op {} channel {}",
+            op.0, channel
+        );
     }
 
     /// Refcounted op-level comm-kernel SM acquisition.
@@ -797,7 +1089,7 @@ impl ClusterSim {
         if !has_backup {
             // No backup (NCCL baseline, or the backup itself died): the
             // collective hangs — the failure mode Fig 13b shows for NCCL.
-            let op = self.xfers[xid.0].op;
+            let op = self.xfers.get(xid).expect("current transfer is live").op;
             if !self.ops[op.0].failed {
                 self.ops[op.0].failed = true;
                 self.stats.hung_ops += 1;
@@ -810,8 +1102,9 @@ impl ClusterSim {
         //    also freezes a `failover-conn<N>` incident snapshot, so the
         //    PortDown → FlowStalled → QpError chain leading here survives
         //    ring eviction on long runs.
-        let rolled_back = {
-            let x = &mut self.xfers[xid.0];
+        let window_ns = self.cfg.net.retry_window_ns();
+        let (rolled_back, xfer_seq) = {
+            let x = self.xfers.get_mut(xid).expect("current transfer is live");
             let lost = migrate_to_breakpoint_traced(
                 &mut x.send,
                 &mut x.recv,
@@ -821,7 +1114,11 @@ impl ClusterSim {
                 conn_id.0,
             );
             x.fifo.error_port = error_port;
-            lost
+            // The transfer rode out one hardware retransmission window
+            // before this failover fired — folded into the roll-up's
+            // `stall_ns` at finish.
+            x.stall_ns += window_ns;
+            (lost, x.seq)
         };
         // 2. Switch to the backup QP.
         {
@@ -849,9 +1146,10 @@ impl ClusterSim {
         }
         // The transfer's data flow resumes on the backup QP (breakpoint
         // retransmission): the "resume" leg of the failover causal chain.
-        // Scope "xfer": the id is a transfer id, not a net-layer flow id.
+        // Scope "xfer": the id is a transfer's stable creation ordinal
+        // (§Perf L5) — slot indices are recycled, seqs never are.
         self.tracer
-            .record(now, TraceEvent::FlowResumed { flow: xid.0 as u64, scope: "xfer" });
+            .record(now, TraceEvent::FlowResumed { flow: xfer_seq, scope: "xfer" });
         // 5. Resume normal pumping for not-yet-staged chunks.
         self.pump_xfer(xid);
     }
@@ -967,8 +1265,13 @@ impl ClusterSim {
                     }
                     if meta.is_some() {
                         self.intra_flows.remove(&flow);
-                        let conn_id = self.xfers[xid.0].conn;
-                        self.stats.wire_bytes += self.xfers[xid.0].chunk_bytes;
+                        // An intra-flow entry pins its transfer live: the
+                        // transfer cannot finish before this chunk acks.
+                        let (conn_id, chunk_bytes) = {
+                            let x = self.xfers.get(xid).expect("intra flow's transfer is live");
+                            (x.conn, x.chunk_bytes)
+                        };
+                        self.stats.wire_bytes += chunk_bytes;
                         self.on_chunk_complete(xid, conn_id);
                     }
                 } else {
@@ -1066,6 +1369,28 @@ impl ClusterSim {
     pub fn port_bandwidth_series(&self, port: PortId, bucket: SimTime) -> Vec<(f64, f64)> {
         let ordinal = self.topo.fabric.port_ordinal(port);
         self.stats.port_traffic.series_gbps(ordinal, bucket.as_ns())
+    }
+
+    /// §Perf L5 reference mode: retain every finished transfer record and
+    /// never recycle a slot (the pre-L5 behaviour). Outputs are identical
+    /// by contract; only memory differs. Must be called before the first
+    /// transfer starts. Gated like the §Perf L3/L4 reference paths.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_xfer_retain_all(&mut self, on: bool) {
+        self.xfers.set_retain_all(on);
+    }
+
+    /// Live NVLink-flow → transfer entries. Drains to zero when no
+    /// intra-node chunk is on the wire (§Perf L5: nothing pins a dead
+    /// transfer).
+    pub fn intra_flow_count(&self) -> usize {
+        self.intra_flows.len()
+    }
+
+    /// QP → connection routing entries. O(connections) — two per
+    /// fault-tolerant inter-node connection — never O(transfers).
+    pub fn qp_conn_count(&self) -> usize {
+        self.qp_conn.len()
     }
 }
 
@@ -1328,6 +1653,183 @@ mod tests {
             .verdicts(ordinal)
             .iter()
             .all(|(_, v)| *v == Verdict::Healthy));
+    }
+
+    /// §Perf L5: a `ChunkReady` queued against a transfer that finished
+    /// and whose slot was recycled must be ignored (generation mismatch),
+    /// never misrouted to the slot's new occupant — whether it fires
+    /// before the slot is reused or mid-flight of the new transfer.
+    #[test]
+    fn stale_chunk_ready_after_recycle_is_ignored() {
+        // Clean reference: two back-to-back transfers, no stale events.
+        let clean_second_op_ns = {
+            let mut s = ClusterSim::new(fast_ft_cfg());
+            let a = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(4).0);
+            s.run_to_idle(20_000_000);
+            let t1 = s.ops[a.0].finished_at.unwrap();
+            let b = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(4).0);
+            s.run_to_idle(20_000_000);
+            s.ops[b.0].finished_at.unwrap().since(t1).as_ns()
+        };
+
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let a = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(4).0);
+        // Capture the transfer's id mid-flight, then let it finish.
+        s.run_until(SimTime::us(20));
+        let stale = s.conns.iter().find_map(|c| c.cur_xfer()).expect("transfer in flight");
+        s.run_to_idle(20_000_000);
+        let t1 = s.ops[a.0].finished_at.unwrap();
+        let m = s.xfers.mem_stats();
+        assert_eq!((m.created, m.retired, m.live), (1, 1, 0));
+        assert!(s.xfers.get(stale).is_none(), "retired id must resolve to nothing");
+
+        // Stale event #1 fires before the slot is reused; #2 fires while
+        // the new occupant is mid-flight.
+        let now = s.now();
+        s.engine.schedule_at(now, Event::ChunkReady { xfer: stale });
+        s.engine.schedule_at(now + SimTime::us(20), Event::ChunkReady { xfer: stale });
+        let b = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(4).0);
+        s.run_until(now + SimTime::us(30));
+        let reused = s.conns.iter().find_map(|c| c.cur_xfer()).expect("second transfer live");
+        assert_eq!(reused.slot, stale.slot, "the freed slot must be recycled");
+        assert_ne!(reused.gen, stale.gen, "the recycled slot must carry a new generation");
+        s.run_to_idle(20_000_000);
+        assert!(s.ops[b.0].is_done());
+        // No failover ran, so a single phantom transmission from either
+        // stale event would surface as chunks_wire > chunks here.
+        let r = &s.ops[b.0].chan_rollup;
+        let wire: u64 = r.iter().map(|c| c.chunks_wire).sum();
+        let delivered: u64 = r.iter().map(|c| c.chunks).sum();
+        assert_eq!(wire, delivered, "stale events must not inject chunks into the new occupant");
+        // And the new occupant's timing is bit-identical to the clean run.
+        assert_eq!(
+            s.ops[b.0].finished_at.unwrap().since(t1).as_ns(),
+            clean_second_op_ns,
+            "stale events must not perturb the simulation"
+        );
+        assert_eq!(s.xfers.mem_stats().created, 2);
+    }
+
+    /// §Perf L5: no per-transfer map may pin completed work — the
+    /// flow→transfer and flow→WR maps drain to zero after every op, and
+    /// the QP routing map is O(connections), never O(transfers).
+    #[test]
+    fn per_transfer_maps_shrink_after_completion() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        let a = s.submit_p2p(RankId(0), RankId(1), ByteSize::mb(8).0); // NVLink flows
+        let b = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(8).0); // QP traffic
+        s.run_to_idle(20_000_000);
+        assert!(s.ops[a.0].is_done() && s.ops[b.0].is_done());
+        assert_eq!(s.intra_flow_count(), 0, "intra-flow map must drain");
+        assert_eq!(s.rdma.flow_owner_count(), 0, "flow→WR owner map must drain");
+        assert_eq!(s.xfers.live(), 0, "no live transfers at quiescence");
+        assert_eq!(s.xfers.iter_live().count(), 0, "live iteration agrees with the counter");
+        let inter_conns = s.conns.iter().filter(|c| c.primary.is_some()).count();
+        let qps = s.qp_conn_count();
+        assert_eq!(qps, 2 * inter_conns, "one primary + one backup QP per inter-node conn");
+        // A follow-up op reuses the connections: zero map growth.
+        let c2 = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(8).0);
+        s.run_to_idle(20_000_000);
+        assert!(s.ops[c2.0].is_done());
+        assert_eq!(s.qp_conn_count(), qps, "QP map is per-connection, not per-transfer");
+        assert_eq!(s.intra_flow_count(), 0);
+        assert_eq!(s.rdma.flow_owner_count(), 0);
+    }
+
+    /// §Perf L5 acceptance (the archetype headline): a seeded randomized
+    /// ~1k-op workload — mixed collectives and P2P, random sizes, port
+    /// flaps straddling transfers — driven once with slot recycling and
+    /// once in retain-everything reference mode must be bit-identical:
+    /// per-op completion timers, per-op roll-ups, stats distilled into
+    /// BENCH-style JSON, and the full flight-recorder (Chrome) export.
+    /// Mirrors the §Perf L3 allocator-equivalence test shape.
+    #[test]
+    fn randomized_equivalence_with_retained_reference() {
+        let run = |retain: bool| {
+            let mut cfg = fast_ft_cfg();
+            cfg.trace.enabled = true;
+            cfg.trace.ring_capacity = 1 << 15;
+            let mut s = ClusterSim::new(cfg);
+            if retain {
+                s.set_xfer_retain_all(true);
+            }
+            let mut rng = crate::util::Rng::new(0x55AB5);
+            let ops_n = if cfg!(debug_assertions) { 200 } else { 1000 };
+            // Flap only even-rail primary ports: backup QPs live on the
+            // next (odd) rail, so a flap can never kill both paths of a
+            // connection and hang an op mid-sweep.
+            let flap_ranks = [0usize, 2, 4, 6, 8, 10, 12, 14];
+            let mut finished = Vec::with_capacity(ops_n);
+            for i in 0..ops_n {
+                if rng.below(100) < 7 {
+                    let g = flap_ranks[rng.below(flap_ranks.len() as u64) as usize];
+                    let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(g)));
+                    let at = s.now() + SimTime::ns(rng.range(1_000, 2_000_000));
+                    s.inject_port_down(port, at);
+                    s.inject_port_up(port, at + SimTime::ns(rng.range(100_000, 20_000_000)));
+                }
+                let id = match rng.below(10) {
+                    0..=5 => {
+                        let n = s.topo.num_ranks();
+                        let src = RankId(rng.below(n as u64) as usize);
+                        let mut dst = RankId(rng.below(n as u64) as usize);
+                        if dst == src {
+                            dst = RankId((src.0 + 1) % n);
+                        }
+                        s.submit_p2p(src, dst, rng.range(1, 4 << 20))
+                    }
+                    6 => s.submit(CollKind::AllReduce, rng.range(1 << 16, 2 << 20)),
+                    7 => s.submit(CollKind::AllGather, rng.range(1 << 16, 2 << 20)),
+                    8 => s.submit(CollKind::ReduceScatter, rng.range(1 << 16, 2 << 20)),
+                    _ => s.submit(CollKind::AllToAll, rng.range(1 << 16, 1 << 20)),
+                };
+                assert!(s.run_until_op(id, 100_000_000), "op {i} must finish");
+                finished.push(s.ops[id.0].finished_at.unwrap().as_ns());
+            }
+            s.run_to_idle(100_000_000);
+            let m = s.xfers.mem_stats();
+            // BENCH-style JSON distilled from the run: bit-identity here is
+            // what "recycling keeps BENCH_*.json byte-identical" means.
+            let mut rep = crate::metrics::BenchReport::new(
+                "xfer-equivalence",
+                "§Perf L5 recycling vs retain-everything reference",
+            );
+            rep.push("ops", finished.len() as f64, "count");
+            rep.push("last_finish_ns", *finished.last().unwrap() as f64, "ns");
+            rep.push("events_dispatched", s.engine.dispatched() as f64, "count");
+            rep.push("failovers", s.stats.failovers as f64, "count");
+            rep.push("failbacks", s.stats.failbacks as f64, "count");
+            rep.push("wire_bytes", s.stats.wire_bytes as f64, "bytes");
+            rep.push("xfers_created", m.created as f64, "count");
+            rep.push("xfers_peak_live", m.high_water as f64, "count");
+            let rollups: Vec<Vec<ChanRollup>> =
+                s.ops.iter().map(|o| o.chan_rollup.clone()).collect();
+            let meta = crate::trace::chrome::ChromeMeta { ports_per_node: 8 };
+            let records = s.tracer.sink().expect("tracing on").records();
+            let trace_json = crate::trace::chrome::export(&records, &meta);
+            (finished, rep.to_json(), rollups, trace_json, m)
+        };
+        let rec = run(false);
+        let refr = run(true);
+        assert_eq!(rec.0, refr.0, "completion timers diverged");
+        assert_eq!(rec.1, refr.1, "BENCH JSON diverged");
+        assert_eq!(rec.2, refr.2, "per-op roll-ups diverged");
+        assert_eq!(rec.3, refr.3, "trace exports diverged");
+        // Live accounting is mode-independent; only residency differs.
+        let (m, rm) = (rec.4, refr.4);
+        assert_eq!(
+            (m.created, m.retired, m.live, m.high_water),
+            (rm.created, rm.retired, rm.live, rm.high_water),
+            "mem counters must be mode-independent"
+        );
+        assert_eq!(rm.slots_resident, rm.created, "the reference retains every record");
+        assert!(
+            m.slots_resident <= m.high_water,
+            "recycling must cap resident slots at the live peak: {m:?}"
+        );
+        assert!(m.created > 1_000, "sweep too small: {m:?}");
+        assert!(m.high_water * 4 < m.created, "recycling must bound live slots: {m:?}");
+        assert!(rec.0.len() as u64 >= 200);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::sim::SimTime;
 use crate::topology::RankId;
 use crate::trace::TraceEvent;
 
-use super::cluster::{ClusterSim, CollKind, Event, Op, OpId};
+use super::cluster::{ChanRollup, ClusterSim, CollKind, Event, Op, OpId};
 
 impl ClusterSim {
     /// Submit a collective over all ranks. Returns its id; drive with
@@ -54,6 +54,7 @@ impl ClusterSim {
             steps_total,
             chan_step: vec![0; channels],
             chan_pending: vec![0; channels],
+            chan_rollup: vec![ChanRollup::default(); channels],
             channels_done: 0,
             failed: false,
             started_at: self.now(),
@@ -133,7 +134,14 @@ impl ClusterSim {
                 o.channels_done += 1;
                 if o.channels_done == o.channels {
                     o.finished_at = Some(now);
-                    self.tracer.record(now, TraceEvent::OpFinished { op: op.0 });
+                    // §Perf L5: the completion event carries the op's
+                    // roll-up totals — by now every transfer record may
+                    // already be recycled, so the trace reads the fold.
+                    let (xfers, bytes) = o
+                        .chan_rollup
+                        .iter()
+                        .fold((0, 0), |(x, b), r| (x + r.xfers, b + r.bytes));
+                    self.tracer.record(now, TraceEvent::OpFinished { op: op.0, xfers, bytes });
                 }
                 return;
             }

@@ -13,6 +13,9 @@ pub mod collectives;
 pub mod mempool;
 pub mod transport;
 
-pub use cluster::{ActiveSide, ClusterSim, CollKind, Conn, ConnId, Event, Op, OpId, Stats, Xfer, XferId};
+pub use cluster::{
+    ActiveSide, ChanRollup, ClusterSim, CollKind, Conn, ConnId, Event, Op, OpId, Stats, Xfer,
+    XferId, XferMemStats, XferSlab,
+};
 pub use mempool::{AllocPolicy, MemPool};
 pub use transport::{locality_of, DataPath, Locality, TransportProfile};

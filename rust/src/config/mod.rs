@@ -342,6 +342,19 @@ impl Config {
         c
     }
 
+    /// 512-node scaling preset (§Perf L5, the `scale512` experiment):
+    /// `scale256` widened to 512 nodes (4096 GPUs), monitor still ON. A
+    /// scale512 ring AllReduce creates ~33.5M chunked transfers; before
+    /// §Perf L5 every one stayed resident in `ClusterSim::xfers` forever
+    /// (memory was the post-L4 256-node ceiling — ~8.4M records per
+    /// scale256 AllReduce), so this preset is only tractable with the
+    /// recycling transfer slab holding O(active) ≈ one record per rank.
+    pub fn scale512() -> Self {
+        let mut c = Self::scale256();
+        c.topo.num_nodes = 512;
+        c
+    }
+
     /// NCCLX-like configuration (SM-free data path + 1-SM ordering kernel).
     pub fn ncclx_like() -> Self {
         let mut c = Self::paper_defaults();
@@ -488,17 +501,24 @@ mod tests {
     fn scale_presets_widen_the_cluster() {
         let s64 = Config::scale64();
         let s256 = Config::scale256();
+        let s512 = Config::scale512();
         assert_eq!(s64.topo.num_nodes, 64);
         assert_eq!(s256.topo.num_nodes, 256);
+        assert_eq!(s512.topo.num_nodes, 512);
         assert_eq!(s256.topo.gpus_per_node * s256.topo.num_nodes, 2048);
+        assert_eq!(s512.topo.gpus_per_node * s512.topo.num_nodes, 4096);
         // scale64 predates the O(1) backlog counter and turns the monitor
-        // off; scale256 exists to show the monitor is affordable at scale.
-        assert!(!s64.vccl.monitor && s256.vccl.monitor);
-        // Both shrink the failure machinery's time constants identically.
+        // off; scale256 exists to show the monitor is affordable at scale,
+        // and scale512 keeps it on while §Perf L5 recycles the transfers.
+        assert!(!s64.vccl.monitor && s256.vccl.monitor && s512.vccl.monitor);
+        // All shrink the failure machinery's time constants identically.
         assert_eq!(s64.net.ib_timeout_exp, s256.net.ib_timeout_exp);
+        assert_eq!(s64.net.ib_timeout_exp, s512.net.ib_timeout_exp);
         assert_eq!(s64.net.qp_warmup_ns, s256.net.qp_warmup_ns);
+        assert_eq!(s64.net.qp_warmup_ns, s512.net.qp_warmup_ns);
         assert_eq!(s64.vccl.channels, 1);
         assert_eq!(s256.vccl.channels, 1);
+        assert_eq!(s512.vccl.channels, 1);
     }
 
     #[test]

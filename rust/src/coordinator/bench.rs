@@ -214,6 +214,41 @@ pub fn bench_simcore(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     );
     r.push("simcore.alloc.max_component_flows", a.max_component as f64, "count");
 
+    // §Perf L5 (`simcore.mem.*`): transfer-slab accounting on the same
+    // AllReduce — the witnesses that bookkeeping is O(active transfers).
+    // All counters are deterministic and mode-independent (retaining a
+    // finished record never makes it live), so they are safe to track in
+    // the BENCH trajectory.
+    let m = s.xfers.mem_stats();
+    r.push("simcore.mem.xfers_created", m.created as f64, "count");
+    r.push("simcore.mem.xfers_retired", m.retired as f64, "count");
+    r.push("simcore.mem.xfers_live_end", m.live as f64, "count");
+    r.push("simcore.mem.xfers_peak_live", m.high_water as f64, "count");
+    r.push(
+        "simcore.mem.recycle_ratio_x",
+        m.created as f64 / m.high_water.max(1) as f64,
+        "ratio",
+    );
+
+    // §Perf L5 memory gate numbers at the gate's own scale: a scale64
+    // (512-rank) ring AllReduce — the workload `benches/xfer_slab.rs`
+    // enforces the ≥100× created-to-peak ratio on. Skipped in quick mode
+    // (~0.5M transfers is a release-bench workload, not a smoke one).
+    if !opts.quick {
+        let mut s = ClusterSim::new(Config::scale64());
+        let id = s.submit(CollKind::AllReduce, 32 << 20);
+        s.run_to_idle(400_000_000);
+        assert!(s.ops[id.0].is_done(), "scale64 allreduce must complete");
+        let m = s.xfers.mem_stats();
+        r.push("simcore.mem64.xfers_created", m.created as f64, "count");
+        r.push("simcore.mem64.xfers_peak_live", m.high_water as f64, "count");
+        r.push(
+            "simcore.mem64.recycle_ratio_x",
+            m.created as f64 / m.high_water.max(1) as f64,
+            "ratio",
+        );
+    }
+
     // §Perf L4 (`bench_rdma` suite): RDMA hot-path accounting work on a
     // monitored flap-churn workload — every successful WC reads the
     // per-port backlog (§3.4 condition ii) and every flap walks the
@@ -423,6 +458,17 @@ mod tests {
             get("simcore.alloc.visit_reduction_x") > 2.0,
             "even 4 nodes must show a component-scoping win: {}x",
             get("simcore.alloc.visit_reduction_x")
+        );
+        // §Perf L5: the transfer slab recycles — live slots at quiescence
+        // are zero and the created-to-peak ratio shows the reuse win even
+        // on the quick 4-node AllReduce (the ≥100× gate lives at 64 nodes
+        // in benches/xfer_slab.rs).
+        assert!(get("simcore.mem.xfers_created") > 1000.0);
+        assert_eq!(get("simcore.mem.xfers_live_end"), 0.0);
+        assert!(
+            get("simcore.mem.recycle_ratio_x") > 10.0,
+            "transfer recycling must bound live slots: {}x",
+            get("simcore.mem.recycle_ratio_x")
         );
         // §Perf L4: the monitored churn workload exercises both hot paths.
         assert!(get("simcore.rdma.backlog_reads") > 50.0);

@@ -1,6 +1,7 @@
 //! Efficiency experiments: Table 1, Fig 10, Fig 11, Table 4/Fig 17,
 //! Fig 21, Appendix C, the §5 scaling model, the Fig 5 ablation and the
-//! `scale64` (§Perf L3) and `scale256` (§Perf L4) cluster-scale sweeps.
+//! `scale64` (§Perf L3), `scale256` (§Perf L4) and `scale512` (§Perf L5)
+//! cluster-scale sweeps.
 
 use std::fmt::Write as _;
 
@@ -500,6 +501,116 @@ fn scale256_allreduce(base: &Config) -> String {
          the {} chunks transferred.",
         r.backlog_reads, r.backlog_qp_visits, r.backlog_scan_floor, mon.processed_wcs
     );
+    out
+}
+
+/// scale512: a 512-node (4096-GPU) ring AllReduce — monitor ON — plus a
+/// multi-failure failover sweep. The proof the §Perf L5 ceiling moved:
+/// the AllReduce creates ~33.5M chunked transfers, and before transfer
+/// recycling every record stayed resident forever (ROADMAP named memory
+/// as the 256-node ceiling — ~8.4M records, gigabytes, per scale256
+/// AllReduce; 512 nodes OOMed before anything else broke). With the
+/// recycling slab, peak live transfer records track the ~4k active ring
+/// hops — the experiment asserts the ≥100× created-to-peak ratio the
+/// memory-regression gate (`benches/xfer_slab.rs`) enforces at 64 nodes.
+/// Heaviest experiment in the catalogue; release-only in the test sweep.
+pub fn scale512_cluster(cfg: &Config) -> String {
+    let mut base = Config::scale512();
+    base.seed = cfg.seed;
+    let mut out = String::from(
+        "scale512 — 512-node (4096-GPU) monitored AllReduce + multi-failure sweep (§Perf L5)\n\n",
+    );
+    // Part 1 in its own fn so its simulation drops before part 2 builds.
+    out.push_str(&scale512_allreduce(&base));
+
+    // Part 2: multi-failure sweep — three primary ports on three different
+    // nodes die at staggered times inside concurrent 256MB transfers and
+    // are never restored; every transfer must ride through on its backup.
+    let mut s = ClusterSim::new(base.clone());
+    let victims = [(RankId(0), 1u64), (RankId(1024), 2), (RankId(2048), 4)];
+    let mut ids = Vec::new();
+    for &(rank, down_ms) in &victims {
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(rank));
+        s.inject_port_down(port, SimTime::ms(down_ms));
+        ids.push((rank, down_ms, s.submit_p2p(rank, RankId(rank.0 + 8), ByteSize::mb(256).0)));
+    }
+    s.run_to_idle(200_000_000);
+    let mut t2 = Table::new(vec!["victim", "down at (ms)", "completed", "completion (ms)"]);
+    for (rank, down_ms, id) in ids {
+        let op = &s.ops[id.0];
+        assert!(op.is_done() && !op.failed, "scale512 failover for {rank} must recover");
+        t2.row(vec![
+            rank.to_string(),
+            down_ms.to_string(),
+            "yes".into(),
+            op.finished_at.map(|t| format!("{:.1}", t.as_ms_f64())).unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    out.push_str("\nmulti-failure sweep (3 ports down mid-256MB P2P, never restored):\n");
+    out.push_str(&t2.render());
+    let m = s.xfers.mem_stats();
+    let _ = writeln!(
+        out,
+        "\nfailovers={} — and the sweep's transfer records recycle too: \
+         {} created, peak {} live.",
+        s.stats.failovers, m.created, m.high_water
+    );
+    assert_eq!(s.stats.failovers, 3, "every victim fails over exactly once");
+    out
+}
+
+/// scale512 part 1: the monitored 4096-rank ring AllReduce with the
+/// §Perf L5 memory evidence, as its own fn so the simulation (and its
+/// bounded slab) drops before the failover sweep runs.
+fn scale512_allreduce(base: &Config) -> String {
+    let mut s = ClusterSim::new(base.clone());
+    let nranks = s.topo.num_ranks();
+    let id = s.submit(CollKind::AllReduce, ByteSize::mb(16).0);
+    s.run_to_idle(2_500_000_000);
+    let mut out = String::new();
+    let op = &s.ops[id.0];
+    assert!(op.is_done(), "scale512 allreduce must complete");
+    let t = op.finished_at.unwrap().since(op.started_at);
+    let busbw = op.busbw_gbps(nranks).unwrap_or(0.0);
+    let r = s.rdma.rdma_stats();
+    let m = s.xfers.mem_stats();
+    let recycle_ratio = m.created as f64 / m.high_water.max(1) as f64;
+    let mon = s.monitor.as_ref().expect("scale512 keeps the monitor on");
+    let rollup_bytes: u64 =
+        s.ops[id.0].chan_rollup.iter().map(|c| c.bytes).sum();
+    let mut t1 = Table::new(vec!["metric", "value"]);
+    t1.row(vec!["ranks".to_string(), nranks.to_string()]);
+    t1.row(vec!["AllReduce 16MB completion".into(), format!("{t}")]);
+    t1.row(vec!["busbw (Gbps)".into(), format!("{busbw:.0}")]);
+    t1.row(vec!["events dispatched".into(), s.engine.dispatched().to_string()]);
+    t1.row(vec!["monitor WCs processed".into(), mon.processed_wcs.to_string()]);
+    t1.row(vec!["QP-visit reduction (§Perf L4)".into(), format!("{:.0}x", r.visit_reduction())]);
+    t1.row(vec!["transfers created".into(), m.created.to_string()]);
+    t1.row(vec!["peak live transfer slots".into(), m.high_water.to_string()]);
+    t1.row(vec!["live at end".into(), m.live.to_string()]);
+    t1.row(vec![
+        "created / peak-live (§Perf L5 gate ≥100x)".into(),
+        format!("{recycle_ratio:.0}x"),
+    ]);
+    t1.row(vec!["roll-up payload bytes".into(), rollup_bytes.to_string()]);
+    out.push_str(&t1.render());
+    let _ = writeln!(
+        out,
+        "\nTransfer bookkeeping is O(active): {} transfers were created but \
+         at most {} records were ever live — completed slots recycle through \
+         the §Perf L5 slab, and per-op figures live in the roll-ups \
+         (here {} B across {} channel(s)). Before L5 the retained records \
+         were the 512-node OOM.",
+        m.created,
+        m.high_water,
+        rollup_bytes,
+        s.ops[id.0].chan_rollup.len()
+    );
+    assert!(
+        recycle_ratio >= 100.0,
+        "§Perf L5 memory gate missed at scale512: {recycle_ratio:.1}x < 100x"
+    );
+    assert_eq!(m.live, 0, "every transfer must retire at quiescence");
     out
 }
 

@@ -120,6 +120,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("retrywin", "ablation: retry window before failover vs immediate"),
     ("scale64", "64-node (512-GPU) allreduce + failover sweep (§Perf L3)"),
     ("scale256", "256-node (2048-GPU) monitored allreduce + multi-failure sweep (§Perf L4)"),
+    ("scale512", "512-node (4096-GPU) monitored allreduce + failover sweep (§Perf L5)"),
 ];
 
 /// Run one experiment by id; returns the report text.
@@ -145,6 +146,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         "retrywin" => reliability::retrywin_ablation(cfg),
         "scale64" => experiments::scale64_cluster(cfg),
         "scale256" => experiments::scale256_cluster(cfg),
+        "scale512" => experiments::scale512_cluster(cfg),
         "list" => {
             let mut out = String::new();
             for (id, desc) in EXPERIMENTS {

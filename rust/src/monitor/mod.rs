@@ -155,6 +155,27 @@ impl PortTraffic {
             .map(|t| t.max(ns))
     }
 
+    /// Total completed bytes across ALL ports in `[from_ns, to_ns)`,
+    /// attributed at aggregation-bucket granularity (a bucket belongs to
+    /// the window containing its start). Exact when both bounds are
+    /// multiples of `bucket_ns` — the fig18-style per-phase goodput reads
+    /// (§Perf L5 resilience sweep) align their phases to the buckets.
+    pub fn bytes_between(&self, from_ns: u64, to_ns: u64) -> u64 {
+        self.ports
+            .values()
+            .map(|p| {
+                p.buckets
+                    .iter()
+                    .filter(|(i, _)| {
+                        let t = i * self.bucket_ns;
+                        t >= from_ns && t < to_ns
+                    })
+                    .map(|&(_, b)| b)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
     /// Approximate resident size (the bounded-memory guarantee's witness).
     pub fn memory_bytes(&self) -> usize {
         self.ports
@@ -314,6 +335,21 @@ mod tests {
         assert_eq!(s[1].0, 2.0);
         assert!((s[1].1 - 2.0 * (1u64 << 30) as f64 * 8.0 / 1e9).abs() < 1e-9);
         assert!(t.series_gbps(8, 1_000_000_000).is_empty(), "silent port → empty series");
+    }
+
+    /// Cluster-wide per-phase goodput (§Perf L5 fig18-style sweeps): bytes
+    /// across all ports inside a window, exact on bucket-aligned bounds.
+    #[test]
+    fn port_traffic_bytes_between_windows() {
+        let mut t = PortTraffic::new(10_000_000); // 10ms buckets
+        t.record(5_000_000, 0, 100); // bucket 0, port 0
+        t.record(15_000_000, 1, 200); // bucket 1, port 1
+        t.record(25_000_000, 0, 400); // bucket 2, port 0
+        assert_eq!(t.bytes_between(0, 30_000_000), 700);
+        assert_eq!(t.bytes_between(0, 10_000_000), 100);
+        assert_eq!(t.bytes_between(10_000_000, 20_000_000), 200);
+        assert_eq!(t.bytes_between(10_000_000, 30_000_000), 600);
+        assert_eq!(t.bytes_between(30_000_000, 60_000_000), 0);
     }
 
     /// The recovery-gap query: exact for a port whose first completion is

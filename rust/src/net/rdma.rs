@@ -239,6 +239,12 @@ impl RdmaNet {
         self.qps.len()
     }
 
+    /// Live flow → (QP, WR) routing entries. Drains to zero when nothing
+    /// is on the wire (§Perf L5: no map pins a completed transfer's work).
+    pub fn flow_owner_count(&self) -> usize {
+        self.flow_owner.len()
+    }
+
     /// Answer hot-path queries with the scan-based reference algorithms
     /// instead of the counter/index. Outputs are identical by contract;
     /// only the work (and [`RdmaStats`]) differs.

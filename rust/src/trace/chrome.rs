@@ -79,7 +79,7 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         TraceEvent::PointerMigrated { conn, .. } | TraceEvent::Failback { conn } => {
             (PID_FAULT, conn as u64)
         }
-        TraceEvent::OpSubmitted { op, .. } | TraceEvent::OpFinished { op } => {
+        TraceEvent::OpSubmitted { op, .. } | TraceEvent::OpFinished { op, .. } => {
             (PID_CCL, op as u64)
         }
         // Steps of the same op run concurrently across channels; give each
@@ -162,7 +162,9 @@ fn args_json(ev: &TraceEvent) -> String {
         TraceEvent::OpSubmitted { op, kind, bytes } => {
             format!("{{\"op\": {op}, \"kind\": {}, \"bytes\": {bytes}}}", json_string(kind))
         }
-        TraceEvent::OpFinished { op } => format!("{{\"op\": {op}}}"),
+        TraceEvent::OpFinished { op, xfers, bytes } => {
+            format!("{{\"op\": {op}, \"xfers\": {xfers}, \"bytes\": {bytes}}}")
+        }
         TraceEvent::StepBegin { op, channel, step } | TraceEvent::StepEnd { op, channel, step } => {
             format!("{{\"op\": {op}, \"channel\": {channel}, \"step\": {step}}}")
         }
@@ -597,7 +599,7 @@ mod tests {
             TraceEvent::PointerMigrated { conn: 1, breakpoint: 2, rolled_back: 3 },
             TraceEvent::Failback { conn: 1 },
             TraceEvent::OpSubmitted { op: 1, kind: "AllReduce", bytes: 2 },
-            TraceEvent::OpFinished { op: 1 },
+            TraceEvent::OpFinished { op: 1, xfers: 4, bytes: 32 },
             TraceEvent::StepBegin { op: 1, channel: 2, step: 3 },
             TraceEvent::StepEnd { op: 1, channel: 2, step: 3 },
             TraceEvent::MonitorVerdict { port: 1, verdict: "non-network", gbps: 0.5 },

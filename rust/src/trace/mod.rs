@@ -89,9 +89,12 @@ pub enum TraceEvent {
     PointerMigrated { conn: usize, breakpoint: u64, rolled_back: u64 },
     /// Traffic returned to the (healed, warm) primary QP.
     Failback { conn: usize },
-    /// A collective was submitted / finished (`ccl::collectives`).
+    /// A collective was submitted / finished (`ccl::collectives`). The
+    /// finish event carries the op's §Perf L5 roll-up totals (transfers
+    /// finished, payload bytes) — the per-transfer records are recycled by
+    /// then, so the trace reads the fold, never retired `Xfer`s.
     OpSubmitted { op: usize, kind: &'static str, bytes: u64 },
-    OpFinished { op: usize },
+    OpFinished { op: usize, xfers: u64, bytes: u64 },
     /// A per-channel ring step began / completed.
     StepBegin { op: usize, channel: usize, step: usize },
     StepEnd { op: usize, channel: usize, step: usize },

@@ -47,7 +47,9 @@ pub fn describe(ev: &TraceEvent) -> String {
         ),
         TraceEvent::Failback { conn } => format!("conn {conn}: traffic back on primary"),
         TraceEvent::OpSubmitted { op, kind, bytes } => format!("op {op}: {kind} {bytes} B"),
-        TraceEvent::OpFinished { op } => format!("op {op} complete"),
+        TraceEvent::OpFinished { op, xfers, bytes } => {
+            format!("op {op} complete: {xfers} transfer(s), {bytes} B")
+        }
         TraceEvent::StepBegin { op, channel, step } => {
             format!("op {op} ch {channel} step {step}")
         }
