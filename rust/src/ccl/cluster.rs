@@ -19,10 +19,10 @@ use crate::fault::{migrate_to_breakpoint_traced, DeltaProbe, ProbeVerdict, RecvP
 use crate::gpu::{CopyEngines, GpuCompute, TaskId};
 use crate::monitor::MonitorSet;
 use crate::net::{CompletionStatus, FlowId, QpId, QpState, RdmaNet, WorkCompletion};
-use crate::sim::{Engine, SimTime};
-use crate::topology::{build_rings, Cluster, PortId, RankId, Ring};
+use crate::sim::{Engine, EngineState, SimTime};
+use crate::topology::{build_rings, Cluster, NicId, NodeId, PortId, RankId, Ring};
 use crate::trace::{TraceEvent, Tracer};
-use crate::util::Rng;
+use crate::util::{fingerprint, CkptReader, CkptWriter, Rng};
 
 use super::mempool::{AllocPolicy, MemPool};
 use super::transport::{locality_of, DataPath, Locality, TransportProfile};
@@ -334,6 +334,46 @@ impl XferSlab {
             high_water: self.high_water,
             slots_resident: self.slots.len() as u64,
         }
+    }
+
+    /// Serialize the slab bookkeeping (§Soak checkpointing). Requires an
+    /// op-quiescent boundary — no live transfers — and the recycling mode
+    /// (the retained-history slab is a test-only reference, not durable
+    /// state), so only slot generations and the free list survive.
+    pub fn save(&self, w: &mut CkptWriter) {
+        assert_eq!(self.live(), 0, "XferSlab checkpoint requires quiescence (live transfers)");
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        assert!(!self.retain_all, "checkpoint the recycling slab, not the retained reference");
+        w.usize("nslots", self.slots.len());
+        for s in &self.slots {
+            debug_assert!(s.x.is_none(), "quiescent slab holds a record");
+            w.u32("g", s.gen);
+        }
+        w.usize("nfree", self.free.len());
+        for f in &self.free {
+            w.u32("fr", *f);
+        }
+        w.u64("created", self.created);
+        w.u64("retired", self.retired);
+        w.u64("hw", self.high_water);
+    }
+
+    /// Restore the bookkeeping into a fresh slab — slot generations and the
+    /// LIFO free-list order are bit-exact, so post-resume allocations reuse
+    /// the same slots with the same generations as the uninterrupted run.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        self.slots.clear();
+        for _ in 0..r.usize("nslots")? {
+            self.slots.push(XferSlot { gen: r.u32("g")?, x: None });
+        }
+        self.free.clear();
+        for _ in 0..r.usize("nfree")? {
+            self.free.push(r.u32("fr")?);
+        }
+        self.created = r.u64("created")?;
+        self.retired = r.u64("retired")?;
+        self.high_water = r.u64("hw")?;
+        Ok(())
     }
 }
 
@@ -1392,6 +1432,425 @@ impl ClusterSim {
     pub fn qp_conn_count(&self) -> usize {
         self.qp_conn.len()
     }
+
+    // ------------------------------------------------------------------
+    // Checkpoint / resume (§Soak)
+    // ------------------------------------------------------------------
+
+    /// Hash of everything behaviour-relevant in the config. The trace
+    /// section is excluded — the flight recorder is diagnostics, not
+    /// simulation state, and does not survive a restart.
+    pub fn config_fingerprint(cfg: &Config) -> u64 {
+        fingerprint(&format!(
+            "{:?}|{:?}|{:?}|{:?}|seed={}",
+            cfg.gpu, cfg.net, cfg.topo, cfg.vccl, cfg.seed
+        ))
+    }
+
+    /// Serialize the complete durable simulation state at an
+    /// **op-quiescent boundary**: no live transfers or flows, no
+    /// outstanding WRs, no armed δ-probes, no resident comm kernels.
+    /// Future events (QP warm-ups, scheduled port flaps, stale
+    /// generation-guarded checks) MAY be pending — the engine queue is
+    /// serialized verbatim, cancelled entries included, so the `seq` /
+    /// `dispatched` bookkeeping and every future pop are bit-identical
+    /// after resume. See DESIGN.md §Soak for the layout contract.
+    pub fn checkpoint(&self) -> String {
+        assert_eq!(self.xfers.live(), 0, "checkpoint requires quiescence (live transfers)");
+        assert!(self.intra_flows.is_empty(), "checkpoint requires quiescence (intra-node flows)");
+        assert!(self.op_sms.is_empty(), "checkpoint requires quiescence (comm kernels resident)");
+        for c in &self.conns {
+            assert!(c.pending.is_empty(), "checkpoint requires quiescence (queued transfers)");
+            if let Some(p) = &c.probe {
+                assert!(!p.is_armed(), "checkpoint requires quiescence (armed δ-probe)");
+            }
+        }
+        let mut w = CkptWriter::new("VCCLCKPT", 1);
+        w.section("config");
+        w.u64("cfgfp", Self::config_fingerprint(&self.cfg));
+        // Connection bootstrap replay list: re-running `conn()` in creation
+        // order reproduces ids, QP numbering and the link→QP index exactly.
+        w.section("conns");
+        w.usize("nconns", self.conns.len());
+        for c in &self.conns {
+            w.usize("src", c.src.0);
+            w.usize("dst", c.dst.0);
+            w.usize("ch", c.channel);
+        }
+        for c in &self.conns {
+            w.bool("actb", matches!(c.active, ActiveSide::Backup));
+            w.bool("afb", c.awaiting_failback);
+            w.u32("cfo", c.failovers);
+            w.bool("used", c.used);
+            w.opt_u64("pep", c.probe.as_ref().map(|p| u64::from(p.epoch)));
+        }
+        w.section("fabric");
+        self.topo.fabric.save(&mut w);
+        w.section("rdma");
+        self.rdma.save(&mut w);
+        w.section("engine");
+        let st = self.engine.checkpoint_state();
+        w.u64("enow", st.now.as_ns());
+        w.u64("eseq", st.seq);
+        w.u64("edisp", st.dispatched);
+        w.usize("ncanc", st.cancelled.len());
+        for c in &st.cancelled {
+            w.u64("cs", *c);
+        }
+        w.usize("npend", st.pending.len());
+        for (at, seq, ev) in &st.pending {
+            w.u64("at", at.as_ns());
+            w.u64("sq", *seq);
+            save_event(&mut w, ev);
+        }
+        w.section("xfers");
+        self.xfers.save(&mut w);
+        w.section("ops");
+        w.usize("nops", self.ops.len());
+        for o in &self.ops {
+            w.u64("kind", coll_ordinal(o.kind));
+            w.u64("bytes", o.bytes);
+            w.bool("p2p", o.p2p.is_some());
+            if let Some((s, d)) = o.p2p {
+                w.usize("ps", s.0);
+                w.usize("pd", d.0);
+            }
+            w.usize("chans", o.channels);
+            w.usize("steps", o.steps_total);
+            for &s in &o.chan_step {
+                w.usize("cs", s);
+            }
+            for &p in &o.chan_pending {
+                w.usize("cp", p);
+            }
+            for ru in &o.chan_rollup {
+                save_rollup(&mut w, ru);
+            }
+            w.usize("cdone", o.channels_done);
+            w.bool("fail", o.failed);
+            w.u64("start", o.started_at.as_ns());
+            w.opt_u64("fin", o.finished_at.map(|t| t.as_ns()));
+        }
+        w.section("stats");
+        w.u64("kls", self.stats.comm_kernel_launches);
+        w.usize("nproxy", self.stats.proxy_cpu_ns.len());
+        for v in &self.stats.proxy_cpu_ns {
+            w.u64("px", *v);
+        }
+        w.u64("ceops", self.stats.ce_ops);
+        w.u64("wireb", self.stats.wire_bytes);
+        w.u64("sfo", self.stats.failovers);
+        w.u64("sfb", self.stats.failbacks);
+        w.u64("hung", self.stats.hung_ops);
+        w.u64("pben", self.stats.probe_benign);
+        w.u64("pdead", self.stats.probe_dead);
+        self.stats.port_traffic.save(&mut w);
+        w.section("monitor");
+        w.bool("hasmon", self.monitor.is_some());
+        if let Some(m) = &self.monitor {
+            m.save(&mut w);
+        }
+        w.section("mempools");
+        w.usize("nmp", self.mempools.len());
+        for m in &self.mempools {
+            m.save(&mut w);
+        }
+        w.section("gpus");
+        w.usize("ngpu", self.gpus.len());
+        for g in &self.gpus {
+            g.compute.save(&mut w);
+            g.ce.save(&mut w);
+        }
+        w.section("rng");
+        let rs = self.rng.state();
+        w.u64("r0", rs[0]);
+        w.u64("r1", rs[1]);
+        w.u64("r2", rs[2]);
+        w.u64("r3", rs[3]);
+        w.finish()
+    }
+
+    /// Rebuild a simulation from a [`Self::checkpoint`] stream and the SAME
+    /// config it was taken under (enforced by fingerprint). The fresh
+    /// instance replays connection bootstrap, then patches every mutable
+    /// field from the stream — after this, driving the pair (resumed vs
+    /// never-stopped) produces bit-identical events, timers, roll-ups and
+    /// reports. The flight-recorder ring is NOT restored (diagnostics only;
+    /// `trace::export_since` splices post-resume trace tails instead).
+    pub fn restore(cfg: Config, text: &str) -> Result<ClusterSim, String> {
+        let mut r = CkptReader::new(text, "VCCLCKPT", 1)?;
+        let mut sim = ClusterSim::new(cfg);
+        r.expect("config")?;
+        if r.u64("cfgfp")? != Self::config_fingerprint(&sim.cfg) {
+            return Err("checkpoint was taken under a different config".to_string());
+        }
+        r.expect("conns")?;
+        let nconns = r.usize("nconns")?;
+        let mut replay = Vec::with_capacity(nconns);
+        for _ in 0..nconns {
+            let src = r.usize("src")?;
+            let dst = r.usize("dst")?;
+            let ch = r.usize("ch")?;
+            replay.push((src, dst, ch));
+        }
+        for (i, (src, dst, ch)) in replay.into_iter().enumerate() {
+            let id = sim.conn(RankId(src), RankId(dst), ch);
+            if id.0 != i {
+                return Err(format!("connection replay produced id {} for entry {i}", id.0));
+            }
+        }
+        for c in sim.conns.iter_mut() {
+            c.active = if r.bool("actb")? { ActiveSide::Backup } else { ActiveSide::Primary };
+            c.awaiting_failback = r.bool("afb")?;
+            c.failovers = r.u32("cfo")?;
+            c.used = r.bool("used")?;
+            match (&mut c.probe, r.opt_u64("pep")?) {
+                (Some(p), Some(e)) => {
+                    p.epoch =
+                        u32::try_from(e).map_err(|_| "probe epoch overflow".to_string())?;
+                }
+                (None, None) => {}
+                _ => return Err("probe presence mismatch vs config".to_string()),
+            }
+        }
+        r.expect("fabric")?;
+        sim.topo.fabric.load(&mut r)?;
+        r.expect("rdma")?;
+        sim.rdma.load(&mut r)?;
+        r.expect("engine")?;
+        let now = SimTime::ns(r.u64("enow")?);
+        let seq = r.u64("eseq")?;
+        let dispatched = r.u64("edisp")?;
+        let mut cancelled = Vec::new();
+        for _ in 0..r.usize("ncanc")? {
+            cancelled.push(r.u64("cs")?);
+        }
+        let mut pending = Vec::new();
+        for _ in 0..r.usize("npend")? {
+            let at = SimTime::ns(r.u64("at")?);
+            let sq = r.u64("sq")?;
+            pending.push((at, sq, load_event(&mut r)?));
+        }
+        sim.engine = Engine::from_state(EngineState { now, seq, dispatched, cancelled, pending });
+        r.expect("xfers")?;
+        sim.xfers.load(&mut r)?;
+        r.expect("ops")?;
+        sim.ops.clear();
+        for i in 0..r.usize("nops")? {
+            let kind = coll_from_ordinal(r.u64("kind")?)?;
+            let bytes = r.u64("bytes")?;
+            let p2p = if r.bool("p2p")? {
+                Some((RankId(r.usize("ps")?), RankId(r.usize("pd")?)))
+            } else {
+                None
+            };
+            let channels = r.usize("chans")?;
+            let steps_total = r.usize("steps")?;
+            let mut chan_step = Vec::with_capacity(channels);
+            for _ in 0..channels {
+                chan_step.push(r.usize("cs")?);
+            }
+            let mut chan_pending = Vec::with_capacity(channels);
+            for _ in 0..channels {
+                chan_pending.push(r.usize("cp")?);
+            }
+            let mut chan_rollup = Vec::with_capacity(channels);
+            for _ in 0..channels {
+                chan_rollup.push(load_rollup(&mut r)?);
+            }
+            sim.ops.push(Op {
+                id: OpId(i),
+                kind,
+                bytes,
+                p2p,
+                channels,
+                steps_total,
+                chan_step,
+                chan_pending,
+                chan_rollup,
+                channels_done: r.usize("cdone")?,
+                failed: r.bool("fail")?,
+                started_at: SimTime::ns(r.u64("start")?),
+                finished_at: r.opt_u64("fin")?.map(SimTime::ns),
+            });
+        }
+        r.expect("stats")?;
+        sim.stats.comm_kernel_launches = r.u64("kls")?;
+        let nproxy = r.usize("nproxy")?;
+        if nproxy != sim.stats.proxy_cpu_ns.len() {
+            return Err(format!(
+                "checkpoint has {nproxy} proxy counters, config built {}",
+                sim.stats.proxy_cpu_ns.len()
+            ));
+        }
+        for v in sim.stats.proxy_cpu_ns.iter_mut() {
+            *v = r.u64("px")?;
+        }
+        sim.stats.ce_ops = r.u64("ceops")?;
+        sim.stats.wire_bytes = r.u64("wireb")?;
+        sim.stats.failovers = r.u64("sfo")?;
+        sim.stats.failbacks = r.u64("sfb")?;
+        sim.stats.hung_ops = r.u64("hung")?;
+        sim.stats.probe_benign = r.u64("pben")?;
+        sim.stats.probe_dead = r.u64("pdead")?;
+        sim.stats.port_traffic.load(&mut r)?;
+        r.expect("monitor")?;
+        if r.bool("hasmon")? != sim.monitor.is_some() {
+            return Err("monitor presence mismatch vs config".to_string());
+        }
+        if let Some(m) = sim.monitor.as_mut() {
+            m.load(&mut r)?;
+        }
+        r.expect("mempools")?;
+        let nmp = r.usize("nmp")?;
+        if nmp != sim.mempools.len() {
+            return Err(format!(
+                "checkpoint has {nmp} mempools, config built {}",
+                sim.mempools.len()
+            ));
+        }
+        for m in sim.mempools.iter_mut() {
+            m.load(&mut r)?;
+        }
+        r.expect("gpus")?;
+        let ngpu = r.usize("ngpu")?;
+        if ngpu != sim.gpus.len() {
+            return Err(format!("checkpoint has {ngpu} GPUs, config built {}", sim.gpus.len()));
+        }
+        for g in sim.gpus.iter_mut() {
+            g.compute.load(&mut r)?;
+            g.ce.load(&mut r)?;
+        }
+        r.expect("rng")?;
+        let rs = [r.u64("r0")?, r.u64("r1")?, r.u64("r2")?, r.u64("r3")?];
+        sim.rng = Rng::from_state(rs);
+        r.finish()?;
+        Ok(sim)
+    }
+}
+
+fn coll_ordinal(k: CollKind) -> u64 {
+    match k {
+        CollKind::SendRecv => 0,
+        CollKind::AllReduce => 1,
+        CollKind::AllGather => 2,
+        CollKind::ReduceScatter => 3,
+        CollKind::AllToAll => 4,
+    }
+}
+
+fn coll_from_ordinal(v: u64) -> Result<CollKind, String> {
+    Ok(match v {
+        0 => CollKind::SendRecv,
+        1 => CollKind::AllReduce,
+        2 => CollKind::AllGather,
+        3 => CollKind::ReduceScatter,
+        4 => CollKind::AllToAll,
+        other => return Err(format!("bad collective ordinal {other}")),
+    })
+}
+
+fn save_rollup(w: &mut CkptWriter, ru: &ChanRollup) {
+    w.u64("rx", ru.xfers);
+    w.u64("rc", ru.chunks);
+    w.u64("rw", ru.chunks_wire);
+    w.u64("rb", ru.bytes);
+    w.opt_u64("rf", ru.first_start_ns);
+    w.opt_u64("rl", ru.last_finish_ns);
+    w.u64("rs", ru.stall_ns);
+}
+
+fn load_rollup(r: &mut CkptReader) -> Result<ChanRollup, String> {
+    Ok(ChanRollup {
+        xfers: r.u64("rx")?,
+        chunks: r.u64("rc")?,
+        chunks_wire: r.u64("rw")?,
+        bytes: r.u64("rb")?,
+        first_start_ns: r.opt_u64("rf")?,
+        last_finish_ns: r.opt_u64("rl")?,
+        stall_ns: r.u64("rs")?,
+    })
+}
+
+fn save_port(w: &mut CkptWriter, p: PortId) {
+    w.usize("pn", p.nic.node.0);
+    w.usize("pl", p.nic.local);
+    w.u64("pp", u64::from(p.port));
+}
+
+fn load_port(r: &mut CkptReader) -> Result<PortId, String> {
+    let node = r.usize("pn")?;
+    let local = r.usize("pl")?;
+    let port = u8::try_from(r.u64("pp")?).map_err(|_| "port index overflow".to_string())?;
+    Ok(PortId { nic: NicId { node: NodeId(node), local }, port })
+}
+
+/// Event codec: every one of the nine kinds serializes faithfully — a
+/// pending event whose target is gone by resume time (a stale `ChunkReady`
+/// against a recycled slot, a `GpuTask` for a finished task) fires as the
+/// same no-op it would have been in the uninterrupted run, because the
+/// generation counters it is checked against are restored too.
+fn save_event(w: &mut CkptWriter, ev: &Event) {
+    match ev {
+        Event::Flow { flow, gen } => {
+            w.token("evF");
+            w.u64("f", flow.0);
+            w.u32("g", *gen);
+        }
+        Event::QpRetry { qp, epoch } => {
+            w.token("evR");
+            w.u64("q", qp.0);
+            w.u32("e", *epoch);
+        }
+        Event::QpWarm { qp } => {
+            w.token("evW");
+            w.u64("q", qp.0);
+        }
+        Event::GpuTask { gpu, task, gen } => {
+            w.token("evG");
+            w.usize("u", *gpu);
+            w.u64("t", task.0);
+            w.u32("g", *gen);
+        }
+        Event::ChunkReady { xfer } => {
+            w.token("evC");
+            w.u32("s", xfer.slot);
+            w.u32("g", xfer.gen);
+        }
+        Event::PortDown { port } => {
+            w.token("evD");
+            save_port(w, *port);
+        }
+        Event::PortUp { port } => {
+            w.token("evU");
+            save_port(w, *port);
+        }
+        Event::DeltaCheck { conn, epoch } => {
+            w.token("evX");
+            w.usize("c", conn.0);
+            w.u32("e", *epoch);
+        }
+        Event::OpStep { op, channel } => {
+            w.token("evS");
+            w.usize("o", op.0);
+            w.usize("c", *channel);
+        }
+    }
+}
+
+fn load_event(r: &mut CkptReader) -> Result<Event, String> {
+    Ok(match r.token()? {
+        "evF" => Event::Flow { flow: FlowId(r.u64("f")?), gen: r.u32("g")? },
+        "evR" => Event::QpRetry { qp: QpId(r.u64("q")?), epoch: r.u32("e")? },
+        "evW" => Event::QpWarm { qp: QpId(r.u64("q")?) },
+        "evG" => Event::GpuTask { gpu: r.usize("u")?, task: TaskId(r.u64("t")?), gen: r.u32("g")? },
+        "evC" => Event::ChunkReady { xfer: XferId { slot: r.u32("s")?, gen: r.u32("g")? } },
+        "evD" => Event::PortDown { port: load_port(r)? },
+        "evU" => Event::PortUp { port: load_port(r)? },
+        "evX" => Event::DeltaCheck { conn: ConnId(r.usize("c")?), epoch: r.u32("e")? },
+        "evS" => Event::OpStep { op: OpId(r.usize("o")?), channel: r.usize("c")? },
+        other => return Err(format!("unknown event tag {other:?}")),
+    })
 }
 
 #[cfg(test)]
@@ -1830,6 +2289,78 @@ mod tests {
         assert!(m.created > 1_000, "sweep too small: {m:?}");
         assert!(m.high_water * 4 < m.created, "recycling must bound live slots: {m:?}");
         assert!(rec.0.len() as u64 >= 200);
+    }
+
+    /// §Soak tentpole: checkpoint at an op-quiescent boundary while events
+    /// are still pending (a PortUp scheduled 30 s out), restore into a
+    /// fresh instance, and drive both through an identical follow-up
+    /// workload. Completion timers, dispatch counts, failover/failback
+    /// stats, wire bytes and the RNG stream must be bit-identical — and
+    /// re-checkpointing the restored sim must reproduce the original
+    /// stream byte-for-byte (restore is a fixed point).
+    #[test]
+    fn checkpoint_restore_round_trip_is_bit_identical() {
+        let cfg = fast_ft_cfg();
+        let mut s = ClusterSim::new(cfg.clone());
+        let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(0)));
+        s.inject_port_down(port, SimTime::ms(2));
+        // Heals long after the checkpoint: the PortUp event must survive
+        // serialization and fire identically post-resume.
+        s.inject_port_up(port, SimTime::s(30));
+        let a = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        assert!(s.run_until_op(a, 50_000_000));
+        assert_eq!(s.stats.failovers, 1, "the flap must land mid-transfer");
+        // Op-quiescent boundary: transfers drained, PortUp still queued.
+        let boundary = s.now() + SimTime::ms(1);
+        s.run_until(boundary - SimTime::ns(1));
+        s.engine.advance_to(boundary);
+        let text = s.checkpoint();
+
+        let mut t = ClusterSim::restore(cfg, &text).expect("restore");
+        assert_eq!(t.checkpoint(), text, "restore must be a checkpoint fixed point");
+
+        let drive = |s: &mut ClusterSim| {
+            // New traffic rides the backup QP, then the pending PortUp
+            // fires and failback returns it to the primary.
+            let b = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(32).0);
+            assert!(s.run_until_op(b, 50_000_000));
+            let c = s.submit(CollKind::AllGather, 1 << 20);
+            assert!(s.run_until_op(c, 100_000_000));
+            s.run_to_idle(100_000_000);
+            (
+                s.ops.iter().map(|o| o.finished_at.map(|t| t.as_ns())).collect::<Vec<_>>(),
+                s.engine.dispatched(),
+                s.stats.failovers,
+                s.stats.failbacks,
+                s.stats.wire_bytes,
+                s.xfers.mem_stats(),
+                s.rng.next_u64(),
+            )
+        };
+        let orig = drive(&mut s);
+        let resumed = drive(&mut t);
+        assert_eq!(orig, resumed, "resumed run diverged from the uninterrupted one");
+        assert_eq!(orig.3, 1, "the pending PortUp must drive exactly one failback");
+    }
+
+    /// Restoring under a different config (or a corrupted stream) must
+    /// fail loudly, never silently misparse.
+    #[test]
+    fn restore_rejects_config_skew_and_corruption() {
+        let cfg = fast_ft_cfg();
+        let mut s = ClusterSim::new(cfg.clone());
+        let a = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(4).0);
+        assert!(s.run_until_op(a, 20_000_000));
+        s.run_to_idle(20_000_000);
+        let text = s.checkpoint();
+        let mut other = cfg.clone();
+        other.seed ^= 1;
+        assert!(
+            ClusterSim::restore(other, &text).unwrap_err().contains("different config"),
+            "seed skew must be rejected"
+        );
+        let truncated = &text[..text.len() / 2];
+        assert!(ClusterSim::restore(cfg, truncated).is_err(), "truncation must be rejected");
     }
 
     #[test]

@@ -17,6 +17,8 @@
 
 use std::collections::HashMap;
 
+use crate::util::{CkptReader, CkptWriter};
+
 /// NCCL protocol variants that each get buffer space in eager mode.
 pub const PROTOCOLS: usize = 3; // LL, LL128, Simple
 
@@ -109,6 +111,37 @@ impl MemPool {
 
     pub fn live_connections(&self) -> usize {
         self.live.len()
+    }
+
+    /// Serialize the accounting state (§Soak checkpointing). Policy and
+    /// buffer sizing come from config at restore, not the stream.
+    pub fn save(&self, w: &mut CkptWriter) {
+        w.u64("rsv", self.reserved);
+        w.u64("used", self.used);
+        w.u64("peak", self.peak);
+        let mut live: Vec<(&(usize, usize), &u64)> = self.live.iter().collect();
+        live.sort_unstable_by_key(|(k, _)| **k);
+        w.usize("nlive", live.len());
+        for ((peer, channel), bytes) in live {
+            w.usize("p", *peer);
+            w.usize("c", *channel);
+            w.u64("b", *bytes);
+        }
+    }
+
+    /// Restore accounting into a freshly constructed pool.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        self.reserved = r.u64("rsv")?;
+        self.used = r.u64("used")?;
+        self.peak = r.u64("peak")?;
+        self.live.clear();
+        for _ in 0..r.usize("nlive")? {
+            let peer = r.usize("p")?;
+            let channel = r.usize("c")?;
+            let bytes = r.u64("b")?;
+            self.live.insert((peer, channel), bytes);
+        }
+        Ok(())
     }
 }
 

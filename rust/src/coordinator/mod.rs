@@ -12,6 +12,7 @@ pub mod bench;
 pub mod experiments;
 pub mod reliability;
 pub mod observability;
+pub mod soak;
 pub mod trace;
 
 use std::path::PathBuf;
@@ -30,6 +31,10 @@ pub enum Command {
     Trace { id: String, out: Option<PathBuf> },
     /// `vccl bench [--out-dir d] [--quick]` — emit `BENCH_*.json`.
     Bench { out_dir: PathBuf, quick: bool },
+    /// `vccl soak [--sim-days F] [--quick] [--out-dir d] [--resume ckpt]
+    /// [--stop-after-ckpts N]` — time-compressed MTBF fault soak with
+    /// checkpoint/resume; emits `BENCH_soak.json` (see [`soak`]).
+    Soak { out_dir: PathBuf, opts: soak::SoakOpts },
     /// `vccl train [--preset p] [--steps n] [--transport t] [--out csv]`
     Train { preset: String, steps: u64, out: Option<PathBuf> },
     /// `vccl info` — print resolved configuration.
@@ -48,7 +53,16 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     let mut out = None;
     let mut out_dir = PathBuf::from(".");
     let mut quick = false;
+    let mut resume = None;
+    let mut stop_after_ckpts = None;
     let mut exp_id = String::new();
+    if cmd == "soak" {
+        // The soak preset (single channel, tight retry window, dual-port
+        // NICs — see `Config::soak_defaults`) is the baseline; env vars
+        // still apply, and `--config`/`--set` below override further.
+        cfg = Config::soak_defaults();
+        crate::config::apply_env(&mut cfg, |k| std::env::var(k).ok());
+    }
     if cmd == "exp" || cmd == "trace" {
         exp_id = it
             .next()
@@ -80,6 +94,22 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
                 out_dir = PathBuf::from(it.next().ok_or_else(|| anyhow!("--out-dir path"))?);
             }
             "--quick" => quick = true,
+            "--sim-days" => {
+                let d = it.next().ok_or_else(|| anyhow!("--sim-days needs a number"))?;
+                cfg.set_key("soak.sim_days", d)?;
+            }
+            "--resume" => {
+                resume =
+                    Some(PathBuf::from(it.next().ok_or_else(|| anyhow!("--resume needs a path"))?));
+            }
+            "--stop-after-ckpts" => {
+                stop_after_ckpts = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow!("--stop-after-ckpts needs a number"))?
+                        .parse()
+                        .map_err(|e| anyhow!("--stop-after-ckpts: {e}"))?,
+                );
+            }
             "--transport" => {
                 let t = it.next().ok_or_else(|| anyhow!("--transport needs a value"))?;
                 cfg.set_key("vccl.transport", t)?;
@@ -91,6 +121,10 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
         "exp" => Command::Exp { id: exp_id },
         "trace" => Command::Trace { id: exp_id, out },
         "bench" => Command::Bench { out_dir, quick },
+        "soak" => Command::Soak {
+            out_dir,
+            opts: soak::SoakOpts { quick, resume, stop_after_ckpts },
+        },
         "train" => Command::Train { preset, steps, out },
         "info" => Command::Info,
         _ => Command::Help,
@@ -183,6 +217,10 @@ pub fn help_text() -> String {
          \x20                                          the incident timeline\n\
          \x20 vccl bench [--out-dir DIR] [--quick]     run the headline experiments and\n\
          \x20                                          write BENCH_{p2p,failover,monitor,train,simcore}.json\n\
+         \x20 vccl soak [--sim-days F] [--quick] [--out-dir DIR]\n\
+         \x20           [--resume soak.ckpt] [--stop-after-ckpts N]\n\
+         \x20                                          time-compressed MTBF fault soak with\n\
+         \x20                                          checkpoint/resume; writes BENCH_soak.json\n\
          \x20 vccl train [--preset tiny|e2e] [--steps N] [--transport vccl|nccl|ncclx]\n\
          \x20           [--out loss.csv]               real PJRT training run\n\
          \x20 vccl info                                print resolved config\n\n\
@@ -264,6 +302,42 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_soak() {
+        let (cmd, cfg) = parse_args(&argv("soak")).unwrap();
+        match cmd {
+            Command::Soak { out_dir, opts } => {
+                assert_eq!(out_dir, std::path::PathBuf::from("."));
+                assert!(!opts.quick && opts.resume.is_none() && opts.stop_after_ckpts.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        // The soak command starts from the soak preset...
+        assert!(cfg.topo.dual_port_nics);
+        assert_eq!(cfg.vccl.channels, 1);
+        // ...but `bench` etc. do not.
+        let (_, cfg) = parse_args(&argv("bench")).unwrap();
+        assert!(!cfg.topo.dual_port_nics);
+
+        let (cmd, cfg) = parse_args(&argv(
+            "soak --quick --sim-days 0.5 --out-dir /tmp/s --resume /tmp/s/soak.ckpt \
+             --stop-after-ckpts 2 --set soak.mtbf_hours=2",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Soak { out_dir, opts } => {
+                assert_eq!(out_dir, std::path::PathBuf::from("/tmp/s"));
+                assert!(opts.quick);
+                assert_eq!(opts.resume, Some(std::path::PathBuf::from("/tmp/s/soak.ckpt")));
+                assert_eq!(opts.stop_after_ckpts, Some(2));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(cfg.soak.sim_days, 0.5);
+        assert_eq!(cfg.soak.mtbf_hours, 2.0);
+        assert!(parse_args(&argv("soak --stop-after-ckpts nope")).is_err());
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! `vccl soak` — the time-compressed soak entry point (§Soak).
+//!
+//! Drives a [`crate::soak::SoakHarness`] over the configured number of
+//! simulated days, persisting a `soak.ckpt` checkpoint every
+//! `soak.checkpoint_every` bursts and `BENCH_soak.json` at the end. A run
+//! killed mid-soak (crash, CI timeout, `--stop-after-ckpts`) resumes with
+//! `--resume soak.ckpt` and produces the **byte-identical** final report —
+//! the CI smoke job diffs exactly that.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::soak::SoakHarness;
+
+/// Soak-run options (parsed from the `vccl soak` command line).
+#[derive(Debug, Clone, Default)]
+pub struct SoakOpts {
+    /// Tiny deterministic slice for CI: ~12 bursts, MTBF of ~2 bursts,
+    /// checkpoint every 5. Same code path as a full soak.
+    pub quick: bool,
+    /// Resume from a `soak.ckpt` written by a previous (interrupted) run.
+    pub resume: Option<PathBuf>,
+    /// Abort right after the N-th checkpoint is written — CI uses this to
+    /// simulate a mid-soak kill deterministically.
+    pub stop_after_ckpts: Option<u64>,
+}
+
+/// Apply the `--quick` time compression onto a config.
+pub fn quick_cfg(mut cfg: Config) -> Config {
+    // 12 bursts of 60 simulated seconds; MTBF 108 s ≈ 1.8 bursts so the
+    // slice sees several faults of both kinds.
+    cfg.soak.sim_days = 12.0 * 60.0 / 86_400.0;
+    cfg.soak.mtbf_hours = 0.03;
+    cfg.soak.checkpoint_every = 5;
+    cfg
+}
+
+/// Run (or resume) a soak; write `soak.ckpt` checkpoints and the final
+/// `BENCH_soak.json` into `out_dir`. Returns the human-readable summary.
+pub fn run_soak(cfg: &Config, out_dir: &Path, opts: &SoakOpts) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let cfg = if opts.quick { quick_cfg(cfg.clone()) } else { cfg.clone() };
+    let ckpt_path = out_dir.join("soak.ckpt");
+
+    let mut h = match &opts.resume {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading checkpoint {}", path.display()))?;
+            let h = SoakHarness::restore(cfg, &text).map_err(|e| anyhow!("resume: {e}"))?;
+            eprintln!("soak: resumed at burst {} from {}", h.burst_index(), path.display());
+            h
+        }
+        None => SoakHarness::new(cfg),
+    };
+
+    let written = h.run(opts.stop_after_ckpts, &mut |burst, text| {
+        // Write-then-rename so a kill mid-write never corrupts the
+        // resumable checkpoint.
+        let tmp = ckpt_path.with_extension("ckpt.tmp");
+        if std::fs::write(&tmp, text).and_then(|_| std::fs::rename(&tmp, &ckpt_path)).is_ok() {
+            eprintln!("soak: checkpoint at burst {burst} -> {}", ckpt_path.display());
+        }
+    });
+
+    if h.hung() {
+        return Err(anyhow!(
+            "soak: an op failed to complete by burst {} — simulated fault tolerance \
+             did not recover (this is a finding, not an I/O error)",
+            h.burst_index()
+        ));
+    }
+
+    let report = h.report();
+    let stopped_early = !h.done();
+    if stopped_early {
+        // Killed on request after the N-th checkpoint: the resumable state
+        // is on disk; the final report belongs to the resumed run.
+        return Ok(format!(
+            "soak: stopped after {written} checkpoint(s) at burst {}/{} (resume with \
+             --resume {})",
+            h.burst_index(),
+            h.params.bursts_total,
+            ckpt_path.display()
+        ));
+    }
+
+    let bench_path = out_dir.join("BENCH_soak.json");
+    std::fs::write(&bench_path, report.to_bench().to_json())
+        .with_context(|| format!("writing {}", bench_path.display()))?;
+
+    Ok(format!(
+        "soak: {} bursts / {:.0} simulated s — availability {:.4}, \
+         {} flaps ({} failovers, {} failbacks), {} degrades \
+         (precision {:.3}, recall {:.3}), goodput {:.2} GB -> {}",
+        report.bursts,
+        report.sim_seconds,
+        report.availability,
+        report.flaps_injected,
+        report.failovers,
+        report.failbacks,
+        report.degrades_injected,
+        report.precision(),
+        report.recall(),
+        report.goodput_bytes as f64 / 1e9,
+        bench_path.display()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("vccl_soak_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// The CI smoke contract end to end: an uninterrupted quick soak and a
+    /// kill-after-first-checkpoint + resume produce byte-identical
+    /// BENCH_soak.json files.
+    #[test]
+    fn quick_soak_kill_resume_matches_uninterrupted() {
+        let cfg = Config::soak_defaults();
+        let opts = SoakOpts { quick: true, ..Default::default() };
+
+        let ref_dir = tmpdir("ref");
+        let summary = run_soak(&cfg, &ref_dir, &opts).unwrap();
+        assert!(summary.contains("availability"), "{summary}");
+        let reference = std::fs::read_to_string(ref_dir.join("BENCH_soak.json")).unwrap();
+
+        let dir = tmpdir("resume");
+        let killed = run_soak(
+            &cfg,
+            &dir,
+            &SoakOpts { quick: true, stop_after_ckpts: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        assert!(killed.contains("stopped after 1 checkpoint"), "{killed}");
+        assert!(dir.join("soak.ckpt").exists());
+        assert!(!dir.join("BENCH_soak.json").exists(), "no report from a killed run");
+
+        let resumed = run_soak(
+            &cfg,
+            &dir,
+            &SoakOpts { quick: true, resume: Some(dir.join("soak.ckpt")), ..Default::default() },
+        )
+        .unwrap();
+        assert!(resumed.contains("availability"), "{resumed}");
+        let final_json = std::fs::read_to_string(dir.join("BENCH_soak.json")).unwrap();
+        assert_eq!(final_json, reference, "resume must be bit-identical to uninterrupted");
+
+        let _ = std::fs::remove_dir_all(&ref_dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_from_garbage_is_an_error() {
+        let dir = tmpdir("garbage");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("soak.ckpt");
+        std::fs::write(&bad, "not a checkpoint").unwrap();
+        let err = run_soak(
+            &Config::soak_defaults(),
+            &dir,
+            &SoakOpts { quick: true, resume: Some(bad), ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("resume"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -106,6 +106,12 @@ impl DeltaProbe {
     pub fn next_deadline(&self) -> Option<(SimTime, u32)> {
         self.waiting_since.map(|s| (s + SimTime::ns(self.delta_ns), self.epoch))
     }
+
+    /// Whether a δ-window is currently running (§Soak checkpointing asserts
+    /// probes are disarmed at an op-quiescent boundary).
+    pub fn is_armed(&self) -> bool {
+        self.waiting_since.is_some()
+    }
 }
 
 #[cfg(test)]

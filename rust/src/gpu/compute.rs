@@ -24,6 +24,7 @@ use std::collections::HashMap;
 
 use crate::config::GpuConfig;
 use crate::sim::SimTime;
+use crate::util::{CkptReader, CkptWriter};
 
 /// Identifier of an in-flight compute task on one GPU.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -194,6 +195,26 @@ impl GpuCompute {
         } else {
             self.comm_sm_ns / total
         }
+    }
+
+    /// Serialize the durable state (§Soak checkpointing). Requires
+    /// quiescence: no running tasks, no resident comm kernels.
+    pub fn save(&self, w: &mut CkptWriter) {
+        assert!(self.tasks.is_empty(), "GpuCompute checkpoint requires quiescence (tasks running)");
+        assert!(self.comm_sms == 0, "GpuCompute checkpoint requires quiescence (comm SMs resident)");
+        w.u64("nexttask", self.next_id);
+        w.f64("commsm", self.comm_sm_ns);
+        w.f64("busysm", self.busy_sm_ns);
+        w.u64("occat", self.last_occupancy_update.as_ns());
+    }
+
+    /// Restore into a freshly constructed instance.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        self.next_id = r.u64("nexttask")?;
+        self.comm_sm_ns = r.f64("commsm")?;
+        self.busy_sm_ns = r.f64("busysm")?;
+        self.last_occupancy_update = SimTime::ns(r.u64("occat")?);
+        Ok(())
     }
 
     /// GEMM (FLOPs) → full-rate execution time at the configured peak,

@@ -14,6 +14,7 @@
 //! staging copy, started by the caller when the grant begins.
 
 use crate::sim::SimTime;
+use crate::util::{CkptReader, CkptWriter};
 
 /// A granted slot on a copy engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +60,28 @@ impl CopyEngines {
     /// Earliest time any engine is free (diagnostics).
     pub fn next_free(&self) -> SimTime {
         *self.free_at.iter().min().unwrap()
+    }
+
+    /// Serialize the admission state (§Soak checkpointing). `free_at` can
+    /// point into the future at an op-quiescent boundary (an engine granted
+    /// right before the last copy of a burst), so it must survive.
+    pub fn save(&self, w: &mut CkptWriter) {
+        w.usize("nce", self.free_at.len());
+        for t in &self.free_at {
+            w.u64("free", t.as_ns());
+        }
+    }
+
+    /// Restore into a freshly constructed pool of the same size.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        let n = r.usize("nce")?;
+        if n != self.free_at.len() {
+            return Err(format!("checkpoint has {n} copy engines, config built {}", self.free_at.len()));
+        }
+        for t in self.free_at.iter_mut() {
+            *t = SimTime::ns(r.u64("free")?);
+        }
+        Ok(())
     }
 }
 

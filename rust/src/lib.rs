@@ -38,6 +38,8 @@
 //!   emission behind `vccl bench`.
 //! - [`runtime`] — PJRT (xla crate) wrapper that loads the AOT artifacts.
 //! - [`train`] — real-compute training driver (loss curves, Fig 12 / e2e).
+//! - [`soak`] — time-compressed soak harness: MTBF fault injection over
+//!   simulated days with checkpoint/resume of the full sim state (§Soak).
 //! - [`coordinator`] — leader/CLI: experiment drivers for every paper
 //!   table and figure, plus the `bench` measurement loop.
 
@@ -55,4 +57,5 @@ pub mod pipeline;
 pub mod metrics;
 pub mod runtime;
 pub mod train;
+pub mod soak;
 pub mod coordinator;

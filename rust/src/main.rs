@@ -42,6 +42,9 @@ fn main() {
                     }
                 })
         }
+        Command::Soak { out_dir, opts } => {
+            coordinator::soak::run_soak(&cfg, &out_dir, &opts).map(|summary| println!("{summary}"))
+        }
         Command::Train { preset, steps, out } => {
             let opts = vccl::train::TrainOpts { preset, steps, ..Default::default() };
             vccl::train::run_training(std::path::Path::new("artifacts"), cfg, &opts, |rec| {

@@ -1,8 +1,31 @@
 //! Bandwidth estimators: per-message and sliding-window (Fig 9).
+//!
+//! §Soak bounding: the estimator used to keep every emitted [`BwSample`] in
+//! an unbounded `Vec` — O(windows elapsed) per port, which makes a
+//! months-long soak impossible before it starts. It now keeps, exactly like
+//! `monitor::PortTraffic` but with a *hard cap*:
+//!
+//! - **exact global aggregates** (`samples_total`, `last`) — never dropped;
+//! - a **capped ring of per-bucket roll-ups** (bucket width = the monitor's
+//!   trailing window; at most [`SAMPLE_BUCKET_CAP`] buckets, oldest detail
+//!   evicted — the globals stay exact);
+//! - a **capped raw tail** of the most recent samples ([`SAMPLE_TAIL_CAP`]),
+//!   so slice-shaped consumers keep working;
+//! - the old retain-all `Vec` survives only under the reference-mode cfg
+//!   (`test`/`debug_assertions`/`ref-alloc`) with a per-push cross-check,
+//!   mirroring the `XferSlab`/`PortTraffic` pattern from PRs 4–5.
+//!
+//! Per-port memory is therefore O(window capacity), not O(windows elapsed).
 
 use std::collections::VecDeque;
 
 use crate::sim::SimTime;
+use crate::util::{CkptReader, CkptWriter};
+
+/// Hard cap on retained per-bucket roll-ups per estimator.
+pub const SAMPLE_BUCKET_CAP: usize = 128;
+/// Hard cap on the raw recent-sample tail per estimator.
+pub const SAMPLE_TAIL_CAP: usize = 64;
 
 /// One completed message observed at the verbs layer.
 #[derive(Debug, Clone, Copy)]
@@ -23,23 +46,81 @@ pub struct BwSample {
     pub span_ns: u64,
 }
 
+impl BwSample {
+    /// Bit-exact equality (f64 compared by bits — NaN-safe, −0.0 ≠ +0.0).
+    pub fn bits_eq(&self, other: &BwSample) -> bool {
+        self.at == other.at
+            && self.gbps.to_bits() == other.gbps.to_bits()
+            && self.span_ns == other.span_ns
+    }
+}
+
+/// Roll-up of the samples emitted inside one time bucket.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleBucket {
+    /// Bucket index (`at_ns / bucket_ns`).
+    pub idx: u64,
+    pub count: u64,
+    pub sum_gbps: f64,
+    pub min_gbps: f64,
+    pub max_gbps: f64,
+}
+
 /// Sliding-window estimator. `window == 1` is exactly the paper's naive
 /// per-message scheme.
 #[derive(Debug)]
 pub struct WindowEstimator {
     window: usize,
+    bucket_ns: u64,
     ring: VecDeque<MsgRecord>,
-    samples: Vec<BwSample>,
+    /// Exact count of every sample ever emitted (survives all eviction).
+    samples_total: u64,
+    last: Option<BwSample>,
+    /// Per-bucket roll-ups, ascending by `idx`, at most [`SAMPLE_BUCKET_CAP`].
+    buckets: Vec<SampleBucket>,
+    /// Most recent raw samples, at most [`SAMPLE_TAIL_CAP`].
+    tail: Vec<BwSample>,
+    /// Reference mode: the full unbounded sample log, for equivalence tests.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    retained: Option<Vec<BwSample>>,
+    /// `samples_total` at the instant retention was switched on.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    retain_offset: u64,
 }
 
 impl WindowEstimator {
+    /// Default bucket width = the monitor's default trailing window — read
+    /// off the config default so the two can never silently diverge (the
+    /// same convention as `PortTraffic::default`).
     pub fn new(window: usize) -> Self {
+        Self::with_bucket(window, crate::config::VcclConfig::default().trailing_ns)
+    }
+
+    /// Estimator with an explicit roll-up bucket width.
+    pub fn with_bucket(window: usize, bucket_ns: u64) -> Self {
         assert!(window >= 1, "window must be ≥ 1");
-        WindowEstimator { window, ring: VecDeque::with_capacity(window), samples: Vec::new() }
+        WindowEstimator {
+            window,
+            bucket_ns: bucket_ns.max(1),
+            ring: VecDeque::with_capacity(window),
+            samples_total: 0,
+            last: None,
+            buckets: Vec::new(),
+            tail: Vec::new(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            retained: None,
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            retain_offset: 0,
+        }
     }
 
     pub fn window(&self) -> usize {
         self.window
+    }
+
+    /// Roll-up granularity in nanoseconds.
+    pub fn bucket_ns(&self) -> u64 {
+        self.bucket_ns
     }
 
     /// Push a completed message; emits a sample once the ring holds a full
@@ -60,22 +141,221 @@ impl WindowEstimator {
         let total: u64 = self.ring.iter().map(|r| r.bytes).sum();
         let gbps = total as f64 / span as f64 / 0.125;
         let s = BwSample { at: t2, gbps, span_ns: span };
-        self.samples.push(s);
+        self.emit(s);
         Some(s)
     }
 
+    /// Drop the partial message window so the next traffic epoch starts
+    /// fresh. Bursty workloads (§Soak: ~ms of traffic per simulated minute)
+    /// need this at epoch boundaries — a window straddling a long idle gap
+    /// spans the gap and aliases to ~0 Gbps, which would read as a
+    /// bandwidth collapse on a healthy port. Emitted samples, counts and
+    /// roll-ups are untouched.
+    pub fn flush_window(&mut self) {
+        self.ring.clear();
+    }
+
+    /// Fold one emitted sample into the bounded aggregates. `s.at` may go
+    /// *backwards* between consecutive samples (the window max slides over
+    /// out-of-order completions), so bucket insertion has the same
+    /// fast-path/fallback shape as `PortTraffic::record`.
+    fn emit(&mut self, s: BwSample) {
+        self.samples_total += 1;
+        self.last = Some(s);
+        let idx = s.at.as_ns() / self.bucket_ns;
+        match self.buckets.last_mut() {
+            Some(b) if b.idx == idx => fold_sample(b, &s),
+            Some(b) if b.idx > idx => {
+                match self.buckets.binary_search_by_key(&idx, |b| b.idx) {
+                    Ok(pos) => fold_sample(&mut self.buckets[pos], &s),
+                    // Before the oldest retained bucket: that detail has
+                    // been evicted — the sample only reaches the exact
+                    // globals and the tail.
+                    Err(0) => {}
+                    Err(pos) => {
+                        self.buckets.insert(pos, new_bucket(idx, &s));
+                        if self.buckets.len() > SAMPLE_BUCKET_CAP {
+                            self.buckets.remove(0);
+                        }
+                    }
+                }
+            }
+            _ => {
+                self.buckets.push(new_bucket(idx, &s));
+                if self.buckets.len() > SAMPLE_BUCKET_CAP {
+                    self.buckets.remove(0);
+                }
+            }
+        }
+        self.tail.push(s);
+        if self.tail.len() > SAMPLE_TAIL_CAP {
+            self.tail.remove(0);
+        }
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        {
+            if let Some(r) = &mut self.retained {
+                r.push(s);
+            }
+            self.debug_check();
+        }
+    }
+
+    /// Reference-mode cross-check: the bounded views must agree with the
+    /// retain-all log on every overlapping element.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    fn debug_check(&self) {
+        let Some(r) = &self.retained else { return };
+        debug_assert_eq!(
+            self.samples_total,
+            self.retain_offset + r.len() as u64,
+            "sample count skew vs retained log"
+        );
+        if let (Some(a), Some(b)) = (self.last, r.last()) {
+            debug_assert!(a.bits_eq(b), "last sample skew vs retained log");
+        }
+        let n = self.tail.len().min(r.len());
+        let ts = &self.tail[self.tail.len() - n..];
+        let rs = &r[r.len() - n..];
+        debug_assert!(
+            ts.iter().zip(rs).all(|(a, b)| a.bits_eq(b)),
+            "bounded tail diverged from retained log"
+        );
+    }
+
+    /// Switch the reference retain-all log on/off. Seeds the log from the
+    /// current tail so the per-push cross-check invariants hold mid-stream.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_retain_all(&mut self, on: bool) {
+        if on {
+            self.retain_offset = self.samples_total - self.tail.len() as u64;
+            self.retained = Some(self.tail.clone());
+        } else {
+            self.retained = None;
+        }
+    }
+
+    /// The full retain-all sample log (reference mode only).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn retained_samples(&self) -> Option<&[BwSample]> {
+        self.retained.as_deref()
+    }
+
+    /// The bounded tail of recent samples (at most [`SAMPLE_TAIL_CAP`]).
+    /// Exact global counts live in [`WindowEstimator::samples_total`].
     pub fn samples(&self) -> &[BwSample] {
-        &self.samples
+        &self.tail
+    }
+
+    /// Exact count of every sample ever emitted.
+    pub fn samples_total(&self) -> u64 {
+        self.samples_total
+    }
+
+    /// Bounded per-bucket roll-ups (ascending, at most
+    /// [`SAMPLE_BUCKET_CAP`]).
+    pub fn buckets(&self) -> &[SampleBucket] {
+        &self.buckets
     }
 
     pub fn last(&self) -> Option<BwSample> {
-        self.samples.last().copied()
+        self.last
     }
 
+    /// Resident size of the *bounded* state (the reference-mode retain-all
+    /// log is deliberately excluded — it exists to test this bound).
     pub fn memory_bytes(&self) -> usize {
         self.ring.capacity() * std::mem::size_of::<MsgRecord>()
-            + self.samples.capacity() * std::mem::size_of::<BwSample>()
+            + self.buckets.capacity() * std::mem::size_of::<SampleBucket>()
+            + self.tail.capacity() * std::mem::size_of::<BwSample>()
     }
+
+    /// Serialize the mutable state (§Soak checkpointing). The constructor
+    /// parameters (`window`, `bucket_ns`) come from config, not the stream.
+    pub fn save(&self, w: &mut CkptWriter) {
+        w.usize("ring", self.ring.len());
+        for r in &self.ring {
+            w.u64("p", r.posted_at.as_ns());
+            w.u64("c", r.completed_at.as_ns());
+            w.u64("b", r.bytes);
+        }
+        w.u64("stotal", self.samples_total);
+        w.bool("haslast", self.last.is_some());
+        if let Some(s) = self.last {
+            save_sample(w, &s);
+        }
+        w.usize("nbuckets", self.buckets.len());
+        for b in &self.buckets {
+            w.u64("i", b.idx);
+            w.u64("n", b.count);
+            w.f64("sum", b.sum_gbps);
+            w.f64("min", b.min_gbps);
+            w.f64("max", b.max_gbps);
+        }
+        w.usize("ntail", self.tail.len());
+        for s in &self.tail {
+            save_sample(w, s);
+        }
+    }
+
+    /// Restore the mutable state saved by [`WindowEstimator::save`] into a
+    /// freshly constructed estimator (same `window`/`bucket_ns`).
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        let nring = r.usize("ring")?;
+        self.ring.clear();
+        for _ in 0..nring {
+            self.ring.push_back(MsgRecord {
+                posted_at: SimTime::ns(r.u64("p")?),
+                completed_at: SimTime::ns(r.u64("c")?),
+                bytes: r.u64("b")?,
+            });
+        }
+        self.samples_total = r.u64("stotal")?;
+        self.last = if r.bool("haslast")? { Some(load_sample(r)?) } else { None };
+        let nb = r.usize("nbuckets")?;
+        self.buckets.clear();
+        for _ in 0..nb {
+            self.buckets.push(SampleBucket {
+                idx: r.u64("i")?,
+                count: r.u64("n")?,
+                sum_gbps: r.f64("sum")?,
+                min_gbps: r.f64("min")?,
+                max_gbps: r.f64("max")?,
+            });
+        }
+        let nt = r.usize("ntail")?;
+        self.tail.clear();
+        for _ in 0..nt {
+            self.tail.push(load_sample(r)?);
+        }
+        // A restored estimator starts reference retention from its tail —
+        // the pre-checkpoint history beyond it is gone by design.
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.retained.is_some() {
+            self.set_retain_all(true);
+        }
+        Ok(())
+    }
+}
+
+fn new_bucket(idx: u64, s: &BwSample) -> SampleBucket {
+    SampleBucket { idx, count: 1, sum_gbps: s.gbps, min_gbps: s.gbps, max_gbps: s.gbps }
+}
+
+fn fold_sample(b: &mut SampleBucket, s: &BwSample) {
+    b.count += 1;
+    b.sum_gbps += s.gbps;
+    b.min_gbps = b.min_gbps.min(s.gbps);
+    b.max_gbps = b.max_gbps.max(s.gbps);
+}
+
+fn save_sample(w: &mut CkptWriter, s: &BwSample) {
+    w.u64("at", s.at.as_ns());
+    w.f64("g", s.gbps);
+    w.u64("sp", s.span_ns);
+}
+
+fn load_sample(r: &mut CkptReader) -> Result<BwSample, String> {
+    Ok(BwSample { at: SimTime::ns(r.u64("at")?), gbps: r.f64("g")?, span_ns: r.u64("sp")? })
 }
 
 #[cfg(test)]
@@ -108,6 +388,7 @@ mod tests {
         // Slides by one afterwards.
         assert!(e.push(msg(40, 50, 1000)).is_some());
         assert_eq!(e.samples().len(), 2);
+        assert_eq!(e.samples_total(), 2);
     }
 
     #[test]
@@ -168,5 +449,81 @@ mod tests {
         let mut e = WindowEstimator::new(1);
         let s = e.push(msg(10, 10, 1000)).unwrap();
         assert!(s.gbps.is_finite());
+    }
+
+    /// §Soak: per-port memory is O(window capacity), not O(windows elapsed)
+    /// — a soak-length stream of samples must not grow the estimator.
+    #[test]
+    fn memory_is_capacity_bounded_over_soak_lengths() {
+        let mut e = WindowEstimator::with_bucket(1, 10_000_000); // 10ms buckets
+        // 200k samples spread across 100k distinct buckets (~17 simulated
+        // minutes): orders of magnitude beyond any cap.
+        for i in 0..200_000u64 {
+            e.push(msg(i * 5_000, i * 5_000 + 20, 1 << 20));
+        }
+        assert_eq!(e.samples_total(), 200_000);
+        assert!(e.buckets().len() <= SAMPLE_BUCKET_CAP, "buckets={}", e.buckets().len());
+        assert!(e.samples().len() <= SAMPLE_TAIL_CAP, "tail={}", e.samples().len());
+        let cap_bound = (SAMPLE_BUCKET_CAP * 2) * std::mem::size_of::<SampleBucket>()
+            + (SAMPLE_TAIL_CAP * 2) * std::mem::size_of::<BwSample>()
+            + 8 * std::mem::size_of::<MsgRecord>();
+        assert!(e.memory_bytes() <= cap_bound, "mem={} bound={cap_bound}", e.memory_bytes());
+        // The globals stay exact across all that eviction.
+        let sum: u64 = e.buckets().iter().map(|b| b.count).sum();
+        assert!(sum <= 200_000);
+        assert!(e.last().is_some());
+    }
+
+    /// Reference-mode equivalence: the bounded tail and counters must track
+    /// the retain-all log exactly (the per-push debug_check enforces it on
+    /// every sample; this exercises it over an out-of-order-rich stream).
+    #[test]
+    fn bounded_views_match_retained_log() {
+        let mut e = WindowEstimator::with_bucket(4, 1_000);
+        e.set_retain_all(true);
+        for i in 0..5_000u64 {
+            // Alternate forward/backward completion times so the window max
+            // occasionally steps backwards (bucket fallback path).
+            let done = if i % 3 == 0 { 40 + i * 7 } else { 10 + i * 7 };
+            e.push(MsgRecord {
+                posted_at: SimTime::ns(i * 7),
+                completed_at: SimTime::ns(done),
+                bytes: 1 << 16,
+            });
+        }
+        let r = e.retained_samples().unwrap();
+        assert_eq!(e.samples_total(), r.len() as u64);
+        let tail = e.samples();
+        let suffix = &r[r.len() - tail.len()..];
+        assert!(tail.iter().zip(suffix).all(|(a, b)| a.bits_eq(b)));
+    }
+
+    /// Checkpoint round-trip: a restored estimator continues the identical
+    /// sample stream, including the half-full message ring.
+    #[test]
+    fn save_load_round_trip_continues_identically() {
+        let mut a = WindowEstimator::with_bucket(4, 10_000);
+        for i in 0..103u64 {
+            a.push(msg(i * 10, i * 10 + 25, 1 << 18));
+        }
+        let mut w = crate::util::CkptWriter::new("T", 1);
+        a.save(&mut w);
+        let text = w.finish();
+        let mut b = WindowEstimator::with_bucket(4, 10_000);
+        let mut r = crate::util::CkptReader::new(&text, "T", 1).unwrap();
+        b.load(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(a.samples_total(), b.samples_total());
+        for i in 103..140u64 {
+            let sa = a.push(msg(i * 10, i * 10 + 25, 1 << 18));
+            let sb = b.push(msg(i * 10, i * 10 + 25, 1 << 18));
+            match (sa, sb) {
+                (Some(x), Some(y)) => assert!(x.bits_eq(&y), "diverged at {i}"),
+                (None, None) => {}
+                _ => panic!("emission skew at {i}"),
+            }
+        }
+        assert_eq!(a.samples_total(), b.samples_total());
+        assert_eq!(a.buckets().len(), b.buckets().len());
     }
 }

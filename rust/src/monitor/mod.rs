@@ -24,11 +24,12 @@
 pub mod estimator;
 pub mod pinpoint;
 
-pub use estimator::{BwSample, MsgRecord, WindowEstimator};
-pub use pinpoint::{Pinpointer, Verdict};
+pub use estimator::{BwSample, MsgRecord, SampleBucket, WindowEstimator};
+pub use pinpoint::{Pinpointer, Verdict, VerdictBucket};
 
 use crate::sim::SimTime;
 use crate::trace::{TraceEvent, Tracer};
+use crate::util::{CkptReader, CkptWriter};
 use std::collections::HashMap;
 
 /// §Perf L4: bounded per-port completion-traffic aggregation.
@@ -184,6 +185,45 @@ impl PortTraffic {
             .sum::<usize>()
             + std::mem::size_of::<Self>()
     }
+
+    /// Serialize the aggregated traffic (§Soak checkpointing). `bucket_ns`
+    /// is a constructor parameter (from config), not part of the stream.
+    pub fn save(&self, w: &mut CkptWriter) {
+        let mut ports: Vec<_> = self.ports.iter().collect();
+        ports.sort_by_key(|(port, _)| **port);
+        w.usize("nports", ports.len());
+        for (port, p) in ports {
+            w.usize("port", *port);
+            w.u64("first", p.first_ns);
+            w.u64("last", p.last_ns);
+            w.u64("total", p.total_bytes);
+            w.usize("nbuckets", p.buckets.len());
+            for &(i, b) in &p.buckets {
+                w.u64("i", i);
+                w.u64("b", b);
+            }
+        }
+    }
+
+    /// Restore the state saved by [`PortTraffic::save`] into a freshly
+    /// constructed instance (same `bucket_ns`).
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        self.ports.clear();
+        let n = r.usize("nports")?;
+        for _ in 0..n {
+            let port = r.usize("port")?;
+            let first_ns = r.u64("first")?;
+            let last_ns = r.u64("last")?;
+            let total_bytes = r.u64("total")?;
+            let nb = r.usize("nbuckets")?;
+            let mut buckets = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                buckets.push((r.u64("i")?, r.u64("b")?));
+            }
+            self.ports.insert(port, PortBuckets { first_ns, last_ns, total_bytes, buckets });
+        }
+        Ok(())
+    }
 }
 
 /// Per-port monitor bundle: one estimator + one pinpointer per RNIC port,
@@ -201,6 +241,10 @@ pub struct MonitorSet {
     /// Flight recorder: non-healthy verdicts become trace events and
     /// freeze anomaly snapshots (disabled by default).
     tracer: Tracer,
+    /// Reference mode: newly created port monitors keep their full
+    /// retain-all logs for equivalence tests.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    retain_all: bool,
 }
 
 #[derive(Debug)]
@@ -220,6 +264,8 @@ impl MonitorSet {
             wc_cost_ns: 150, // ~pair of timestamps + ring push per WC
             processed_wcs: 0,
             tracer: Tracer::disabled(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            retain_all: false,
         }
     }
 
@@ -228,11 +274,31 @@ impl MonitorSet {
         self.tracer = tracer;
     }
 
+    /// Reference mode: make every port monitor keep its full retain-all
+    /// sample/verdict logs (the bounded-vs-reference equivalence witness).
+    /// Must be set before any traffic creates port monitors.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_retain_all(&mut self, on: bool) {
+        assert!(self.ports.is_empty(), "set_retain_all after ports exist");
+        self.retain_all = on;
+    }
+
     fn port(&mut self, port: usize) -> &mut PortMonitor {
         let (w, t, b, r) = (self.window, self.trailing_ns, self.bw_drop_ratio, self.rts_multiple);
-        self.ports.entry(port).or_insert_with(|| PortMonitor {
-            estimator: WindowEstimator::new(w),
-            pinpointer: Pinpointer::new(t, b, r),
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        let retain = self.retain_all;
+        self.ports.entry(port).or_insert_with(|| {
+            #[allow(unused_mut)] // mutated only under the reference cfg
+            let mut pm = PortMonitor {
+                estimator: WindowEstimator::with_bucket(w, t),
+                pinpointer: Pinpointer::new(t, b, r),
+            };
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            if retain {
+                pm.estimator.set_retain_all(true);
+                pm.pinpointer.set_retain_all(true);
+            }
+            pm
         })
     }
 
@@ -268,13 +334,44 @@ impl MonitorSet {
         Some(verdict)
     }
 
-    /// All samples a port has produced (for the figure outputs).
+    /// Drop every port's partial message window (see
+    /// [`WindowEstimator::flush_window`]). The soak harness calls this at
+    /// each burst boundary so no bandwidth window straddles the inter-burst
+    /// idle gap.
+    pub fn flush_windows(&mut self) {
+        for pm in self.ports.values_mut() {
+            pm.estimator.flush_window();
+        }
+    }
+
+    /// A port's bounded tail of recent samples (§Soak bounding: the full
+    /// log is no longer retained — exact counts via
+    /// [`MonitorSet::samples_total`]).
     pub fn samples(&self, port: usize) -> &[BwSample] {
         self.ports.get(&port).map(|p| p.estimator.samples()).unwrap_or(&[])
     }
 
+    /// Exact count of every sample a port has ever produced.
+    pub fn samples_total(&self, port: usize) -> u64 {
+        self.ports.get(&port).map(|p| p.estimator.samples_total()).unwrap_or(0)
+    }
+
+    /// A port's bounded tail of recent verdicts (§Soak bounding: exact
+    /// counts via [`MonitorSet::verdict_counts`]).
     pub fn verdicts(&self, port: usize) -> &[(SimTime, Verdict)] {
         self.ports.get(&port).map(|p| p.pinpointer.log()).unwrap_or(&[])
+    }
+
+    /// Exact per-verdict counts for a port, indexed by [`Verdict::ordinal`].
+    pub fn verdict_counts(&self, port: usize) -> [u64; 3] {
+        self.ports.get(&port).map(|p| p.pinpointer.verdict_counts()).unwrap_or([0; 3])
+    }
+
+    /// Ports that have produced at least one sample, ascending.
+    pub fn active_ports(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.ports.keys().copied().collect();
+        v.sort_unstable();
+        v
     }
 
     /// Total monitor CPU time charged (ns) — the Table 5 overhead metric.
@@ -283,12 +380,41 @@ impl MonitorSet {
     }
 
     /// Approximate resident memory of the monitor state in bytes
-    /// (ring buffers + sample logs) — Table 5's memory column.
+    /// (ring buffers + bounded roll-ups/tails) — Table 5's memory column.
     pub fn memory_bytes(&self) -> usize {
         self.ports
             .values()
             .map(|p| p.estimator.memory_bytes() + p.pinpointer.memory_bytes())
             .sum()
+    }
+
+    /// Serialize all per-port monitor state (§Soak checkpointing). The
+    /// thresholds/window are constructor parameters from config.
+    pub fn save(&self, w: &mut CkptWriter) {
+        w.u64("wcs", self.processed_wcs);
+        let mut ports: Vec<_> = self.ports.iter().collect();
+        ports.sort_by_key(|(port, _)| **port);
+        w.usize("nports", ports.len());
+        for (port, pm) in ports {
+            w.usize("port", *port);
+            pm.estimator.save(w);
+            pm.pinpointer.save(w);
+        }
+    }
+
+    /// Restore the state saved by [`MonitorSet::save`] into a freshly
+    /// constructed set (same config). Existing port monitors are replaced.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        self.processed_wcs = r.u64("wcs")?;
+        self.ports.clear();
+        let n = r.usize("nports")?;
+        for _ in 0..n {
+            let port = r.usize("port")?;
+            let pm = self.port(port);
+            pm.estimator.load(r)?;
+            pm.pinpointer.load(r)?;
+        }
+        Ok(())
     }
 }
 
@@ -368,6 +494,95 @@ mod tests {
         assert_eq!(t.first_completion_at_or_after(0, 12_500), Some(12_500), "straddle");
         assert_eq!(t.first_completion_at_or_after(0, 25_000), None, "past all traffic");
         assert_eq!(t.first_completion_at_or_after(9, 0), None, "unknown port");
+    }
+
+    /// §Soak: the whole monitor set stays O(window capacity) per port over
+    /// a soak-length WC stream — the acceptance-criteria growth witness.
+    #[test]
+    fn monitor_set_memory_bounded_over_soak_length_stream() {
+        let mut mon = MonitorSet::new(&VcclConfig::default());
+        let msg = 1u64 << 20;
+        let mut mem_at_100k = 0usize;
+        for i in 0..400_000u64 {
+            // ~21us per message → ~8.4 simulated seconds ≫ the 10ms window.
+            let t = i * 21_000;
+            mon.on_wc(i as usize % 4, SimTime::ns(t), SimTime::ns(t + 21_000), msg, 4 << 20);
+            if i == 100_000 {
+                mem_at_100k = mon.memory_bytes();
+            }
+        }
+        // Memory after 4× the traffic must not have grown past small
+        // allocator slack (capacity rounding), let alone linearly.
+        let end = mon.memory_bytes();
+        assert!(
+            end <= mem_at_100k + mem_at_100k / 2,
+            "monitor memory grew with elapsed windows: {mem_at_100k} → {end}"
+        );
+        // And the exact aggregates kept counting.
+        let total: u64 = (0..4).map(|p| mon.samples_total(p)).sum();
+        assert_eq!(total, 400_000 - 4 * (VcclConfig::default().window_size as u64 - 1));
+        for p in 0..4 {
+            assert_eq!(mon.verdict_counts(p).iter().sum::<u64>(), mon.samples_total(p));
+        }
+        assert_eq!(mon.active_ports(), vec![0, 1, 2, 3]);
+    }
+
+    /// Checkpoint round-trip of the full monitor set: a restored set
+    /// continues the identical sample/verdict streams on every port.
+    #[test]
+    fn monitor_set_save_load_round_trip() {
+        let cfg = VcclConfig::default();
+        let mut a = MonitorSet::new(&cfg);
+        let msg = 1u64 << 20;
+        for i in 0..5_000u64 {
+            let t = i * 21_000;
+            let backlog = if i % 40 < 30 { 4 << 20 } else { 64 << 20 };
+            a.on_wc(i as usize % 3, SimTime::ns(t), SimTime::ns(t + 21_000), msg, backlog);
+        }
+        let mut w = crate::util::CkptWriter::new("T", 1);
+        a.save(&mut w);
+        let text = w.finish();
+        let mut b = MonitorSet::new(&cfg);
+        let mut r = crate::util::CkptReader::new(&text, "T", 1).unwrap();
+        b.load(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(a.processed_wcs, b.processed_wcs);
+        for i in 5_000..6_000u64 {
+            let t = i * 21_000;
+            let backlog = if i % 40 < 30 { 4 << 20 } else { 64 << 20 };
+            let va = a.on_wc(i as usize % 3, SimTime::ns(t), SimTime::ns(t + 21_000), msg, backlog);
+            let vb = b.on_wc(i as usize % 3, SimTime::ns(t), SimTime::ns(t + 21_000), msg, backlog);
+            assert_eq!(va, vb, "verdict diverged at {i}");
+        }
+        for p in a.active_ports() {
+            assert_eq!(a.verdict_counts(p), b.verdict_counts(p));
+            assert_eq!(a.samples_total(p), b.samples_total(p));
+            assert_eq!(a.verdicts(p), b.verdicts(p));
+        }
+    }
+
+    /// PortTraffic checkpoint round-trip preserves every aggregate exactly.
+    #[test]
+    fn port_traffic_save_load_round_trip() {
+        let mut a = PortTraffic::new(10_000_000);
+        for i in 0..10_000u64 {
+            a.record(i * 7_919, (i % 5) as usize, 1 + i % 1000);
+        }
+        let mut w = crate::util::CkptWriter::new("T", 1);
+        a.save(&mut w);
+        let text = w.finish();
+        let mut b = PortTraffic::new(10_000_000);
+        let mut r = crate::util::CkptReader::new(&text, "T", 1).unwrap();
+        b.load(&mut r).unwrap();
+        r.finish().unwrap();
+        for p in 0..5usize {
+            let (pa, pb) = (a.port(p).unwrap(), b.port(p).unwrap());
+            assert_eq!(pa.first_ns, pb.first_ns);
+            assert_eq!(pa.last_ns, pb.last_ns);
+            assert_eq!(pa.total_bytes, pb.total_bytes);
+            assert_eq!(pa.buckets, pb.buckets);
+        }
+        assert_eq!(a.bytes_between(0, u64::MAX), b.bytes_between(0, u64::MAX));
     }
 
     #[test]

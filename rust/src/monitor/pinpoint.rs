@@ -10,9 +10,22 @@
 //! | 2 task termination        | declines to 0    | drains to 0    | Healthy        |
 //! | 3 network interference    | drops > 50 %     | accumulates 2× | NetworkAnomaly |
 //! | 4 GPU interference        | drops > 50 %     | no build-up    | NonNetwork     |
+//!
+//! §Soak bounding: the verdict log used to be an unbounded `Vec` —
+//! O(windows elapsed) per port. It is now **exact per-verdict counters** +
+//! a capped per-bucket roll-up ring + a capped raw tail, with the retain-all
+//! log kept under the reference-mode cfg and cross-checked per push —
+//! exactly the `WindowEstimator`/`PortTraffic` pattern. Per-port memory is
+//! O(window capacity), not O(windows elapsed).
 
 use crate::sim::SimTime;
+use crate::util::{CkptReader, CkptWriter};
 use std::collections::VecDeque;
+
+/// Hard cap on retained per-bucket verdict roll-ups per pinpointer.
+pub const VERDICT_BUCKET_CAP: usize = 128;
+/// Hard cap on the raw recent-verdict tail per pinpointer.
+pub const VERDICT_TAIL_CAP: usize = 64;
 
 /// Classification of one monitored sample.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,6 +39,35 @@ pub enum Verdict {
     NonNetwork,
 }
 
+impl Verdict {
+    /// Stable index into per-verdict count arrays.
+    pub fn ordinal(self) -> usize {
+        match self {
+            Verdict::Healthy => 0,
+            Verdict::NetworkAnomaly => 1,
+            Verdict::NonNetwork => 2,
+        }
+    }
+
+    fn from_ordinal(i: u64) -> Result<Verdict, String> {
+        match i {
+            0 => Ok(Verdict::Healthy),
+            1 => Ok(Verdict::NetworkAnomaly),
+            2 => Ok(Verdict::NonNetwork),
+            other => Err(format!("bad verdict ordinal {other}")),
+        }
+    }
+}
+
+/// Roll-up of the verdicts issued inside one time bucket.
+#[derive(Debug, Clone, Copy)]
+pub struct VerdictBucket {
+    /// Bucket index (`at_ns / trailing_ns`).
+    pub idx: u64,
+    /// Per-verdict counts, indexed by [`Verdict::ordinal`].
+    pub counts: [u64; 3],
+}
+
 /// Streaming pinpointer with a trailing-average baseline.
 #[derive(Debug)]
 pub struct Pinpointer {
@@ -37,19 +79,39 @@ pub struct Pinpointer {
     trail_sum: f64,
     /// Historical max of RTS (condition ii baseline).
     rts_hist_max: u64,
-    log: Vec<(SimTime, Verdict)>,
+    /// Exact count of every verdict ever issued, by [`Verdict::ordinal`].
+    counts: [u64; 3],
+    last: Option<(SimTime, Verdict)>,
+    /// Per-bucket roll-ups, ascending by `idx`, at most
+    /// [`VERDICT_BUCKET_CAP`]. Bucket width = `trailing_ns`.
+    buckets: Vec<VerdictBucket>,
+    /// Most recent raw verdicts, at most [`VERDICT_TAIL_CAP`].
+    tail: Vec<(SimTime, Verdict)>,
+    /// Reference mode: the full unbounded verdict log.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    retained: Option<Vec<(SimTime, Verdict)>>,
+    /// Total verdicts at the instant retention was switched on.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    retain_offset: u64,
 }
 
 impl Pinpointer {
     pub fn new(trailing_ns: u64, bw_drop_ratio: f64, rts_multiple: f64) -> Self {
         Pinpointer {
-            trailing_ns,
+            trailing_ns: trailing_ns.max(1),
             bw_drop_ratio,
             rts_multiple,
             trail: VecDeque::new(),
             trail_sum: 0.0,
             rts_hist_max: 0,
-            log: Vec::new(),
+            counts: [0; 3],
+            last: None,
+            buckets: Vec::new(),
+            tail: Vec::new(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            retained: None,
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            retain_offset: 0,
         }
     }
 
@@ -106,17 +168,196 @@ impl Pinpointer {
                     .max(rts_bytes.min((self.rts_hist_max as f64 * 1.2) as u64))
             };
         }
-        self.log.push((at, verdict));
+        self.log_verdict(at, verdict);
         verdict
     }
 
-    pub fn log(&self) -> &[(SimTime, Verdict)] {
-        &self.log
+    /// Fold one verdict into the bounded aggregates. Sample times may step
+    /// backwards (the window max slides over out-of-order completions), so
+    /// bucket insertion has the `PortTraffic::record` fast-path/fallback
+    /// shape.
+    fn log_verdict(&mut self, at: SimTime, v: Verdict) {
+        self.counts[v.ordinal()] += 1;
+        self.last = Some((at, v));
+        let idx = at.as_ns() / self.trailing_ns;
+        match self.buckets.last_mut() {
+            Some(b) if b.idx == idx => b.counts[v.ordinal()] += 1,
+            Some(b) if b.idx > idx => {
+                match self.buckets.binary_search_by_key(&idx, |b| b.idx) {
+                    Ok(pos) => self.buckets[pos].counts[v.ordinal()] += 1,
+                    // Before the oldest retained bucket: detail evicted;
+                    // the exact global counters still see it.
+                    Err(0) => {}
+                    Err(pos) => {
+                        let mut counts = [0u64; 3];
+                        counts[v.ordinal()] = 1;
+                        self.buckets.insert(pos, VerdictBucket { idx, counts });
+                        if self.buckets.len() > VERDICT_BUCKET_CAP {
+                            self.buckets.remove(0);
+                        }
+                    }
+                }
+            }
+            _ => {
+                let mut counts = [0u64; 3];
+                counts[v.ordinal()] = 1;
+                self.buckets.push(VerdictBucket { idx, counts });
+                if self.buckets.len() > VERDICT_BUCKET_CAP {
+                    self.buckets.remove(0);
+                }
+            }
+        }
+        self.tail.push((at, v));
+        if self.tail.len() > VERDICT_TAIL_CAP {
+            self.tail.remove(0);
+        }
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        {
+            if let Some(r) = &mut self.retained {
+                r.push((at, v));
+            }
+            self.debug_check();
+        }
     }
 
+    /// Reference-mode cross-check: bounded views must agree with the
+    /// retain-all log on every overlapping element.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    fn debug_check(&self) {
+        let Some(r) = &self.retained else { return };
+        debug_assert_eq!(
+            self.counts.iter().sum::<u64>(),
+            self.retain_offset + r.len() as u64,
+            "verdict count skew vs retained log"
+        );
+        debug_assert_eq!(self.last, r.last().copied(), "last verdict skew vs retained log");
+        let n = self.tail.len().min(r.len());
+        debug_assert_eq!(
+            &self.tail[self.tail.len() - n..],
+            &r[r.len() - n..],
+            "bounded tail diverged from retained log"
+        );
+    }
+
+    /// Switch the reference retain-all log on/off. Seeds the log from the
+    /// current tail so the per-push cross-check invariants hold mid-stream.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_retain_all(&mut self, on: bool) {
+        if on {
+            self.retain_offset = self.counts.iter().sum::<u64>() - self.tail.len() as u64;
+            self.retained = Some(self.tail.clone());
+        } else {
+            self.retained = None;
+        }
+    }
+
+    /// The full retain-all verdict log (reference mode only).
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn retained_log(&self) -> Option<&[(SimTime, Verdict)]> {
+        self.retained.as_deref()
+    }
+
+    /// The bounded tail of recent verdicts (at most [`VERDICT_TAIL_CAP`]).
+    /// Exact global counts live in [`Pinpointer::verdict_counts`].
+    pub fn log(&self) -> &[(SimTime, Verdict)] {
+        &self.tail
+    }
+
+    /// Exact per-verdict counts over the whole stream, indexed by
+    /// [`Verdict::ordinal`].
+    pub fn verdict_counts(&self) -> [u64; 3] {
+        self.counts
+    }
+
+    /// Bounded per-bucket roll-ups (ascending, at most
+    /// [`VERDICT_BUCKET_CAP`]).
+    pub fn buckets(&self) -> &[VerdictBucket] {
+        &self.buckets
+    }
+
+    pub fn last(&self) -> Option<(SimTime, Verdict)> {
+        self.last
+    }
+
+    /// Resident size of the *bounded* state (the reference-mode retain-all
+    /// log is deliberately excluded — it exists to test this bound).
     pub fn memory_bytes(&self) -> usize {
         self.trail.capacity() * std::mem::size_of::<(SimTime, f64)>()
-            + self.log.capacity() * std::mem::size_of::<(SimTime, Verdict)>()
+            + self.buckets.capacity() * std::mem::size_of::<VerdictBucket>()
+            + self.tail.capacity() * std::mem::size_of::<(SimTime, Verdict)>()
+    }
+
+    /// Serialize the mutable state (§Soak checkpointing). The constructor
+    /// parameters (thresholds, trailing window) come from config.
+    pub fn save(&self, w: &mut CkptWriter) {
+        w.usize("trail", self.trail.len());
+        for &(t, g) in &self.trail {
+            w.u64("t", t.as_ns());
+            w.f64("g", g);
+        }
+        w.f64("tsum", self.trail_sum);
+        w.u64("rtsmax", self.rts_hist_max);
+        for (i, c) in self.counts.iter().enumerate() {
+            w.u64(&format!("v{i}"), *c);
+        }
+        w.bool("haslast", self.last.is_some());
+        if let Some((t, v)) = self.last {
+            w.u64("at", t.as_ns());
+            w.u64("vd", v.ordinal() as u64);
+        }
+        w.usize("nbuckets", self.buckets.len());
+        for b in &self.buckets {
+            w.u64("i", b.idx);
+            for (i, c) in b.counts.iter().enumerate() {
+                w.u64(&format!("c{i}"), *c);
+            }
+        }
+        w.usize("ntail", self.tail.len());
+        for &(t, v) in &self.tail {
+            w.u64("at", t.as_ns());
+            w.u64("vd", v.ordinal() as u64);
+        }
+    }
+
+    /// Restore the mutable state saved by [`Pinpointer::save`] into a
+    /// freshly constructed pinpointer (same thresholds).
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        let nt = r.usize("trail")?;
+        self.trail.clear();
+        for _ in 0..nt {
+            self.trail.push_back((SimTime::ns(r.u64("t")?), r.f64("g")?));
+        }
+        self.trail_sum = r.f64("tsum")?;
+        self.rts_hist_max = r.u64("rtsmax")?;
+        for i in 0..3 {
+            self.counts[i] = r.u64(&format!("v{i}"))?;
+        }
+        self.last = if r.bool("haslast")? {
+            Some((SimTime::ns(r.u64("at")?), Verdict::from_ordinal(r.u64("vd")?)?))
+        } else {
+            None
+        };
+        let nb = r.usize("nbuckets")?;
+        self.buckets.clear();
+        for _ in 0..nb {
+            let idx = r.u64("i")?;
+            let mut counts = [0u64; 3];
+            for (i, c) in counts.iter_mut().enumerate() {
+                *c = r.u64(&format!("c{i}"))?;
+            }
+            self.buckets.push(VerdictBucket { idx, counts });
+        }
+        let ntl = r.usize("ntail")?;
+        self.tail.clear();
+        for _ in 0..ntl {
+            self.tail.push((SimTime::ns(r.u64("at")?), Verdict::from_ordinal(r.u64("vd")?)?));
+        }
+        // A restored pinpointer starts reference retention from its tail.
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.retained.is_some() {
+            self.set_retain_all(true);
+        }
+        Ok(())
     }
 }
 
@@ -137,6 +378,7 @@ mod tests {
             let v = p.observe(SimTime::us(10 * i), 390.0 + (i % 7) as f64, 4 << 20);
             assert_eq!(v, Verdict::Healthy, "sample {i}");
         }
+        assert_eq!(p.verdict_counts(), [100, 0, 0]);
     }
 
     /// Case 2: task termination — bandwidth falls because the NIC buffer
@@ -170,6 +412,7 @@ mod tests {
             }
         }
         assert!(flagged >= 15, "flagged={flagged}");
+        assert_eq!(p.verdict_counts()[Verdict::NetworkAnomaly.ordinal()], flagged);
     }
 
     /// Case 4: GPU interference — bandwidth collapses but the NIC is
@@ -206,5 +449,76 @@ mod tests {
     fn cold_start_is_healthy() {
         let mut p = pin();
         assert_eq!(p.observe(SimTime::ZERO, 5.0, 0), Verdict::Healthy);
+    }
+
+    /// §Soak: verdict-log memory is O(window capacity), not O(windows
+    /// elapsed) — a soak-length verdict stream must not grow the pinpointer.
+    #[test]
+    fn memory_is_capacity_bounded_over_soak_lengths() {
+        let mut p = pin();
+        // 200k verdicts across ~33 simulated minutes of 10ms buckets.
+        for i in 0..200_000u64 {
+            p.observe(SimTime::us(10 * i), 390.0, 4 << 20);
+        }
+        assert_eq!(p.verdict_counts().iter().sum::<u64>(), 200_000);
+        assert!(p.buckets().len() <= VERDICT_BUCKET_CAP, "buckets={}", p.buckets().len());
+        assert!(p.log().len() <= VERDICT_TAIL_CAP, "tail={}", p.log().len());
+        let cap_bound = (VERDICT_BUCKET_CAP * 2) * std::mem::size_of::<VerdictBucket>()
+            + (VERDICT_TAIL_CAP * 2) * std::mem::size_of::<(SimTime, Verdict)>()
+            + 4096 * std::mem::size_of::<(SimTime, f64)>();
+        assert!(p.memory_bytes() <= cap_bound, "mem={} bound={cap_bound}", p.memory_bytes());
+    }
+
+    /// Reference-mode equivalence: the bounded tail and exact counters must
+    /// track the retain-all log (enforced per push by debug_check too).
+    #[test]
+    fn bounded_views_match_retained_log() {
+        let mut p = pin();
+        p.set_retain_all(true);
+        for i in 0..10_000u64 {
+            let (g, rts) = match i % 97 {
+                0..=79 => (400.0, 4 << 20),
+                80..=89 => (100.0, 64 << 20), // anomaly spell
+                _ => (100.0, 1 << 20),        // gpu-ish spell
+            };
+            p.observe(SimTime::us(10 * i), g, rts);
+        }
+        let r = p.retained_log().unwrap();
+        assert_eq!(p.verdict_counts().iter().sum::<u64>(), r.len() as u64);
+        let tail = p.log();
+        assert_eq!(tail, &r[r.len() - tail.len()..]);
+        // Per-verdict global counts equal the retained histogram.
+        let mut hist = [0u64; 3];
+        for &(_, v) in r {
+            hist[v.ordinal()] += 1;
+        }
+        assert_eq!(hist, p.verdict_counts());
+    }
+
+    /// Checkpoint round-trip: a restored pinpointer issues the identical
+    /// verdict stream (trail baseline, RTS max and counters all survive).
+    #[test]
+    fn save_load_round_trip_continues_identically() {
+        let mut a = pin();
+        for i in 0..500u64 {
+            let (g, rts) = if i % 50 < 40 { (400.0, 4 << 20) } else { (100.0, 64 << 20) };
+            a.observe(SimTime::us(10 * i), g, rts);
+        }
+        let mut w = crate::util::CkptWriter::new("T", 1);
+        a.save(&mut w);
+        let text = w.finish();
+        let mut b = pin();
+        let mut r = crate::util::CkptReader::new(&text, "T", 1).unwrap();
+        b.load(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(a.verdict_counts(), b.verdict_counts());
+        for i in 500..700u64 {
+            let (g, rts) = if i % 50 < 40 { (400.0, 4 << 20) } else { (100.0, 64 << 20) };
+            let va = a.observe(SimTime::us(10 * i), g, rts);
+            let vb = b.observe(SimTime::us(10 * i), g, rts);
+            assert_eq!(va, vb, "diverged at {i}");
+        }
+        assert_eq!(a.verdict_counts(), b.verdict_counts());
+        assert_eq!(a.log(), b.log());
     }
 }

@@ -41,6 +41,7 @@ use std::collections::{HashMap, HashSet};
 use crate::sim::SimTime;
 use crate::topology::{Fabric, LinkId, LinkKind, Path};
 use crate::trace::{TraceEvent, Tracer};
+use crate::util::{CkptReader, CkptWriter};
 
 /// Identifier of an in-flight flow.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -353,6 +354,62 @@ impl FlowNet {
 
     pub fn link_up(&self, link: LinkId) -> bool {
         self.links[link.0].up
+    }
+
+    /// A link's current capacity in bytes/ns (§Soak: the fault scheduler
+    /// reads the base value before degrading and when recovering).
+    pub fn link_capacity_bpns(&self, link: LinkId) -> f64 {
+        self.links[link.0].capacity_bpns
+    }
+
+    /// Change a link's capacity (§Soak: straggler NICs and slow switches
+    /// are *capacity* faults, not flaps — traffic keeps flowing, slowly,
+    /// which is exactly what the monitor must pinpoint). Triggers one
+    /// component recompute, like a link state change.
+    pub fn set_link_capacity(
+        &mut self,
+        link: LinkId,
+        capacity_bpns: f64,
+        now: SimTime,
+    ) -> Vec<FlowTimer> {
+        self.links[link.0].capacity_bpns = capacity_bpns.max(0.0);
+        self.reallocate(now, &[link])
+    }
+
+    /// Serialize the durable state (§Soak checkpointing). Requires
+    /// quiescence: checkpoints sit on op-burst boundaries where no flow is
+    /// live, so only link state and counters need to survive.
+    pub fn save(&self, w: &mut CkptWriter) {
+        assert!(self.flows.is_empty(), "FlowNet checkpoint requires quiescence (live flows)");
+        w.usize("nlinks", self.links.len());
+        for l in &self.links {
+            w.f64("cap", l.capacity_bpns);
+            w.bool("up", l.up);
+        }
+        w.u64("nextflow", self.next_id);
+        w.u64("achanges", self.alloc.changes);
+        w.u64("avisits", self.alloc.flow_visits);
+        w.u64("afloor", self.alloc.global_floor);
+        w.u64("acomp", self.alloc.max_component);
+    }
+
+    /// Restore the state saved by [`FlowNet::save`] into a freshly built
+    /// net over the same fabric.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        let n = r.usize("nlinks")?;
+        if n != self.links.len() {
+            return Err(format!("link count skew: checkpoint {n}, net {}", self.links.len()));
+        }
+        for l in &mut self.links {
+            l.capacity_bpns = r.f64("cap")?;
+            l.up = r.bool("up")?;
+        }
+        self.next_id = r.u64("nextflow")?;
+        self.alloc.changes = r.u64("achanges")?;
+        self.alloc.flow_visits = r.u64("avisits")?;
+        self.alloc.global_floor = r.u64("afloor")?;
+        self.alloc.max_component = r.u64("acomp")?;
+        Ok(())
     }
 
     /// Current rate of a flow in Gbps (diagnostics / monitor ground truth).

@@ -53,6 +53,7 @@ use crate::config::NetConfig;
 use crate::sim::SimTime;
 use crate::topology::{Fabric, LinkId, Path, PortId};
 use crate::trace::{TraceEvent, Tracer};
+use crate::util::{CkptReader, CkptWriter};
 
 /// Queue-pair identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -262,6 +263,104 @@ impl RdmaNet {
 
     pub fn cfg(&self) -> &NetConfig {
         &self.cfg
+    }
+
+    /// Serialize the durable RDMA state (§Soak checkpointing). Requires
+    /// quiescence: no WR outstanding on any QP, no flow routed, every port
+    /// backlog drained. The embedded [`FlowNet`] stream rides along.
+    pub fn save(&self, w: &mut CkptWriter) {
+        assert!(
+            self.flow_owner.is_empty(),
+            "RdmaNet checkpoint requires quiescence (flows still routed)"
+        );
+        assert!(
+            self.port_backlog.values().all(|b| *b == 0),
+            "RdmaNet checkpoint requires quiescence (port backlog nonzero)"
+        );
+        self.flows.save(w);
+        w.u64("nextqp", self.next_qp);
+        w.u64("breads", self.stats.backlog_reads);
+        w.u64("bvisits", self.stats.backlog_qp_visits);
+        w.u64("bfloor", self.stats.backlog_scan_floor);
+        w.u64("fevents", self.stats.flap_events);
+        w.u64("fvisits", self.stats.flap_qp_visits);
+        w.u64("ffloor", self.stats.flap_scan_floor);
+        let mut ids: Vec<QpId> = self.qps.keys().copied().collect();
+        ids.sort_unstable_by_key(|id| id.0);
+        w.usize("nqps", ids.len());
+        for id in ids {
+            let q = &self.qps[&id];
+            assert!(
+                q.outstanding.is_empty(),
+                "RdmaNet checkpoint requires quiescence (WR outstanding on {id:?})"
+            );
+            w.u64("qp", id.0);
+            w.u64(
+                "st",
+                match q.state {
+                    QpState::Reset => 0,
+                    QpState::Init => 1,
+                    QpState::Rtr => 2,
+                    QpState::Rts => 3,
+                    QpState::Error => 4,
+                },
+            );
+            w.u64("warm", q.warm_at.as_ns());
+            w.u64("ep", u64::from(q.epoch));
+            w.opt_u64("retry", q.retrying_since.map(|t| t.as_ns()));
+            w.u64("wrseq", q.next_wr_seq);
+        }
+    }
+
+    /// Restore onto a net whose QPs were already re-created by replaying
+    /// connection bootstrap in the recorded order (same order ⇒ same ids,
+    /// paths and reverse index). Patches each QP's mutable fields directly
+    /// with no side effects — pending warm-up/retry events are restored by
+    /// the engine checkpoint, not re-armed here.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        self.flows.load(r)?;
+        let next_qp = r.u64("nextqp")?;
+        if next_qp != self.next_qp {
+            return Err(format!(
+                "checkpoint has {next_qp} QPs created, replay produced {}",
+                self.next_qp
+            ));
+        }
+        self.stats.backlog_reads = r.u64("breads")?;
+        self.stats.backlog_qp_visits = r.u64("bvisits")?;
+        self.stats.backlog_scan_floor = r.u64("bfloor")?;
+        self.stats.flap_events = r.u64("fevents")?;
+        self.stats.flap_qp_visits = r.u64("fvisits")?;
+        self.stats.flap_scan_floor = r.u64("ffloor")?;
+        let n = r.usize("nqps")?;
+        if n != self.qps.len() {
+            return Err(format!("checkpoint has {n} QPs, replay produced {}", self.qps.len()));
+        }
+        for _ in 0..n {
+            let id = QpId(r.u64("qp")?);
+            let state = match r.u64("st")? {
+                0 => QpState::Reset,
+                1 => QpState::Init,
+                2 => QpState::Rtr,
+                3 => QpState::Rts,
+                4 => QpState::Error,
+                other => return Err(format!("bad QP state ordinal {other}")),
+            };
+            let warm_at = SimTime::ns(r.u64("warm")?);
+            let epoch = u32::try_from(r.u64("ep")?).map_err(|_| "QP epoch overflow".to_string())?;
+            let retrying_since = r.opt_u64("retry")?.map(SimTime::ns);
+            let next_wr_seq = r.u64("wrseq")?;
+            let q = self
+                .qps
+                .get_mut(&id)
+                .ok_or_else(|| format!("checkpoint names {id:?} which replay did not create"))?;
+            q.state = state;
+            q.warm_at = warm_at;
+            q.epoch = epoch;
+            q.retrying_since = retrying_since;
+            q.next_wr_seq = next_wr_seq;
+        }
+        Ok(())
     }
 
     /// Create a QP between two ports and drive it straight to RTS (the

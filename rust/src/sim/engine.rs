@@ -140,6 +140,65 @@ impl<Ev> Engine<Ev> {
     pub fn is_idle(&mut self) -> bool {
         self.peek_time().is_none()
     }
+
+    /// Advance the clock over event-free time (§Soak time compression: a
+    /// burst-idle-burst soak jumps the clock to the next burst boundary
+    /// instead of simulating hours of silence). Must not skip over a
+    /// pending event — the clock would then run backwards on its pop.
+    pub fn advance_to(&mut self, t: SimTime) {
+        if let Some(next) = self.peek_time() {
+            assert!(t <= next, "advance_to({t}) would skip a pending event at {next}");
+        }
+        self.now = self.now.max(t);
+    }
+}
+
+/// A faithful snapshot of an [`Engine`] (§Soak checkpointing): clock,
+/// scheduling counter, dispatch counter, outstanding cancellations and the
+/// pending queue *with original sequence numbers* — sequence numbers break
+/// same-instant ties, so restoring them verbatim is what keeps a resumed
+/// simulation's dispatch order identical to an uninterrupted run's.
+#[derive(Debug, Clone)]
+pub struct EngineState<Ev> {
+    pub now: SimTime,
+    pub seq: u64,
+    pub dispatched: u64,
+    /// Outstanding cancelled seqs, ascending.
+    pub cancelled: Vec<u64>,
+    /// Pending events as `(at, seq, ev)`, ascending by `(at, seq)`.
+    pub pending: Vec<(SimTime, u64, Ev)>,
+}
+
+impl<Ev: Clone> Engine<Ev> {
+    /// Capture the engine's complete state. The pending queue is emitted in
+    /// deterministic `(at, seq)` order (the heap's internal layout is not).
+    pub fn checkpoint_state(&self) -> EngineState<Ev> {
+        let mut cancelled: Vec<u64> = self.cancelled.iter().copied().collect();
+        cancelled.sort_unstable();
+        let mut pending: Vec<(SimTime, u64, Ev)> = self
+            .heap
+            .iter()
+            .map(|Reverse(s)| (s.at, s.seq, s.ev.clone()))
+            .collect();
+        pending.sort_unstable_by_key(|&(at, seq, _)| (at, seq));
+        EngineState { now: self.now, seq: self.seq, dispatched: self.dispatched, cancelled, pending }
+    }
+
+    /// Rebuild an engine from a snapshot.
+    pub fn from_state(st: EngineState<Ev>) -> Self {
+        let mut heap = BinaryHeap::with_capacity(st.pending.len());
+        for (at, seq, ev) in st.pending {
+            assert!(seq < st.seq, "pending event seq {seq} beyond the scheduling counter");
+            heap.push(Reverse(Scheduled { at, seq, ev }));
+        }
+        Engine {
+            now: st.now,
+            heap,
+            seq: st.seq,
+            cancelled: st.cancelled.into_iter().collect(),
+            dispatched: st.dispatched,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +275,61 @@ mod tests {
         e.cancel(a);
         assert_eq!(e.peek_time(), Some(SimTime::ns(9)));
         assert!(!e.is_idle());
+    }
+
+    #[test]
+    fn advance_to_compresses_idle_time_only() {
+        let mut e: Engine<u8> = Engine::new();
+        e.advance_to(SimTime::ns(500));
+        assert_eq!(e.now().as_ns(), 500);
+        // Backwards advance is a no-op, not a clock reset.
+        e.advance_to(SimTime::ns(100));
+        assert_eq!(e.now().as_ns(), 500);
+        e.schedule_at(SimTime::ns(900), 1);
+        e.advance_to(SimTime::ns(900)); // exactly at the pending event: allowed
+        assert_eq!(e.pop().map(|(t, v)| (t.as_ns(), v)), Some((900, 1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "skip a pending event")]
+    fn advance_to_refuses_to_skip_events() {
+        let mut e: Engine<u8> = Engine::new();
+        e.schedule_at(SimTime::ns(10), 1);
+        e.advance_to(SimTime::ns(11));
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_order_counters_and_cancellations() {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..10 {
+            e.schedule(SimTime::ns(5 + (i % 3)), i);
+        }
+        let dead = e.schedule(SimTime::ns(6), 99);
+        e.cancel(dead);
+        e.pop();
+        e.pop();
+
+        let st = e.checkpoint_state();
+        let mut resumed = Engine::from_state(st.clone());
+        assert_eq!(resumed.now(), e.now());
+        assert_eq!(resumed.dispatched(), e.dispatched());
+        assert_eq!(resumed.pending(), e.pending());
+
+        // Both engines must drain identically, including new events scheduled
+        // after the snapshot (same seq counter ⇒ same FIFO tie-breaks).
+        e.schedule(SimTime::ns(1), 1000);
+        resumed.schedule(SimTime::ns(1), 1000);
+        let a: Vec<(u64, u32)> =
+            std::iter::from_fn(|| e.pop().map(|(t, v)| (t.as_ns(), v))).collect();
+        let b: Vec<(u64, u32)> =
+            std::iter::from_fn(|| resumed.pop().map(|(t, v)| (t.as_ns(), v))).collect();
+        assert_eq!(a, b);
+        assert!(!a.iter().any(|&(_, v)| v == 99), "cancelled event fired after restore");
+        assert_eq!(e.dispatched(), resumed.dispatched());
+
+        // The snapshot itself is deterministic: sorted pending, sorted cancels.
+        assert!(st.pending.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)));
+        assert!(st.cancelled.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

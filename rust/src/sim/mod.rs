@@ -10,5 +10,5 @@
 mod engine;
 mod time;
 
-pub use engine::{Engine, EventId};
+pub use engine::{Engine, EngineState, EventId};
 pub use time::SimTime;

@@ -1,0 +1,820 @@
+//! Time-compressed soak harness (§Soak): simulated days of mixed training
+//! traffic under an MTBF/MTTR-driven fault schedule, with periodic
+//! checkpoint/resume of the full simulation state.
+//!
+//! Simulated time is divided into fixed-period **bursts** (one "training
+//! step" each: a DP AllReduce followed by a wave of pipeline P2Ps, then
+//! idle until the next period boundary — the time compression). Between
+//! bursts the simulation is **op-quiescent**: no live transfers, flows,
+//! outstanding WRs or armed δ-probes — exactly the state
+//! [`ClusterSim::checkpoint`] requires. Future events (a port heal, a QP
+//! warm-up) may be pending at a boundary; they serialize with the engine.
+//!
+//! Two fault classes, drawn from one Poisson process ([`FaultClock`],
+//! exponential inter-arrivals at the configured MTBF):
+//!
+//! - **port flaps** — `inject_port_down` at the fault time, `inject_port_up`
+//!   MTTR later, both as engine events. Exercises the §3.3 failover /
+//!   failback machinery; graded against `stats.failovers`/`failbacks`.
+//! - **link degrades** (straggler NIC / slow switch) — the port's TX link
+//!   capacity is cut ÷[`DEGRADE_FACTOR`] at the burst boundary and restored
+//!   `ceil(MTTR/period)` bursts later. The port keeps completing WCs at the
+//!   collapsed rate, which is what the §3.4 window monitor exists to catch;
+//!   graded as a per-(port, burst) confusion matrix against the monitor's
+//!   non-`Healthy` verdict deltas.
+//!
+//! Fault targets are ranks `1..=gpus_per_node-2` of node 0: their primary
+//! ports carry exactly one steady P2P flow per burst (never a ring-crossing
+//! edge), so one flap maps to one failover and a fault-free graded port has
+//! no bandwidth-collapse excuse. Burst 0 is always fault-free so every
+//! graded port establishes a trailing-average baseline first. Ports with an
+//! active flap are excluded from confusion cells for that burst (their
+//! traffic legitimately failed over to the backup port).
+//!
+//! ## Checkpoint format
+//!
+//! `SoakHarness::checkpoint` emits a `VCCLSOAK v1` header (harness
+//! counters, both RNG streams, the fault clock, active faults, the
+//! per-port verdict baseline) followed by the embedded `VCCLCKPT` stream
+//! of the simulation. A version bump is REQUIRED whenever any serialized
+//! structure changes shape. On resume, `sim_days` and `checkpoint_every`
+//! may differ from the checkpointed run (extend a soak, change cadence);
+//! the clocks that shape behaviour — period, MTBF, MTTR, fault mix — are
+//! validated and refused on mismatch. Everything the report derives from
+//! is serialized, so an interrupted-and-resumed soak produces a
+//! `BENCH_soak.json` byte-identical to the uninterrupted run.
+
+use std::collections::BTreeMap;
+
+use crate::ccl::{ClusterSim, CollKind, Event, OpId};
+use crate::config::Config;
+use crate::metrics::BenchReport;
+use crate::sim::SimTime;
+use crate::topology::{LinkId, RankId};
+use crate::util::{CkptReader, CkptWriter, Rng};
+
+/// Simulated length of one burst period (one "training step" slot).
+pub const BURST_PERIOD_NS: u64 = 60_000_000_000;
+
+/// Capacity divisor of a degrade fault (a NIC negotiating down / a
+/// congested switch: bandwidth collapses well past the pinpointer's 50 %
+/// drop threshold but the link stays up).
+pub const DEGRADE_FACTOR: f64 = 8.0;
+
+/// Hang backstop per driven op.
+const MAX_EVENTS_PER_OP: u64 = 200_000_000;
+
+/// RNG stream salts: traffic sizes and the fault schedule are independent
+/// streams so tests can pin one without replaying the other.
+const TRAFFIC_SALT: u64 = 0x7EA5_0C0F_FEE0_50AC;
+const FAULT_SALT: u64 = 0xFA17_C10C_0000_50AC;
+
+/// Poisson fault-arrival clock: exponential inter-arrivals at the MTBF
+/// mean, on the *nominal* burst clock (`burst × period`) so the schedule
+/// is independent of traffic-induced boundary drift. Same seed ⇒ identical
+/// schedule; the empirical inter-arrival mean converges to the MTBF.
+#[derive(Debug)]
+pub struct FaultClock {
+    rng: Rng,
+    mtbf_ns: f64,
+    next_at_ns: u64,
+}
+
+impl FaultClock {
+    /// Arrivals start after `start_ns` (the soak leaves burst 0 fault-free
+    /// so monitored ports establish a baseline).
+    pub fn new(seed: u64, mtbf_ns: f64, start_ns: u64) -> Self {
+        let mut c = FaultClock { rng: Rng::new(seed), mtbf_ns, next_at_ns: start_ns };
+        c.next_at_ns += c.draw();
+        c
+    }
+
+    fn draw(&mut self) -> u64 {
+        self.rng.exp(self.mtbf_ns).max(1.0) as u64
+    }
+
+    /// Next arrival time (nominal ns).
+    pub fn next_at_ns(&self) -> u64 {
+        self.next_at_ns
+    }
+
+    /// Consume the pending arrival and schedule the next one.
+    pub fn advance(&mut self) -> u64 {
+        let at = self.next_at_ns;
+        let step = self.draw();
+        self.next_at_ns += step;
+        at
+    }
+
+    /// The clock's RNG also decides fault kind / target / jitter, so the
+    /// whole fault schedule lives in one serializable stream.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Derived soak driver parameters (see `soak.*` in docs/CONFIG.md).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SoakParams {
+    /// Nominal burst period (ns of simulated time).
+    pub period_ns: u64,
+    /// Mean time between faults (ns, exponential inter-arrivals).
+    pub mtbf_ns: u64,
+    /// Fault duration (ns; degrades round up to whole bursts).
+    pub mttr_ns: u64,
+    /// Total bursts to run (`ceil(sim_days / period)`).
+    pub bursts_total: u64,
+    /// Checkpoint cadence in bursts (0 = never).
+    pub checkpoint_every: u64,
+    /// Relative weights of the two fault kinds.
+    pub flap_weight: u32,
+    pub degrade_weight: u32,
+    /// Run the per-burst DP AllReduce (off = pure P2P soak).
+    pub allreduce: bool,
+}
+
+impl SoakParams {
+    pub fn from_config(cfg: &Config) -> Self {
+        let day_ns = 86_400_000_000_000f64;
+        let total_ns = (cfg.soak.sim_days.max(0.0) * day_ns).ceil() as u64;
+        SoakParams {
+            period_ns: BURST_PERIOD_NS,
+            mtbf_ns: (cfg.soak.mtbf_hours.max(1e-6) * 3.6e12) as u64,
+            mttr_ns: (cfg.soak.mttr_s.max(0.0) * 1e9) as u64,
+            bursts_total: total_ns.div_ceil(BURST_PERIOD_NS).max(1),
+            checkpoint_every: cfg.soak.checkpoint_every,
+            flap_weight: 1,
+            degrade_weight: 1,
+            allreduce: true,
+        }
+    }
+}
+
+/// An in-force capacity degrade (ground truth for monitor grading).
+#[derive(Debug, Clone)]
+struct Degrade {
+    ordinal: usize,
+    link: usize,
+    orig_bits: u64,
+    heal_burst: u64,
+    detected: bool,
+}
+
+/// An in-force port flap (excludes its port from confusion grading).
+#[derive(Debug, Clone)]
+struct Flap {
+    ordinal: usize,
+    up_ns: u64,
+}
+
+/// Final soak roll-up — everything `BENCH_soak.json` reports.
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    pub bursts: u64,
+    pub sim_seconds: f64,
+    pub ops_submitted: u64,
+    pub ops_completed: u64,
+    /// Completed / submitted ops — 1.0 when fault tolerance recovers every
+    /// burst, < 1.0 when ops hang (e.g. a baseline-transport soak).
+    pub availability: f64,
+    pub flaps_injected: u64,
+    pub degrades_injected: u64,
+    pub degrades_detected: u64,
+    pub faults_suppressed: u64,
+    pub failovers: u64,
+    pub failbacks: u64,
+    /// Monitor confusion matrix over (graded port, burst) cells.
+    pub tp: u64,
+    pub fp: u64,
+    pub fn_: u64,
+    pub tn: u64,
+    pub goodput_bytes: u64,
+    pub wire_bytes: u64,
+}
+
+impl SoakReport {
+    /// tp/(tp+fp); 1.0 when the monitor never fired (nothing to be wrong
+    /// about).
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 { 1.0 } else { self.tp as f64 / (self.tp + self.fp) as f64 }
+    }
+
+    /// tp/(tp+fn); 1.0 when no degrade was ever in force.
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 { 1.0 } else { self.tp as f64 / (self.tp + self.fn_) as f64 }
+    }
+
+    /// Machine-readable roll-up (`BENCH_soak.json`). Deterministic: every
+    /// value derives from simulated state.
+    pub fn to_bench(&self) -> BenchReport {
+        let mut b = BenchReport::new("soak", "vccl soak — time-compressed MTBF fault soak");
+        b.push("bursts", self.bursts as f64, "count")
+            .push("sim_time", self.sim_seconds, "s")
+            .push("ops_submitted", self.ops_submitted as f64, "count")
+            .push("ops_completed", self.ops_completed as f64, "count")
+            .push("availability", self.availability, "fraction")
+            .push("flaps_injected", self.flaps_injected as f64, "count")
+            .push("degrades_injected", self.degrades_injected as f64, "count")
+            .push("degrades_detected", self.degrades_detected as f64, "count")
+            .push("faults_suppressed", self.faults_suppressed as f64, "count")
+            .push("failovers", self.failovers as f64, "count")
+            .push("failbacks", self.failbacks as f64, "count")
+            .push("monitor_tp", self.tp as f64, "cells")
+            .push("monitor_fp", self.fp as f64, "cells")
+            .push("monitor_fn", self.fn_ as f64, "cells")
+            .push("monitor_tn", self.tn as f64, "cells")
+            .push("monitor_precision", self.precision(), "fraction")
+            .push("monitor_recall", self.recall(), "fraction")
+            .push("goodput", self.goodput_bytes as f64 / 1e9, "GB")
+            .push("goodput_vs_wallclock", self.goodput_bytes as f64 * 8.0 / self.sim_seconds.max(1e-9) / 1e9, "Gbps")
+            .push("wire", self.wire_bytes as f64 / 1e9, "GB");
+        b
+    }
+}
+
+/// The soak driver: owns the simulation, the traffic generator, the fault
+/// clock and the grading state. One [`Self::run_burst`] call = one period.
+pub struct SoakHarness {
+    cfg: Config,
+    pub params: SoakParams,
+    pub sim: ClusterSim,
+    traffic_rng: Rng,
+    faults: FaultClock,
+    burst: u64,
+    ops_submitted: u64,
+    ops_completed: u64,
+    goodput_bytes: u64,
+    flaps_injected: u64,
+    degrades_injected: u64,
+    degrades_detected: u64,
+    suppressed: u64,
+    tp: u64,
+    fp: u64,
+    fn_: u64,
+    tn: u64,
+    active_degrades: Vec<Degrade>,
+    active_flaps: Vec<Flap>,
+    /// Last seen non-Healthy verdict total per graded port ordinal.
+    prev_anomalies: BTreeMap<usize, u64>,
+    /// An op failed to complete: the sim holds live state forever, so
+    /// checkpointing is off and availability < 1.
+    hung: bool,
+}
+
+impl SoakHarness {
+    pub fn new(cfg: Config) -> Self {
+        let params = SoakParams::from_config(&cfg);
+        Self::with_params(cfg, params)
+    }
+
+    /// Tests inject custom params (fault mix, period, burst count) here.
+    pub fn with_params(cfg: Config, params: SoakParams) -> Self {
+        assert!(cfg.topo.num_nodes >= 2, "soak needs cross-node P2P traffic");
+        assert!(cfg.topo.gpus_per_node >= 4, "soak needs fault-target ranks 1..=n-2");
+        let sim = ClusterSim::new(cfg.clone());
+        let faults = FaultClock::new(cfg.seed ^ FAULT_SALT, params.mtbf_ns as f64, params.period_ns);
+        let traffic_rng = Rng::new(cfg.seed ^ TRAFFIC_SALT);
+        SoakHarness {
+            cfg,
+            params,
+            sim,
+            traffic_rng,
+            faults,
+            burst: 0,
+            ops_submitted: 0,
+            ops_completed: 0,
+            goodput_bytes: 0,
+            flaps_injected: 0,
+            degrades_injected: 0,
+            degrades_detected: 0,
+            suppressed: 0,
+            tp: 0,
+            fp: 0,
+            fn_: 0,
+            tn: 0,
+            active_degrades: Vec::new(),
+            active_flaps: Vec::new(),
+            prev_anomalies: BTreeMap::new(),
+            hung: false,
+        }
+    }
+
+    pub fn burst_index(&self) -> u64 {
+        self.burst
+    }
+
+    pub fn done(&self) -> bool {
+        self.burst >= self.params.bursts_total
+    }
+
+    pub fn hung(&self) -> bool {
+        self.hung
+    }
+
+    fn graded_port(&self, rank: usize) -> (crate::topology::PortId, usize) {
+        let port = self.sim.topo.primary_port(self.sim.topo.gpu_of_rank(RankId(rank)));
+        (port, self.sim.topo.fabric.port_ordinal(port))
+    }
+
+    /// Run one burst: heal due degrades, draw this period's faults, drive
+    /// the traffic, grade the monitor, then advance to the next boundary.
+    pub fn run_burst(&mut self) {
+        assert!(!self.done(), "soak already finished");
+        let t0 = self.sim.now();
+        let gpn = self.cfg.topo.gpus_per_node;
+
+        // 1. Heal degrades that reached their MTTR (boundary-applied: the
+        //    sim is op-quiescent here, so no flow re-rate is in flight).
+        let burst = self.burst;
+        let due: Vec<Degrade> =
+            self.active_degrades.iter().filter(|d| d.heal_burst <= burst).cloned().collect();
+        self.active_degrades.retain(|d| d.heal_burst > burst);
+        for d in due {
+            let timers =
+                self.sim.rdma.flows.set_link_capacity(LinkId(d.link), f64::from_bits(d.orig_bits), t0);
+            for t in timers {
+                self.sim.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+            }
+            self.degrades_detected += d.detected as u64;
+        }
+        self.active_flaps.retain(|f| f.up_ns > t0.as_ns());
+
+        // 2. Draw faults whose nominal arrival falls in this period.
+        let window_end = (self.burst + 1).saturating_mul(self.params.period_ns);
+        while self.faults.next_at_ns() < window_end {
+            let _nominal = self.faults.advance();
+            let wsum = (self.params.flap_weight + self.params.degrade_weight).max(1) as u64;
+            let is_flap = self.faults.rng().below(wsum) < self.params.flap_weight as u64;
+            let rank = 1 + self.faults.rng().below((gpn - 2) as u64) as usize;
+            // Flap jitter stays below the burst's minimum traffic time
+            // (smallest AllReduce + smallest P2P ≈ 280 µs of transfers), so
+            // a down-event always lands while the target's flow is pending
+            // or in flight — one flap ⇒ exactly one failover.
+            let jitter = self.faults.rng().range(10_000, 100_000);
+            let (port, ordinal) = self.graded_port(rank);
+            if self.active_degrades.iter().any(|d| d.ordinal == ordinal)
+                || self.active_flaps.iter().any(|f| f.ordinal == ordinal)
+            {
+                // One fault at a time per port; the arrival is consumed so
+                // both sides of a resume agree on the schedule.
+                self.suppressed += 1;
+                continue;
+            }
+            if is_flap {
+                let down = t0 + SimTime::ns(jitter);
+                let up = down + SimTime::ns(self.params.mttr_ns);
+                self.sim.inject_port_down(port, down);
+                self.sim.inject_port_up(port, up);
+                self.active_flaps.push(Flap { ordinal, up_ns: up.as_ns() });
+                self.flaps_injected += 1;
+            } else {
+                let link = self.sim.topo.fabric.port_tx(port);
+                let orig = self.sim.rdma.flows.link_capacity_bpns(link);
+                let timers = self.sim.rdma.flows.set_link_capacity(link, orig / DEGRADE_FACTOR, t0);
+                for t in timers {
+                    self.sim.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                }
+                let heal_after = self.params.mttr_ns.div_ceil(self.params.period_ns).max(1);
+                self.active_degrades.push(Degrade {
+                    ordinal,
+                    link: link.0,
+                    orig_bits: orig.to_bits(),
+                    heal_burst: self.burst + heal_after,
+                    detected: false,
+                });
+                self.degrades_injected += 1;
+            }
+        }
+
+        // 3. Traffic: the DP AllReduce first (alone, so ring edges see full
+        //    rate), then the pipeline P2P wave on disjoint ports. Partial
+        //    bandwidth windows are flushed first — a window straddling the
+        //    ~60 s inter-burst gap would alias to ~0 Gbps and read as a
+        //    collapse on a healthy port.
+        if let Some(mon) = self.sim.monitor.as_mut() {
+            mon.flush_windows();
+        }
+        let mut burst_ops: Vec<OpId> = Vec::new();
+        if self.params.allreduce {
+            let bytes = self.traffic_rng.range(1 << 20, 4 << 20);
+            let id = self.sim.submit(CollKind::AllReduce, bytes);
+            self.ops_submitted += 1;
+            if !self.sim.run_until_op(id, MAX_EVENTS_PER_OP) {
+                self.hung = true;
+            }
+            burst_ops.push(id);
+        }
+        let mut wave = Vec::new();
+        for g in 0..gpn {
+            // ≥ 12 MB ⇒ ≥ 12 chunk WCs per port per burst — enough to fill
+            // the monitor's 8-message window and emit several samples even
+            // at the smallest draw (the window was just flushed).
+            let bytes = self.traffic_rng.range(12 << 20, 32 << 20);
+            wave.push(self.sim.submit_p2p(RankId(g), RankId(g + gpn), bytes));
+            self.ops_submitted += 1;
+        }
+        for &id in &wave {
+            if !self.sim.run_until_op(id, MAX_EVENTS_PER_OP) {
+                self.hung = true;
+            }
+        }
+        burst_ops.extend(wave);
+        for &id in &burst_ops {
+            let op = &self.sim.ops[id.0];
+            if op.is_done() {
+                self.ops_completed += 1;
+                self.goodput_bytes += op.chan_rollup.iter().map(|c| c.bytes).sum::<u64>();
+            }
+        }
+
+        // 4. Grade the monitor: one confusion cell per (graded port, burst).
+        if let Some(mon) = self.sim.monitor.as_ref() {
+            for rank in 1..=gpn - 2 {
+                let port = self.sim.topo.primary_port(self.sim.topo.gpu_of_rank(RankId(rank)));
+                let ord = self.sim.topo.fabric.port_ordinal(port);
+                if self.active_flaps.iter().any(|f| f.ordinal == ord) {
+                    continue; // traffic failed over: the port is mute, not judged
+                }
+                let c = mon.verdict_counts(ord);
+                let anomalies = c[1] + c[2];
+                let prev = self.prev_anomalies.get(&ord).copied().unwrap_or(0);
+                let flagged = anomalies > prev;
+                self.prev_anomalies.insert(ord, anomalies);
+                match (self.active_degrades.iter().position(|d| d.ordinal == ord), flagged) {
+                    (Some(i), true) => {
+                        self.tp += 1;
+                        self.active_degrades[i].detected = true;
+                    }
+                    (Some(_), false) => self.fn_ += 1,
+                    (None, true) => self.fp += 1,
+                    (None, false) => self.tn += 1,
+                }
+            }
+        }
+
+        // 5. Advance to the next boundary (draining heals/warm-ups due
+        //    before it) and stop exactly ON it — the op-quiescent protocol
+        //    ClusterSim::checkpoint requires.
+        let end = self.sim.now();
+        let nominal = t0 + SimTime::ns(self.params.period_ns);
+        let boundary =
+            if nominal > end + SimTime::ns(1_000_000) { nominal } else { end + SimTime::ns(1_000_000) };
+        self.sim.run_until(boundary - SimTime::ns(1));
+        self.sim.engine.advance_to(boundary);
+        self.burst += 1;
+    }
+
+    /// Drive bursts to completion, checkpointing every
+    /// `params.checkpoint_every` bursts through `sink(burst, text)`.
+    /// `stop_after_ckpts` aborts right after the N-th checkpoint (CI uses
+    /// it to simulate a kill mid-soak). Returns checkpoints written.
+    pub fn run(&mut self, stop_after_ckpts: Option<u64>, sink: &mut dyn FnMut(u64, &str)) -> u64 {
+        let mut written = 0u64;
+        while !self.done() {
+            self.run_burst();
+            let every = self.params.checkpoint_every;
+            if every > 0 && self.burst % every == 0 && !self.done() && !self.hung {
+                sink(self.burst, &self.checkpoint());
+                written += 1;
+                if stop_after_ckpts.is_some_and(|n| written >= n) {
+                    return written;
+                }
+            }
+        }
+        written
+    }
+
+    /// Serialize the harness + embedded simulation. Panics if an op hung
+    /// (the sim is not op-quiescent and never will be).
+    pub fn checkpoint(&self) -> String {
+        assert!(!self.hung, "cannot checkpoint a soak with a hung op");
+        let mut w = CkptWriter::new("VCCLSOAK", 1);
+        w.u64("burst", self.burst);
+        w.u64("period", self.params.period_ns);
+        w.u64("mtbf", self.params.mtbf_ns);
+        w.u64("mttr", self.params.mttr_ns);
+        w.u64("wflap", self.params.flap_weight as u64);
+        w.u64("wdeg", self.params.degrade_weight as u64);
+        w.bool("ar", self.params.allreduce);
+        w.u64("nfat", self.faults.next_at_ns);
+        let fs = self.faults.rng.state();
+        let ts = self.traffic_rng.state();
+        for (i, v) in fs.iter().enumerate() {
+            w.u64(&format!("f{i}"), *v);
+        }
+        for (i, v) in ts.iter().enumerate() {
+            w.u64(&format!("t{i}"), *v);
+        }
+        w.u64("sub", self.ops_submitted);
+        w.u64("cmp", self.ops_completed);
+        w.u64("good", self.goodput_bytes);
+        w.u64("flp", self.flaps_injected);
+        w.u64("deg", self.degrades_injected);
+        w.u64("ddet", self.degrades_detected);
+        w.u64("sup", self.suppressed);
+        w.u64("tp", self.tp);
+        w.u64("fp", self.fp);
+        w.u64("fnn", self.fn_);
+        w.u64("tn", self.tn);
+        w.usize("nact", self.active_degrades.len());
+        for d in &self.active_degrades {
+            w.usize("ord", d.ordinal);
+            w.usize("lnk", d.link);
+            w.u64("cap", d.orig_bits);
+            w.u64("heal", d.heal_burst);
+            w.bool("det", d.detected);
+        }
+        w.usize("nflp", self.active_flaps.len());
+        for f in &self.active_flaps {
+            w.usize("ord", f.ordinal);
+            w.u64("up", f.up_ns);
+        }
+        w.usize("nprev", self.prev_anomalies.len());
+        for (ord, v) in &self.prev_anomalies {
+            w.usize("ord", *ord);
+            w.u64("anom", *v);
+        }
+        let header = w.finish();
+        format!("{header}{}", self.sim.checkpoint())
+    }
+
+    /// Resume from [`Self::checkpoint`] output under the given config.
+    pub fn restore(cfg: Config, text: &str) -> Result<SoakHarness, String> {
+        let params = SoakParams::from_config(&cfg);
+        Self::restore_with_params(cfg, params, text)
+    }
+
+    pub fn restore_with_params(
+        cfg: Config,
+        params: SoakParams,
+        text: &str,
+    ) -> Result<SoakHarness, String> {
+        let pos = text
+            .find("VCCLCKPT")
+            .ok_or_else(|| "soak checkpoint lacks an embedded sim stream".to_string())?;
+        let (head, simtext) = text.split_at(pos);
+        let mut r = CkptReader::new(head, "VCCLSOAK", 1)?;
+        let burst = r.u64("burst")?;
+        for (tag, want) in [
+            ("period", params.period_ns),
+            ("mtbf", params.mtbf_ns),
+            ("mttr", params.mttr_ns),
+            ("wflap", params.flap_weight as u64),
+            ("wdeg", params.degrade_weight as u64),
+        ] {
+            let got = r.u64(tag)?;
+            if got != want {
+                return Err(format!(
+                    "soak param {tag} changed: checkpoint {got}, config {want} \
+                     (only sim_days / checkpoint_every may change across resume)"
+                ));
+            }
+        }
+        if r.bool("ar")? != params.allreduce {
+            return Err("soak traffic mix (allreduce) changed across resume".to_string());
+        }
+        let next_at = r.u64("nfat")?;
+        let mut fs = [0u64; 4];
+        for (i, v) in fs.iter_mut().enumerate() {
+            *v = r.u64(&format!("f{i}"))?;
+        }
+        let mut ts = [0u64; 4];
+        for (i, v) in ts.iter_mut().enumerate() {
+            *v = r.u64(&format!("t{i}"))?;
+        }
+        let ops_submitted = r.u64("sub")?;
+        let ops_completed = r.u64("cmp")?;
+        let goodput_bytes = r.u64("good")?;
+        let flaps_injected = r.u64("flp")?;
+        let degrades_injected = r.u64("deg")?;
+        let degrades_detected = r.u64("ddet")?;
+        let suppressed = r.u64("sup")?;
+        let tp = r.u64("tp")?;
+        let fp = r.u64("fp")?;
+        let fn_ = r.u64("fnn")?;
+        let tn = r.u64("tn")?;
+        let nact = r.usize("nact")?;
+        let mut active_degrades = Vec::with_capacity(nact);
+        for _ in 0..nact {
+            active_degrades.push(Degrade {
+                ordinal: r.usize("ord")?,
+                link: r.usize("lnk")?,
+                orig_bits: r.u64("cap")?,
+                heal_burst: r.u64("heal")?,
+                detected: r.bool("det")?,
+            });
+        }
+        let nflp = r.usize("nflp")?;
+        let mut active_flaps = Vec::with_capacity(nflp);
+        for _ in 0..nflp {
+            active_flaps.push(Flap { ordinal: r.usize("ord")?, up_ns: r.u64("up")? });
+        }
+        let nprev = r.usize("nprev")?;
+        let mut prev_anomalies = BTreeMap::new();
+        for _ in 0..nprev {
+            let ord = r.usize("ord")?;
+            let v = r.u64("anom")?;
+            prev_anomalies.insert(ord, v);
+        }
+        r.finish()?;
+        let sim = ClusterSim::restore(cfg.clone(), simtext)?;
+        Ok(SoakHarness {
+            cfg,
+            params,
+            sim,
+            traffic_rng: Rng::from_state(ts),
+            faults: FaultClock { rng: Rng::from_state(fs), mtbf_ns: params.mtbf_ns as f64, next_at_ns: next_at },
+            burst,
+            ops_submitted,
+            ops_completed,
+            goodput_bytes,
+            flaps_injected,
+            degrades_injected,
+            degrades_detected,
+            suppressed,
+            tp,
+            fp,
+            fn_,
+            tn,
+            active_degrades,
+            active_flaps,
+            prev_anomalies,
+            hung: false,
+        })
+    }
+
+    /// Roll up the soak so far (callable at any boundary).
+    pub fn report(&self) -> SoakReport {
+        // In-force degrades count as detected-so-far for the roll-up; their
+        // `detected` flag is otherwise folded in at heal time.
+        let in_force_detected =
+            self.active_degrades.iter().filter(|d| d.detected).count() as u64;
+        SoakReport {
+            bursts: self.burst,
+            sim_seconds: self.sim.now().as_ns() as f64 / 1e9,
+            ops_submitted: self.ops_submitted,
+            ops_completed: self.ops_completed,
+            availability: if self.ops_submitted == 0 {
+                1.0
+            } else {
+                self.ops_completed as f64 / self.ops_submitted as f64
+            },
+            flaps_injected: self.flaps_injected,
+            degrades_injected: self.degrades_injected,
+            degrades_detected: self.degrades_detected + in_force_detected,
+            faults_suppressed: self.suppressed,
+            failovers: self.sim.stats.failovers,
+            failbacks: self.sim.stats.failbacks,
+            tp: self.tp,
+            fp: self.fp,
+            fn_: self.fn_,
+            tn: self.tn,
+            goodput_bytes: self.goodput_bytes,
+            wire_bytes: self.sim.stats.wire_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params(bursts: u64) -> SoakParams {
+        SoakParams {
+            period_ns: BURST_PERIOD_NS,
+            mtbf_ns: 90_000_000_000, // 1.5 simulated minutes: ~2 faults / 3 bursts
+            mttr_ns: 30_000_000_000,
+            bursts_total: bursts,
+            checkpoint_every: 2,
+            flap_weight: 1,
+            degrade_weight: 1,
+            allreduce: true,
+        }
+    }
+
+    #[test]
+    fn fault_clock_same_seed_same_schedule() {
+        let mut a = FaultClock::new(7, 1e9, 0);
+        let mut b = FaultClock::new(7, 1e9, 0);
+        for _ in 0..100 {
+            assert_eq!(a.advance(), b.advance());
+        }
+        let mut c = FaultClock::new(8, 1e9, 0);
+        let sa: Vec<u64> = (0..16).map(|_| FaultClock::new(7, 1e9, 0).advance()).collect();
+        assert!(sa.iter().all(|&x| x == sa[0]));
+        assert_ne!(a.advance(), c.advance());
+    }
+
+    #[test]
+    fn fault_clock_mean_matches_mtbf() {
+        let mtbf = 3_600_000_000_000f64; // 1 simulated hour
+        let mut c = FaultClock::new(0x5CC1, mtbf, 0);
+        let n = 20_000u64;
+        let mut prev = 0u64;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            let at = c.advance();
+            sum += at - prev;
+            prev = at;
+        }
+        let mean = sum as f64 / n as f64;
+        let err = (mean - mtbf).abs() / mtbf;
+        assert!(err < 0.05, "empirical inter-arrival mean {mean:.3e} vs MTBF {mtbf:.3e}");
+    }
+
+    #[test]
+    fn a_short_soak_runs_detects_and_recovers() {
+        let cfg = Config::soak_defaults();
+        let mut h = SoakHarness::with_params(cfg, quick_params(6));
+        while !h.done() {
+            h.run_burst();
+        }
+        let r = h.report();
+        assert!(!h.hung());
+        assert_eq!(r.bursts, 6);
+        assert_eq!(r.availability, 1.0, "fault tolerance must complete every op");
+        assert!(r.ops_submitted == 6 * 9, "1 allreduce + 8 p2p per burst");
+        assert!(r.flaps_injected + r.degrades_injected >= 1, "MTBF of 1.5 bursts must fault");
+        // Flap accounting: every flap failed over exactly once and (MTTR +
+        // warm-up < period) failed back before the next boundary.
+        assert_eq!(r.failovers, r.flaps_injected);
+        assert_eq!(r.failbacks, r.flaps_injected);
+        // Monitor grading: perfect on this controlled traffic.
+        assert_eq!(r.precision(), 1.0, "fp={}", r.fp);
+        assert_eq!(r.recall(), 1.0, "fn={}", r.fn_);
+        assert_eq!(r.degrades_detected, r.degrades_injected);
+        // Goodput conservation: harness accumulation == per-op roll-ups.
+        let rollup: u64 = h
+            .sim
+            .ops
+            .iter()
+            .map(|o| o.chan_rollup.iter().map(|c| c.bytes).sum::<u64>())
+            .sum();
+        assert_eq!(r.goodput_bytes, rollup);
+        assert!(r.wire_bytes >= r.goodput_bytes, "wire carries goodput + retransmits");
+    }
+
+    #[test]
+    fn soak_checkpoint_resume_is_bit_identical() {
+        let cfg = Config::soak_defaults();
+        // Uninterrupted reference.
+        let mut a = SoakHarness::with_params(cfg.clone(), quick_params(5));
+        while !a.done() {
+            a.run_burst();
+        }
+        let bench_a = a.report().to_bench().to_json();
+
+        // Interrupted at burst 2, resumed fresh.
+        let mut b = SoakHarness::with_params(cfg.clone(), quick_params(5));
+        b.run_burst();
+        b.run_burst();
+        let ckpt = b.checkpoint();
+        drop(b);
+        let mut c = SoakHarness::restore_with_params(cfg, quick_params(5), &ckpt)
+            .expect("soak restore");
+        assert_eq!(c.burst_index(), 2);
+        // Re-checkpointing the restored harness is a fixed point.
+        assert_eq!(c.checkpoint(), ckpt);
+        while !c.done() {
+            c.run_burst();
+        }
+        assert_eq!(c.report().to_bench().to_json(), bench_a);
+        assert_eq!(c.sim.now(), a.sim.now());
+        assert_eq!(c.sim.stats.failovers, a.sim.stats.failovers);
+        assert_eq!(c.traffic_rng.state(), a.traffic_rng.state());
+        assert_eq!(c.faults.rng.state(), a.faults.rng.state());
+    }
+
+    #[test]
+    fn soak_restore_rejects_param_drift() {
+        let cfg = Config::soak_defaults();
+        let mut h = SoakHarness::with_params(cfg.clone(), quick_params(4));
+        h.run_burst();
+        let ckpt = h.checkpoint();
+        let mut skewed = quick_params(4);
+        skewed.mtbf_ns += 1;
+        let err = SoakHarness::restore_with_params(cfg.clone(), skewed, &ckpt).unwrap_err();
+        assert!(err.contains("mtbf"), "{err}");
+        // sim_days (bursts_total) may legitimately change across resume.
+        let extended = SoakParams { bursts_total: 9, ..quick_params(4) };
+        let h2 = SoakHarness::restore_with_params(cfg, extended, &ckpt).unwrap();
+        assert!(!h2.done());
+    }
+
+    #[test]
+    fn run_loop_checkpoints_on_cadence_and_stops_on_request() {
+        let cfg = Config::soak_defaults();
+        let mut h = SoakHarness::with_params(cfg, quick_params(6));
+        let mut seen: Vec<u64> = Vec::new();
+        let written = h.run(Some(1), &mut |b, text| {
+            seen.push(b);
+            assert!(text.starts_with("VCCLSOAK v1"));
+        });
+        assert_eq!((written, seen.as_slice()), (1, &[2u64][..]));
+        assert_eq!(h.burst_index(), 2, "stop-after-ckpt aborts mid-soak");
+        let written = h.run(None, &mut |b, _| seen.push(b));
+        // Bursts 4 fires the cadence; burst 6 is the end (no checkpoint).
+        assert_eq!((written, seen.as_slice()), (1, &[2u64, 4][..]));
+        assert!(h.done());
+    }
+}

@@ -16,6 +16,7 @@
 
 use super::{GpuId, NicId, PortId};
 use crate::config::TopologyConfig;
+use crate::util::{CkptReader, CkptWriter};
 
 /// Index into the fabric's link table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -243,6 +244,28 @@ impl Fabric {
                 hops: 4,
             }
         }
+    }
+
+    /// Serialize the mutable fabric state — per-link up flags only
+    /// (§Soak checkpointing). Layout and capacities are config-derived and
+    /// rebuilt at restore.
+    pub fn save(&self, w: &mut CkptWriter) {
+        w.usize("nfab", self.links.len());
+        for l in &self.links {
+            w.bool("up", l.up);
+        }
+    }
+
+    /// Restore the up flags into a freshly built fabric of the same shape.
+    pub fn load(&mut self, r: &mut CkptReader) -> Result<(), String> {
+        let n = r.usize("nfab")?;
+        if n != self.links.len() {
+            return Err(format!("checkpoint has {n} fabric links, config built {}", self.links.len()));
+        }
+        for l in self.links.iter_mut() {
+            l.up = r.bool("up")?;
+        }
+        Ok(())
     }
 
     /// Intra-node NVLink path between two GPUs.

@@ -278,6 +278,20 @@ pub fn export(records: &[TraceRecord], meta: &ChromeMeta) -> String {
     out
 }
 
+/// Export only records at or after `since_ns`, dropping the `SimStarted`
+/// marker — the post-resume trace tail of a checkpointed run. Because the
+/// filter is a pure time predicate over ring-ordered records, this tail is
+/// byte-identical to `export_since` of the uninterrupted run over the same
+/// window (§Soak determinism contract).
+pub fn export_since(records: &[TraceRecord], meta: &ChromeMeta, since_ns: u64) -> String {
+    let tail: Vec<TraceRecord> = records
+        .iter()
+        .filter(|r| r.at.as_ns() >= since_ns && !matches!(r.ev, TraceEvent::SimStarted { .. }))
+        .copied()
+        .collect();
+    export(&tail, meta)
+}
+
 // ---------------------------------------------------------------------
 // Minimal JSON syntax checker (no serde offline). Validates the full JSON
 // grammar; used by tests and the CI trace smoke to prove the export parses.
@@ -545,6 +559,36 @@ mod tests {
         assert!(json.contains("\"flows_le_16\": 1"));
         // Instant events keep their thread scope; spans must not carry one.
         assert!(!json.contains("\"ph\": \"B\", \"s\""));
+    }
+
+    /// The resume-tail contract: exporting a full run's records from T
+    /// equals exporting a resumed run's records from T, as long as the
+    /// record sets agree past T — `SimStarted` (re-emitted by the resumed
+    /// process at construction) is excluded from both sides.
+    #[test]
+    fn export_since_splices_resume_tails() {
+        let full = vec![
+            rec(0, 0, TraceEvent::SimStarted { nodes: 2, ranks: 16 }),
+            rec(100, 1, TraceEvent::FlowStarted { flow: 0, bytes: 4096 }),
+            rec(2_000, 2, TraceEvent::FlowFinished { flow: 0 }),
+            rec(5_000, 3, TraceEvent::FlowStarted { flow: 1, bytes: 8192 }),
+            rec(9_000, 4, TraceEvent::FlowFinished { flow: 1 }),
+        ];
+        // A resumed process re-emits SimStarted at its own construction and
+        // then records the same post-boundary events.
+        let resumed = vec![
+            rec(5_000, 0, TraceEvent::SimStarted { nodes: 2, ranks: 16 }),
+            rec(5_000, 1, TraceEvent::FlowStarted { flow: 1, bytes: 8192 }),
+            rec(9_000, 2, TraceEvent::FlowFinished { flow: 1 }),
+        ];
+        let a = export_since(&full, &meta(), 5_000);
+        let b = export_since(&resumed, &meta(), 5_000);
+        json_lint(&a).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.contains("SimStarted"));
+        assert!(a.contains("\"ts\": 5"));
+        // The pre-boundary flow is gone from the tail.
+        assert!(!a.contains("\"bytes\": 4096"));
     }
 
     #[test]

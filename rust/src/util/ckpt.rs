@@ -1,0 +1,288 @@
+//! Checkpoint token codec (§Soak): a hand-rolled, versioned, whitespace-
+//! separated token format for simulation-state snapshots.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bit-exactness.** A resumed simulation must be indistinguishable
+//!    from one that never stopped, so every value round-trips exactly:
+//!    `f64`s are written as the hex of their IEEE-754 bits (never decimal),
+//!    integers in plain decimal, booleans as `0`/`1`.
+//! 2. **Self-description.** Every field is preceded by a tag token and the
+//!    reader demands the tag back (`expect`), so a writer/reader skew fails
+//!    loudly at the first divergent field instead of silently misparsing
+//!    the rest of the stream — the same "no silent misconfig" stance as
+//!    `Config::set_key`.
+//! 3. **No arbitrary strings.** Tokens never contain whitespace; enums are
+//!    serialized as short tag tokens. That keeps the grammar trivial
+//!    (`split_ascii_whitespace`) and the files diffable.
+//!
+//! The format carries a magic + version header (`VCCLCKPT v1 ...`) and a
+//! config fingerprint; see `ClusterSim::checkpoint` for the layout and
+//! DESIGN.md §Soak for the compatibility contract (a version bump is
+//! REQUIRED whenever any serialized structure changes shape).
+
+use std::fmt::Write as _;
+
+/// Streaming writer: tokens separated by single spaces, one logical record
+/// per `section` line break (cosmetic only — the reader treats the whole
+/// file as one token stream).
+#[derive(Debug)]
+pub struct CkptWriter {
+    buf: String,
+}
+
+impl CkptWriter {
+    /// Start a checkpoint stream with a magic token and format version.
+    pub fn new(magic: &str, version: u32) -> Self {
+        let mut w = CkptWriter { buf: String::with_capacity(4096) };
+        w.token(magic);
+        w.token(&format!("v{version}"));
+        w
+    }
+
+    /// Append a bare token (must contain no whitespace).
+    pub fn token(&mut self, t: &str) {
+        debug_assert!(!t.is_empty() && !t.chars().any(|c| c.is_whitespace()), "bad token {t:?}");
+        if !self.buf.is_empty() {
+            self.buf.push(' ');
+        }
+        self.buf.push_str(t);
+    }
+
+    /// Cosmetic line break before a named section tag.
+    pub fn section(&mut self, name: &str) {
+        self.buf.push('\n');
+        self.buf.push_str(name);
+    }
+
+    /// `tag value` pair for a u64.
+    pub fn u64(&mut self, tag: &str, v: u64) {
+        self.token(tag);
+        let _ = write!(self.buf, " {v}");
+    }
+
+    pub fn u32(&mut self, tag: &str, v: u32) {
+        self.u64(tag, v as u64);
+    }
+
+    pub fn usize(&mut self, tag: &str, v: usize) {
+        self.u64(tag, v as u64);
+    }
+
+    pub fn bool(&mut self, tag: &str, v: bool) {
+        self.u64(tag, v as u64);
+    }
+
+    /// `tag value` pair for an f64, written as hex bits: exact round-trip.
+    pub fn f64(&mut self, tag: &str, v: f64) {
+        self.token(tag);
+        let _ = write!(self.buf, " {:016x}", v.to_bits());
+    }
+
+    /// `tag 0` / `tag 1 value` for an optional u64.
+    pub fn opt_u64(&mut self, tag: &str, v: Option<u64>) {
+        self.token(tag);
+        match v {
+            None => self.buf.push_str(" 0"),
+            Some(x) => {
+                let _ = write!(self.buf, " 1 {x}");
+            }
+        }
+    }
+
+    pub fn finish(self) -> String {
+        let mut s = self.buf;
+        s.push('\n');
+        s
+    }
+}
+
+/// Pull-parser over the token stream. Every accessor returns a `Result`
+/// with a message naming the expected tag, so a truncated or skewed
+/// checkpoint reports *where* it diverged.
+pub struct CkptReader<'a> {
+    toks: std::str::SplitAsciiWhitespace<'a>,
+}
+
+impl<'a> CkptReader<'a> {
+    /// Open a stream, checking the magic and version header.
+    pub fn new(text: &'a str, magic: &str, version: u32) -> Result<Self, String> {
+        let mut r = CkptReader { toks: text.split_ascii_whitespace() };
+        let m = r.next_tok("magic")?;
+        if m != magic {
+            return Err(format!("bad magic: expected {magic:?}, found {m:?}"));
+        }
+        let v = r.next_tok("version")?;
+        let want = format!("v{version}");
+        if v != want {
+            return Err(format!("unsupported checkpoint version {v:?} (this build reads {want})"));
+        }
+        Ok(r)
+    }
+
+    fn next_tok(&mut self, what: &str) -> Result<&'a str, String> {
+        self.toks.next().ok_or_else(|| format!("truncated checkpoint: expected {what}"))
+    }
+
+    /// Demand the next token to be exactly `tag`.
+    pub fn expect(&mut self, tag: &str) -> Result<(), String> {
+        let t = self.next_tok(tag)?;
+        if t != tag {
+            return Err(format!("expected tag {tag:?}, found {t:?}"));
+        }
+        Ok(())
+    }
+
+    /// Read a bare token (enum discriminants, section names chosen by the
+    /// caller).
+    pub fn token(&mut self) -> Result<&'a str, String> {
+        self.next_tok("a token")
+    }
+
+    pub fn u64(&mut self, tag: &str) -> Result<u64, String> {
+        self.expect(tag)?;
+        let t = self.next_tok(tag)?;
+        t.parse::<u64>().map_err(|e| format!("bad u64 for {tag:?}: {t:?} ({e})"))
+    }
+
+    pub fn u32(&mut self, tag: &str) -> Result<u32, String> {
+        let v = self.u64(tag)?;
+        u32::try_from(v).map_err(|_| format!("u32 overflow for {tag:?}: {v}"))
+    }
+
+    pub fn usize(&mut self, tag: &str) -> Result<usize, String> {
+        let v = self.u64(tag)?;
+        usize::try_from(v).map_err(|_| format!("usize overflow for {tag:?}: {v}"))
+    }
+
+    pub fn bool(&mut self, tag: &str) -> Result<bool, String> {
+        match self.u64(tag)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("bad bool for {tag:?}: {v}")),
+        }
+    }
+
+    pub fn f64(&mut self, tag: &str) -> Result<f64, String> {
+        self.expect(tag)?;
+        let t = self.next_tok(tag)?;
+        let bits = u64::from_str_radix(t, 16)
+            .map_err(|e| format!("bad f64 bits for {tag:?}: {t:?} ({e})"))?;
+        Ok(f64::from_bits(bits))
+    }
+
+    pub fn opt_u64(&mut self, tag: &str) -> Result<Option<u64>, String> {
+        self.expect(tag)?;
+        let flag = self.next_tok(tag)?;
+        match flag {
+            "0" => Ok(None),
+            "1" => {
+                let t = self.next_tok(tag)?;
+                t.parse::<u64>()
+                    .map(Some)
+                    .map_err(|e| format!("bad u64 for {tag:?}: {t:?} ({e})"))
+            }
+            other => Err(format!("bad option flag for {tag:?}: {other:?}")),
+        }
+    }
+
+    /// Demand the stream to be fully consumed.
+    pub fn finish(mut self) -> Result<(), String> {
+        match self.toks.next() {
+            None => Ok(()),
+            Some(t) => Err(format!("trailing data in checkpoint: {t:?}")),
+        }
+    }
+}
+
+/// FNV-1a over a byte string — the config-fingerprint hash. Not
+/// cryptographic; it only needs to catch "resumed under a different
+/// config" mistakes deterministically.
+pub fn fingerprint(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_all_field_kinds() {
+        let mut w = CkptWriter::new("TESTCKPT", 1);
+        w.section("nums");
+        w.u64("a", u64::MAX);
+        w.u32("b", 7);
+        w.bool("c", true);
+        w.f64("pi", std::f64::consts::PI);
+        w.f64("nneg", -0.0);
+        w.opt_u64("none", None);
+        w.opt_u64("some", Some(42));
+        w.token("enumtag");
+        let text = w.finish();
+
+        let mut r = CkptReader::new(&text, "TESTCKPT", 1).unwrap();
+        assert_eq!(r.u64("a").unwrap(), u64::MAX);
+        assert_eq!(r.u32("b").unwrap(), 7);
+        // The section tag is a plain token in the stream.
+        // (It was written before the fields — consume order must match.)
+        let mut r = CkptReader::new(&text, "TESTCKPT", 1).unwrap();
+        assert_eq!(r.token().unwrap(), "nums");
+        assert_eq!(r.u64("a").unwrap(), u64::MAX);
+        assert_eq!(r.u32("b").unwrap(), 7);
+        assert!(r.bool("c").unwrap());
+        assert_eq!(r.f64("pi").unwrap().to_bits(), std::f64::consts::PI.to_bits());
+        assert_eq!(r.f64("nneg").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.opt_u64("none").unwrap(), None);
+        assert_eq!(r.opt_u64("some").unwrap(), Some(42));
+        assert_eq!(r.token().unwrap(), "enumtag");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn f64_bits_are_exact_for_nasty_values() {
+        for v in [f64::MIN_POSITIVE, f64::EPSILON, 1.0 / 3.0, 1e-308, 2.2250738585072011e-308] {
+            let mut w = CkptWriter::new("T", 1);
+            w.f64("x", v);
+            let text = w.finish();
+            let mut r = CkptReader::new(&text, "T", 1).unwrap();
+            assert_eq!(r.f64("x").unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn skew_and_truncation_fail_loudly() {
+        let mut w = CkptWriter::new("T", 1);
+        w.u64("a", 1);
+        let text = w.finish();
+        let mut r = CkptReader::new(&text, "T", 1).unwrap();
+        assert!(r.u64("b").unwrap_err().contains("expected tag"));
+        let mut r = CkptReader::new(&text, "T", 1).unwrap();
+        let _ = r.u64("a").unwrap();
+        assert!(r.u64("more").unwrap_err().contains("truncated"));
+        assert!(CkptReader::new(&text, "OTHER", 1).unwrap_err().contains("magic"));
+        assert!(CkptReader::new(&text, "T", 2).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn unconsumed_trailing_data_is_an_error() {
+        let mut w = CkptWriter::new("T", 1);
+        w.u64("a", 1);
+        w.u64("b", 2);
+        let text = w.finish();
+        let mut r = CkptReader::new(&text, "T", 1).unwrap();
+        let _ = r.u64("a").unwrap();
+        assert!(r.finish().unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_discriminating() {
+        assert_eq!(fingerprint("abc"), fingerprint("abc"));
+        assert_ne!(fingerprint("abc"), fingerprint("abd"));
+        assert_ne!(fingerprint(""), fingerprint(" "));
+    }
+}

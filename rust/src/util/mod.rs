@@ -1,8 +1,10 @@
 //! Small utilities shared across the simulator: deterministic RNG, byte /
 //! bandwidth units, and human-readable formatting.
 
+pub mod ckpt;
 pub mod rng;
 pub mod units;
 
+pub use ckpt::{fingerprint, CkptReader, CkptWriter};
 pub use rng::Rng;
 pub use units::{ByteSize, Gbps};

@@ -1,0 +1,273 @@
+//! §Soak integration suite: checkpoint/resume bit-identity, fault-schedule
+//! determinism, monitor grading properties and bounded-vs-retain-all
+//! equivalence — everything the time-compressed soak harness promises,
+//! exercised through the public API.
+
+use vccl::ccl::ClusterSim;
+use vccl::config::Config;
+use vccl::soak::{FaultClock, SoakHarness, SoakParams, BURST_PERIOD_NS};
+use vccl::util::Rng;
+
+/// Debug builds run fewer randomized cases (the un-optimized simulator is
+/// ~10× slower; breadth is a release concern — same policy as
+/// tests/integration.rs).
+const CASES: u64 = if cfg!(debug_assertions) { 2 } else { 6 };
+
+fn params(bursts: u64, flap_weight: u32, degrade_weight: u32) -> SoakParams {
+    SoakParams {
+        period_ns: BURST_PERIOD_NS,
+        mtbf_ns: 90_000_000_000, // 1.5 simulated minutes: ~2 faults / 3 bursts
+        mttr_ns: 30_000_000_000,
+        bursts_total: bursts,
+        checkpoint_every: 0,
+        flap_weight,
+        degrade_weight,
+        allreduce: true,
+    }
+}
+
+fn goodput_rollup(sim: &ClusterSim) -> u64 {
+    sim.ops.iter().map(|o| o.chan_rollup.iter().map(|c| c.bytes).sum::<u64>()).sum()
+}
+
+// ---------------------------------------------------------------------
+// Satellite: randomized checkpoint/resume bit-identity
+// ---------------------------------------------------------------------
+
+/// The headline §Soak contract: interrupt a soak at ANY burst boundary,
+/// restore into a fresh process-equivalent harness, and the final report —
+/// and the underlying simulation — are bit-identical to the uninterrupted
+/// run. Seeds and interrupt points are randomized.
+#[test]
+fn checkpoint_resume_bit_identity_randomized() {
+    let mut pick = Rng::new(0xB17_1DE4);
+    for case in 0..CASES {
+        let mut cfg = Config::soak_defaults();
+        cfg.seed = 0x5CC1 + case * 7919;
+        let bursts = 4 + pick.below(2); // 4-5 bursts per case
+        let cut = 1 + pick.below(bursts - 1); // interrupt strictly mid-soak
+
+        let mut reference = SoakHarness::with_params(cfg.clone(), params(bursts, 1, 1));
+        while !reference.done() {
+            reference.run_burst();
+        }
+        assert!(!reference.hung(), "case {case}: soak must not hang");
+        let want = reference.report().to_bench().to_json();
+
+        let mut first = SoakHarness::with_params(cfg.clone(), params(bursts, 1, 1));
+        for _ in 0..cut {
+            first.run_burst();
+        }
+        let ckpt = first.checkpoint();
+        drop(first);
+
+        let mut resumed = SoakHarness::restore_with_params(cfg, params(bursts, 1, 1), &ckpt)
+            .expect("restore");
+        // Restoring is a fixed point of checkpointing.
+        assert_eq!(resumed.checkpoint(), ckpt, "case {case}: re-checkpoint drifted");
+        while !resumed.done() {
+            resumed.run_burst();
+        }
+        let got = resumed.report().to_bench().to_json();
+        assert_eq!(
+            got, want,
+            "case {case} (seed {}, cut at burst {cut}/{bursts}): resumed BENCH_soak \
+             diverged from the uninterrupted run",
+            0x5CC1 + case * 7919
+        );
+        assert_eq!(resumed.sim.now(), reference.sim.now(), "case {case}: clocks diverged");
+        assert_eq!(
+            resumed.sim.checkpoint(),
+            reference.sim.checkpoint(),
+            "case {case}: final sim states diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: seeded fault-scheduler determinism
+// ---------------------------------------------------------------------
+
+/// Same seed ⇒ identical fault schedule (arrival times AND the kind /
+/// target / jitter draws that follow, witnessed through the injected-fault
+/// counters and the full report); different seed ⇒ a different schedule.
+#[test]
+fn fault_schedule_is_seed_deterministic() {
+    let mk = |seed: u64| {
+        let mut cfg = Config::soak_defaults();
+        cfg.seed = seed;
+        let mut h = SoakHarness::with_params(cfg, params(4, 1, 1));
+        while !h.done() {
+            h.run_burst();
+        }
+        h.report()
+    };
+    let a = mk(1);
+    let b = mk(1);
+    assert_eq!(a.to_bench().to_json(), b.to_bench().to_json());
+    assert!(a.flaps_injected + a.degrades_injected >= 1, "MTBF of 1.5 bursts must fault");
+
+    // A different seed moves the schedule. Arrival times are continuous
+    // (exponential draws), so compare those rather than coarse counts.
+    let c1 = FaultClock::new(1, 90e9, 0);
+    let c2 = FaultClock::new(2, 90e9, 0);
+    assert_ne!(c1.next_at_ns(), c2.next_at_ns());
+}
+
+/// The empirical inter-arrival mean of the fault clock converges to the
+/// configured MTBF (the schedule really is Poisson at the requested rate).
+#[test]
+fn fault_interarrival_mean_matches_mtbf() {
+    for (seed, mtbf) in [(11u64, 3.6e12), (12, 0.9e12)] {
+        let mut c = FaultClock::new(seed, mtbf, 0);
+        let n = 20_000u64;
+        let mut prev = 0u64;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            let at = c.advance();
+            sum += at - prev;
+            prev = at;
+        }
+        let mean = sum as f64 / n as f64;
+        let err = (mean - mtbf).abs() / mtbf;
+        assert!(err < 0.05, "seed {seed}: mean {mean:.3e} vs MTBF {mtbf:.3e} ({err:.3})");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: bounded monitor ≡ retain-all monitor under the soak
+// ---------------------------------------------------------------------
+
+/// The §Soak memory bounding must not change a single verdict: a soak run
+/// with the monitor's full retain-all reference logs produces the exact
+/// same verdict counts — and the same final report — as the bounded
+/// default. (Reference mode is compiled under debug/ref-alloc only.)
+#[cfg(debug_assertions)]
+#[test]
+fn bounded_monitor_matches_retain_all_under_soak() {
+    let run = |retain_all: bool| {
+        let cfg = Config::soak_defaults();
+        let mut h = SoakHarness::with_params(cfg, params(4, 0, 1)); // degrade-only
+        if retain_all {
+            h.sim.monitor.as_mut().expect("soak preset keeps the monitor on").set_retain_all(true);
+        }
+        while !h.done() {
+            h.run_burst();
+        }
+        let counts: Vec<[u64; 3]> = {
+            let mon = h.sim.monitor.as_ref().unwrap();
+            mon.active_ports().into_iter().map(|p| mon.verdict_counts(p)).collect()
+        };
+        (h.report().to_bench().to_json(), counts)
+    };
+    let (bounded_json, bounded_counts) = run(false);
+    let (ref_json, ref_counts) = run(true);
+    assert_eq!(bounded_json, ref_json);
+    assert_eq!(bounded_counts, ref_counts);
+    assert!(bounded_counts.iter().any(|c| c[1] + c[2] > 0), "degrades must be flagged");
+}
+
+// ---------------------------------------------------------------------
+// Satellite: soak-report properties
+// ---------------------------------------------------------------------
+
+/// Availability is a fraction, and with fault tolerance on it is exactly
+/// 1.0 — every op of every burst completes despite the fault schedule.
+#[test]
+fn availability_is_one_with_fault_tolerance() {
+    let mut h = SoakHarness::with_params(Config::soak_defaults(), params(5, 1, 1));
+    while !h.done() {
+        h.run_burst();
+    }
+    let r = h.report();
+    assert!((0.0..=1.0).contains(&r.availability));
+    assert_eq!(r.availability, 1.0);
+    assert_eq!(r.ops_submitted, 5 * 9, "1 AllReduce + 8 P2Ps per burst");
+    assert_eq!(r.ops_completed, r.ops_submitted);
+}
+
+/// Flap accounting: every injected flap causes exactly one failover, and
+/// (MTTR + warm-up < period) exactly one failback before the burst ends.
+#[test]
+fn every_flap_fails_over_and_back() {
+    for case in 0..CASES {
+        let mut cfg = Config::soak_defaults();
+        cfg.seed = 0xF1A9 + case;
+        let mut h = SoakHarness::with_params(cfg, params(5, 1, 0)); // flap-only
+        while !h.done() {
+            h.run_burst();
+        }
+        let r = h.report();
+        assert!(r.flaps_injected >= 1, "case {case}: schedule produced no flaps");
+        assert_eq!(r.degrades_injected, 0);
+        assert_eq!(r.failovers, r.flaps_injected, "case {case}");
+        assert_eq!(r.failbacks, r.flaps_injected, "case {case}");
+    }
+}
+
+/// Degrade grading: with MTTR ≫ the monitor's detection window, the
+/// verdict confusion matrix is perfect — precision and recall both 1.0,
+/// and every injected degrade is detected before it heals.
+#[test]
+fn monitor_grading_is_perfect_on_degrades() {
+    for case in 0..CASES {
+        let mut cfg = Config::soak_defaults();
+        cfg.seed = 0xDE9 + case * 31;
+        let mut h = SoakHarness::with_params(cfg, params(5, 0, 1)); // degrade-only
+        while !h.done() {
+            h.run_burst();
+        }
+        let r = h.report();
+        assert!(r.degrades_injected >= 1, "case {case}: schedule produced no degrades");
+        assert_eq!(r.flaps_injected, 0);
+        assert_eq!(r.precision(), 1.0, "case {case}: fp={}", r.fp);
+        assert_eq!(r.recall(), 1.0, "case {case}: fn={}", r.fn_);
+        assert_eq!(r.degrades_detected, r.degrades_injected, "case {case}");
+        assert!(r.tp >= r.degrades_injected, "≥1 flagged (port, burst) cell per degrade");
+        assert!(r.tn > 0, "fault-free cells must grade as true negatives");
+    }
+}
+
+/// Goodput conservation: the harness' per-op accumulation equals the sum
+/// of the simulator's own per-channel roll-ups, and wire bytes (which
+/// include breakpoint retransmissions) are never below goodput.
+#[test]
+fn goodput_matches_chan_rollups() {
+    let mut h = SoakHarness::with_params(Config::soak_defaults(), params(4, 1, 1));
+    while !h.done() {
+        h.run_burst();
+    }
+    let r = h.report();
+    assert!(r.goodput_bytes > 0);
+    assert_eq!(r.goodput_bytes, goodput_rollup(&h.sim));
+    assert!(r.wire_bytes >= r.goodput_bytes);
+}
+
+/// Monitor memory stays O(window capacity) across a soak — the bounded
+/// aggregates never grow with simulated time (satellite: bounded
+/// WindowEstimator / Pinpointer regression at soak scale).
+#[test]
+fn monitor_memory_is_bounded_across_soak() {
+    let measure = |bursts: u64| {
+        let mut h = SoakHarness::with_params(Config::soak_defaults(), params(bursts, 0, 1));
+        while !h.done() {
+            h.run_burst();
+        }
+        let mon = h.sim.monitor.as_ref().unwrap();
+        let samples: u64 = mon.active_ports().iter().map(|&p| mon.samples_total(p)).sum();
+        (mon.memory_bytes(), samples)
+    };
+    // By 6 bursts every capped tail has saturated (≈15 samples per graded
+    // port per burst vs a 64-entry cap) and the pinpointer trail is bounded
+    // by its 2-period time horizon either way — so doubling the simulated
+    // time from there may only add roll-up buckets (one per 2 bursts per
+    // port), a sliver of the total.
+    let (short_mem, short_samples) = measure(6);
+    let (long_mem, long_samples) = measure(12);
+    assert!(long_samples > short_samples * 3 / 2, "long soak must process more samples");
+    assert!(
+        long_mem <= short_mem + short_mem / 2,
+        "monitor memory grew with soak length past the caps: {short_mem} -> {long_mem} bytes \
+         ({short_samples} -> {long_samples} samples)"
+    );
+}
