@@ -550,6 +550,10 @@ pub struct ClusterSim {
     /// one per channel-transfer (Table 1's 2-SM inter-host default is per
     /// operation). (op, gpu) → (sms held, live transfer refcount).
     op_sms: HashMap<(usize, usize), (u32, u32)>,
+    /// Incidents in the sink already carrying their live-transfer view
+    /// (see [`ClusterSim::enrich_new_incidents`]). Pure trace-side state:
+    /// excluded from checkpoints like everything else behind `tracer`.
+    incidents_enriched: usize,
 }
 
 /// Per-GPU execution resources.
@@ -623,6 +627,7 @@ impl ClusterSim {
             rng: Rng::new(seed),
             tracer,
             op_sms: HashMap::new(),
+            incidents_enriched: 0,
         }
     }
 
@@ -659,11 +664,32 @@ impl ClusterSim {
                 let d_port = self.topo.primary_port(dst_gpu);
                 let p_qp = self.rdma.create_qp(&self.topo.fabric, p_port, d_port);
                 self.qp_conn.insert(p_qp, id);
+                // Static conn → QP → port bindings in the ring: the RCA
+                // causal graph joins entities through these without
+                // consulting live simulator state.
+                self.tracer.record(
+                    self.engine.now(),
+                    TraceEvent::ConnBound {
+                        conn: id.0,
+                        qp: p_qp.0,
+                        port: self.topo.fabric.port_ordinal(p_port),
+                        backup: false,
+                    },
+                );
                 let (b_qp, b_port) = if self.cfg.vccl.fault_tolerance {
                     let bp = self.topo.backup_port(eff_src_gpu);
                     let bd = self.topo.backup_port(dst_gpu);
                     let q = self.rdma.create_qp(&self.topo.fabric, bp, bd);
                     self.qp_conn.insert(q, id);
+                    self.tracer.record(
+                        self.engine.now(),
+                        TraceEvent::ConnBound {
+                            conn: id.0,
+                            qp: q.0,
+                            port: self.topo.fabric.port_ordinal(bp),
+                            backup: true,
+                        },
+                    );
                     (Some(q), Some(bp))
                 } else {
                     (None, None)
@@ -1139,12 +1165,15 @@ impl ClusterSim {
 
         // --- VCCL failover ---
         // 1. Migrate pointers to the breakpoint (Fig 8). The traced variant
-        //    also freezes a `failover-conn<N>` incident snapshot, so the
-        //    PortDown → FlowStalled → QpError chain leading here survives
-        //    ring eviction on long runs.
+        //    also freezes a `failover-conn<N>-port<P>` incident snapshot,
+        //    so the PortDown → FlowStalled → QpError chain leading here
+        //    survives ring eviction on long runs (the port suffix + the
+        //    event's xfer/port payload are what RCA joins on).
         let window_ns = self.cfg.net.retry_window_ns();
+        let error_ordinal = error_port.map(|p| self.topo.fabric.port_ordinal(p));
         let (rolled_back, xfer_seq) = {
             let x = self.xfers.get_mut(xid).expect("current transfer is live");
+            let seq = x.seq;
             let lost = migrate_to_breakpoint_traced(
                 &mut x.send,
                 &mut x.recv,
@@ -1152,6 +1181,8 @@ impl ClusterSim {
                 &self.tracer,
                 now,
                 conn_id.0,
+                seq,
+                error_ordinal,
             );
             x.fifo.error_port = error_port;
             // The transfer rode out one hardware retransmission window
@@ -1343,6 +1374,40 @@ impl ClusterSim {
             Event::DeltaCheck { conn, epoch } => self.on_delta_check(conn, epoch),
             Event::OpStep { op, channel } => self.issue_step(op, channel),
         }
+        // Incident enrichment (§Perf L5 live view): freezes happen deep in
+        // the monitor/fault layers with no slab access, so right after the
+        // event that froze them — same sim time, single-threaded, hence
+        // deterministic — fill in which transfers were still in flight.
+        if self.tracer.enabled() {
+            self.enrich_new_incidents();
+        }
+    }
+
+    /// Fill `live_xfers`/`live_total` on incidents frozen by the event just
+    /// dispatched. `iter_live()` walks ascending slot order, so the listed
+    /// transfers (capped at [`crate::trace::MAX_LIVE_XFERS`]) are stable
+    /// across runs at a seed.
+    fn enrich_new_incidents(&mut self) {
+        let Some(sink) = self.tracer.sink() else { return };
+        if sink.incident_count() == self.incidents_enriched {
+            return;
+        }
+        let live: Vec<crate::trace::LiveXfer> = self
+            .xfers
+            .iter_live()
+            .take(crate::trace::MAX_LIVE_XFERS)
+            .map(|x| crate::trace::LiveXfer {
+                seq: x.seq,
+                op: x.op.0,
+                channel: x.channel,
+                conn: x.conn.0,
+                bytes: x.bytes,
+                chunks_done: x.send.acked,
+                chunks_total: x.chunks_total,
+            })
+            .collect();
+        sink.enrich_incidents(self.xfers.live() as u64, &live);
+        self.incidents_enriched = sink.incident_count();
     }
 
     /// Run until the engine drains or `deadline` passes. Returns the time.

@@ -252,6 +252,35 @@ impl Default for VcclConfig {
     }
 }
 
+/// Root-cause analysis settings (`rca.*`, see `rust/src/rca/`). These
+/// shape the diagnosis (candidate ranking), never the simulation.
+#[derive(Debug, Clone)]
+pub struct RcaConfig {
+    /// Ranked root-cause candidates kept per symptom.
+    pub max_candidates: usize,
+    /// Score weight of causal proximity: `hop_weight / (1 + hops)`.
+    pub hop_weight: f64,
+    /// Score weight of temporal proximity to the fault-window open.
+    pub time_weight: f64,
+    /// Half-weight point of the temporal term, in ms of fault→symptom lag.
+    pub time_decay_ms: f64,
+    /// Slack after a fault window closes during which lagging symptoms
+    /// (retry expiries, trailing verdicts) still attribute to it.
+    pub grace_ms: f64,
+}
+
+impl Default for RcaConfig {
+    fn default() -> Self {
+        RcaConfig {
+            max_candidates: 3,
+            hop_weight: 100.0,
+            time_weight: 50.0,
+            time_decay_ms: 250.0,
+            grace_ms: 100.0,
+        }
+    }
+}
+
 /// Flight-recorder settings (`trace.*`, see `rust/src/trace/`).
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
@@ -319,6 +348,7 @@ pub struct Config {
     pub topo: TopologyConfig,
     pub vccl: VcclConfig,
     pub trace: TraceConfig,
+    pub rca: RcaConfig,
     pub soak: SoakConfig,
     /// RNG seed for all stochastic elements.
     pub seed: u64,
@@ -525,6 +555,11 @@ impl Config {
             "trace.enabled" => self.trace.enabled = pb(val)?,
             "trace.ring_capacity" => self.trace.ring_capacity = p(val)?,
             "trace.snapshot_window_ns" => self.trace.snapshot_window_ns = p(val)?,
+            "rca.max_candidates" => self.rca.max_candidates = p(val)?,
+            "rca.hop_weight" => self.rca.hop_weight = p(val)?,
+            "rca.time_weight" => self.rca.time_weight = p(val)?,
+            "rca.time_decay_ms" => self.rca.time_decay_ms = p(val)?,
+            "rca.grace_ms" => self.rca.grace_ms = p(val)?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -653,5 +688,26 @@ mod tests {
         assert_eq!(c.trace.ring_capacity, 1024);
         assert_eq!(c.trace.snapshot_window_ns, 5_000_000);
         assert!(c.apply_kv_text("trace.bogus = 1").is_err());
+    }
+
+    #[test]
+    fn rca_keys_parse_and_have_sane_defaults() {
+        let mut c = Config::paper_defaults();
+        assert_eq!(c.rca.max_candidates, 3);
+        assert!(c.rca.hop_weight > 0.0 && c.rca.time_weight > 0.0);
+        c.apply_kv_text(
+            "rca.max_candidates = 5\n\
+             rca.hop_weight = 80\n\
+             rca.time_weight = 40\n\
+             rca.time_decay_ms = 500\n\
+             rca.grace_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(c.rca.max_candidates, 5);
+        assert_eq!(c.rca.hop_weight, 80.0);
+        assert_eq!(c.rca.time_weight, 40.0);
+        assert_eq!(c.rca.time_decay_ms, 500.0);
+        assert_eq!(c.rca.grace_ms, 250.0);
+        assert!(c.apply_kv_text("rca.bogus = 1").is_err());
     }
 }

@@ -12,6 +12,7 @@ pub mod bench;
 pub mod experiments;
 pub mod reliability;
 pub mod observability;
+pub mod rca;
 pub mod soak;
 pub mod trace;
 
@@ -26,9 +27,15 @@ use crate::config::Config;
 pub enum Command {
     /// `vccl exp <id> [--set k=v ...]`
     Exp { id: String },
-    /// `vccl trace <id> [--out file]` — run an experiment with the flight
-    /// recorder on; export Chrome trace JSON + incident timeline.
-    Trace { id: String, out: Option<PathBuf> },
+    /// `vccl trace <id> [--out file] [--diff]` — run an experiment with the
+    /// flight recorder on; export Chrome trace JSON + incident timeline.
+    /// `--diff` runs it twice and prints the event-set delta instead (a
+    /// determinism check: expect "identical").
+    Trace { id: String, out: Option<PathBuf>, diff: bool },
+    /// `vccl rca <id> [--symptom s] [--out file]` — run a fault-injection
+    /// scenario, diagnose it from the flight recorder alone, and grade the
+    /// diagnosis against the injected ground truth (see [`rca`]).
+    Rca { id: String, symptom: Option<String>, out: Option<PathBuf> },
     /// `vccl bench [--out-dir d] [--quick]` — emit `BENCH_*.json`.
     Bench { out_dir: PathBuf, quick: bool },
     /// `vccl soak [--sim-days F] [--quick] [--out-dir d] [--resume ckpt]
@@ -55,6 +62,8 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     let mut quick = false;
     let mut resume = None;
     let mut stop_after_ckpts = None;
+    let mut symptom = None;
+    let mut diff = false;
     let mut exp_id = String::new();
     if cmd == "soak" {
         // The soak preset (single channel, tight retry window, dual-port
@@ -63,10 +72,10 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
         cfg = Config::soak_defaults();
         crate::config::apply_env(&mut cfg, |k| std::env::var(k).ok());
     }
-    if cmd == "exp" || cmd == "trace" {
+    if cmd == "exp" || cmd == "trace" || cmd == "rca" {
         exp_id = it
             .next()
-            .ok_or_else(|| anyhow!("usage: vccl {cmd} <id> (try `vccl exp list`)"))?
+            .ok_or_else(|| anyhow!("usage: vccl {cmd} <id> (try `vccl {cmd} list`)"))?
             .clone();
     }
     while let Some(flag) = it.next() {
@@ -94,6 +103,10 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
                 out_dir = PathBuf::from(it.next().ok_or_else(|| anyhow!("--out-dir path"))?);
             }
             "--quick" => quick = true,
+            "--diff" => diff = true,
+            "--symptom" => {
+                symptom = Some(it.next().ok_or_else(|| anyhow!("--symptom needs a value"))?.clone());
+            }
             "--sim-days" => {
                 let d = it.next().ok_or_else(|| anyhow!("--sim-days needs a number"))?;
                 cfg.set_key("soak.sim_days", d)?;
@@ -119,7 +132,8 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
     }
     let command = match cmd {
         "exp" => Command::Exp { id: exp_id },
-        "trace" => Command::Trace { id: exp_id, out },
+        "trace" => Command::Trace { id: exp_id, out, diff },
+        "rca" => Command::Rca { id: exp_id, symptom, out },
         "bench" => Command::Bench { out_dir, quick },
         "soak" => Command::Soak {
             out_dir,
@@ -211,10 +225,17 @@ pub fn help_text() -> String {
         "vccl — VCCL reproduction coordinator\n\n\
          USAGE:\n\
          \x20 vccl exp <id|list|all> [--set k=v]...   regenerate a paper table/figure\n\
-         \x20 vccl trace <id> [--out FILE]             run an experiment with the flight\n\
+         \x20 vccl trace <id> [--out FILE] [--diff]    run an experiment with the flight\n\
          \x20                                          recorder on; write Chrome trace JSON\n\
          \x20                                          (chrome://tracing / Perfetto) and print\n\
-         \x20                                          the incident timeline\n\
+         \x20                                          the incident timeline; --diff runs it\n\
+         \x20                                          twice and prints the event-set delta\n\
+         \x20 vccl rca <id|list|all> [--symptom S] [--out FILE]\n\
+         \x20                                          run a fault-injection scenario\n\
+         \x20                                          (fig15|fig16|fig18|scale64), diagnose it\n\
+         \x20                                          from the flight recorder, grade against\n\
+         \x20                                          the injected ground truth; --out writes\n\
+         \x20                                          BENCH_rca.json\n\
          \x20 vccl bench [--out-dir DIR] [--quick]     run the headline experiments and\n\
          \x20                                          write BENCH_{p2p,failover,monitor,train,simcore}.json\n\
          \x20 vccl soak [--sim-days F] [--quick] [--out-dir DIR]\n\
@@ -264,9 +285,10 @@ mod tests {
     fn parse_trace() {
         let (cmd, _) = parse_args(&argv("trace fig13a")).unwrap();
         match cmd {
-            Command::Trace { id, out } => {
+            Command::Trace { id, out, diff } => {
                 assert_eq!(id, "fig13a");
                 assert!(out.is_none());
+                assert!(!diff);
             }
             other => panic!("{other:?}"),
         }
@@ -274,14 +296,44 @@ mod tests {
             parse_args(&argv("trace fig13a --out /tmp/t.json --set trace.ring_capacity=4096"))
                 .unwrap();
         match cmd {
-            Command::Trace { id, out } => {
+            Command::Trace { id, out, diff } => {
                 assert_eq!(id, "fig13a");
                 assert_eq!(out, Some(std::path::PathBuf::from("/tmp/t.json")));
+                assert!(!diff);
             }
             other => panic!("{other:?}"),
         }
         assert_eq!(cfg.trace.ring_capacity, 4096);
         assert!(parse_args(&argv("trace")).is_err(), "trace needs an id");
+        let (cmd, _) = parse_args(&argv("trace fig13a --diff")).unwrap();
+        assert!(matches!(cmd, Command::Trace { diff: true, .. }));
+    }
+
+    #[test]
+    fn parse_rca() {
+        let (cmd, _) = parse_args(&argv("rca fig15")).unwrap();
+        match cmd {
+            Command::Rca { id, symptom, out } => {
+                assert_eq!(id, "fig15");
+                assert!(symptom.is_none() && out.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        let (cmd, cfg) = parse_args(&argv(
+            "rca all --symptom failover --out /tmp/BENCH_rca.json --set rca.max_candidates=5",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Rca { id, symptom, out } => {
+                assert_eq!(id, "all");
+                assert_eq!(symptom.as_deref(), Some("failover"));
+                assert_eq!(out, Some(std::path::PathBuf::from("/tmp/BENCH_rca.json")));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(cfg.rca.max_candidates, 5);
+        assert!(parse_args(&argv("rca")).is_err(), "rca needs an id");
+        assert!(parse_args(&argv("rca fig15 --symptom")).is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 
 use crate::config::Config;
 use crate::trace::chrome::{self, ChromeMeta};
-use crate::trace::{timeline, Incident, TraceRecord, TraceSink};
+use crate::trace::{diff, timeline, Incident, TraceRecord, TraceSink};
 
 /// Ring floor for traced experiment runs: big enough to hold every event a
 /// full `fig13a` timeline emits (~300 k instants plus one `AllocPass` per
@@ -91,6 +91,35 @@ pub fn run_traced(id: &str, cfg: &Config, out: Option<&Path>) -> Result<TraceRun
     Ok(TraceRun { report, json_path, records, incidents, dropped, summary })
 }
 
+/// `vccl trace <id> --diff` — run the experiment twice, each into a fresh
+/// sink, and report the event-set delta plus the per-component `AllocPass`
+/// histogram comparison. On a deterministic simulator the two runs must be
+/// identical; any divergence (first differing record, per-kind count skew,
+/// allocator churn) is rendered for inspection. Returns the rendered diff
+/// and whether the runs matched.
+pub fn run_traced_diff(id: &str, cfg: &Config) -> Result<(String, bool)> {
+    let run = |label: &str| -> Result<(Vec<TraceRecord>, Vec<Incident>)> {
+        let mut c = cfg.clone();
+        c.trace.enabled = true;
+        c.trace.ring_capacity = c.trace.ring_capacity.max(TRACE_CMD_RING_FLOOR);
+        c.trace.snapshot_window_ns = c
+            .trace
+            .snapshot_window_ns
+            .max(c.net.retry_window_ns().saturating_add(2_000_000_000));
+        let sink = TraceSink::new(c.trace.ring_capacity, c.trace.snapshot_window_ns);
+        c.trace.sink = Some(sink.clone());
+        super::run_experiment(id, &c).with_context(|| format!("{label} run of {id}"))?;
+        Ok((sink.records(), sink.incidents()))
+    };
+    let (ra, ia) = run("first")?;
+    let (rb, ib) = run("second")?;
+    let d = diff::diff_records(&ra, &rb);
+    let mut out = diff::render(&d, "run A", "run B");
+    out.push('\n');
+    out.push_str(&diff::render_incidents(&ia, &ib, "run A", "run B"));
+    Ok((out, d.identical()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +157,15 @@ mod tests {
     #[test]
     fn unknown_experiment_is_a_clean_error() {
         assert!(run_traced("not-an-id", &Config::paper_defaults(), None).is_err());
+        assert!(run_traced_diff("not-an-id", &Config::paper_defaults()).is_err());
+    }
+
+    /// The determinism contract behind `--diff`: two traced runs of the
+    /// same experiment at the same seed are event-for-event identical.
+    #[test]
+    fn traced_diff_of_deterministic_experiment_is_identical() {
+        let (text, identical) = run_traced_diff("table5", &Config::paper_defaults()).unwrap();
+        assert!(identical, "{text}");
+        assert!(text.contains("IDENTICAL"), "{text}");
     }
 }

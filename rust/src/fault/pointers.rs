@@ -88,10 +88,12 @@ pub fn migrate_to_breakpoint(
 
 /// [`migrate_to_breakpoint`] plus flight-recorder instrumentation: records
 /// a `PointerMigrated` event and freezes the trailing window into a
-/// `failover-conn<N>` incident (failovers are exactly the moments the
-/// recorder exists for). The untraced function stays the pure state
-/// transform; call this one from failover paths that hold a
-/// [`crate::trace::Tracer`].
+/// `failover-conn<N>-port<P>` incident (failovers are exactly the moments
+/// the recorder exists for — the port suffix joins the incident to ground
+/// truth, and [`crate::trace::Incident::port`] exposes it structurally).
+/// `xfer` is the migrating transfer's stable creation ordinal. The
+/// untraced function stays the pure state transform; call this one from
+/// failover paths that hold a [`crate::trace::Tracer`].
 pub fn migrate_to_breakpoint_traced(
     send: &mut SendPointers,
     recv: &mut RecvPointers,
@@ -99,17 +101,25 @@ pub fn migrate_to_breakpoint_traced(
     tracer: &crate::trace::Tracer,
     at: crate::sim::SimTime,
     conn: usize,
+    xfer: u64,
+    port: Option<usize>,
 ) -> u64 {
     let rolled_back = migrate_to_breakpoint(send, recv, fifo);
     if tracer.enabled() {
+        let name = match port {
+            Some(p) => format!("failover-conn{conn}-port{p}"),
+            None => format!("failover-conn{conn}"),
+        };
         tracer.record_anomaly(
             at,
             crate::trace::TraceEvent::PointerMigrated {
                 conn,
+                xfer,
+                port,
                 breakpoint: fifo.restart_pos,
                 rolled_back,
             },
-            &format!("failover-conn{conn}"),
+            &name,
         );
     }
     rolled_back
@@ -144,24 +154,47 @@ mod tests {
         let mut s = SendPointers { posted: 20, transmitted: 15, acked: 9 };
         let mut r = RecvPointers { posted: 20, received: 14, done: 10 };
         let mut f = SyncFifo::default();
-        let lost =
-            migrate_to_breakpoint_traced(&mut s, &mut r, &mut f, &tracer, SimTime::ms(5), 3);
+        let lost = migrate_to_breakpoint_traced(
+            &mut s,
+            &mut r,
+            &mut f,
+            &tracer,
+            SimTime::ms(5),
+            3,
+            42,
+            Some(6),
+        );
         assert_eq!(lost, 5);
         let recs = sink.records();
         assert_eq!(recs.len(), 1);
         assert_eq!(
             recs[0].ev,
-            TraceEvent::PointerMigrated { conn: 3, breakpoint: 10, rolled_back: 5 }
+            TraceEvent::PointerMigrated {
+                conn: 3,
+                xfer: 42,
+                port: Some(6),
+                breakpoint: 10,
+                rolled_back: 5
+            }
         );
         let incs = sink.incidents();
         assert_eq!(incs.len(), 1);
-        assert_eq!(incs[0].name, "failover-conn3");
+        assert_eq!(incs[0].name, "failover-conn3-port6");
+        assert_eq!(incs[0].port(), Some(6));
+        assert_eq!(incs[0].conn(), Some(3));
         // The disabled tracer is a pure pass-through.
         let mut s2 = SendPointers { posted: 20, transmitted: 15, acked: 9 };
         let mut r2 = RecvPointers { posted: 20, received: 14, done: 10 };
         let mut f2 = SyncFifo::default();
         let lost2 = migrate_to_breakpoint_traced(
-            &mut s2, &mut r2, &mut f2, &Tracer::disabled(), SimTime::ms(5), 3,
+            &mut s2,
+            &mut r2,
+            &mut f2,
+            &Tracer::disabled(),
+            SimTime::ms(5),
+            3,
+            42,
+            None,
         );
         assert_eq!(lost2, 5);
         assert_eq!((s2, r2), (s, r));

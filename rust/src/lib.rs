@@ -32,6 +32,9 @@
 //!   state migration, breakpoint retransmission, failback.
 //! - [`monitor`] — window-based O(μs) network monitor (§3.4) and the
 //!   dual-threshold straggler pinpointer.
+//! - [`rca`] — causal root-cause engine over the flight recorder: typed
+//!   dependency graph, backward walk from symptoms to fault windows, and
+//!   ground-truth-scored diagnosis (`vccl rca <id>`).
 //! - [`pipeline`] — 1F1B pipeline-parallel schedule and the training
 //!   iteration model used for the throughput experiments (Fig 11, 13b, 14).
 //! - [`metrics`] — counters/gauges, report tables, and the `BENCH_*.json`
@@ -53,6 +56,7 @@ pub mod gpu;
 pub mod ccl;
 pub mod fault;
 pub mod monitor;
+pub mod rca;
 pub mod pipeline;
 pub mod metrics;
 pub mod runtime;

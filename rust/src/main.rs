@@ -21,17 +21,43 @@ fn main() {
             Ok(())
         }
         Command::Exp { id } => coordinator::run_experiment(&id, &cfg).map(|r| println!("{r}")),
-        Command::Trace { id, out } => {
-            coordinator::trace::run_traced(&id, &cfg, out.as_deref()).map(|run| {
-                println!("{}", run.report);
-                println!("{}", run.summary);
-                println!(
-                    "trace: {} event(s) ({} dropped from the ring), {} incident(s) -> {}",
-                    run.records.len(),
-                    run.dropped,
-                    run.incidents.len(),
-                    run.json_path.display()
-                );
+        Command::Trace { id, out, diff } => {
+            if diff {
+                coordinator::trace::run_traced_diff(&id, &cfg).and_then(|(text, identical)| {
+                    println!("{text}");
+                    if identical {
+                        Ok(())
+                    } else {
+                        Err(anyhow::anyhow!("trace diff: runs of {id} diverged"))
+                    }
+                })
+            } else {
+                coordinator::trace::run_traced(&id, &cfg, out.as_deref()).map(|run| {
+                    println!("{}", run.report);
+                    println!("{}", run.summary);
+                    println!(
+                        "trace: {} event(s) ({} dropped from the ring), {} incident(s) -> {}",
+                        run.records.len(),
+                        run.dropped,
+                        run.incidents.len(),
+                        run.json_path.display()
+                    );
+                })
+            }
+        }
+        Command::Rca { id, symptom, out } => {
+            coordinator::rca::run_rca(&id, &cfg, symptom.as_deref()).and_then(|(text, bench)| {
+                println!("{text}");
+                if let Some(path) = out {
+                    if let Some(dir) = path.parent() {
+                        if !dir.as_os_str().is_empty() {
+                            std::fs::create_dir_all(dir)?;
+                        }
+                    }
+                    std::fs::write(&path, bench.to_json())?;
+                    println!("wrote {}", path.display());
+                }
+                Ok(())
             })
         }
         Command::Bench { out_dir, quick } => {

@@ -372,7 +372,22 @@ impl FlowNet {
         capacity_bpns: f64,
         now: SimTime,
     ) -> Vec<FlowTimer> {
-        self.links[link.0].capacity_bpns = capacity_bpns.max(0.0);
+        let was = self.links[link.0].capacity_bpns;
+        let new = capacity_bpns.max(0.0);
+        self.links[link.0].capacity_bpns = new;
+        // A runtime capacity change is a fault-injection / degradation
+        // action — rare and causally load-bearing, so it goes in the ring
+        // (the RCA layer opens a degrade window from `gbps < was_gbps`).
+        if self.tracer.enabled() && (new - was).abs() > f64::EPSILON {
+            self.tracer.record(
+                now,
+                TraceEvent::LinkCapacity {
+                    link: link.0,
+                    gbps: new * 8.0,
+                    was_gbps: was * 8.0,
+                },
+            );
+        }
         self.reallocate(now, &[link])
     }
 
@@ -668,7 +683,12 @@ impl FlowNet {
             // otherwise dominate the ring.
             if self.tracer.enabled() {
                 if old > 0.0 && r <= 0.0 && f.remaining > 0.5 {
-                    self.tracer.record(now, TraceEvent::FlowStalled { flow: id.0 });
+                    // Name the culprit: the first down link on the flow's
+                    // path (None for a pure-contention stall). The RCA
+                    // graph derives its Flow→Link→Port edges from this.
+                    let link =
+                        f.path.links.iter().find(|l| !self.links[l.0].up).map(|l| l.0);
+                    self.tracer.record(now, TraceEvent::FlowStalled { flow: id.0, link });
                 } else if old <= 0.0 && r > 0.0 && f.was_stalled {
                     self.tracer
                         .record(now, TraceEvent::FlowResumed { flow: id.0, scope: "flow" });

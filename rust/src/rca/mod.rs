@@ -1,0 +1,1091 @@
+//! Causal root-cause analysis over the flight recorder (§3.4, `vccl rca`).
+//!
+//! The monitor answers *"is something wrong on this port?"*; the recorder
+//! answers *"what happened around the anomaly?"*. This module closes the
+//! loop and answers *"why did this symptom happen?"* — Mycroft-style
+//! causal diagnosis, but over the deterministic event stream the simulator
+//! already records, so every verdict is replayable bit-for-bit.
+//!
+//! The pipeline is three pure stages over `&[TraceRecord]`:
+//!
+//! 1. **Graph build** ([`build`]): one pass over the ring derives a typed
+//!    dependency graph. Nodes are the stable recorder ids (port ordinals,
+//!    QP ids, flow ids, transfer creation ordinals, conn ids, op ids);
+//!    edges point *effect → cause* and come from event semantics, never
+//!    from live simulator state:
+//!
+//!    | event                        | edges derived                          |
+//!    |------------------------------|----------------------------------------|
+//!    | `ConnBound`                  | Conn→Qp, Qp→Port                       |
+//!    | `WrPosted`/`WrCompleted`/`QpReset` | Qp→Port                          |
+//!    | `QpRetryArmed`/`QpError`     | Qp→Port (+ symptom)                    |
+//!    | `FlowStalled { link: Some }` | Flow→Link, Link→Port (NIC uplinks)     |
+//!    | `PointerMigrated`            | Xfer→Conn, Conn→Port (+ symptom)       |
+//!    | `OpSubmitted` w/o `OpFinished` | Op→each in-interval symptom entity   |
+//!
+//!    The same pass opens **fault windows** — `PortDown`..`PortUp` and
+//!    `LinkCapacity` degrade..restore pairs — and collects **symptoms**
+//!    (stalls, armed/expired retry windows, failovers, non-healthy monitor
+//!    verdicts, ops unfinished at trace end), folded by (kind, entity) so
+//!    the first occurrence carries the time-to-attribution clock.
+//!
+//! 2. **Backward walk** ([`CausalGraph::walk`]): BFS from the symptom node
+//!    along effect→cause edges. Every reached node with a fault window
+//!    active at symptom time is a candidate root cause, scored by hop
+//!    distance and fault-to-symptom delay. With no fault evidence in
+//!    reach, the nearest infrastructure node is reported *unattributed* —
+//!    rendered for the operator, excluded from grading.
+//!
+//! 3. **Grading** ([`grade`]): scenario runners know the injected faults
+//!    (ground truth), so precision / recall / time-to-attribution are
+//!    computed per scenario and asserted in tests and CI.
+//!
+//! Everything is deterministic: `BTreeMap` adjacency, first-occurrence
+//! symptom order, and rational score arithmetic with a total tie-break on
+//! node identity. Same ring ⇒ byte-identical report.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt::Write as _;
+
+use crate::config::{Config, RcaConfig};
+use crate::metrics::Table;
+use crate::sim::SimTime;
+use crate::trace::{TraceEvent, TraceRecord};
+
+/// The slice of static topology the graph needs: which links are NIC
+/// uplinks, and which port each belongs to. Mirrors the fabric layout
+/// contract (NIC tx/rx pairs interleaved at the front of the link table;
+/// trunk links after), so it can be derived from config alone and applied
+/// to a recorded trace long after the simulator is gone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RcaTopo {
+    /// Links `0..nic_links` are NIC uplinks; link `l` serves port `l / 2`.
+    pub nic_links: usize,
+}
+
+impl RcaTopo {
+    pub fn from_config(cfg: &Config) -> Self {
+        let ports_per_nic = if cfg.topo.dual_port_nics { 2 } else { 1 };
+        RcaTopo {
+            nic_links: cfg.topo.num_nodes * cfg.topo.nics_per_node * ports_per_nic * 2,
+        }
+    }
+
+    /// The port ordinal a NIC uplink belongs to; `None` for trunk links.
+    pub fn link_port(&self, link: usize) -> Option<usize> {
+        (link < self.nic_links).then_some(link / 2)
+    }
+}
+
+/// A vertex in the causal graph, keyed by the recorder's stable ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Node {
+    Port(usize),
+    Link(usize),
+    Qp(u64),
+    Conn(usize),
+    Flow(u64),
+    Xfer(u64),
+    Op(usize),
+}
+
+impl Node {
+    pub fn render(&self) -> String {
+        match self {
+            Node::Port(p) => format!("port {p}"),
+            Node::Link(l) => format!("link {l}"),
+            Node::Qp(q) => format!("qp {q}"),
+            Node::Conn(c) => format!("conn {c}"),
+            Node::Flow(f) => format!("flow {f}"),
+            Node::Xfer(x) => format!("xfer {x}"),
+            Node::Op(o) => format!("op {o}"),
+        }
+    }
+}
+
+/// Why an effect→cause edge exists (one per deriving event semantic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EdgeKind {
+    /// QP → the port its work requests cross.
+    QpOnPort,
+    /// Conn → a QP it bound at setup (`ConnBound`).
+    ConnOwnsQp,
+    /// Conn → the port a failover identified as failed (`PointerMigrated`).
+    ConnOnPort,
+    /// Flow → the first down link on its path at stall time.
+    FlowOnLink,
+    /// NIC uplink → its port (static layout, via [`RcaTopo`]).
+    LinkOnPort,
+    /// Xfer → the connection whose pointers migrated.
+    XferOnConn,
+    /// Op → an entity symptomatic inside the op's open interval.
+    OpOverlap,
+}
+
+impl EdgeKind {
+    /// Human phrasing for chain rendering: "<effect> <describe> <cause>".
+    pub fn describe(&self) -> &'static str {
+        match self {
+            EdgeKind::QpOnPort => "posts on",
+            EdgeKind::ConnOwnsQp => "bound qp",
+            EdgeKind::ConnOnPort => "failed over from",
+            EdgeKind::FlowOnLink => "stalled on",
+            EdgeKind::LinkOnPort => "uplink of",
+            EdgeKind::XferOnConn => "carried by",
+            EdgeKind::OpOverlap => "overlaps",
+        }
+    }
+}
+
+/// Observable badness the walk starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SymptomKind {
+    FlowStall,
+    QpRetry,
+    QpError,
+    Failover,
+    Verdict,
+    OpDeadlineMiss,
+}
+
+impl SymptomKind {
+    /// Stable name; `--symptom <substr>` filters against it.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SymptomKind::FlowStall => "stall",
+            SymptomKind::QpRetry => "qp-retry",
+            SymptomKind::QpError => "qp-error",
+            SymptomKind::Failover => "failover",
+            SymptomKind::Verdict => "verdict",
+            SymptomKind::OpDeadlineMiss => "op-deadline",
+        }
+    }
+}
+
+/// One folded symptom: first occurrence of (kind, entity), with the number
+/// of repeats. The first-occurrence time is what time-to-attribution is
+/// measured from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Symptom {
+    pub kind: SymptomKind,
+    pub node: Node,
+    pub at: SimTime,
+    pub count: u64,
+    pub detail: String,
+}
+
+/// An interval during which a piece of infrastructure was observably at
+/// fault: `PortDown`..`PortUp`, or a `LinkCapacity` degrade..restore pair.
+/// NIC-uplink degrades hang off the *port* node (where the symptom walks
+/// converge); trunk degrades stay on the link node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultWindow {
+    pub node: Node,
+    pub kind: &'static str,
+    pub from: SimTime,
+    pub until: Option<SimTime>,
+}
+
+impl FaultWindow {
+    /// Active at `t`, with `grace_ns` of slack after close so symptoms
+    /// that lag the recovery (retry expiries, trailing verdicts) still
+    /// attribute to the fault that caused them.
+    fn active_at(&self, t: SimTime, grace_ns: u64) -> bool {
+        self.from <= t && self.until.map_or(true, |u| t.as_ns() <= u.as_ns() + grace_ns)
+    }
+}
+
+/// The typed dependency graph plus everything the walk needs.
+#[derive(Debug, Clone)]
+pub struct CausalGraph {
+    pub topo: RcaTopo,
+    /// effect → (cause, kind); `Vec` deduped, insertion-ordered.
+    edges: BTreeMap<Node, Vec<(Node, EdgeKind)>>,
+    edge_count: usize,
+    pub symptoms: Vec<Symptom>,
+    pub faults: Vec<FaultWindow>,
+    /// Timestamp of the last record — the "now" for deadline-miss symptoms.
+    pub end: SimTime,
+}
+
+/// One pass over the ring: derive edges, fault windows and symptoms.
+pub fn build(records: &[TraceRecord], topo: RcaTopo) -> CausalGraph {
+    let mut g = CausalGraph {
+        topo,
+        edges: BTreeMap::new(),
+        edge_count: 0,
+        symptoms: Vec::new(),
+        faults: Vec::new(),
+        end: SimTime::ZERO,
+    };
+    let mut seen: BTreeMap<(SymptomKind, Node), usize> = BTreeMap::new();
+    let mut open_ops: BTreeMap<usize, (SimTime, &'static str, u64)> = BTreeMap::new();
+    for r in records {
+        if r.at > g.end {
+            g.end = r.at;
+        }
+        match r.ev {
+            TraceEvent::ConnBound { conn, qp, port, .. } => {
+                g.add_edge(Node::Conn(conn), Node::Qp(qp), EdgeKind::ConnOwnsQp);
+                g.add_edge(Node::Qp(qp), Node::Port(port), EdgeKind::QpOnPort);
+            }
+            TraceEvent::WrPosted { qp, port, .. }
+            | TraceEvent::WrCompleted { qp, port, .. }
+            | TraceEvent::QpReset { qp, port, .. } => {
+                g.add_edge(Node::Qp(qp), Node::Port(port), EdgeKind::QpOnPort);
+            }
+            TraceEvent::QpRetryArmed { qp, port, .. } => {
+                g.add_edge(Node::Qp(qp), Node::Port(port), EdgeKind::QpOnPort);
+                g.symptom(
+                    &mut seen,
+                    SymptomKind::QpRetry,
+                    Node::Qp(qp),
+                    r.at,
+                    format!("retry window armed on port {port}"),
+                );
+            }
+            TraceEvent::QpError { qp, port } => {
+                g.add_edge(Node::Qp(qp), Node::Port(port), EdgeKind::QpOnPort);
+                g.symptom(
+                    &mut seen,
+                    SymptomKind::QpError,
+                    Node::Qp(qp),
+                    r.at,
+                    format!("retry window expired on port {port}"),
+                );
+            }
+            TraceEvent::FlowStalled { flow, link } => {
+                if let Some(l) = link {
+                    g.add_edge(Node::Flow(flow), Node::Link(l), EdgeKind::FlowOnLink);
+                    if let Some(p) = topo.link_port(l) {
+                        g.add_edge(Node::Link(l), Node::Port(p), EdgeKind::LinkOnPort);
+                    }
+                }
+                let detail = match link {
+                    Some(l) => format!("rate -> 0 (link {l} down)"),
+                    None => "rate -> 0 (contention)".to_string(),
+                };
+                g.symptom(&mut seen, SymptomKind::FlowStall, Node::Flow(flow), r.at, detail);
+            }
+            TraceEvent::PointerMigrated { conn, xfer, port, rolled_back, .. } => {
+                g.add_edge(Node::Xfer(xfer), Node::Conn(conn), EdgeKind::XferOnConn);
+                if let Some(p) = port {
+                    g.add_edge(Node::Conn(conn), Node::Port(p), EdgeKind::ConnOnPort);
+                }
+                g.symptom(
+                    &mut seen,
+                    SymptomKind::Failover,
+                    Node::Conn(conn),
+                    r.at,
+                    format!("xfer {xfer}: {rolled_back} chunk(s) rolled back"),
+                );
+            }
+            TraceEvent::MonitorVerdict { port, verdict, gbps } => {
+                // Only non-healthy verdicts are ever recorded.
+                g.symptom(
+                    &mut seen,
+                    SymptomKind::Verdict,
+                    Node::Port(port),
+                    r.at,
+                    format!("{verdict} at {gbps:.1} Gbps"),
+                );
+            }
+            TraceEvent::PortDown { port } => {
+                g.open_fault(Node::Port(port), "port-down", r.at);
+            }
+            TraceEvent::PortUp { port } => {
+                g.close_fault(Node::Port(port), r.at);
+            }
+            TraceEvent::LinkCapacity { link, gbps, was_gbps } => {
+                let node = topo.link_port(link).map_or(Node::Link(link), Node::Port);
+                if gbps < was_gbps {
+                    g.open_fault(node, "degraded", r.at);
+                } else {
+                    g.close_fault(node, r.at);
+                }
+            }
+            TraceEvent::OpSubmitted { op, kind, bytes } => {
+                open_ops.insert(op, (r.at, kind, bytes));
+            }
+            TraceEvent::OpFinished { op, .. } => {
+                open_ops.remove(&op);
+            }
+            _ => {}
+        }
+    }
+    // Ops still open when the trace ends are hung. Each becomes a symptom
+    // with temporal edges to every entity that showed a symptom inside the
+    // op's interval — the bridge from "op 3 never finished" down to the
+    // stalled flows / errored QPs that explain it.
+    for (op, (at, kind, bytes)) in open_ops {
+        let targets: Vec<Node> = g
+            .symptoms
+            .iter()
+            .filter(|s| s.at >= at && s.node != Node::Op(op))
+            .map(|s| s.node)
+            .collect();
+        for n in targets {
+            g.add_edge(Node::Op(op), n, EdgeKind::OpOverlap);
+        }
+        let end = g.end;
+        g.symptom(
+            &mut seen,
+            SymptomKind::OpDeadlineMiss,
+            Node::Op(op),
+            end,
+            format!("{kind} ({bytes} B) unfinished at trace end"),
+        );
+    }
+    g
+}
+
+/// A ranked root-cause candidate for one symptom.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankedCause {
+    pub node: Node,
+    /// The attributed port ordinal (direct for `Port` nodes, via the NIC
+    /// uplink layout for `Link` nodes). Grading keys on this.
+    pub port: Option<usize>,
+    pub hops: usize,
+    /// Fault-window kind, or `"unattributed"` for the fallback candidate.
+    pub kind: &'static str,
+    pub fault_at: SimTime,
+    /// Backed by a fault window active at symptom time. Only confident
+    /// causes are graded; fallbacks are rendered for the operator only.
+    pub confident: bool,
+    pub score: f64,
+    /// Walk path, symptom-exclusive, cause-inclusive: each entry is the
+    /// node stepped *to* and the edge kind that justified the step.
+    pub path: Vec<(Node, EdgeKind)>,
+}
+
+/// One symptom with its ranked causes (best first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attribution {
+    pub symptom: Symptom,
+    pub causes: Vec<RankedCause>,
+}
+
+impl Attribution {
+    /// The port the top confident cause names — what grading counts.
+    pub fn attributed_port(&self) -> Option<usize> {
+        self.causes.iter().find(|c| c.confident).and_then(|c| c.port)
+    }
+}
+
+impl CausalGraph {
+    fn add_edge(&mut self, effect: Node, cause: Node, kind: EdgeKind) {
+        let v = self.edges.entry(effect).or_default();
+        if !v.contains(&(cause, kind)) {
+            v.push((cause, kind));
+            self.edge_count += 1;
+        }
+    }
+
+    fn symptom(
+        &mut self,
+        seen: &mut BTreeMap<(SymptomKind, Node), usize>,
+        kind: SymptomKind,
+        node: Node,
+        at: SimTime,
+        detail: String,
+    ) {
+        match seen.get(&(kind, node)) {
+            Some(&i) => self.symptoms[i].count += 1,
+            None => {
+                seen.insert((kind, node), self.symptoms.len());
+                self.symptoms.push(Symptom { kind, node, at, count: 1, detail });
+            }
+        }
+    }
+
+    fn open_fault(&mut self, node: Node, kind: &'static str, at: SimTime) {
+        // Re-opening an already-open window folds (repeated degrades).
+        if self.faults.iter().any(|f| f.node == node && f.until.is_none()) {
+            return;
+        }
+        self.faults.push(FaultWindow { node, kind, from: at, until: None });
+    }
+
+    fn close_fault(&mut self, node: Node, at: SimTime) {
+        if let Some(f) =
+            self.faults.iter_mut().rev().find(|f| f.node == node && f.until.is_none())
+        {
+            f.until = Some(at);
+        }
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edge_count
+    }
+
+    pub fn node_count(&self) -> usize {
+        let mut set: BTreeSet<Node> = BTreeSet::new();
+        for (n, v) in &self.edges {
+            set.insert(*n);
+            for (c, _) in v {
+                set.insert(*c);
+            }
+        }
+        for s in &self.symptoms {
+            set.insert(s.node);
+        }
+        for f in &self.faults {
+            set.insert(f.node);
+        }
+        set.len()
+    }
+
+    /// Backward BFS from `symptom` along effect→cause edges; rank every
+    /// fault-backed node reached. Deterministic: `BTreeMap` adjacency is
+    /// insertion-ordered per node, scores are rational, ties break on node
+    /// identity.
+    pub fn walk(&self, symptom: &Symptom, cfg: &RcaConfig) -> Vec<RankedCause> {
+        let grace_ns = (cfg.grace_ms * 1e6) as u64;
+        let mut dist: BTreeMap<Node, usize> = BTreeMap::new();
+        let mut parent: BTreeMap<Node, (Node, EdgeKind)> = BTreeMap::new();
+        let mut queue: VecDeque<Node> = VecDeque::new();
+        dist.insert(symptom.node, 0);
+        queue.push_back(symptom.node);
+        let mut causes: Vec<RankedCause> = Vec::new();
+        while let Some(n) = queue.pop_front() {
+            let hops = dist[&n];
+            for f in &self.faults {
+                if f.node == n && f.active_at(symptom.at, grace_ns) {
+                    let dt_ms =
+                        symptom.at.as_ns().saturating_sub(f.from.as_ns()) as f64 / 1e6;
+                    let score = cfg.hop_weight / (1.0 + hops as f64)
+                        + cfg.time_weight / (1.0 + dt_ms / cfg.time_decay_ms);
+                    causes.push(RankedCause {
+                        node: n,
+                        port: self.port_of(n),
+                        hops,
+                        kind: f.kind,
+                        fault_at: f.from,
+                        confident: true,
+                        score,
+                        path: Self::path_to(symptom.node, n, &parent),
+                    });
+                }
+            }
+            if let Some(adj) = self.edges.get(&n) {
+                for &(c, k) in adj {
+                    if let std::collections::btree_map::Entry::Vacant(e) = dist.entry(c) {
+                        e.insert(hops + 1);
+                        parent.insert(c, (n, k));
+                        queue.push_back(c);
+                    }
+                }
+            }
+        }
+        if causes.is_empty() {
+            // No fault evidence in reach: fall back to the nearest
+            // infrastructure node so the operator still gets a pointer.
+            let nearest = dist
+                .iter()
+                .filter(|(n, _)| matches!(n, Node::Port(_) | Node::Link(_)))
+                .map(|(n, h)| (*h, *n))
+                .min();
+            if let Some((hops, n)) = nearest {
+                causes.push(RankedCause {
+                    node: n,
+                    port: self.port_of(n),
+                    hops,
+                    kind: "unattributed",
+                    fault_at: symptom.at,
+                    confident: false,
+                    score: cfg.hop_weight / (1.0 + hops as f64),
+                    path: Self::path_to(symptom.node, n, &parent),
+                });
+            }
+        }
+        causes.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.node.cmp(&b.node))
+        });
+        let mut kept = BTreeSet::new();
+        causes.retain(|c| kept.insert(c.node));
+        causes.truncate(cfg.max_candidates.max(1));
+        causes
+    }
+
+    fn port_of(&self, n: Node) -> Option<usize> {
+        match n {
+            Node::Port(p) => Some(p),
+            Node::Link(l) => self.topo.link_port(l),
+            _ => None,
+        }
+    }
+
+    fn path_to(
+        from: Node,
+        to: Node,
+        parent: &BTreeMap<Node, (Node, EdgeKind)>,
+    ) -> Vec<(Node, EdgeKind)> {
+        let mut path = Vec::new();
+        let mut cur = to;
+        while cur != from {
+            let Some(&(prev, kind)) = parent.get(&cur) else { break };
+            path.push((cur, kind));
+            cur = prev;
+        }
+        path.reverse();
+        path
+    }
+}
+
+/// The full analysis result for one trace.
+#[derive(Debug, Clone)]
+pub struct RcaReport {
+    /// All symptoms found, pre-filter.
+    pub symptoms_total: usize,
+    pub attributions: Vec<Attribution>,
+    pub nodes: usize,
+    pub edges: usize,
+    pub faults: usize,
+    pub end: SimTime,
+}
+
+/// Walk every symptom (optionally filtered by `--symptom` substring match
+/// on [`SymptomKind::name`]) and rank its causes.
+pub fn analyze(g: &CausalGraph, cfg: &RcaConfig, symptom_filter: Option<&str>) -> RcaReport {
+    let mut attributions = Vec::new();
+    for s in &g.symptoms {
+        if let Some(f) = symptom_filter {
+            if !s.kind.name().contains(f) {
+                continue;
+            }
+        }
+        attributions.push(Attribution { symptom: s.clone(), causes: g.walk(s, cfg) });
+    }
+    RcaReport {
+        symptoms_total: g.symptoms.len(),
+        attributions,
+        nodes: g.node_count(),
+        edges: g.edge_count(),
+        faults: g.faults.len(),
+        end: g.end,
+    }
+}
+
+/// Ground truth: one injected fault the scenario runner knows about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub port: usize,
+    pub at: SimTime,
+}
+
+/// Scenario score: how the report's confident attributions line up with
+/// the injected fault set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grade {
+    /// Distinct injected victim ports.
+    pub injected: usize,
+    /// Attributions with a confident top cause naming a port.
+    pub attributed: usize,
+    /// Of those, how many named an injected port.
+    pub correct: usize,
+    /// Distinct injected ports named by at least one attribution.
+    pub recalled: usize,
+    pub precision: f64,
+    pub recall: f64,
+    /// Per recalled port: earliest (symptom time − latest injection ≤ it),
+    /// i.e. how quickly after the fault a walkable symptom existed.
+    pub tta_ns: Vec<(usize, u64)>,
+}
+
+impl Grade {
+    pub fn mean_tta_ms(&self) -> f64 {
+        if self.tta_ns.is_empty() {
+            return 0.0;
+        }
+        self.tta_ns.iter().map(|(_, d)| *d as f64 / 1e6).sum::<f64>()
+            / self.tta_ns.len() as f64
+    }
+}
+
+/// Score a report against the injected fault set.
+pub fn grade(report: &RcaReport, injected: &[InjectedFault]) -> Grade {
+    let ports: BTreeSet<usize> = injected.iter().map(|f| f.port).collect();
+    let mut attributed = 0usize;
+    let mut correct = 0usize;
+    let mut tta: BTreeMap<usize, u64> = BTreeMap::new();
+    for a in &report.attributions {
+        let Some(p) = a.attributed_port() else { continue };
+        attributed += 1;
+        if ports.contains(&p) {
+            correct += 1;
+            if let Some(f) = injected
+                .iter()
+                .filter(|f| f.port == p && f.at <= a.symptom.at)
+                .max_by_key(|f| f.at.as_ns())
+            {
+                let d = a.symptom.at.as_ns() - f.at.as_ns();
+                tta.entry(p).and_modify(|e| *e = (*e).min(d)).or_insert(d);
+            }
+        }
+    }
+    Grade {
+        injected: ports.len(),
+        attributed,
+        correct,
+        recalled: tta.len(),
+        precision: if attributed == 0 { 1.0 } else { correct as f64 / attributed as f64 },
+        recall: if ports.is_empty() { 1.0 } else { tta.len() as f64 / ports.len() as f64 },
+        tta_ns: tta.into_iter().collect(),
+    }
+}
+
+/// How many causal chains [`render_report`] prints in full.
+const MAX_CHAINS: usize = 3;
+
+/// Fixed-width report body (the `vccl rca` stdout), timeline-style.
+pub fn render_report(r: &RcaReport, title: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "rca — {title}: {} symptom(s) ({} shown), {} node(s), {} edge(s), \
+         {} fault window(s), trace end {:.3} ms",
+        r.symptoms_total,
+        r.attributions.len(),
+        r.nodes,
+        r.edges,
+        r.faults,
+        r.end.as_ms_f64(),
+    );
+    out.push('\n');
+    if r.attributions.is_empty() {
+        let _ = writeln!(out, "(no symptoms — nothing to diagnose)");
+        return out;
+    }
+    let mut t = Table::new(vec![
+        "symptom",
+        "entity",
+        "t (ms)",
+        "n",
+        "root cause",
+        "kind",
+        "hops",
+        "score",
+        "fault t (ms)",
+    ]);
+    for a in &r.attributions {
+        let s = &a.symptom;
+        match a.causes.first() {
+            Some(c) => t.row(vec![
+                s.kind.name().to_string(),
+                s.node.render(),
+                format!("{:.3}", s.at.as_ms_f64()),
+                s.count.to_string(),
+                c.node.render(),
+                c.kind.to_string(),
+                c.hops.to_string(),
+                format!("{:.2}", c.score),
+                if c.confident { format!("{:.3}", c.fault_at.as_ms_f64()) } else { "-".to_string() },
+            ]),
+            None => t.row(vec![
+                s.kind.name().to_string(),
+                s.node.render(),
+                format!("{:.3}", s.at.as_ms_f64()),
+                s.count.to_string(),
+                "-".to_string(),
+                "unreachable".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]),
+        };
+    }
+    out.push_str(&t.render());
+    // Full causal chains for the first few confident attributions.
+    let mut shown = 0usize;
+    for a in &r.attributions {
+        let Some(c) = a.causes.first() else { continue };
+        if !c.confident || shown == MAX_CHAINS {
+            continue;
+        }
+        shown += 1;
+        let _ = writeln!(
+            out,
+            "\ncausal chain — {} on {} at {:.3} ms:\n",
+            a.symptom.kind.name(),
+            a.symptom.node.render(),
+            a.symptom.at.as_ms_f64(),
+        );
+        let mut t = Table::new(vec!["hop", "entity", "via", "evidence"]);
+        t.row(vec![
+            "0".to_string(),
+            a.symptom.node.render(),
+            "-".to_string(),
+            a.symptom.detail.clone(),
+        ]);
+        let last = c.path.len();
+        for (i, (node, kind)) in c.path.iter().enumerate() {
+            let evidence = if i + 1 == last {
+                format!("fault window {} open since {:.3} ms", c.kind, c.fault_at.as_ms_f64())
+            } else {
+                String::new()
+            };
+            t.row(vec![
+                (i + 1).to_string(),
+                node.render(),
+                kind.describe().to_string(),
+                evidence,
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Render a grade as a fixed-width block (appended per scenario).
+pub fn render_grade(g: &Grade, scenario: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "\nground truth — {scenario}: {} injected port(s), {} attribution(s), \
+         precision {:.2}, recall {:.2}",
+        g.injected, g.attributed, g.precision, g.recall,
+    );
+    if !g.tta_ns.is_empty() {
+        let mut t = Table::new(vec!["victim port", "time to attribution (ms)"]);
+        for (p, d) in &g.tta_ns {
+            t.row(vec![p.to_string(), format!("{:.3}", *d as f64 / 1e6)]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rcfg() -> RcaConfig {
+        RcaConfig::default()
+    }
+
+    fn topo32() -> RcaTopo {
+        RcaTopo { nic_links: 32 }
+    }
+
+    fn rec(ns: u64, seq: u64, ev: TraceEvent) -> TraceRecord {
+        TraceRecord { at: SimTime::ns(ns), seq, ev }
+    }
+
+    /// The hand-built incident: conn 0 (qp 1 on port 2, backup qp 9 on
+    /// port 3) loses port 2 mid-transfer; the full symptom ladder fires.
+    fn incident_records() -> Vec<TraceRecord> {
+        vec![
+            rec(0, 0, TraceEvent::SimStarted { nodes: 2, ranks: 16 }),
+            rec(
+                100,
+                1,
+                TraceEvent::ConnBound { conn: 0, qp: 1, port: 2, backup: false },
+            ),
+            rec(
+                110,
+                2,
+                TraceEvent::ConnBound { conn: 0, qp: 9, port: 3, backup: true },
+            ),
+            rec(
+                500_000,
+                3,
+                TraceEvent::OpSubmitted { op: 0, kind: "AllReduce", bytes: 1 << 20 },
+            ),
+            rec(1_000_000, 4, TraceEvent::PortDown { port: 2 }),
+            rec(1_100_000, 5, TraceEvent::WrPosted { qp: 1, port: 2, bytes: 4096 }),
+            rec(
+                1_200_000,
+                6,
+                TraceEvent::QpRetryArmed { qp: 1, port: 2, deadline_ns: 50_000_000 },
+            ),
+            // Link 4 is port 2's tx uplink (4 / 2 == 2).
+            rec(1_300_000, 7, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+            rec(50_000_000, 8, TraceEvent::QpError { qp: 1, port: 2 }),
+            rec(
+                50_100_000,
+                9,
+                TraceEvent::PointerMigrated {
+                    conn: 0,
+                    xfer: 7,
+                    port: Some(2),
+                    breakpoint: 10,
+                    rolled_back: 5,
+                },
+            ),
+            rec(
+                55_000_000,
+                10,
+                TraceEvent::MonitorVerdict {
+                    port: 2,
+                    verdict: "network-anomaly",
+                    gbps: 11.0,
+                },
+            ),
+            rec(60_000_000, 11, TraceEvent::PortUp { port: 2 }),
+        ]
+    }
+
+    #[test]
+    fn topo_maps_nic_links_to_ports() {
+        let cfg = Config::paper_defaults(); // 2 nodes x 8 NICs, single-port
+        let t = RcaTopo::from_config(&cfg);
+        assert_eq!(t.nic_links, 32);
+        assert_eq!(t.link_port(0), Some(0));
+        assert_eq!(t.link_port(1), Some(0));
+        assert_eq!(t.link_port(7), Some(3));
+        assert_eq!(t.link_port(31), Some(15));
+        assert_eq!(t.link_port(32), None);
+        let mut cfg = Config::paper_defaults();
+        cfg.topo.dual_port_nics = true;
+        assert_eq!(RcaTopo::from_config(&cfg).nic_links, 64);
+    }
+
+    #[test]
+    fn hand_built_sequence_walks_to_injected_port() {
+        let g = build(&incident_records(), topo32());
+        // One fault window: port 2, [1 ms, 60 ms].
+        assert_eq!(g.faults.len(), 1);
+        assert_eq!(g.faults[0].node, Node::Port(2));
+        assert_eq!(g.faults[0].kind, "port-down");
+        assert_eq!(g.faults[0].until, Some(SimTime::ms(60)));
+        // The full symptom ladder, plus the hung op.
+        let kinds: Vec<SymptomKind> = g.symptoms.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                SymptomKind::QpRetry,
+                SymptomKind::FlowStall,
+                SymptomKind::QpError,
+                SymptomKind::Failover,
+                SymptomKind::Verdict,
+                SymptomKind::OpDeadlineMiss,
+            ]
+        );
+        // Every symptom's top cause is the injected port, confidently.
+        for s in &g.symptoms {
+            let causes = g.walk(s, &rcfg());
+            let top = causes.first().unwrap_or_else(|| panic!("no cause for {s:?}"));
+            assert!(top.confident, "{s:?} -> {top:?}");
+            assert_eq!(top.node, Node::Port(2), "{s:?}");
+            assert_eq!(top.port, Some(2));
+            assert_eq!(top.kind, "port-down");
+        }
+        // Hop distances reflect the graph shape.
+        let hop_of = |kind: SymptomKind| {
+            let s = g.symptoms.iter().find(|s| s.kind == kind).unwrap();
+            g.walk(s, &rcfg())[0].hops
+        };
+        assert_eq!(hop_of(SymptomKind::Verdict), 0); // Port(2) itself
+        assert_eq!(hop_of(SymptomKind::QpError), 1); // Qp -> Port
+        assert_eq!(hop_of(SymptomKind::FlowStall), 2); // Flow -> Link -> Port
+        assert_eq!(hop_of(SymptomKind::Failover), 1); // Conn -> Port (ConnOnPort)
+        // Grade: one injected fault, fully recalled, perfect precision.
+        let report = analyze(&g, &rcfg(), None);
+        let gr = grade(&report, &[InjectedFault { port: 2, at: SimTime::ms(1) }]);
+        assert_eq!(gr.injected, 1);
+        assert_eq!(gr.recalled, 1);
+        assert_eq!(gr.precision, 1.0);
+        assert_eq!(gr.recall, 1.0);
+        // Earliest attributing symptom is the retry arm at 1.2 ms.
+        assert_eq!(gr.tta_ns, vec![(2, 200_000)]);
+    }
+
+    #[test]
+    fn symptoms_fold_by_kind_and_entity() {
+        let recs = vec![
+            rec(10, 0, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+            rec(20, 1, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+            rec(30, 2, TraceEvent::FlowStalled { flow: 6, link: None }),
+        ];
+        let g = build(&recs, topo32());
+        assert_eq!(g.symptoms.len(), 2);
+        assert_eq!(g.symptoms[0].count, 2);
+        assert_eq!(g.symptoms[0].at, SimTime::ns(10));
+        assert_eq!(g.symptoms[1].node, Node::Flow(6));
+    }
+
+    #[test]
+    fn degrade_window_opens_and_closes_from_link_capacity() {
+        let recs = vec![
+            // NIC uplink 4 -> port 2: degrade at 2 ms, restore at 9 ms.
+            rec(
+                2_000_000,
+                0,
+                TraceEvent::LinkCapacity { link: 4, gbps: 50.0, was_gbps: 400.0 },
+            ),
+            rec(
+                5_000_000,
+                1,
+                TraceEvent::MonitorVerdict {
+                    port: 2,
+                    verdict: "network-anomaly",
+                    gbps: 48.0,
+                },
+            ),
+            rec(
+                9_000_000,
+                2,
+                TraceEvent::LinkCapacity { link: 4, gbps: 400.0, was_gbps: 50.0 },
+            ),
+        ];
+        let g = build(&recs, topo32());
+        assert_eq!(g.faults.len(), 1);
+        assert_eq!(g.faults[0].node, Node::Port(2));
+        assert_eq!(g.faults[0].kind, "degraded");
+        assert_eq!(g.faults[0].from, SimTime::ms(2));
+        assert_eq!(g.faults[0].until, Some(SimTime::ms(9)));
+        let causes = g.walk(&g.symptoms[0], &rcfg());
+        assert_eq!(causes[0].node, Node::Port(2));
+        assert_eq!(causes[0].kind, "degraded");
+        assert!(causes[0].confident);
+        // Trunk links keep the window on the link node.
+        let recs = vec![rec(
+            0,
+            0,
+            TraceEvent::LinkCapacity { link: 40, gbps: 50.0, was_gbps: 400.0 },
+        )];
+        let g = build(&recs, topo32());
+        assert_eq!(g.faults[0].node, Node::Link(40));
+    }
+
+    #[test]
+    fn closed_window_past_grace_is_not_a_candidate() {
+        let recs = vec![
+            rec(1_000_000, 0, TraceEvent::PortDown { port: 2 }),
+            rec(2_000_000, 1, TraceEvent::PortUp { port: 2 }),
+            // A verdict 10 s later: far past grace, must not attribute.
+            rec(
+                10_000_000_000,
+                2,
+                TraceEvent::MonitorVerdict {
+                    port: 2,
+                    verdict: "non-network",
+                    gbps: 300.0,
+                },
+            ),
+        ];
+        let g = build(&recs, topo32());
+        let causes = g.walk(&g.symptoms[0], &rcfg());
+        assert_eq!(causes.len(), 1);
+        assert!(!causes[0].confident);
+        assert_eq!(causes[0].kind, "unattributed");
+        let report = analyze(&g, &rcfg(), None);
+        assert_eq!(report.attributions[0].attributed_port(), None);
+        let gr = grade(&report, &[InjectedFault { port: 2, at: SimTime::ms(1) }]);
+        assert_eq!(gr.attributed, 0);
+        assert_eq!(gr.recalled, 0);
+        assert_eq!(gr.precision, 1.0); // vacuous, nothing attributed
+        assert_eq!(gr.recall, 0.0);
+    }
+
+    #[test]
+    fn scoring_prefers_recent_fault_and_breaks_ties_on_node() {
+        // Flow 5 stalled on two different uplinks across its life; both
+        // ports are down, port 2 much longer than port 9.
+        let recs = vec![
+            rec(1_000, 0, TraceEvent::PortDown { port: 2 }),
+            rec(400_000_000, 1, TraceEvent::PortDown { port: 9 }),
+            rec(400_100_000, 2, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+            rec(400_200_000, 3, TraceEvent::FlowStalled { flow: 5, link: Some(18) }),
+        ];
+        let g = build(&recs, topo32());
+        let s = &g.symptoms[0]; // the folded flow-5 stall (first at 400.1 ms)
+        let causes = g.walk(s, &rcfg());
+        assert_eq!(causes.len(), 2);
+        // Same hop count; port 9's fault is 0.1 ms old vs 400 ms: the
+        // fresher fault wins on the time term.
+        assert_eq!(causes[0].node, Node::Port(9));
+        assert_eq!(causes[1].node, Node::Port(2));
+        assert!(causes[0].score > causes[1].score);
+        // Exact tie (same fault time, same hops): node order decides.
+        let recs = vec![
+            rec(1_000, 0, TraceEvent::PortDown { port: 2 }),
+            rec(1_000, 1, TraceEvent::PortDown { port: 9 }),
+            rec(2_000, 2, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+            rec(2_000, 3, TraceEvent::FlowStalled { flow: 5, link: Some(18) }),
+        ];
+        let g = build(&recs, topo32());
+        let causes = g.walk(&g.symptoms[0], &rcfg());
+        assert_eq!(causes[0].node, Node::Port(2));
+        assert_eq!(causes[1].node, Node::Port(9));
+    }
+
+    #[test]
+    fn hung_op_bridges_to_symptomatic_entities() {
+        let recs = vec![
+            rec(0, 0, TraceEvent::OpSubmitted { op: 3, kind: "AllReduce", bytes: 64 }),
+            rec(1_000_000, 1, TraceEvent::PortDown { port: 2 }),
+            rec(1_100_000, 2, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+        ];
+        let g = build(&recs, topo32());
+        let miss = g
+            .symptoms
+            .iter()
+            .find(|s| s.kind == SymptomKind::OpDeadlineMiss)
+            .expect("hung op symptom");
+        assert_eq!(miss.node, Node::Op(3));
+        assert_eq!(miss.at, g.end);
+        let causes = g.walk(miss, &rcfg());
+        assert_eq!(causes[0].node, Node::Port(2));
+        assert!(causes[0].confident);
+        // Op -> Flow (overlap) -> Link -> Port.
+        assert_eq!(causes[0].hops, 3);
+        // A finished op leaves no symptom.
+        let recs = vec![
+            rec(0, 0, TraceEvent::OpSubmitted { op: 3, kind: "AllReduce", bytes: 64 }),
+            rec(5, 1, TraceEvent::OpFinished { op: 3, xfers: 2, bytes: 64 }),
+        ];
+        let g = build(&recs, topo32());
+        assert!(g.symptoms.is_empty());
+    }
+
+    #[test]
+    fn symptom_filter_selects_kinds() {
+        let g = build(&incident_records(), topo32());
+        let r = analyze(&g, &rcfg(), Some("qp"));
+        assert_eq!(r.attributions.len(), 2); // qp-retry, qp-error
+        assert_eq!(r.symptoms_total, 6);
+        let r = analyze(&g, &rcfg(), Some("failover"));
+        assert_eq!(r.attributions.len(), 1);
+        let r = analyze(&g, &rcfg(), Some("nope"));
+        assert!(r.attributions.is_empty());
+    }
+
+    #[test]
+    fn report_renders_deterministically() {
+        let g = build(&incident_records(), topo32());
+        let r = analyze(&g, &rcfg(), None);
+        let a = render_report(&r, "unit");
+        let b = render_report(&r, "unit");
+        assert_eq!(a, b);
+        assert!(a.contains("root cause"), "{a}");
+        assert!(a.contains("port 2"), "{a}");
+        assert!(a.contains("causal chain"), "{a}");
+        assert!(a.contains("fault window port-down open since 1.000 ms"), "{a}");
+        let gr = grade(&r, &[InjectedFault { port: 2, at: SimTime::ms(1) }]);
+        let s = render_grade(&gr, "unit");
+        assert!(s.contains("precision 1.00, recall 1.00"), "{s}");
+        assert!(s.contains("victim port"), "{s}");
+    }
+
+    #[test]
+    fn walk_terminates_on_cyclic_graphs() {
+        // Op overlap edges can point at entities whose own walks reach
+        // back near the op; the visited set must keep BFS finite.
+        let recs = vec![
+            rec(0, 0, TraceEvent::OpSubmitted { op: 0, kind: "AllReduce", bytes: 1 }),
+            rec(10, 1, TraceEvent::ConnBound { conn: 0, qp: 1, port: 2, backup: false }),
+            rec(20, 2, TraceEvent::QpError { qp: 1, port: 2 }),
+            rec(30, 3, TraceEvent::QpError { qp: 1, port: 2 }),
+        ];
+        let g = build(&recs, topo32());
+        for s in &g.symptoms {
+            let _ = g.walk(s, &rcfg()); // must not hang
+        }
+    }
+}

@@ -57,11 +57,13 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         TraceEvent::SimStarted { .. } => (PID_SIM, 0),
         TraceEvent::FlowStarted { flow, .. }
         | TraceEvent::FlowRerated { flow, .. }
-        | TraceEvent::FlowStalled { flow }
+        | TraceEvent::FlowStalled { flow, .. }
         | TraceEvent::FlowFinished { flow }
         | TraceEvent::FlowKilled { flow } => (PID_NET, flow),
         // One counter lane for the whole allocator.
         TraceEvent::AllocPass { .. } => (PID_NET, 0),
+        // Capacity changes live on the link's lane of the net process.
+        TraceEvent::LinkCapacity { link, .. } => (PID_NET, link as u64),
         // A failover resume carries a TRANSFER id, not a net-flow id — it
         // belongs on the fault process next to the pointer migration, not
         // on some unrelated flow's lane.
@@ -75,6 +77,9 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         | TraceEvent::QpReset { port, .. }
         | TraceEvent::PortDown { port }
         | TraceEvent::PortUp { port }
+        // A conn's QP↔port binding renders on the port's lane: reading a
+        // port row shows which QPs it carries.
+        | TraceEvent::ConnBound { port, .. }
         | TraceEvent::MonitorVerdict { port, .. } => (node_of(port), port as u64),
         TraceEvent::PointerMigrated { conn, .. } | TraceEvent::Failback { conn } => {
             (PID_FAULT, conn as u64)
@@ -129,9 +134,18 @@ fn args_json(ev: &TraceEvent) -> String {
         TraceEvent::FlowRerated { flow, gbps } => {
             format!("{{\"flow\": {flow}, \"gbps\": {}}}", json_number(gbps))
         }
-        TraceEvent::FlowStalled { flow }
-        | TraceEvent::FlowFinished { flow }
-        | TraceEvent::FlowKilled { flow } => format!("{{\"flow\": {flow}}}"),
+        TraceEvent::FlowStalled { flow, link } => match link {
+            Some(l) => format!("{{\"flow\": {flow}, \"link\": {l}}}"),
+            None => format!("{{\"flow\": {flow}, \"link\": null}}"),
+        },
+        TraceEvent::FlowFinished { flow } | TraceEvent::FlowKilled { flow } => {
+            format!("{{\"flow\": {flow}}}")
+        }
+        TraceEvent::LinkCapacity { link, gbps, was_gbps } => format!(
+            "{{\"link\": {link}, \"gbps\": {}, \"was_gbps\": {}}}",
+            json_number(gbps),
+            json_number(was_gbps)
+        ),
         TraceEvent::AllocPass { flows, links } => {
             format!("{{\"flows\": {flows}, \"links\": {links}}}")
         }
@@ -155,15 +169,25 @@ fn args_json(ev: &TraceEvent) -> String {
         TraceEvent::PortDown { port } | TraceEvent::PortUp { port } => {
             format!("{{\"port\": {port}}}")
         }
-        TraceEvent::PointerMigrated { conn, breakpoint, rolled_back } => format!(
-            "{{\"conn\": {conn}, \"breakpoint\": {breakpoint}, \"rolled_back\": {rolled_back}}}"
-        ),
+        TraceEvent::PointerMigrated { conn, xfer, port, breakpoint, rolled_back } => {
+            let port = match port {
+                Some(p) => p.to_string(),
+                None => "null".to_string(),
+            };
+            format!(
+                "{{\"conn\": {conn}, \"xfer\": {xfer}, \"port\": {port}, \
+                 \"breakpoint\": {breakpoint}, \"rolled_back\": {rolled_back}}}"
+            )
+        }
         TraceEvent::Failback { conn } => format!("{{\"conn\": {conn}}}"),
         TraceEvent::OpSubmitted { op, kind, bytes } => {
             format!("{{\"op\": {op}, \"kind\": {}, \"bytes\": {bytes}}}", json_string(kind))
         }
         TraceEvent::OpFinished { op, xfers, bytes } => {
             format!("{{\"op\": {op}, \"xfers\": {xfers}, \"bytes\": {bytes}}}")
+        }
+        TraceEvent::ConnBound { conn, qp, port, backup } => {
+            format!("{{\"conn\": {conn}, \"qp\": {qp}, \"port\": {port}, \"backup\": {backup}}}")
         }
         TraceEvent::StepBegin { op, channel, step } | TraceEvent::StepEnd { op, channel, step } => {
             format!("{{\"op\": {op}, \"channel\": {channel}, \"step\": {step}}}")
@@ -494,8 +518,18 @@ mod tests {
             rec(0, 0, TraceEvent::SimStarted { nodes: 2, ranks: 16 }),
             rec(100, 1, TraceEvent::WrPosted { qp: 0, port: 9, bytes: 1 << 20 }),
             rec(4_000_000, 2, TraceEvent::PortDown { port: 0 }),
-            rec(4_000_100, 3, TraceEvent::FlowStalled { flow: 7 }),
-            rec(5_000_000, 4, TraceEvent::PointerMigrated { conn: 0, breakpoint: 3, rolled_back: 2 }),
+            rec(4_000_100, 3, TraceEvent::FlowStalled { flow: 7, link: Some(0) }),
+            rec(
+                5_000_000,
+                4,
+                TraceEvent::PointerMigrated {
+                    conn: 0,
+                    xfer: 7,
+                    port: Some(0),
+                    breakpoint: 3,
+                    rolled_back: 2,
+                },
+            ),
             rec(5_000_500, 5, TraceEvent::MonitorVerdict { port: 9, verdict: "network-anomaly", gbps: 20.5 }),
         ];
         let json = export(&records, &meta());
@@ -627,7 +661,8 @@ mod tests {
             TraceEvent::SimStarted { nodes: 1, ranks: 8 },
             TraceEvent::FlowStarted { flow: 1, bytes: 2 },
             TraceEvent::FlowRerated { flow: 1, gbps: 1.5 },
-            TraceEvent::FlowStalled { flow: 1 },
+            TraceEvent::FlowStalled { flow: 1, link: None },
+            TraceEvent::FlowStalled { flow: 1, link: Some(4) },
             TraceEvent::FlowResumed { flow: 1, scope: "flow" },
             TraceEvent::FlowResumed { flow: 1, scope: "xfer" },
             TraceEvent::FlowFinished { flow: 1 },
@@ -640,8 +675,23 @@ mod tests {
             TraceEvent::QpReset { qp: 1, port: 2, warm_ns: 3 },
             TraceEvent::PortDown { port: 1 },
             TraceEvent::PortUp { port: 1 },
-            TraceEvent::PointerMigrated { conn: 1, breakpoint: 2, rolled_back: 3 },
+            TraceEvent::PointerMigrated {
+                conn: 1,
+                xfer: 5,
+                port: Some(2),
+                breakpoint: 2,
+                rolled_back: 3,
+            },
+            TraceEvent::PointerMigrated {
+                conn: 1,
+                xfer: 5,
+                port: None,
+                breakpoint: 2,
+                rolled_back: 3,
+            },
             TraceEvent::Failback { conn: 1 },
+            TraceEvent::ConnBound { conn: 1, qp: 2, port: 3, backup: false },
+            TraceEvent::LinkCapacity { link: 4, gbps: 50.0, was_gbps: 400.0 },
             TraceEvent::OpSubmitted { op: 1, kind: "AllReduce", bytes: 2 },
             TraceEvent::OpFinished { op: 1, xfers: 4, bytes: 32 },
             TraceEvent::StepBegin { op: 1, channel: 2, step: 3 },

@@ -1,0 +1,317 @@
+//! Trace diffing: compare two trace exports / incident timelines.
+//!
+//! `vccl trace <id> --diff` runs an experiment twice into two fresh sinks
+//! and renders the delta — the executable witness of the determinism
+//! contract (same config + seed ⇒ identical event streams), and the tool
+//! for comparing a healthy run against an incident snapshot. The
+//! comparison is structural, not textual:
+//!
+//! - **event-set delta**: per-kind record counts on each side, with the
+//!   first diverging record (by ring position) pinpointed;
+//! - **`AllocPass` component histogram** comparison: the §Perf L3
+//!   "how local are reallocations?" buckets, side by side with deltas;
+//! - **incident-set delta**: frozen incidents by name/trigger/port.
+//!
+//! Everything here is a pure function over `&[TraceRecord]` — no sinks, no
+//! locks — so the output is deterministic and bit-identity testable.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::metrics::Table;
+
+use super::{Incident, TraceEvent, TraceRecord};
+
+/// Per-component-size histogram of `AllocPass` records (§Perf L3): bucket
+/// upper bounds 1, 2, 4, 8, 16, 32, 64, ∞ over the pass's flow count —
+/// the same bucketing the Chrome exporter's summary event uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AllocHistogram {
+    pub passes: u64,
+    pub buckets: [u64; 8],
+}
+
+/// Bucket labels, index-aligned with [`AllocHistogram::buckets`].
+pub const ALLOC_BUCKET_LABELS: [&str; 8] =
+    ["<=1", "<=2", "<=4", "<=8", "<=16", "<=32", "<=64", ">64"];
+
+/// Fold every `AllocPass` in `records` into the component-size histogram.
+pub fn alloc_histogram(records: &[TraceRecord]) -> AllocHistogram {
+    let mut h = AllocHistogram::default();
+    for r in records {
+        if let TraceEvent::AllocPass { flows, .. } = r.ev {
+            h.passes += 1;
+            let b = match flows {
+                0 | 1 => 0,
+                2 => 1,
+                3..=4 => 2,
+                5..=8 => 3,
+                9..=16 => 4,
+                17..=32 => 5,
+                33..=64 => 6,
+                _ => 7,
+            };
+            h.buckets[b] += 1;
+        }
+    }
+    h
+}
+
+/// The structural delta between two record streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceDiff {
+    pub total_a: usize,
+    pub total_b: usize,
+    /// kind → (count in A, count in B); keys sorted (BTreeMap) for
+    /// deterministic rendering.
+    pub kinds: BTreeMap<&'static str, (u64, u64)>,
+    /// Ring position and (kind_a, kind_b) of the first record where the
+    /// two streams disagree on (time, event); `None` when one stream is a
+    /// prefix of the other (or they are identical).
+    pub first_divergence: Option<(usize, String, String)>,
+    pub alloc_a: AllocHistogram,
+    pub alloc_b: AllocHistogram,
+}
+
+impl TraceDiff {
+    /// No difference at all (the determinism-witness verdict).
+    pub fn identical(&self) -> bool {
+        self.total_a == self.total_b
+            && self.first_divergence.is_none()
+            && self.kinds.values().all(|(a, b)| a == b)
+    }
+}
+
+/// Compare two record streams (ring order). Timestamps and payloads both
+/// count: two streams diverge at the first position where either differs.
+/// `seq` is deliberately ignored — a resumed run restarts its counter, and
+/// the contract is about *events*, not bookkeeping.
+pub fn diff_records(a: &[TraceRecord], b: &[TraceRecord]) -> TraceDiff {
+    let mut kinds: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    for r in a {
+        kinds.entry(r.ev.kind()).or_default().0 += 1;
+    }
+    for r in b {
+        kinds.entry(r.ev.kind()).or_default().1 += 1;
+    }
+    let first_divergence = a
+        .iter()
+        .zip(b.iter())
+        .position(|(x, y)| x.at != y.at || x.ev != y.ev)
+        .map(|i| (i, a[i].ev.kind().to_string(), b[i].ev.kind().to_string()));
+    TraceDiff {
+        total_a: a.len(),
+        total_b: b.len(),
+        kinds,
+        first_divergence,
+        alloc_a: alloc_histogram(a),
+        alloc_b: alloc_histogram(b),
+    }
+}
+
+/// Render the fixed-width diff report (the `vccl trace --diff` body).
+pub fn render(d: &TraceDiff, label_a: &str, label_b: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace diff — {label_a}: {} record(s), {label_b}: {} record(s)",
+        d.total_a, d.total_b
+    );
+    if d.identical() {
+        let _ = writeln!(
+            out,
+            "verdict: IDENTICAL event streams (determinism contract holds)\n"
+        );
+    } else {
+        match &d.first_divergence {
+            Some((i, ka, kb)) => {
+                let _ = writeln!(
+                    out,
+                    "verdict: DIVERGED at record {i} ({label_a}: {ka}, {label_b}: {kb})\n"
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "verdict: one stream is a prefix of the other \
+                     (lengths {} vs {})\n",
+                    d.total_a, d.total_b
+                );
+            }
+        }
+    }
+    let mut t = Table::new(vec!["event kind", label_a, label_b, "delta"]);
+    for (kind, (na, nb)) in &d.kinds {
+        let delta = *nb as i64 - *na as i64;
+        t.row(vec![
+            kind.to_string(),
+            na.to_string(),
+            nb.to_string(),
+            if delta == 0 { "0".to_string() } else { format!("{delta:+}") },
+        ]);
+    }
+    out.push_str(&t.render());
+    // §Perf L3 component-size histogram, side by side.
+    if d.alloc_a.passes > 0 || d.alloc_b.passes > 0 {
+        let _ = writeln!(
+            out,
+            "\nAllocPass component histogram — {label_a}: {} pass(es), {label_b}: {} pass(es):\n",
+            d.alloc_a.passes, d.alloc_b.passes
+        );
+        let mut t = Table::new(vec!["component flows", label_a, label_b, "delta"]);
+        for (i, label) in ALLOC_BUCKET_LABELS.iter().enumerate() {
+            let (na, nb) = (d.alloc_a.buckets[i], d.alloc_b.buckets[i]);
+            let delta = nb as i64 - na as i64;
+            t.row(vec![
+                label.to_string(),
+                na.to_string(),
+                nb.to_string(),
+                if delta == 0 { "0".to_string() } else { format!("{delta:+}") },
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Render the incident-set comparison: name, trigger kind, port and event
+/// count per side, joined structurally via [`Incident::port`] — never by
+/// parsing names.
+pub fn render_incidents(a: &[Incident], b: &[Incident], label_a: &str, label_b: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "incidents — {label_a}: {}, {label_b}: {}:\n",
+        a.len(),
+        b.len()
+    );
+    if a.is_empty() && b.is_empty() {
+        let _ = writeln!(out, "(none on either side)");
+        return out;
+    }
+    let mut t = Table::new(vec!["side", "incident", "trigger", "port", "events", "in flight"]);
+    for (side, incs) in [(label_a, a), (label_b, b)] {
+        for inc in incs {
+            t.row(vec![
+                side.to_string(),
+                inc.name.clone(),
+                inc.trigger.kind().to_string(),
+                inc.port().map_or_else(|| "-".to_string(), |p| p.to_string()),
+                inc.events.len().to_string(),
+                inc.live_total.to_string(),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn rec(ns: u64, seq: u64, ev: TraceEvent) -> TraceRecord {
+        TraceRecord { at: SimTime::ns(ns), seq, ev }
+    }
+
+    fn sample() -> Vec<TraceRecord> {
+        vec![
+            rec(0, 0, TraceEvent::SimStarted { nodes: 2, ranks: 16 }),
+            rec(10, 1, TraceEvent::AllocPass { flows: 1, links: 2 }),
+            rec(20, 2, TraceEvent::AllocPass { flows: 12, links: 8 }),
+            rec(30, 3, TraceEvent::PortDown { port: 1 }),
+            rec(40, 4, TraceEvent::FlowStalled { flow: 3, link: Some(2) }),
+        ]
+    }
+
+    #[test]
+    fn identical_streams_diff_to_zero() {
+        let a = sample();
+        let d = diff_records(&a, &a);
+        assert!(d.identical());
+        assert!(d.first_divergence.is_none());
+        assert!(d.kinds.values().all(|(x, y)| x == y));
+        let s = render(&d, "run A", "run B");
+        assert!(s.contains("IDENTICAL"), "{s}");
+        assert!(s.contains("AllocPass component histogram"), "{s}");
+    }
+
+    #[test]
+    fn divergence_is_pinpointed() {
+        let a = sample();
+        let mut b = sample();
+        // Same kind, different payload: still a divergence.
+        b[3] = rec(30, 3, TraceEvent::PortDown { port: 5 });
+        let d = diff_records(&a, &b);
+        assert!(!d.identical());
+        assert_eq!(
+            d.first_divergence,
+            Some((3, "PortDown".to_string(), "PortDown".to_string()))
+        );
+        let s = render(&d, "a", "b");
+        assert!(s.contains("DIVERGED at record 3"), "{s}");
+        // Counts per kind still match here (payload-only divergence).
+        assert_eq!(d.kinds["PortDown"], (1, 1));
+    }
+
+    #[test]
+    fn seq_numbers_do_not_count_as_divergence() {
+        // A resumed run restarts its seq counter; events are what matter.
+        let a = sample();
+        let b: Vec<TraceRecord> =
+            a.iter().map(|r| TraceRecord { seq: r.seq + 100, ..*r }).collect();
+        assert!(diff_records(&a, &b).identical());
+    }
+
+    #[test]
+    fn prefix_streams_report_missing_tail() {
+        let a = sample();
+        let b = a[..3].to_vec();
+        let d = diff_records(&a, &b);
+        assert!(!d.identical());
+        assert!(d.first_divergence.is_none());
+        assert_eq!(d.kinds["FlowStalled"], (1, 0));
+        let s = render(&d, "a", "b");
+        assert!(s.contains("prefix"), "{s}");
+        assert!(s.contains("-1"), "{s}");
+    }
+
+    #[test]
+    fn alloc_histograms_bucket_like_chrome() {
+        let h = alloc_histogram(&sample());
+        assert_eq!(h.passes, 2);
+        assert_eq!(h.buckets[0], 1); // flows=1
+        assert_eq!(h.buckets[4], 1); // flows=12 → ≤16
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        let a = sample();
+        let mut b = sample();
+        b.pop();
+        let d = diff_records(&a, &b);
+        assert_eq!(render(&d, "x", "y"), render(&d, "x", "y"));
+    }
+
+    #[test]
+    fn incident_comparison_uses_structured_port() {
+        let inc = Incident {
+            name: "network-anomaly-port7".to_string(),
+            at: SimTime::ms(4),
+            trigger: TraceEvent::MonitorVerdict {
+                port: 7,
+                verdict: "network-anomaly",
+                gbps: 11.0,
+            },
+            events: vec![rec(0, 0, TraceEvent::PortDown { port: 7 })],
+            live_xfers: Vec::new(),
+            live_total: 2,
+        };
+        let s = render_incidents(&[inc], &[], "a", "b");
+        assert!(s.contains("MonitorVerdict"), "{s}");
+        assert!(s.contains("| 7 "), "{s}");
+        let s = render_incidents(&[], &[], "a", "b");
+        assert!(s.contains("none on either side"), "{s}");
+    }
+}

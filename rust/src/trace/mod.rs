@@ -30,6 +30,7 @@
 //!    `net::flow::FlowNet::reallocate` exists for this).
 
 pub mod chrome;
+pub mod diff;
 pub mod timeline;
 
 use std::collections::VecDeque;
@@ -53,7 +54,11 @@ pub enum TraceEvent {
     /// Max-min re-rate changed a flow's bandwidth by more than 10 %.
     FlowRerated { flow: u64, gbps: f64 },
     /// A flow's path lost a link: rate dropped to zero with bytes left.
-    FlowStalled { flow: u64 },
+    /// `link` names the first down link on the flow's path at stall time
+    /// (`None` when the stall came from contention rather than a dead
+    /// link) — the `rca` causal graph derives its Flow→Link→Port edges
+    /// from it.
+    FlowStalled { flow: u64, link: Option<usize> },
     /// A stalled data stream is moving again. `scope` names the id
     /// namespace of `flow`: `"flow"` — a net-layer flow whose link came
     /// back within the retry window (`flow` = flow id); `"xfer"` — a
@@ -64,6 +69,12 @@ pub enum TraceEvent {
     FlowFinished { flow: u64 },
     /// A flow was killed (failover flushes the primary QP's flows).
     FlowKilled { flow: u64 },
+    /// A link's capacity was changed at runtime (fault injection /
+    /// degradation). `was_gbps` is the capacity being replaced, so a
+    /// degrade (`gbps < was_gbps`) and its restoration are distinguishable
+    /// without external state — the `rca` graph opens/closes degrade fault
+    /// windows from exactly this pair.
+    LinkCapacity { link: usize, gbps: f64, was_gbps: f64 },
     /// One incremental allocation pass (§Perf L3): the connected component
     /// the max-min water-fill walked, in flows and links. The Chrome
     /// exporter turns these into a counter track plus a component-size
@@ -86,7 +97,18 @@ pub enum TraceEvent {
     PortDown { port: usize },
     PortUp { port: usize },
     /// §3.3 failover migrated both sides' pointers to the breakpoint.
-    PointerMigrated { conn: usize, breakpoint: u64, rolled_back: u64 },
+    /// `xfer` is the transfer whose window rolled back (the `Xfer.seq`
+    /// creation ordinal, joining to `FlowResumed { scope: "xfer" }`);
+    /// `port` is the failed primary port's ordinal when known, so
+    /// incidents frozen on a failover join to ground truth without
+    /// string parsing.
+    PointerMigrated {
+        conn: usize,
+        xfer: u64,
+        port: Option<usize>,
+        breakpoint: u64,
+        rolled_back: u64,
+    },
     /// Traffic returned to the (healed, warm) primary QP.
     Failback { conn: usize },
     /// A collective was submitted / finished (`ccl::collectives`). The
@@ -95,6 +117,11 @@ pub enum TraceEvent {
     /// then, so the trace reads the fold, never retired `Xfer`s.
     OpSubmitted { op: usize, kind: &'static str, bytes: u64 },
     OpFinished { op: usize, xfers: u64, bytes: u64 },
+    /// A connection bound a QP to a port at setup (`ccl::cluster::conn`).
+    /// Recorded once per QP (primary and backup), these static bindings
+    /// are what lets the `rca` graph walk Conn → QP → Port without
+    /// consulting live simulator state.
+    ConnBound { conn: usize, qp: u64, port: usize, backup: bool },
     /// A per-channel ring step began / completed.
     StepBegin { op: usize, channel: usize, step: usize },
     StepEnd { op: usize, channel: usize, step: usize },
@@ -115,6 +142,7 @@ impl TraceEvent {
             TraceEvent::FlowResumed { .. } => "FlowResumed",
             TraceEvent::FlowFinished { .. } => "FlowFinished",
             TraceEvent::FlowKilled { .. } => "FlowKilled",
+            TraceEvent::LinkCapacity { .. } => "LinkCapacity",
             TraceEvent::AllocPass { .. } => "AllocPass",
             TraceEvent::WrPosted { .. } => "WrPosted",
             TraceEvent::WrCompleted { .. } => "WrCompleted",
@@ -127,6 +155,7 @@ impl TraceEvent {
             TraceEvent::Failback { .. } => "Failback",
             TraceEvent::OpSubmitted { .. } => "OpSubmitted",
             TraceEvent::OpFinished { .. } => "OpFinished",
+            TraceEvent::ConnBound { .. } => "ConnBound",
             TraceEvent::StepBegin { .. } => "StepBegin",
             TraceEvent::StepEnd { .. } => "StepEnd",
             TraceEvent::MonitorVerdict { .. } => "MonitorVerdict",
@@ -143,6 +172,7 @@ impl TraceEvent {
             | TraceEvent::FlowResumed { .. }
             | TraceEvent::FlowFinished { .. }
             | TraceEvent::FlowKilled { .. }
+            | TraceEvent::LinkCapacity { .. }
             | TraceEvent::AllocPass { .. } => "net.flow",
             TraceEvent::WrPosted { .. }
             | TraceEvent::WrCompleted { .. }
@@ -153,6 +183,7 @@ impl TraceEvent {
             TraceEvent::PointerMigrated { .. } | TraceEvent::Failback { .. } => "fault",
             TraceEvent::OpSubmitted { .. }
             | TraceEvent::OpFinished { .. }
+            | TraceEvent::ConnBound { .. }
             | TraceEvent::StepBegin { .. }
             | TraceEvent::StepEnd { .. } => "ccl",
             TraceEvent::MonitorVerdict { .. } => "monitor",
@@ -171,6 +202,7 @@ impl TraceEvent {
                 | TraceEvent::QpReset { .. }
                 | TraceEvent::PortDown { .. }
                 | TraceEvent::PortUp { .. }
+                | TraceEvent::LinkCapacity { .. }
                 | TraceEvent::PointerMigrated { .. }
                 | TraceEvent::Failback { .. }
                 | TraceEvent::MonitorVerdict { .. }
@@ -186,6 +218,25 @@ pub struct TraceRecord {
     pub ev: TraceEvent,
 }
 
+/// Cap on the in-flight transfers named per incident (bounded-memory).
+pub const MAX_LIVE_XFERS: usize = 32;
+
+/// One in-flight transfer at incident-freeze time: the §Perf L5 slab's
+/// live view, snapshotted so a frozen incident names exactly which
+/// transfers were still moving when the anomaly fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveXfer {
+    /// Stable creation ordinal (`Xfer.seq` — the id trace events use).
+    pub seq: u64,
+    pub op: usize,
+    pub channel: usize,
+    pub conn: usize,
+    pub bytes: u64,
+    /// Wire chunks acknowledged / total (progress at freeze time).
+    pub chunks_done: u64,
+    pub chunks_total: u64,
+}
+
 /// A frozen snapshot of the trailing event window, named after the anomaly
 /// that triggered it.
 #[derive(Debug, Clone)]
@@ -193,8 +244,47 @@ pub struct Incident {
     pub name: String,
     /// When the anomaly was flagged.
     pub at: SimTime,
+    /// The anomaly event that triggered the freeze — structured metadata
+    /// (port, conn, …) so consumers join incidents to ground truth without
+    /// parsing `name`.
+    pub trigger: TraceEvent,
     /// The trailing `trace.snapshot_window_ns` of ring records at that time.
     pub events: Vec<TraceRecord>,
+    /// Transfers still in flight at freeze time, capped at
+    /// [`MAX_LIVE_XFERS`] in ascending slot order. Filled by the cluster
+    /// layer immediately after the freeze (the recorder itself has no slab
+    /// access); empty until then and for non-cluster recorders.
+    pub live_xfers: Vec<LiveXfer>,
+    /// Total live transfers at freeze time (may exceed `live_xfers.len()`).
+    pub live_total: u64,
+}
+
+impl Incident {
+    /// The port ordinal the triggering anomaly names, if it names one.
+    pub fn port(&self) -> Option<usize> {
+        match self.trigger {
+            TraceEvent::MonitorVerdict { port, .. }
+            | TraceEvent::QpError { port, .. }
+            | TraceEvent::QpRetryArmed { port, .. }
+            | TraceEvent::QpReset { port, .. }
+            | TraceEvent::WrPosted { port, .. }
+            | TraceEvent::WrCompleted { port, .. }
+            | TraceEvent::PortDown { port }
+            | TraceEvent::PortUp { port } => Some(port),
+            TraceEvent::PointerMigrated { port, .. } => port,
+            _ => None,
+        }
+    }
+
+    /// The connection the triggering anomaly names, if it names one.
+    pub fn conn(&self) -> Option<usize> {
+        match self.trigger {
+            TraceEvent::PointerMigrated { conn, .. }
+            | TraceEvent::Failback { conn }
+            | TraceEvent::ConnBound { conn, .. } => Some(conn),
+            _ => None,
+        }
+    }
 }
 
 /// The recorder state behind a sink: bounded ring + incidents.
@@ -216,6 +306,9 @@ struct Recorder {
     epoch_start_seq: u64,
     /// (epoch, time) of the last frozen incident.
     last_freeze: Option<(u64, SimTime)>,
+    /// Incidents `[0, enriched)` have had their live-transfer view filled
+    /// in by the cluster layer (`TraceSink::enrich_incidents`).
+    enriched: usize,
 }
 
 impl Recorder {
@@ -232,6 +325,7 @@ impl Recorder {
             epoch: 0,
             epoch_start_seq: 0,
             last_freeze: None,
+            enriched: 0,
         }
     }
 
@@ -253,7 +347,7 @@ impl Recorder {
     /// anomaly usually flags many consecutive samples), at most
     /// [`MAX_INCIDENTS`] total. The window never reaches across a
     /// `SimStarted` boundary into an earlier simulation's events.
-    fn freeze(&mut self, at: SimTime, name: &str) {
+    fn freeze(&mut self, at: SimTime, trigger: TraceEvent, name: &str) {
         if self.incidents.len() >= MAX_INCIDENTS {
             return;
         }
@@ -270,7 +364,14 @@ impl Recorder {
             .filter(|r| r.seq >= self.epoch_start_seq && r.at.as_ns() >= cutoff)
             .copied()
             .collect();
-        self.incidents.push(Incident { name: name.to_string(), at, events });
+        self.incidents.push(Incident {
+            name: name.to_string(),
+            at,
+            trigger,
+            events,
+            live_xfers: Vec::new(),
+            live_total: 0,
+        });
     }
 }
 
@@ -302,6 +403,27 @@ impl TraceSink {
 
     pub fn len(&self) -> usize {
         self.0.lock().unwrap().ring.len()
+    }
+
+    /// Incidents frozen so far (cheap: one counter read under the lock).
+    pub fn incident_count(&self) -> usize {
+        self.0.lock().unwrap().incidents.len()
+    }
+
+    /// Fill the live-transfer view of every not-yet-enriched incident.
+    /// Called by the cluster layer right after event dispatch whenever new
+    /// incidents appeared, while the §Perf L5 slab still holds the
+    /// freeze-time state (single-threaded simulator ⇒ same sim time, so
+    /// this is deterministic). `xfers` is truncated to [`MAX_LIVE_XFERS`].
+    pub fn enrich_incidents(&self, live_total: u64, xfers: &[LiveXfer]) {
+        let mut r = self.0.lock().unwrap();
+        let upto = r.incidents.len();
+        for i in r.enriched..upto {
+            let inc = &mut r.incidents[i];
+            inc.live_total = live_total;
+            inc.live_xfers = xfers.iter().copied().take(MAX_LIVE_XFERS).collect();
+        }
+        r.enriched = upto;
     }
 
     pub fn is_empty(&self) -> bool {
@@ -377,7 +499,7 @@ impl Tracer {
         if let Some(sink) = &self.sink {
             let mut r = sink.0.lock().unwrap();
             r.record(at, ev);
-            r.freeze(at, name);
+            r.freeze(at, ev, name);
         }
     }
 }
@@ -420,7 +542,7 @@ mod tests {
         let sink = TraceSink::new(1024, 100); // 100ns snapshot window
         let t = Tracer::attached(sink.clone());
         t.record(SimTime::ns(10), TraceEvent::PortDown { port: 3 });
-        t.record(SimTime::ns(500), TraceEvent::FlowStalled { flow: 1 });
+        t.record(SimTime::ns(500), TraceEvent::FlowStalled { flow: 1, link: Some(6) });
         t.record_anomaly(
             SimTime::ns(550),
             TraceEvent::MonitorVerdict { port: 3, verdict: "network-anomaly", gbps: 12.0 },
@@ -432,6 +554,54 @@ mod tests {
         // The 10ns PortDown is outside the 100ns trailing window.
         assert_eq!(incs[0].events.len(), 2);
         assert!(incs[0].events.iter().all(|r| r.at.as_ns() >= 450));
+        // Structured trigger metadata: the port joins without name parsing.
+        assert_eq!(incs[0].port(), Some(3));
+        assert_eq!(incs[0].conn(), None);
+        assert_eq!(incs[0].trigger.kind(), "MonitorVerdict");
+    }
+
+    #[test]
+    fn incident_enrichment_fills_live_xfers_once() {
+        let sink = TraceSink::new(64, 100);
+        let t = Tracer::attached(sink.clone());
+        t.record_anomaly(
+            SimTime::ns(100),
+            TraceEvent::PointerMigrated {
+                conn: 2,
+                xfer: 7,
+                port: Some(1),
+                breakpoint: 3,
+                rolled_back: 1,
+            },
+            "failover-conn2-port1",
+        );
+        assert_eq!(sink.incident_count(), 1);
+        let lx = LiveXfer {
+            seq: 7,
+            op: 0,
+            channel: 0,
+            conn: 2,
+            bytes: 1 << 20,
+            chunks_done: 3,
+            chunks_total: 8,
+        };
+        sink.enrich_incidents(5, &[lx]);
+        let incs = sink.incidents();
+        assert_eq!(incs[0].live_total, 5);
+        assert_eq!(incs[0].live_xfers, vec![lx]);
+        assert_eq!(incs[0].port(), Some(1));
+        assert_eq!(incs[0].conn(), Some(2));
+        // A second enrichment pass must not touch already-enriched ones.
+        sink.enrich_incidents(0, &[]);
+        assert_eq!(sink.incidents()[0].live_total, 5);
+        // The per-incident list is bounded even if the slab holds more.
+        let many: Vec<LiveXfer> =
+            (0..2 * MAX_LIVE_XFERS as u64).map(|i| LiveXfer { seq: i, ..lx }).collect();
+        t.record_anomaly(SimTime::ns(10_000), TraceEvent::PortDown { port: 0 }, "p0");
+        sink.enrich_incidents(many.len() as u64, &many);
+        let incs = sink.incidents();
+        assert_eq!(incs[1].live_xfers.len(), MAX_LIVE_XFERS);
+        assert_eq!(incs[1].live_total, 2 * MAX_LIVE_XFERS as u64);
     }
 
     #[test]
@@ -493,12 +663,26 @@ mod tests {
 
     #[test]
     fn kinds_and_layers_are_stable() {
-        let ev = TraceEvent::PointerMigrated { conn: 1, breakpoint: 5, rolled_back: 3 };
+        let ev = TraceEvent::PointerMigrated {
+            conn: 1,
+            xfer: 9,
+            port: Some(0),
+            breakpoint: 5,
+            rolled_back: 3,
+        };
         assert_eq!(ev.kind(), "PointerMigrated");
         assert_eq!(ev.layer(), "fault");
         assert!(ev.is_key_event());
         let ev = TraceEvent::WrPosted { qp: 0, port: 0, bytes: 1 };
         assert_eq!(ev.layer(), "net.rdma");
         assert!(!ev.is_key_event());
+        let ev = TraceEvent::ConnBound { conn: 0, qp: 4, port: 2, backup: true };
+        assert_eq!(ev.kind(), "ConnBound");
+        assert_eq!(ev.layer(), "ccl");
+        assert!(!ev.is_key_event());
+        let ev = TraceEvent::LinkCapacity { link: 2, gbps: 50.0, was_gbps: 400.0 };
+        assert_eq!(ev.kind(), "LinkCapacity");
+        assert_eq!(ev.layer(), "net.flow");
+        assert!(ev.is_key_event());
     }
 }

@@ -18,7 +18,10 @@ pub fn describe(ev: &TraceEvent) -> String {
         TraceEvent::SimStarted { nodes, ranks } => format!("{nodes} nodes / {ranks} ranks"),
         TraceEvent::FlowStarted { flow, bytes } => format!("flow {flow}: {bytes} B"),
         TraceEvent::FlowRerated { flow, gbps } => format!("flow {flow} -> {gbps:.1} Gbps"),
-        TraceEvent::FlowStalled { flow } => format!("flow {flow} rate -> 0"),
+        TraceEvent::FlowStalled { flow, link } => match link {
+            Some(l) => format!("flow {flow} rate -> 0 (link {l} down)"),
+            None => format!("flow {flow} rate -> 0"),
+        },
         TraceEvent::FlowResumed { flow, scope } => {
             if scope == "xfer" {
                 format!("xfer {flow} resumed on the backup QP")
@@ -42,13 +45,21 @@ pub fn describe(ev: &TraceEvent) -> String {
         }
         TraceEvent::PortDown { port } => format!("port {port} down"),
         TraceEvent::PortUp { port } => format!("port {port} up"),
-        TraceEvent::PointerMigrated { conn, breakpoint, rolled_back } => format!(
-            "conn {conn}: breakpoint chunk {breakpoint}, {rolled_back} in-flight rolled back"
+        TraceEvent::LinkCapacity { link, gbps, was_gbps } => {
+            format!("link {link}: {was_gbps:.0} -> {gbps:.0} Gbps")
+        }
+        TraceEvent::PointerMigrated { conn, xfer, breakpoint, rolled_back, .. } => format!(
+            "conn {conn} xfer {xfer}: breakpoint chunk {breakpoint}, \
+             {rolled_back} in-flight rolled back"
         ),
         TraceEvent::Failback { conn } => format!("conn {conn}: traffic back on primary"),
         TraceEvent::OpSubmitted { op, kind, bytes } => format!("op {op}: {kind} {bytes} B"),
         TraceEvent::OpFinished { op, xfers, bytes } => {
             format!("op {op} complete: {xfers} transfer(s), {bytes} B")
+        }
+        TraceEvent::ConnBound { conn, qp, port, backup } => {
+            let role = if backup { "backup" } else { "primary" };
+            format!("conn {conn}: {role} qp {qp} on port {port}")
         }
         TraceEvent::StepBegin { op, channel, step } => {
             format!("op {op} ch {channel} step {step}")
@@ -98,11 +109,42 @@ pub fn incident_table(inc: &Incident) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "incident {:?} at {:.3} ms — {} event(s) in the trailing window:\n",
+        "incident {:?} at {:.3} ms — {} event(s) in the trailing window:",
         inc.name,
         inc.at.as_ms_f64(),
         inc.events.len()
     );
+    // Structured trigger metadata (satellite of the RCA layer): what froze
+    // this snapshot, and which port/conn it names — no string parsing.
+    let mut meta = format!("trigger: {}", inc.trigger.kind());
+    if let Some(p) = inc.port() {
+        let _ = write!(meta, " port {p}");
+    }
+    if let Some(c) = inc.conn() {
+        let _ = write!(meta, " conn {c}");
+    }
+    let _ = writeln!(out, "{meta}");
+    // The §Perf L5 live view: which transfers were still in flight when
+    // the anomaly froze this window.
+    if inc.live_total > 0 {
+        let shown: Vec<String> = inc
+            .live_xfers
+            .iter()
+            .map(|x| {
+                format!(
+                    "xfer {} (op {} ch {} conn {}, {}/{} chunks)",
+                    x.seq, x.op, x.channel, x.conn, x.chunks_done, x.chunks_total
+                )
+            })
+            .collect();
+        let more = if (inc.live_total as usize) > inc.live_xfers.len() {
+            format!(" … +{} more", inc.live_total as usize - inc.live_xfers.len())
+        } else {
+            String::new()
+        };
+        let _ = writeln!(out, "in flight: {} transfer(s): {}{more}", inc.live_total, shown.join(", "));
+    }
+    out.push('\n');
     let key: Vec<TraceRecord> =
         inc.events.iter().filter(|r| r.ev.is_key_event()).copied().collect();
     let tail_from = inc.events.len().saturating_sub(MAX_INCIDENT_ROWS);
@@ -142,8 +184,18 @@ mod tests {
         let records = vec![
             rec(1_000_000, 0, TraceEvent::WrPosted { qp: 0, port: 0, bytes: 1 }),
             rec(4_000_000, 1, TraceEvent::PortDown { port: 0 }),
-            rec(4_100_000, 2, TraceEvent::FlowStalled { flow: 3 }),
-            rec(9_000_000, 3, TraceEvent::PointerMigrated { conn: 0, breakpoint: 2, rolled_back: 1 }),
+            rec(4_100_000, 2, TraceEvent::FlowStalled { flow: 3, link: Some(0) }),
+            rec(
+                9_000_000,
+                3,
+                TraceEvent::PointerMigrated {
+                    conn: 0,
+                    xfer: 3,
+                    port: Some(0),
+                    breakpoint: 2,
+                    rolled_back: 1,
+                },
+            ),
         ];
         let s = key_event_timeline(&records);
         assert!(s.contains("PortDown"));
@@ -166,17 +218,38 @@ mod tests {
     #[test]
     fn incident_renders_full_window() {
         let inc = Incident {
-            name: "failover-conn0".to_string(),
+            name: "failover-conn0-port0".to_string(),
             at: SimTime::ms(9),
+            trigger: TraceEvent::PointerMigrated {
+                conn: 0,
+                xfer: 11,
+                port: Some(0),
+                breakpoint: 2,
+                rolled_back: 1,
+            },
             events: vec![
                 rec(8_000_000, 0, TraceEvent::WrPosted { qp: 0, port: 0, bytes: 1 }),
                 rec(9_000_000, 1, TraceEvent::QpError { qp: 0, port: 0 }),
             ],
+            live_xfers: vec![crate::trace::LiveXfer {
+                seq: 11,
+                op: 0,
+                channel: 1,
+                conn: 0,
+                bytes: 1 << 20,
+                chunks_done: 2,
+                chunks_total: 8,
+            }],
+            live_total: 3,
         };
         let s = incident_table(&inc);
-        assert!(s.contains("failover-conn0"));
+        assert!(s.contains("failover-conn0-port0"));
         // Incidents keep every event, key or not.
         assert!(s.contains("WrPosted"));
         assert!(s.contains("QpError"));
+        // Structured trigger + live-transfer surfacing.
+        assert!(s.contains("trigger: PointerMigrated port 0 conn 0"), "{s}");
+        assert!(s.contains("in flight: 3 transfer(s)"), "{s}");
+        assert!(s.contains("xfer 11 (op 0 ch 1 conn 0, 2/8 chunks)"), "{s}");
     }
 }
