@@ -20,7 +20,7 @@ use crate::gpu::{CopyEngines, GpuCompute, TaskId};
 use crate::monitor::MonitorSet;
 use crate::net::{CompletionStatus, FlowId, QpId, QpState, RdmaNet, WorkCompletion};
 use crate::sim::{Engine, EngineState, SimTime};
-use crate::topology::{build_rings, Cluster, NicId, NodeId, PortId, RankId, Ring};
+use crate::topology::{build_rings, Cluster, LinkId, NicId, NodeId, PortId, RankId, Ring};
 use crate::trace::{TraceEvent, Tracer};
 use crate::util::{fingerprint, CkptReader, CkptWriter, Rng};
 
@@ -62,6 +62,13 @@ pub enum Event {
     /// Fault injection.
     PortDown { port: PortId },
     PortUp { port: PortId },
+    /// Fabric fault injection: a trunk link dies/heals with both endpoint
+    /// ports still up (path death, §Fault domains), or a whole switch
+    /// cascades to every member link.
+    TrunkDown { link: LinkId },
+    TrunkUp { link: LinkId },
+    SwitchDown { switch: usize },
+    SwitchUp { switch: usize },
     /// Receiver-side δ-timeout double check (§3.3 case 2).
     DeltaCheck { conn: ConnId, epoch: u32 },
     /// Advance a collective to its next ring step on one channel.
@@ -1221,6 +1228,18 @@ impl ClusterSim {
         // (§Perf L5) — slot indices are recycled, seqs never are.
         self.tracer
             .record(now, TraceEvent::FlowResumed { flow: xfer_seq, scope: "xfer" });
+        // Path death distinct from port death (§Fault domains): the error
+        // port never flapped, but a trunk or switch on the primary path is
+        // dead. Name the killing link so RCA can join this migration to
+        // the TrunkDegraded/SwitchDown fault window.
+        if error_port.is_some_and(|p| self.topo.fabric.port_up(p)) {
+            if let Some(l) = self.rdma.qp_first_dead_link(failed_qp, &self.topo.fabric) {
+                self.tracer.record(
+                    now,
+                    TraceEvent::PathMigrated { conn: conn_id.0, xfer: xfer_seq, link: l.0 },
+                );
+            }
+        }
         // 5. Resume normal pumping for not-yet-staged chunks.
         self.pump_xfer(xid);
     }
@@ -1269,6 +1288,25 @@ impl ClusterSim {
         self.engine.schedule_at(at, Event::PortUp { port });
     }
 
+    /// Fabric fault entry points (§Fault domains): a trunk link dying with
+    /// both endpoint ports still up, or a whole switch cascading to every
+    /// member link.
+    pub fn inject_trunk_down(&mut self, link: LinkId, at: SimTime) {
+        self.engine.schedule_at(at, Event::TrunkDown { link });
+    }
+
+    pub fn inject_trunk_up(&mut self, link: LinkId, at: SimTime) {
+        self.engine.schedule_at(at, Event::TrunkUp { link });
+    }
+
+    pub fn inject_switch_down(&mut self, switch: usize, at: SimTime) {
+        self.engine.schedule_at(at, Event::SwitchDown { switch });
+    }
+
+    pub fn inject_switch_up(&mut self, switch: usize, at: SimTime) {
+        self.engine.schedule_at(at, Event::SwitchUp { switch });
+    }
+
     fn on_port_state(&mut self, port: PortId, up: bool) {
         let now = self.now();
         let ordinal = self.topo.fabric.port_ordinal(port);
@@ -1280,17 +1318,58 @@ impl ClusterSim {
         let out = self.rdma.set_port_up(&self.topo.fabric, port, up, now);
         self.absorb(out);
         if up {
-            // Failback check: any connection waiting on a healed path may
-            // return once its (proactively reset) primary QP is warm.
-            let candidates: Vec<ConnId> = self
-                .conns
-                .iter()
-                .filter(|c| c.awaiting_failback)
-                .map(|c| c.id)
-                .collect();
-            for cid in candidates {
-                self.try_failback(cid);
-            }
+            self.failback_sweep();
+        }
+    }
+
+    /// A trunk link died or healed while both endpoint NIC ports stayed up:
+    /// path death, perceived through the retry windows `set_links_up` arms
+    /// on every crossing QP (case 1) or the δ-probe's whole-path CTS check
+    /// (case 2) — never through a port flap.
+    fn on_trunk_state(&mut self, link: LinkId, up: bool) {
+        let now = self.now();
+        let switch = self.topo.fabric.switch_of_link(link).unwrap_or(usize::MAX);
+        let gbps = self.rdma.flows.link_capacity_bpns(link) * 8.0;
+        self.tracer.record(
+            now,
+            if up {
+                TraceEvent::TrunkRestored { link: link.0, switch, gbps }
+            } else {
+                TraceEvent::TrunkDegraded { link: link.0, switch, gbps: 0.0, was_gbps: gbps }
+            },
+        );
+        self.topo.fabric.set_link_up(link, up);
+        let out = self.rdma.set_links_up(&[link], up, now);
+        self.absorb(out);
+        if up {
+            self.failback_sweep();
+        }
+    }
+
+    /// A whole switch (leaf or spine plane) died or healed: cascade to its
+    /// member links in one shot, then let the same path-death machinery
+    /// fail every crossing connection over to the backup plane.
+    fn on_switch_state(&mut self, switch: usize, up: bool) {
+        let now = self.now();
+        self.tracer.record(
+            now,
+            if up { TraceEvent::SwitchUp { switch } } else { TraceEvent::SwitchDown { switch } },
+        );
+        let members = self.topo.fabric.set_switch_up(switch, up);
+        let out = self.rdma.set_links_up(&members, up, now);
+        self.absorb(out);
+        if up {
+            self.failback_sweep();
+        }
+    }
+
+    /// Failback check over every connection waiting on a healed path: any
+    /// of them may return once its (proactively reset) primary QP is warm.
+    fn failback_sweep(&mut self) {
+        let candidates: Vec<ConnId> =
+            self.conns.iter().filter(|c| c.awaiting_failback).map(|c| c.id).collect();
+        for cid in candidates {
+            self.try_failback(cid);
         }
     }
 
@@ -1371,6 +1450,10 @@ impl ClusterSim {
             Event::ChunkReady { xfer } => self.on_chunk_ready(xfer),
             Event::PortDown { port } => self.on_port_state(port, false),
             Event::PortUp { port } => self.on_port_state(port, true),
+            Event::TrunkDown { link } => self.on_trunk_state(link, false),
+            Event::TrunkUp { link } => self.on_trunk_state(link, true),
+            Event::SwitchDown { switch } => self.on_switch_state(switch, false),
+            Event::SwitchUp { switch } => self.on_switch_state(switch, true),
             Event::DeltaCheck { conn, epoch } => self.on_delta_check(conn, epoch),
             Event::OpStep { op, channel } => self.issue_step(op, channel),
         }
@@ -1426,7 +1509,7 @@ impl ClusterSim {
     pub fn run_to_idle(&mut self, max_events: u64) -> SimTime {
         let debug = std::env::var("VCCL_DEBUG_EVENTS").is_ok();
         let mut n: u64 = 0;
-        let mut counts = [0u64; 9];
+        let mut counts = [0u64; 10];
         while let Some((_, ev)) = self.engine.pop() {
             if debug {
                 let k = match ev {
@@ -1439,10 +1522,14 @@ impl ClusterSim {
                     Event::PortUp { .. } => 6,
                     Event::DeltaCheck { .. } => 7,
                     Event::OpStep { .. } => 8,
+                    Event::TrunkDown { .. }
+                    | Event::TrunkUp { .. }
+                    | Event::SwitchDown { .. }
+                    | Event::SwitchUp { .. } => 9,
                 };
                 counts[k] += 1;
                 if n % 10_000_000 == 0 && n > 0 {
-                    eprintln!("[debug] n={n} now={} counts(flow,retry,warm,gpu,chunk,down,up,delta,step)={counts:?}", self.engine.now());
+                    eprintln!("[debug] n={n} now={} counts(flow,retry,warm,gpu,chunk,down,up,delta,step,fabric)={counts:?}", self.engine.now());
                 }
             }
             self.dispatch(ev);
@@ -1850,7 +1937,7 @@ fn load_port(r: &mut CkptReader) -> Result<PortId, String> {
     Ok(PortId { nic: NicId { node: NodeId(node), local }, port })
 }
 
-/// Event codec: every one of the nine kinds serializes faithfully — a
+/// Event codec: every one of the thirteen kinds serializes faithfully — a
 /// pending event whose target is gone by resume time (a stale `ChunkReady`
 /// against a recycled slot, a `GpuTask` for a finished task) fires as the
 /// same no-op it would have been in the uninterrupted run, because the
@@ -1890,6 +1977,22 @@ fn save_event(w: &mut CkptWriter, ev: &Event) {
             w.token("evU");
             save_port(w, *port);
         }
+        Event::TrunkDown { link } => {
+            w.token("evT");
+            w.usize("l", link.0);
+        }
+        Event::TrunkUp { link } => {
+            w.token("evV");
+            w.usize("l", link.0);
+        }
+        Event::SwitchDown { switch } => {
+            w.token("evL");
+            w.usize("s", *switch);
+        }
+        Event::SwitchUp { switch } => {
+            w.token("evM");
+            w.usize("s", *switch);
+        }
         Event::DeltaCheck { conn, epoch } => {
             w.token("evX");
             w.usize("c", conn.0);
@@ -1912,6 +2015,10 @@ fn load_event(r: &mut CkptReader) -> Result<Event, String> {
         "evC" => Event::ChunkReady { xfer: XferId { slot: r.u32("s")?, gen: r.u32("g")? } },
         "evD" => Event::PortDown { port: load_port(r)? },
         "evU" => Event::PortUp { port: load_port(r)? },
+        "evT" => Event::TrunkDown { link: LinkId(r.usize("l")?) },
+        "evV" => Event::TrunkUp { link: LinkId(r.usize("l")?) },
+        "evL" => Event::SwitchDown { switch: r.usize("s")? },
+        "evM" => Event::SwitchUp { switch: r.usize("s")? },
         "evX" => Event::DeltaCheck { conn: ConnId(r.usize("c")?), epoch: r.u32("e")? },
         "evS" => Event::OpStep { op: OpId(r.usize("o")?), channel: r.usize("c")? },
         other => return Err(format!("unknown event tag {other:?}")),
@@ -2161,6 +2268,105 @@ mod tests {
         let b = c.backup_port.unwrap();
         assert_eq!(p.nic, b.nic, "dual-port: backup lives on the other port");
         assert_ne!(p.port, b.port);
+    }
+
+    /// §Fault domains tentpole property: a single trunk-down on a
+    /// dual-plane fabric loses zero collectives. Both endpoint ports stay
+    /// up the whole time — the failure is perceived as PATH death via the
+    /// retry window — yet the crossing connection fails over exactly once
+    /// to the backup plane, and fails back after the trunk heals.
+    #[test]
+    fn trunk_down_migrates_to_backup_plane_without_port_flap() {
+        let mut cfg = fast_ft_cfg();
+        cfg.topo.dual_port_nics = true;
+        cfg.trace.enabled = true;
+        let mut s = ClusterSim::new(cfg);
+        let cid = s.conn(RankId(0), RankId(8), 0);
+        let pport = s.conns[cid.0].primary_port.unwrap();
+        // rank 0's plane-0 primary path rides trunk (rail 0, plane 0).
+        let trunk = s.topo.fabric.trunk_up(0, 0);
+        s.inject_trunk_down(trunk, SimTime::ms(2));
+        s.inject_trunk_up(trunk, SimTime::ms(3_000));
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(256).0);
+        s.run_to_idle(50_000_000);
+        let op = &s.ops[id.0];
+        assert!(op.is_done() && !op.failed, "zero lost collectives");
+        assert_eq!(s.stats.hung_ops, 0);
+        assert_eq!(s.stats.failovers, 1, "exactly one failover");
+        assert_eq!(s.stats.failbacks, 1, "traffic returns after the heal");
+        // The endpoint port NEVER flapped: this was path death.
+        assert!(s.topo.fabric.port_up(pport));
+        let recs = s.tracer.sink().unwrap().records();
+        assert!(!recs.iter().any(|r| r.ev.kind() == "PortDown"), "no port flap");
+        let degr = recs
+            .iter()
+            .find_map(|r| match r.ev {
+                TraceEvent::TrunkDegraded { link, switch, .. } => Some((link, switch)),
+                _ => None,
+            })
+            .expect("TrunkDegraded recorded");
+        assert_eq!(degr.0, trunk.0);
+        assert_eq!(Some(degr.1), s.topo.fabric.switch_of_link(trunk));
+        let migr = recs
+            .iter()
+            .find_map(|r| match r.ev {
+                TraceEvent::PathMigrated { conn, link, .. } => Some((conn, link)),
+                _ => None,
+            })
+            .expect("PathMigrated recorded");
+        assert_eq!(migr, (cid.0, trunk.0), "migration names the killing trunk");
+        assert!(recs.iter().any(|r| r.ev.kind() == "TrunkRestored"));
+        assert!(recs.iter().any(|r| r.ev.kind() == "Failback"));
+    }
+
+    /// Killing a whole spine plane cascades to every trunk in the plane:
+    /// every inter-node connection riding plane 0 migrates to the other
+    /// plane (at most once each) and the collective still completes.
+    #[test]
+    fn spine_plane_down_migrates_every_crossing_conn() {
+        let mut cfg = fast_ft_cfg();
+        cfg.topo.dual_port_nics = true;
+        cfg.trace.enabled = true;
+        let mut s = ClusterSim::new(cfg);
+        let spine0 = s.topo.fabric.num_leaf_switches(); // plane-0 spine
+        s.inject_switch_down(spine0, SimTime::ms(2));
+        let id = s.submit(CollKind::AllGather, ByteSize::mb(64).0);
+        s.run_to_idle(200_000_000);
+        let op = &s.ops[id.0];
+        assert!(op.is_done() && !op.failed, "zero lost collectives");
+        assert_eq!(s.stats.hung_ops, 0);
+        assert!(s.stats.failovers >= 1, "the plane loss must be perceived");
+        for c in s.conns.iter().filter(|c| c.primary.is_some()) {
+            assert!(
+                c.failovers <= 1,
+                "conn {} failed over {} times (must be at most once)",
+                c.id.0,
+                c.failovers
+            );
+        }
+        let recs = s.tracer.sink().unwrap().records();
+        assert!(recs
+            .iter()
+            .any(|r| matches!(r.ev, TraceEvent::SwitchDown { switch } if switch == spine0)));
+    }
+
+    /// The four fabric fault events survive the checkpoint event codec.
+    #[test]
+    fn fabric_events_round_trip_through_the_checkpoint_codec() {
+        let evs = [
+            Event::TrunkDown { link: LinkId(7) },
+            Event::TrunkUp { link: LinkId(7) },
+            Event::SwitchDown { switch: 3 },
+            Event::SwitchUp { switch: 3 },
+        ];
+        for ev in evs {
+            let mut w = CkptWriter::new("T", 1);
+            save_event(&mut w, &ev);
+            let blob = w.finish();
+            let mut r = CkptReader::new(&blob, "T", 1).unwrap();
+            let back = load_event(&mut r).unwrap();
+            assert_eq!(format!("{ev:?}"), format!("{back:?}"));
+        }
     }
 
     #[test]

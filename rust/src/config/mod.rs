@@ -327,6 +327,12 @@ pub struct SoakConfig {
     pub sim_days: f64,
     /// Checkpoint the full sim state every N traffic bursts (0 = never).
     pub checkpoint_every: u64,
+    /// Relative weight of trunk-capacity degrades in the fault mix
+    /// (§Fault domains). 0 (the default) keeps the pre-fabric mix of port
+    /// flaps and NIC-uplink degrades only.
+    pub trunk_weight: u32,
+    /// Relative weight of whole-switch (leaf) outages in the fault mix.
+    pub switch_weight: u32,
 }
 
 impl Default for SoakConfig {
@@ -336,6 +342,8 @@ impl Default for SoakConfig {
             mttr_s: 30.0,
             sim_days: 1.0,
             checkpoint_every: 8,
+            trunk_weight: 0,
+            switch_weight: 0,
         }
     }
 }
@@ -552,6 +560,8 @@ impl Config {
             "soak.mttr_s" => self.soak.mttr_s = p(val)?,
             "soak.sim_days" => self.soak.sim_days = p(val)?,
             "soak.checkpoint_every" => self.soak.checkpoint_every = p(val)?,
+            "soak.trunk_weight" => self.soak.trunk_weight = p(val)?,
+            "soak.switch_weight" => self.soak.switch_weight = p(val)?,
             "trace.enabled" => self.trace.enabled = pb(val)?,
             "trace.ring_capacity" => self.trace.ring_capacity = p(val)?,
             "trace.snapshot_window_ns" => self.trace.snapshot_window_ns = p(val)?,
@@ -653,13 +663,17 @@ mod tests {
             "soak.mtbf_hours = 0.5\n\
              soak.mttr_s = 10\n\
              soak.sim_days = 2.5\n\
-             soak.checkpoint_every = 4\n",
+             soak.checkpoint_every = 4\n\
+             soak.trunk_weight = 2\n\
+             soak.switch_weight = 3\n",
         )
         .unwrap();
         assert_eq!(c.soak.mtbf_hours, 0.5);
         assert_eq!(c.soak.mttr_s, 10.0);
         assert_eq!(c.soak.sim_days, 2.5);
         assert_eq!(c.soak.checkpoint_every, 4);
+        assert_eq!(c.soak.trunk_weight, 2);
+        assert_eq!(c.soak.switch_weight, 3);
         assert!(c.apply_kv_text("soak.bogus = 1").is_err());
 
         let s = Config::soak_defaults();

@@ -12,6 +12,7 @@
 //! | `BENCH_monitor.json`  | Fig 19 window sweep + Table 5 monitor overhead   |
 //! | `BENCH_train.json`    | Fig 11 1F1B training throughput per transport    |
 //! | `BENCH_simcore.json`  | §Perf L3 allocator work per network change       |
+//! | `BENCH_fabric.json`   | §Fault domains trunk-down plane failover + RCA   |
 //!
 //! Everything is simulated time, so the numbers are bit-stable across runs
 //! and machines (same config + seed ⇒ same JSON), which is what makes them
@@ -19,7 +20,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::ccl::{ClusterSim, CollKind};
 use crate::config::Config;
@@ -37,22 +38,37 @@ use super::experiments;
 pub struct BenchOpts {
     /// Smaller sizes / fewer points — used by tests and smoke runs.
     pub quick: bool,
+    /// Run only the named suite (`vccl bench fabric`); None = all suites.
+    pub suite: Option<String>,
 }
 
-/// Run all four suites and write `BENCH_*.json` into `out_dir`.
+/// The suite registry: `vccl bench <name>` accepts any first column.
+const SUITES: &[(&str, fn(&Config, &BenchOpts) -> BenchReport)] = &[
+    ("p2p", bench_p2p),
+    ("failover", bench_failover),
+    ("monitor", bench_monitor),
+    ("train", bench_train),
+    ("simcore", bench_simcore),
+    ("fabric", bench_fabric),
+];
+
+/// Run the selected suites and write `BENCH_*.json` into `out_dir`.
 /// Returns the written paths.
 pub fn run_bench(cfg: &Config, out_dir: &Path, opts: &BenchOpts) -> Result<Vec<PathBuf>> {
+    if let Some(want) = opts.suite.as_deref() {
+        if !SUITES.iter().any(|(n, _)| *n == want) {
+            let names: Vec<&str> = SUITES.iter().map(|(n, _)| *n).collect();
+            return Err(anyhow!("unknown bench suite {want:?} (one of: {})", names.join(", ")));
+        }
+    }
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
-    let reports = [
-        bench_p2p(cfg, opts),
-        bench_failover(cfg, opts),
-        bench_monitor(cfg, opts),
-        bench_train(cfg, opts),
-        bench_simcore(cfg, opts),
-    ];
-    let mut paths = Vec::with_capacity(reports.len());
-    for rep in &reports {
+    let mut paths = Vec::new();
+    for (name, suite) in SUITES {
+        if opts.suite.as_deref().is_some_and(|w| w != *name) {
+            continue;
+        }
+        let rep = suite(cfg, opts);
         assert!(!rep.metrics.is_empty(), "bench {} produced no metrics", rep.bench);
         let path = out_dir.join(format!("BENCH_{}.json", rep.bench));
         std::fs::write(&path, rep.to_json())
@@ -285,6 +301,37 @@ pub fn bench_simcore(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     r
 }
 
+/// §Fault domains: the dual-plane trunk-down → plane failover → failback
+/// preset (see [`super::reliability::fabric_run`]) as machine-readable
+/// gates: plane-failover completeness, zero lost ops, goodput recovery and
+/// RCA trunk-to-switch attribution precision.
+pub fn bench_fabric(cfg: &Config, opts: &BenchOpts) -> BenchReport {
+    // One preset either way: the scenario is already smoke-sized.
+    let _ = opts;
+    let f = super::reliability::fabric_run(cfg);
+    let mut r = BenchReport::new(
+        "fabric",
+        "§Fault domains: trunk-down plane failover, failback, RCA attribution",
+    );
+    r.push("fabric.affected_conns", f.affected as f64, "count")
+        .push("fabric.migrated_conns", f.migrated as f64, "count")
+        .push("fabric.completeness", f.completeness(), "ratio")
+        .push("fabric.failbacks", f.failbacks as f64, "count")
+        .push("fabric.lost_ops", f.lost_ops as f64, "count")
+        .push("fabric.baseline_agg_gbps", f.baseline_gbps, "gbps")
+        .push("fabric.degraded_agg_gbps", f.degraded_gbps, "gbps")
+        .push("fabric.recovered_agg_gbps", f.recovered_gbps, "gbps")
+        .push(
+            "fabric.recovered_over_baseline",
+            f.recovered_gbps / f.baseline_gbps.max(1e-9),
+            "ratio",
+        )
+        .push("fabric.retry_window_ms", f.retry_window_ms, "ms")
+        .push("fabric.rca.switch_attributions", f.rca_attributed as f64, "count")
+        .push("fabric.rca.trunk_precision", f.rca_precision, "ratio");
+    r
+}
+
 /// Integer size label for metric names (`64KB`, `1MB` — never `64.0MB`:
 /// metric names are dotted paths, so no decimal point may appear).
 fn size_label(bytes: u64) -> String {
@@ -432,7 +479,7 @@ mod tests {
     #[test]
     fn suites_emit_metrics_quickly() {
         let cfg = Config::paper_defaults();
-        let opts = BenchOpts { quick: true };
+        let opts = BenchOpts { quick: true, ..Default::default() };
         for rep in [bench_monitor(&cfg, &opts), bench_train(&cfg, &opts), bench_simcore(&cfg, &opts)]
         {
             assert!(!rep.metrics.is_empty(), "{} empty", rep.bench);
@@ -440,12 +487,31 @@ mod tests {
         }
     }
 
+    /// `vccl bench fabric` writes exactly BENCH_fabric.json, with the CI
+    /// gate metrics present; an unknown suite is rejected up front.
+    #[test]
+    fn bench_suite_filter_selects_fabric_only() {
+        let dir = std::env::temp_dir().join("vccl_bench_fabric_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = BenchOpts { quick: true, suite: Some("fabric".into()) };
+        let paths = run_bench(&Config::paper_defaults(), &dir, &opts).unwrap();
+        assert_eq!(paths.len(), 1);
+        assert!(paths[0].ends_with("BENCH_fabric.json"));
+        let json = std::fs::read_to_string(&paths[0]).unwrap();
+        for key in ["fabric.completeness", "fabric.lost_ops", "fabric.rca.trunk_precision"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let bad = BenchOpts { quick: true, suite: Some("nope".into()) };
+        assert!(run_bench(&Config::paper_defaults(), &dir, &bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     /// The incremental allocator and the O(1) RDMA accounting must beat
     /// their scan floors even on the quick 4-node workload (the 64-node
     /// gates live in benches/flownet.rs and benches/rdma.rs).
     #[test]
     fn simcore_reports_visit_reduction() {
-        let rep = bench_simcore(&Config::paper_defaults(), &BenchOpts { quick: true });
+        let rep = bench_simcore(&Config::paper_defaults(), &BenchOpts { quick: true, ..Default::default() });
         let get = |name: &str| {
             rep.metrics
                 .iter()

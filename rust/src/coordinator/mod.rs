@@ -36,8 +36,9 @@ pub enum Command {
     /// scenario, diagnose it from the flight recorder alone, and grade the
     /// diagnosis against the injected ground truth (see [`rca`]).
     Rca { id: String, symptom: Option<String>, out: Option<PathBuf> },
-    /// `vccl bench [--out-dir d] [--quick]` — emit `BENCH_*.json`.
-    Bench { out_dir: PathBuf, quick: bool },
+    /// `vccl bench [suite] [--out-dir d] [--quick]` — emit `BENCH_*.json`
+    /// (all suites, or just the named one, e.g. `vccl bench fabric`).
+    Bench { out_dir: PathBuf, quick: bool, suite: Option<String> },
     /// `vccl soak [--sim-days F] [--quick] [--out-dir d] [--resume ckpt]
     /// [--stop-after-ckpts N]` — time-compressed MTBF fault soak with
     /// checkpoint/resume; emits `BENCH_soak.json` (see [`soak`]).
@@ -77,6 +78,15 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
             .next()
             .ok_or_else(|| anyhow!("usage: vccl {cmd} <id> (try `vccl {cmd} list`)"))?
             .clone();
+    }
+    // `vccl bench [suite]` — an optional positional suite filter.
+    let mut suite = None;
+    if cmd == "bench" {
+        if let Some(next) = it.peek() {
+            if !next.starts_with("--") {
+                suite = Some(it.next().expect("peeked").clone());
+            }
+        }
     }
     while let Some(flag) = it.next() {
         match flag.as_str() {
@@ -134,7 +144,7 @@ pub fn parse_args(args: &[String]) -> Result<(Command, Config)> {
         "exp" => Command::Exp { id: exp_id },
         "trace" => Command::Trace { id: exp_id, out, diff },
         "rca" => Command::Rca { id: exp_id, symptom, out },
-        "bench" => Command::Bench { out_dir, quick },
+        "bench" => Command::Bench { out_dir, quick, suite },
         "soak" => Command::Soak {
             out_dir,
             opts: soak::SoakOpts { quick, resume, stop_after_ckpts },
@@ -169,6 +179,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("scale64", "64-node (512-GPU) allreduce + failover sweep (§Perf L3)"),
     ("scale256", "256-node (2048-GPU) monitored allreduce + multi-failure sweep (§Perf L4)"),
     ("scale512", "512-node (4096-GPU) monitored allreduce + failover sweep (§Perf L5)"),
+    ("fabric", "§Fault domains: trunk-down → backup-plane failover → failback"),
 ];
 
 /// Run one experiment by id; returns the report text.
@@ -195,6 +206,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         "scale64" => experiments::scale64_cluster(cfg),
         "scale256" => experiments::scale256_cluster(cfg),
         "scale512" => experiments::scale512_cluster(cfg),
+        "fabric" => reliability::fabric_failover(cfg),
         "list" => {
             let mut out = String::new();
             for (id, desc) in EXPERIMENTS {
@@ -232,12 +244,14 @@ pub fn help_text() -> String {
          \x20                                          twice and prints the event-set delta\n\
          \x20 vccl rca <id|list|all> [--symptom S] [--out FILE]\n\
          \x20                                          run a fault-injection scenario\n\
-         \x20                                          (fig15|fig16|fig18|scale64), diagnose it\n\
+         \x20                                          (fig15|fig16|fig18|scale64|soak), diagnose it\n\
          \x20                                          from the flight recorder, grade against\n\
          \x20                                          the injected ground truth; --out writes\n\
          \x20                                          BENCH_rca.json\n\
-         \x20 vccl bench [--out-dir DIR] [--quick]     run the headline experiments and\n\
-         \x20                                          write BENCH_{p2p,failover,monitor,train,simcore}.json\n\
+         \x20 vccl bench [SUITE] [--out-dir DIR] [--quick]\n\
+         \x20                                          run the headline experiments and write\n\
+         \x20                                          BENCH_{p2p,failover,monitor,train,simcore,fabric}.json\n\
+         \x20                                          (SUITE restricts to one, e.g. `vccl bench fabric`)\n\
          \x20 vccl soak [--sim-days F] [--quick] [--out-dir DIR]\n\
          \x20           [--resume soak.ckpt] [--stop-after-ckpts N]\n\
          \x20                                          time-compressed MTBF fault soak with\n\
@@ -340,17 +354,29 @@ mod tests {
     fn parse_bench() {
         let (cmd, _) = parse_args(&argv("bench")).unwrap();
         match cmd {
-            Command::Bench { out_dir, quick } => {
+            Command::Bench { out_dir, quick, suite } => {
                 assert_eq!(out_dir, std::path::PathBuf::from("."));
                 assert!(!quick);
+                assert!(suite.is_none());
             }
             other => panic!("{other:?}"),
         }
         let (cmd, _) = parse_args(&argv("bench --out-dir /tmp/b --quick")).unwrap();
         match cmd {
-            Command::Bench { out_dir, quick } => {
+            Command::Bench { out_dir, quick, suite } => {
                 assert_eq!(out_dir, std::path::PathBuf::from("/tmp/b"));
                 assert!(quick);
+                assert!(suite.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        // Positional suite filter: `vccl bench fabric --quick`.
+        let (cmd, _) = parse_args(&argv("bench fabric --quick --out-dir /tmp/f")).unwrap();
+        match cmd {
+            Command::Bench { out_dir, quick, suite } => {
+                assert_eq!(out_dir, std::path::PathBuf::from("/tmp/f"));
+                assert!(quick);
+                assert_eq!(suite.as_deref(), Some("fabric"));
             }
             other => panic!("{other:?}"),
         }

@@ -16,10 +16,16 @@
 //! |           | fault captured mid-retry-window, leaving a hung op)          |
 //! | `scale64` | 64-node multi-victim: 2 flaps + 1 capacity degrade, with     |
 //! |           | the monitor on so the degrade is diagnosed via its verdicts  |
+//! | `soak`    | a traced MTBF soak (flaps + degrades + switch outages);      |
+//! |           | ground truth is the harness's own fault tape — ports graded  |
+//! |           | with [`rca::grade`], leaf outages with                       |
+//! |           | [`rca::grade_switches`]                                      |
 //!
 //! Victims are always the *sender-side* primary ports of rail-aligned
 //! P2P streams, so the injected port demonstrably carries the traffic the
-//! symptoms come from — ground truth without guesswork.
+//! symptoms come from — ground truth without guesswork. The soak scenario
+//! extends that to switch-class faults: its tape records the leaf id, and
+//! the stall's uplink walks Flow→Link→Switch into the outage window.
 
 use std::fmt::Write as _;
 
@@ -28,8 +34,9 @@ use anyhow::{anyhow, Result};
 use crate::ccl::{ClusterSim, CollKind, Event};
 use crate::config::Config;
 use crate::metrics::{BenchReport, Table};
-use crate::rca::{self, InjectedFault, RcaTopo};
+use crate::rca::{self, InjectedFault, InjectedSwitchFault, RcaTopo};
 use crate::sim::SimTime;
+use crate::soak::{SoakHarness, SoakParams, TapeKind};
 use crate::topology::RankId;
 use crate::trace::{Incident, TraceRecord, TraceSink};
 use crate::util::ByteSize;
@@ -40,15 +47,19 @@ pub const SCENARIOS: &[(&str, &str)] = &[
     ("fig16", "diagnosis ramp: fault→traffic gap grows per round"),
     ("fig18", "progressive multi-victim sweep with a hung op"),
     ("scale64", "64-node multi-victim: flaps + monitored degrade"),
+    ("soak", "traced MTBF soak graded against its own fault tape"),
 ];
 
 /// One executed scenario: the trace it recorded plus its ground truth.
+/// Port-class faults (flaps, NIC degrades) land in `injected`;
+/// switch-class faults (leaf outages) in `injected_switches`.
 #[derive(Debug)]
 pub struct Scenario {
     pub name: &'static str,
     pub records: Vec<TraceRecord>,
     pub incidents: Vec<Incident>,
     pub injected: Vec<InjectedFault>,
+    pub injected_switches: Vec<InjectedSwitchFault>,
     pub topo: RcaTopo,
 }
 
@@ -89,6 +100,7 @@ fn collect(
         records: sink.records(),
         incidents: sink.incidents(),
         injected,
+        injected_switches: Vec::new(),
         topo: RcaTopo::from_config(cfg),
     }
 }
@@ -245,6 +257,55 @@ pub fn scale64_scenario(cfg: &Config) -> Scenario {
     collect("scale64", &s.cfg, &sink, injected)
 }
 
+/// soak — the `vccl rca` pass over a soak run. Drives a short traced MTBF
+/// soak with flaps, NIC degrades and leaf-switch outages all weighted on,
+/// then grades the diagnosis against the harness's own ground-truth fault
+/// tape (the tape is the soak's injection log — no side-channel bookkeeping
+/// here). Trunk *degrades* are left out on purpose: a slow-but-alive trunk
+/// never stalls a flow, so its only symptom is the victim port's monitor
+/// verdict — port-level evidence the soak's in-band grading already scores.
+/// Switch-level attribution of hard trunk deaths is graded by the `fabric`
+/// bench instead, where the trunk actually goes down.
+pub fn soak_scenario(cfg: &Config) -> Scenario {
+    let mut base = Config::soak_defaults();
+    base.seed = cfg.seed;
+    let (c, sink) = traced(&base);
+    let mut p = SoakParams::from_config(&c);
+    p.bursts_total = 5;
+    p.mtbf_ns = 20_000_000_000; // ~3 arrivals per 60 s burst
+    p.mttr_ns = 30_000_000_000;
+    p.flap_weight = 1;
+    p.degrade_weight = 1;
+    p.trunk_weight = 0;
+    p.switch_weight = 1;
+    let mut h = SoakHarness::with_params(c, p);
+    while !h.done() {
+        h.run_burst();
+    }
+    assert!(!h.hung(), "the soak scenario must stay live");
+    let mut injected = Vec::new();
+    let mut injected_switches = Vec::new();
+    for e in h.fault_tape() {
+        match e.kind {
+            TapeKind::Flap | TapeKind::Degrade => {
+                injected.push(InjectedFault { port: e.id, at: SimTime::ns(e.at_ns) });
+            }
+            TapeKind::TrunkDegrade | TapeKind::SwitchDown => {
+                injected_switches
+                    .push(InjectedSwitchFault { switch: e.id, at: SimTime::ns(e.at_ns) });
+            }
+        }
+    }
+    Scenario {
+        name: "soak",
+        records: sink.records(),
+        incidents: sink.incidents(),
+        injected,
+        injected_switches,
+        topo: RcaTopo::from_config(&h.sim.cfg),
+    }
+}
+
 /// Run one scenario by id.
 pub fn run_scenario(id: &str, cfg: &Config) -> Result<Scenario> {
     match id {
@@ -252,17 +313,34 @@ pub fn run_scenario(id: &str, cfg: &Config) -> Result<Scenario> {
         "fig16" => Ok(fig16_scenario(cfg)),
         "fig18" => Ok(fig18_scenario(cfg)),
         "scale64" => Ok(scale64_scenario(cfg)),
+        "soak" => Ok(soak_scenario(cfg)),
         other => Err(anyhow!("unknown rca scenario {other:?} (try `vccl rca list`)")),
     }
 }
 
-/// Analysis + grading of one executed scenario, rendered.
-pub fn diagnose(sc: &Scenario, cfg: &Config, symptom: Option<&str>) -> (String, rca::Grade) {
+/// Analysis + grading of one executed scenario, rendered. The third tuple
+/// element is the switch-level grade — present only for scenarios whose
+/// ground truth includes switch-class faults (the soak tape).
+pub fn diagnose(
+    sc: &Scenario,
+    cfg: &Config,
+    symptom: Option<&str>,
+) -> (String, rca::Grade, Option<rca::Grade>) {
     let g = rca::build(&sc.records, sc.topo);
     let report = rca::analyze(&g, &cfg.rca, symptom);
     let grade = rca::grade(&report, &sc.injected);
     let mut out = rca::render_report(&report, sc.name);
     out.push_str(&rca::render_grade(&grade, sc.name));
+    let switch_grade = (!sc.injected_switches.is_empty()).then(|| {
+        let sg = rca::grade_switches(&report, &sc.injected_switches);
+        let _ = writeln!(
+            out,
+            "\nground truth (switch-level) — {}: {} injected switch(es), \
+             {} attribution(s), precision {:.2}, recall {:.2}",
+            sc.name, sg.injected, sg.attributed, sg.precision, sg.recall,
+        );
+        sg
+    });
     // Incident join (no string parsing): the triggering verdict/failover
     // port plus the live in-flight transfers frozen with each snapshot —
     // the operator's view of what a hung op was actually waiting on.
@@ -288,7 +366,7 @@ pub fn diagnose(sc: &Scenario, cfg: &Config, symptom: Option<&str>) -> (String, 
         let _ = writeln!(out, "\nincidents ({}):\n", sc.incidents.len());
         out.push_str(&t.render());
     }
-    (out, grade)
+    (out, grade, switch_grade)
 }
 
 /// The `vccl rca <id>` entry point: run the scenario set, diagnose, grade,
@@ -301,15 +379,15 @@ pub fn run_rca(id: &str, cfg: &Config, symptom: Option<&str>) -> Result<(String,
             for (n, d) in SCENARIOS {
                 let _ = writeln!(out, "{n:10} {d}");
             }
-            return Ok((out, BenchReport::new("rca", "Fig 15/16/18 + scale64 diagnosis")));
+            return Ok((out, BenchReport::new("rca", "Fig 15/16/18 + scale64 + soak diagnosis")));
         }
         one => vec![one],
     };
     let mut out = String::new();
-    let mut bench = BenchReport::new("rca", "Fig 15/16/18 + scale64 diagnosis");
+    let mut bench = BenchReport::new("rca", "Fig 15/16/18 + scale64 + soak diagnosis");
     for (i, sid) in ids.iter().enumerate() {
         let sc = run_scenario(sid, cfg)?;
-        let (text, grade) = diagnose(&sc, cfg, symptom);
+        let (text, grade, switch_grade) = diagnose(&sc, cfg, symptom);
         if i > 0 {
             out.push('\n');
         }
@@ -330,6 +408,15 @@ pub fn run_rca(id: &str, cfg: &Config, symptom: Option<&str>) -> Result<(String,
                 "ms",
             );
         }
+        // Switch-class ground truth (the soak tape's leaf outages) gets its
+        // own BENCH rows so CI can gate fabric attribution separately.
+        if let Some(sg) = switch_grade {
+            bench
+                .push(format!("rca.{sid}.switch_injected"), sg.injected as f64, "count")
+                .push(format!("rca.{sid}.switch_attributed"), sg.attributed as f64, "count")
+                .push(format!("rca.{sid}.switch_precision"), sg.precision, "ratio")
+                .push(format!("rca.{sid}.switch_recall"), sg.recall, "ratio");
+        }
     }
     Ok((out, bench))
 }
@@ -346,7 +433,8 @@ mod tests {
     fn fig16_tta_ramps_with_symptom_availability() {
         let cfg = Config::paper_defaults();
         let sc = fig16_scenario(&cfg);
-        let (text, grade) = diagnose(&sc, &cfg, None);
+        let (text, grade, switch_grade) = diagnose(&sc, &cfg, None);
+        assert!(switch_grade.is_none(), "fig16 injects no switch-class faults");
         assert!(grade.recall >= 0.9, "recall {}\n{text}", grade.recall);
         assert!(grade.precision >= 0.9, "precision {}\n{text}", grade.precision);
         // Ports 0..6 were downed in round order; tta_ns is sorted by port.
@@ -360,10 +448,36 @@ mod tests {
                 "round {r}: tta {tta_ms} ms vs gap {gap_ms} ms\n{text}"
             );
         }
-        let (only, _) = diagnose(&sc, &cfg, Some("qp-retry"));
+        let (only, _, _) = diagnose(&sc, &cfg, Some("qp-retry"));
         assert!(text.len() > only.len());
         assert!(only.contains("qp-retry"), "{only}");
         assert!(!only.contains("qp-error"), "{only}");
+    }
+
+    /// The soak satellite: `vccl rca soak` grades the diagnosis against the
+    /// harness's own fault tape. Soft gates as the other multi-victim
+    /// scenarios use — nothing may be mis-attributed at either level, and
+    /// most victims must be recalled.
+    #[test]
+    fn soak_scenario_grades_against_the_fault_tape() {
+        let cfg = Config::paper_defaults();
+        let sc = soak_scenario(&cfg);
+        assert!(
+            !sc.injected.is_empty() && !sc.injected_switches.is_empty(),
+            "5 bursts at 20 s MTBF must land both port- and switch-class faults \
+             ({} ports, {} switches)",
+            sc.injected.len(),
+            sc.injected_switches.len()
+        );
+        let (text, grade, switch_grade) = diagnose(&sc, &cfg, None);
+        let sg = switch_grade.expect("the soak tape carries switch faults");
+        assert!(grade.precision >= 0.9, "port precision {}\n{text}", grade.precision);
+        assert!(grade.recall >= 0.6, "port recall {}\n{text}", grade.recall);
+        // Switch attributions only arise inside an outage's fault window,
+        // so every one must name an injected leaf.
+        assert!(sg.precision >= 0.9, "switch precision {}\n{text}", sg.precision);
+        assert!(sg.recall >= 0.5, "switch recall {}\n{text}", sg.recall);
+        assert!(text.contains("ground truth (switch-level) — soak"), "{text}");
     }
 
     #[test]

@@ -60,8 +60,12 @@ fn main() {
                 Ok(())
             })
         }
-        Command::Bench { out_dir, quick } => {
-            coordinator::bench::run_bench(&cfg, &out_dir, &coordinator::bench::BenchOpts { quick })
+        Command::Bench { out_dir, quick, suite } => {
+            coordinator::bench::run_bench(
+                &cfg,
+                &out_dir,
+                &coordinator::bench::BenchOpts { quick, suite },
+            )
                 .map(|paths| {
                     for p in paths {
                         println!("wrote {}", p.display());

@@ -419,6 +419,12 @@ impl RdmaNet {
         fabric.path_up(self.qps[&qp].path())
     }
 
+    /// First dead link on this QP's path, if any — names the fault domain
+    /// that killed the path even when both endpoint ports are still up.
+    pub fn qp_first_dead_link(&self, qp: QpId, fabric: &Fabric) -> Option<LinkId> {
+        fabric.first_dead_link(self.qps[&qp].path())
+    }
+
     /// Total un-ACKed bytes on a port's QPs — the monitor's
     /// "remaining-to-send" (RTS) signal (§3.4 pinpointing condition ii).
     /// §Perf L4: one counter lookup, called once per successful WC; debug
@@ -783,11 +789,19 @@ impl RdmaNet {
         up: bool,
         now: SimTime,
     ) -> NetOutput {
-        let mut out = NetOutput::default();
         // Both directions flap as one batch: a single component recompute
         // (and one generation bump per affected flow) instead of two.
-        let links = fabric.port_links(port);
-        out.timers.extend(self.flows.set_links_up(&links, up, now));
+        self.set_links_up(&fabric.port_links(port), up, now)
+    }
+
+    /// Link-level state change (§Fault domains): the trunk/switch analog of
+    /// [`RdmaNet::set_port_up`]. A downed trunk stalls crossing flows and
+    /// arms the retry window on every QP whose *path* transits the link —
+    /// even though neither endpoint port flapped, which is exactly the
+    /// path-death class port-centric perception misses.
+    pub fn set_links_up(&mut self, links: &[LinkId], up: bool, now: SimTime) -> NetOutput {
+        let mut out = NetOutput::default();
+        out.timers.extend(self.flows.set_links_up(links, up, now));
         self.stats.flap_events += 1;
         self.stats.flap_scan_floor += self.qps.len() as u64;
         // Sorted for determinism: retry windows armed here schedule engine
@@ -795,7 +809,7 @@ impl RdmaNet {
         // The crossing set is already sorted (index invariant), so the
         // iteration order matches the old sorted full scan restricted to
         // the QPs that produce output.
-        let qp_ids = self.affected_qps(&links);
+        let qp_ids = self.affected_qps(links);
         for qp_id in qp_ids {
             self.stats.flap_qp_visits += 1;
             if self.qps[&qp_id].state != QpState::Rts {
@@ -954,6 +968,56 @@ mod tests {
         let window_ns = net.cfg().retry_window_ns();
         let expect = 100_000 + window_ns;
         assert_eq!(lp.wcs[0].completed_at.as_ns(), expect);
+    }
+
+    #[test]
+    fn trunk_down_arms_retry_on_crossing_qps_only() {
+        let (mut fabric, mut net) = setup();
+        // Cross-rail QP transits trunk_up(0,0); the aligned QP rides its
+        // own rail's trunk pair (rail 1) and must be untouched.
+        let crossing = net.create_qp(&fabric, port(0, 0), port(1, 5));
+        let aligned = net.create_qp(&fabric, port(0, 1), port(1, 1));
+        let mut lp = Loop::new();
+        let (_, out) = net.post_send(crossing, 64 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        let (_, out) = net.post_send(aligned, 8 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        // Kill the trunk at 100us: neither endpoint port flaps, yet the
+        // crossing QP's path is dead and its retry window must arm.
+        let t = fabric.trunk_up(0, 0);
+        fabric.set_link_up(t, false);
+        let out = net.set_links_up(&[t], false, SimTime::us(100));
+        lp.absorb(out);
+        assert!(!net.qp_path_up(crossing, &fabric), "path-death perceived");
+        assert!(net.qp_path_up(aligned, &fabric));
+        lp.run(&mut net, SimTime::s(5));
+        let by_qp = |q: QpId| lp.wcs.iter().find(|w| w.qp == q).unwrap();
+        assert_eq!(by_qp(crossing).status, CompletionStatus::RetryExceeded);
+        assert_eq!(
+            by_qp(crossing).completed_at.as_ns(),
+            100_000 + net.cfg().retry_window_ns()
+        );
+        assert_eq!(by_qp(aligned).status, CompletionStatus::Success);
+        assert_eq!(net.qp_state(crossing), QpState::Error);
+        assert_eq!(net.qp_state(aligned), QpState::Rts);
+    }
+
+    #[test]
+    fn trunk_flap_within_window_recovers_silently() {
+        let (mut fabric, mut net) = setup();
+        let qp = net.create_qp(&fabric, port(0, 0), port(1, 5));
+        let mut lp = Loop::new();
+        let (_, out) = net.post_send(qp, 8 << 20, SimTime::ZERO, 0);
+        lp.absorb(out);
+        let t = fabric.trunk_down(5, 0);
+        fabric.set_link_up(t, false);
+        lp.absorb(net.set_links_up(&[t], false, SimTime::us(50)));
+        fabric.set_link_up(t, true);
+        lp.absorb(net.set_links_up(&[t], true, SimTime::ms(2)));
+        lp.run(&mut net, SimTime::s(5));
+        assert_eq!(lp.wcs.len(), 1);
+        assert_eq!(lp.wcs[0].status, CompletionStatus::Success);
+        assert_eq!(net.qp_state(qp), QpState::Rts);
     }
 
     #[test]

@@ -19,11 +19,14 @@
 //!    | `ConnBound`                  | Conn→Qp, Qp→Port                       |
 //!    | `WrPosted`/`WrCompleted`/`QpReset` | Qp→Port                          |
 //!    | `QpRetryArmed`/`QpError`     | Qp→Port (+ symptom)                    |
-//!    | `FlowStalled { link: Some }` | Flow→Link, Link→Port (NIC uplinks)     |
+//!    | `FlowStalled { link: Some }` | Flow→Link, Link→Port, Link→Switch      |
 //!    | `PointerMigrated`            | Xfer→Conn, Conn→Port (+ symptom)       |
+//!    | `PathMigrated`               | Xfer→Conn, Conn→Link, Link→Switch      |
+//!    | `TrunkDegraded`/`TrunkRestored` | Link→Switch (window on the switch)  |
 //!    | `OpSubmitted` w/o `OpFinished` | Op→each in-interval symptom entity   |
 //!
-//!    The same pass opens **fault windows** — `PortDown`..`PortUp` and
+//!    The same pass opens **fault windows** — `PortDown`..`PortUp`,
+//!    `SwitchDown`..`SwitchUp`, `TrunkDegraded`..`TrunkRestored` and
 //!    `LinkCapacity` degrade..restore pairs — and collects **symptoms**
 //!    (stalls, armed/expired retry windows, failovers, non-healthy monitor
 //!    verdicts, ops unfinished at trace end), folded by (kind, entity) so
@@ -61,6 +64,13 @@ use crate::trace::{TraceEvent, TraceRecord};
 pub struct RcaTopo {
     /// Links `0..nic_links` are NIC uplinks; link `l` serves port `l / 2`.
     pub nic_links: usize,
+    /// Ports per NIC (planes): 2 on dual-port RNICs, else 1.
+    pub ports_per_nic: usize,
+    pub nics_per_node: usize,
+    /// Rail count (leaf switches per plane). Zero when the switch layout
+    /// is unknown — fault windows then stay on bare link nodes and no
+    /// Link→Switch edges are derived.
+    pub rails: usize,
 }
 
 impl RcaTopo {
@@ -68,12 +78,38 @@ impl RcaTopo {
         let ports_per_nic = if cfg.topo.dual_port_nics { 2 } else { 1 };
         RcaTopo {
             nic_links: cfg.topo.num_nodes * cfg.topo.nics_per_node * ports_per_nic * 2,
+            ports_per_nic,
+            nics_per_node: cfg.topo.nics_per_node,
+            rails: cfg.topo.rails,
         }
+    }
+
+    /// Leaf switches (rails × planes); trunk pair `i` belongs to leaf `i`.
+    pub fn leaf_switches(&self) -> usize {
+        self.rails * self.ports_per_nic
     }
 
     /// The port ordinal a NIC uplink belongs to; `None` for trunk links.
     pub fn link_port(&self, link: usize) -> Option<usize> {
         (link < self.nic_links).then_some(link / 2)
+    }
+
+    /// The leaf switch that owns a link (fabric layout contract): a NIC
+    /// uplink belongs to the leaf of its (rail, plane); trunk pairs follow
+    /// the NIC uplinks in the table, one up/down pair per leaf. `None`
+    /// past the trunk region (NVLink) or when the switch layout is
+    /// unknown (`rails == 0`).
+    pub fn link_switch(&self, link: usize) -> Option<usize> {
+        if self.rails == 0 || self.ports_per_nic == 0 {
+            return None;
+        }
+        if let Some(t) = link.checked_sub(self.nic_links) {
+            return (t / 2 < self.leaf_switches()).then_some(t / 2);
+        }
+        let port_idx = link / 2;
+        let local = (port_idx / self.ports_per_nic) % self.nics_per_node.max(1);
+        let plane = port_idx % self.ports_per_nic;
+        Some((local % self.rails) * self.ports_per_nic + plane)
     }
 }
 
@@ -82,6 +118,7 @@ impl RcaTopo {
 pub enum Node {
     Port(usize),
     Link(usize),
+    Switch(usize),
     Qp(u64),
     Conn(usize),
     Flow(u64),
@@ -94,6 +131,7 @@ impl Node {
         match self {
             Node::Port(p) => format!("port {p}"),
             Node::Link(l) => format!("link {l}"),
+            Node::Switch(s) => format!("switch {s}"),
             Node::Qp(q) => format!("qp {q}"),
             Node::Conn(c) => format!("conn {c}"),
             Node::Flow(f) => format!("flow {f}"),
@@ -116,6 +154,10 @@ pub enum EdgeKind {
     FlowOnLink,
     /// NIC uplink → its port (static layout, via [`RcaTopo`]).
     LinkOnPort,
+    /// Trunk link → the switch that owns it (fault-domain hierarchy).
+    LinkOnSwitch,
+    /// Conn → the dead link a path migration named (`PathMigrated`).
+    ConnOnLink,
     /// Xfer → the connection whose pointers migrated.
     XferOnConn,
     /// Op → an entity symptomatic inside the op's open interval.
@@ -131,6 +173,8 @@ impl EdgeKind {
             EdgeKind::ConnOnPort => "failed over from",
             EdgeKind::FlowOnLink => "stalled on",
             EdgeKind::LinkOnPort => "uplink of",
+            EdgeKind::LinkOnSwitch => "member of",
+            EdgeKind::ConnOnLink => "migrated off",
             EdgeKind::XferOnConn => "carried by",
             EdgeKind::OpOverlap => "overlaps",
         }
@@ -260,6 +304,12 @@ pub fn build(records: &[TraceRecord], topo: RcaTopo) -> CausalGraph {
                     if let Some(p) = topo.link_port(l) {
                         g.add_edge(Node::Link(l), Node::Port(p), EdgeKind::LinkOnPort);
                     }
+                    // A leaf-switch outage kills NIC uplinks without a
+                    // PortDown: the stall must be able to walk up to the
+                    // owning switch's fault window.
+                    if let Some(s) = topo.link_switch(l) {
+                        g.add_edge(Node::Link(l), Node::Switch(s), EdgeKind::LinkOnSwitch);
+                    }
                 }
                 let detail = match link {
                     Some(l) => format!("rate -> 0 (link {l} down)"),
@@ -297,11 +347,43 @@ pub fn build(records: &[TraceRecord], topo: RcaTopo) -> CausalGraph {
                 g.close_fault(Node::Port(port), r.at);
             }
             TraceEvent::LinkCapacity { link, gbps, was_gbps } => {
-                let node = topo.link_port(link).map_or(Node::Link(link), Node::Port);
+                // NIC-uplink degrades hang off the port; trunk degrades
+                // off the owning leaf switch (with a Link→Switch edge so
+                // flow stalls on the trunk walk up to it); bare link only
+                // when the switch layout is unknown.
+                let node = match (topo.link_port(link), topo.link_switch(link)) {
+                    (Some(p), _) => Node::Port(p),
+                    (None, Some(s)) => {
+                        g.add_edge(Node::Link(link), Node::Switch(s), EdgeKind::LinkOnSwitch);
+                        Node::Switch(s)
+                    }
+                    (None, None) => Node::Link(link),
+                };
                 if gbps < was_gbps {
                     g.open_fault(node, "degraded", r.at);
                 } else {
                     g.close_fault(node, r.at);
+                }
+            }
+            TraceEvent::SwitchDown { switch } => {
+                g.open_fault(Node::Switch(switch), "switch-down", r.at);
+            }
+            TraceEvent::SwitchUp { switch } => {
+                g.close_fault(Node::Switch(switch), r.at);
+            }
+            TraceEvent::TrunkDegraded { link, switch, .. } => {
+                g.add_edge(Node::Link(link), Node::Switch(switch), EdgeKind::LinkOnSwitch);
+                g.open_fault(Node::Switch(switch), "trunk-down", r.at);
+            }
+            TraceEvent::TrunkRestored { link, switch, .. } => {
+                g.add_edge(Node::Link(link), Node::Switch(switch), EdgeKind::LinkOnSwitch);
+                g.close_fault(Node::Switch(switch), r.at);
+            }
+            TraceEvent::PathMigrated { conn, xfer, link } => {
+                g.add_edge(Node::Xfer(xfer), Node::Conn(conn), EdgeKind::XferOnConn);
+                g.add_edge(Node::Conn(conn), Node::Link(link), EdgeKind::ConnOnLink);
+                if let Some(s) = topo.link_switch(link) {
+                    g.add_edge(Node::Link(link), Node::Switch(s), EdgeKind::LinkOnSwitch);
                 }
             }
             TraceEvent::OpSubmitted { op, kind, bytes } => {
@@ -370,6 +452,15 @@ impl Attribution {
     /// The port the top confident cause names — what grading counts.
     pub fn attributed_port(&self) -> Option<usize> {
         self.causes.iter().find(|c| c.confident).and_then(|c| c.port)
+    }
+
+    /// The switch the top confident cause names — what fabric-level
+    /// grading ([`grade_switches`]) counts.
+    pub fn attributed_switch(&self) -> Option<usize> {
+        self.causes.iter().find(|c| c.confident).and_then(|c| match c.node {
+            Node::Switch(s) => Some(s),
+            _ => None,
+        })
     }
 }
 
@@ -483,7 +574,7 @@ impl CausalGraph {
             // infrastructure node so the operator still gets a pointer.
             let nearest = dist
                 .iter()
-                .filter(|(n, _)| matches!(n, Node::Port(_) | Node::Link(_)))
+                .filter(|(n, _)| matches!(n, Node::Port(_) | Node::Link(_) | Node::Switch(_)))
                 .map(|(n, h)| (*h, *n))
                 .min();
             if let Some((hops, n)) = nearest {
@@ -638,6 +729,48 @@ pub fn grade(report: &RcaReport, injected: &[InjectedFault]) -> Grade {
     }
 }
 
+/// Ground truth for a fabric-level fault: the owning switch of the downed
+/// trunk (or the downed switch itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedSwitchFault {
+    pub switch: usize,
+    pub at: SimTime,
+}
+
+/// Score a report against injected fabric faults: same shape as [`grade`]
+/// but keyed on the switch the top confident cause names. `tta_ns` entries
+/// are keyed by switch id.
+pub fn grade_switches(report: &RcaReport, injected: &[InjectedSwitchFault]) -> Grade {
+    let switches: BTreeSet<usize> = injected.iter().map(|f| f.switch).collect();
+    let mut attributed = 0usize;
+    let mut correct = 0usize;
+    let mut tta: BTreeMap<usize, u64> = BTreeMap::new();
+    for a in &report.attributions {
+        let Some(s) = a.attributed_switch() else { continue };
+        attributed += 1;
+        if switches.contains(&s) {
+            correct += 1;
+            if let Some(f) = injected
+                .iter()
+                .filter(|f| f.switch == s && f.at <= a.symptom.at)
+                .max_by_key(|f| f.at.as_ns())
+            {
+                let d = a.symptom.at.as_ns() - f.at.as_ns();
+                tta.entry(s).and_modify(|e| *e = (*e).min(d)).or_insert(d);
+            }
+        }
+    }
+    Grade {
+        injected: switches.len(),
+        attributed,
+        correct,
+        recalled: tta.len(),
+        precision: if attributed == 0 { 1.0 } else { correct as f64 / attributed as f64 },
+        recall: if switches.is_empty() { 1.0 } else { tta.len() as f64 / switches.len() as f64 },
+        tta_ns: tta.into_iter().collect(),
+    }
+}
+
 /// How many causal chains [`render_report`] prints in full.
 const MAX_CHAINS: usize = 3;
 
@@ -768,8 +901,9 @@ mod tests {
         RcaConfig::default()
     }
 
+    /// paper_defaults shape: 2 nodes × 8 NICs single-port, 8 leaves.
     fn topo32() -> RcaTopo {
-        RcaTopo { nic_links: 32 }
+        RcaTopo { nic_links: 32, ports_per_nic: 1, nics_per_node: 8, rails: 8 }
     }
 
     fn rec(ns: u64, seq: u64, ev: TraceEvent) -> TraceRecord {
@@ -835,14 +969,29 @@ mod tests {
         let cfg = Config::paper_defaults(); // 2 nodes x 8 NICs, single-port
         let t = RcaTopo::from_config(&cfg);
         assert_eq!(t.nic_links, 32);
+        assert_eq!(t.leaf_switches(), 8);
         assert_eq!(t.link_port(0), Some(0));
         assert_eq!(t.link_port(1), Some(0));
         assert_eq!(t.link_port(7), Some(3));
         assert_eq!(t.link_port(31), Some(15));
         assert_eq!(t.link_port(32), None);
+        // NIC uplinks map to the leaf of their (rail, plane): node 1's
+        // NIC 7 (links 30/31) hangs off leaf 7 just like node 0's NIC 7.
+        assert_eq!(t.link_switch(4), Some(2));
+        assert_eq!(t.link_switch(31), Some(7));
+        // Trunk pairs map to their owning leaf; NVLink links to nothing.
+        assert_eq!(t.link_switch(32), Some(0));
+        assert_eq!(t.link_switch(33), Some(0));
+        assert_eq!(t.link_switch(40), Some(4));
+        assert_eq!(t.link_switch(47), Some(7));
+        assert_eq!(t.link_switch(48), None); // past the trunk region
         let mut cfg = Config::paper_defaults();
         cfg.topo.dual_port_nics = true;
-        assert_eq!(RcaTopo::from_config(&cfg).nic_links, 64);
+        let t = RcaTopo::from_config(&cfg);
+        assert_eq!(t.nic_links, 64);
+        assert_eq!(t.leaf_switches(), 16);
+        // Dual-plane: NIC 2's plane-1 uplink belongs to leaf (rail 2, plane 1).
+        assert_eq!(t.link_switch(2 * 4 + 2), Some(2 * 2 + 1));
     }
 
     #[test]
@@ -943,14 +1092,66 @@ mod tests {
         assert_eq!(causes[0].node, Node::Port(2));
         assert_eq!(causes[0].kind, "degraded");
         assert!(causes[0].confident);
-        // Trunk links keep the window on the link node.
+        // Trunk degrades attribute to the owning leaf switch (link 40 ->
+        // trunk pair 4) with the Link→Switch edge in place.
         let recs = vec![rec(
             0,
             0,
             TraceEvent::LinkCapacity { link: 40, gbps: 50.0, was_gbps: 400.0 },
         )];
         let g = build(&recs, topo32());
+        assert_eq!(g.faults[0].node, Node::Switch(4));
+        // Unknown switch layout: the window stays on the bare link node.
+        let g = build(
+            &recs,
+            RcaTopo { nic_links: 32, ports_per_nic: 1, nics_per_node: 8, rails: 0 },
+        );
         assert_eq!(g.faults[0].node, Node::Link(40));
+    }
+
+    /// §Fault domains: a trunk capacity degrade plus the stalls it causes
+    /// walk Flow → Link → Switch, and fabric-level grading scores the
+    /// switch attribution.
+    #[test]
+    fn trunk_symptoms_attribute_to_owning_switch() {
+        let recs = vec![
+            // Trunk link 40 (leaf 4) dies at 2 ms; the event names its
+            // owning switch, the stalled flow names only the link.
+            rec(
+                2_000_000,
+                0,
+                TraceEvent::TrunkDegraded { link: 40, switch: 4, gbps: 0.0, was_gbps: 400.0 },
+            ),
+            rec(2_100_000, 1, TraceEvent::FlowStalled { flow: 5, link: Some(40) }),
+            rec(
+                10_000_000,
+                2,
+                TraceEvent::PathMigrated { conn: 0, xfer: 7, link: 40 },
+            ),
+            rec(3_000_000_000, 3, TraceEvent::TrunkRestored { link: 40, switch: 4, gbps: 400.0 }),
+        ];
+        let g = build(&recs, topo32());
+        assert_eq!(g.faults.len(), 1);
+        assert_eq!(g.faults[0].node, Node::Switch(4));
+        assert_eq!(g.faults[0].kind, "trunk-down");
+        assert_eq!(g.faults[0].until, Some(SimTime::ns(3_000_000_000)));
+        let stall = g.symptoms.iter().find(|s| s.kind == SymptomKind::FlowStall).unwrap();
+        let causes = g.walk(stall, &rcfg());
+        assert!(causes[0].confident);
+        assert_eq!(causes[0].node, Node::Switch(4));
+        assert_eq!(causes[0].hops, 2); // Flow -> Link -> Switch
+        let report = analyze(&g, &rcfg(), None);
+        let gr = grade_switches(
+            &report,
+            &[InjectedSwitchFault { switch: 4, at: SimTime::ms(2) }],
+        );
+        assert_eq!(gr.injected, 1);
+        assert_eq!(gr.recalled, 1);
+        assert_eq!(gr.precision, 1.0);
+        assert_eq!(gr.recall, 1.0);
+        // No PORT is ever blamed for a trunk death.
+        let pgr = grade(&report, &[]);
+        assert_eq!(pgr.attributed, 0, "switch attributions must not count as ports");
     }
 
     #[test]

@@ -10,8 +10,9 @@
 //! [`ClusterSim::checkpoint`] requires. Future events (a port heal, a QP
 //! warm-up) may be pending at a boundary; they serialize with the engine.
 //!
-//! Two fault classes, drawn from one Poisson process ([`FaultClock`],
-//! exponential inter-arrivals at the configured MTBF):
+//! Four fault classes, drawn from one Poisson process ([`FaultClock`],
+//! exponential inter-arrivals at the configured MTBF), mixed by the
+//! `soak.{flap,degrade,trunk,switch}` weights:
 //!
 //! - **port flaps** — `inject_port_down` at the fault time, `inject_port_up`
 //!   MTTR later, both as engine events. Exercises the §3.3 failover /
@@ -22,6 +23,22 @@
 //!   collapsed rate, which is what the §3.4 window monitor exists to catch;
 //!   graded as a per-(port, burst) confusion matrix against the monitor's
 //!   non-`Healthy` verdict deltas.
+//! - **trunk degrades** (`soak.trunk_weight`, §Fault domains) — the trunk
+//!   link of the victim's rail is cut ÷[`DEGRADE_FACTOR`] instead of its
+//!   NIC uplink. Both endpoint ports stay pristine; the collapse is only
+//!   visible end-to-end, and RCA must attribute it to the owning switch.
+//!   Victim exclusion is keyed on the resolved [`LinkId`] — two victims on
+//!   the same rail resolve to the SAME trunk, and a second booking would
+//!   record the already-cut capacity as "original".
+//! - **switch downs** (`soak.switch_weight`) — the victim rail's leaf
+//!   switch dies whole (`inject_switch_down`), cascading to every member
+//!   link; heals MTTR later. Per victim this grades exactly like a flap
+//!   (one failover to the backup plane/rail, one failback), but the
+//!   perception path is path-death, never a port flap.
+//!
+//! Every injection is appended to the **fault tape** ([`TapeEntry`], the
+//! soak's ground truth) so `vccl rca` can diagnose a soak's trace ring and
+//! grade precision/recall against the injected schedule.
 //!
 //! Fault targets are ranks `1..=gpus_per_node-2` of node 0: their primary
 //! ports carry exactly one steady P2P flow per burst (never a ring-crossing
@@ -33,9 +50,9 @@
 //!
 //! ## Checkpoint format
 //!
-//! `SoakHarness::checkpoint` emits a `VCCLSOAK v1` header (harness
-//! counters, both RNG streams, the fault clock, active faults, the
-//! per-port verdict baseline) followed by the embedded `VCCLCKPT` stream
+//! `SoakHarness::checkpoint` emits a `VCCLSOAK v2` header (harness
+//! counters, both RNG streams, the fault clock, active faults, the fault
+//! tape, the per-port verdict baseline) followed by the embedded `VCCLCKPT` stream
 //! of the simulation. A version bump is REQUIRED whenever any serialized
 //! structure changes shape. On resume, `sim_days` and `checkpoint_every`
 //! may differ from the checkpointed run (extend a soak, change cadence);
@@ -126,9 +143,13 @@ pub struct SoakParams {
     pub bursts_total: u64,
     /// Checkpoint cadence in bursts (0 = never).
     pub checkpoint_every: u64,
-    /// Relative weights of the two fault kinds.
+    /// Relative weights of the four fault kinds. The trunk/switch weights
+    /// default to 0 so the pre-fabric fault mix (and its RNG stream) is
+    /// unchanged unless explicitly opted into.
     pub flap_weight: u32,
     pub degrade_weight: u32,
+    pub trunk_weight: u32,
+    pub switch_weight: u32,
     /// Run the per-burst DP AllReduce (off = pure P2P soak).
     pub allreduce: bool,
 }
@@ -145,9 +166,57 @@ impl SoakParams {
             checkpoint_every: cfg.soak.checkpoint_every,
             flap_weight: 1,
             degrade_weight: 1,
+            trunk_weight: cfg.soak.trunk_weight,
+            switch_weight: cfg.soak.switch_weight,
             allreduce: true,
         }
     }
+}
+
+/// What kind of fault a [`TapeEntry`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapeKind {
+    /// Port flap — `id` is the victim port ordinal.
+    Flap,
+    /// NIC-uplink capacity degrade — `id` is the victim port ordinal.
+    Degrade,
+    /// Trunk-link capacity degrade — `id` is the owning leaf switch.
+    TrunkDegrade,
+    /// Whole-switch outage — `id` is the leaf switch.
+    SwitchDown,
+}
+
+impl TapeKind {
+    fn to_usize(self) -> usize {
+        match self {
+            TapeKind::Flap => 0,
+            TapeKind::Degrade => 1,
+            TapeKind::TrunkDegrade => 2,
+            TapeKind::SwitchDown => 3,
+        }
+    }
+
+    fn from_usize(v: usize) -> Result<TapeKind, String> {
+        Ok(match v {
+            0 => TapeKind::Flap,
+            1 => TapeKind::Degrade,
+            2 => TapeKind::TrunkDegrade,
+            3 => TapeKind::SwitchDown,
+            _ => return Err(format!("unknown soak tape kind {v}")),
+        })
+    }
+}
+
+/// One injected fault on the soak's ground-truth tape: what, where, when.
+/// `vccl rca` grades its diagnosis of a soak's trace ring against this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TapeEntry {
+    pub kind: TapeKind,
+    /// Victim port ordinal (Flap/Degrade) or leaf switch id (TrunkDegrade/
+    /// SwitchDown) — the node RCA is expected to attribute the symptoms to.
+    pub id: usize,
+    /// Simulated time the fault took effect.
+    pub at_ns: u64,
 }
 
 /// An in-force capacity degrade (ground truth for monitor grading).
@@ -179,6 +248,9 @@ pub struct SoakReport {
     pub availability: f64,
     pub flaps_injected: u64,
     pub degrades_injected: u64,
+    pub trunk_degrades_injected: u64,
+    pub switches_injected: u64,
+    /// Degrades (NIC + trunk) the window monitor caught while in force.
     pub degrades_detected: u64,
     pub faults_suppressed: u64,
     pub failovers: u64,
@@ -215,6 +287,8 @@ impl SoakReport {
             .push("availability", self.availability, "fraction")
             .push("flaps_injected", self.flaps_injected as f64, "count")
             .push("degrades_injected", self.degrades_injected as f64, "count")
+            .push("trunk_degrades_injected", self.trunk_degrades_injected as f64, "count")
+            .push("switches_injected", self.switches_injected as f64, "count")
             .push("degrades_detected", self.degrades_detected as f64, "count")
             .push("faults_suppressed", self.faults_suppressed as f64, "count")
             .push("failovers", self.failovers as f64, "count")
@@ -246,6 +320,8 @@ pub struct SoakHarness {
     goodput_bytes: u64,
     flaps_injected: u64,
     degrades_injected: u64,
+    trunk_degrades_injected: u64,
+    switches_injected: u64,
     degrades_detected: u64,
     suppressed: u64,
     tp: u64,
@@ -254,6 +330,8 @@ pub struct SoakHarness {
     tn: u64,
     active_degrades: Vec<Degrade>,
     active_flaps: Vec<Flap>,
+    /// Ground-truth tape of every injected fault, in injection order.
+    tape: Vec<TapeEntry>,
     /// Last seen non-Healthy verdict total per graded port ordinal.
     prev_anomalies: BTreeMap<usize, u64>,
     /// An op failed to complete: the sim holds live state forever, so
@@ -286,6 +364,8 @@ impl SoakHarness {
             goodput_bytes: 0,
             flaps_injected: 0,
             degrades_injected: 0,
+            trunk_degrades_injected: 0,
+            switches_injected: 0,
             degrades_detected: 0,
             suppressed: 0,
             tp: 0,
@@ -294,9 +374,16 @@ impl SoakHarness {
             tn: 0,
             active_degrades: Vec::new(),
             active_flaps: Vec::new(),
+            tape: Vec::new(),
             prev_anomalies: BTreeMap::new(),
             hung: false,
         }
+    }
+
+    /// Ground-truth fault tape (injection order) — what `vccl rca` is
+    /// graded against when diagnosing this soak's trace ring.
+    pub fn fault_tape(&self) -> &[TapeEntry] {
+        &self.tape
     }
 
     pub fn burst_index(&self) -> u64 {
@@ -343,8 +430,22 @@ impl SoakHarness {
         let window_end = (self.burst + 1).saturating_mul(self.params.period_ns);
         while self.faults.next_at_ns() < window_end {
             let _nominal = self.faults.advance();
-            let wsum = (self.params.flap_weight + self.params.degrade_weight).max(1) as u64;
-            let is_flap = self.faults.rng().below(wsum) < self.params.flap_weight as u64;
+            let (wf, wd, wt) = (
+                self.params.flap_weight as u64,
+                self.params.degrade_weight as u64,
+                self.params.trunk_weight as u64,
+            );
+            let wsum = (wf + wd + wt + self.params.switch_weight as u64).max(1);
+            let draw = self.faults.rng().below(wsum);
+            let kind = if draw < wf {
+                TapeKind::Flap
+            } else if draw < wf + wd {
+                TapeKind::Degrade
+            } else if draw < wf + wd + wt {
+                TapeKind::TrunkDegrade
+            } else {
+                TapeKind::SwitchDown
+            };
             let rank = 1 + self.faults.rng().below((gpn - 2) as u64) as usize;
             // Flap jitter stays below the burst's minimum traffic time
             // (smallest AllReduce + smallest P2P ≈ 280 µs of transfers), so
@@ -352,37 +453,84 @@ impl SoakHarness {
             // or in flight — one flap ⇒ exactly one failover.
             let jitter = self.faults.rng().range(10_000, 100_000);
             let (port, ordinal) = self.graded_port(rank);
-            if self.active_degrades.iter().any(|d| d.ordinal == ordinal)
-                || self.active_flaps.iter().any(|f| f.ordinal == ordinal)
+            // Degrade exclusion is keyed on the RESOLVED LinkId, not the
+            // victim's port ordinal: two victims on the same rail resolve
+            // to the SAME trunk link, and a second booking would record the
+            // already-cut capacity as "original", wedging the heal.
+            let victim_link = match kind {
+                TapeKind::Degrade => Some(self.sim.topo.fabric.port_tx(port)),
+                TapeKind::TrunkDegrade => Some(
+                    self.sim
+                        .topo
+                        .fabric
+                        .trunk_up(port.nic.local % self.cfg.topo.rails, usize::from(port.port)),
+                ),
+                TapeKind::Flap | TapeKind::SwitchDown => None,
+            };
+            if self.active_flaps.iter().any(|f| f.ordinal == ordinal)
+                || self.active_degrades.iter().any(|d| d.ordinal == ordinal)
+                || victim_link.is_some_and(|l| self.active_degrades.iter().any(|d| d.link == l.0))
             {
-                // One fault at a time per port; the arrival is consumed so
+                // One fault at a time per victim; the arrival is consumed so
                 // both sides of a resume agree on the schedule.
                 self.suppressed += 1;
                 continue;
             }
-            if is_flap {
-                let down = t0 + SimTime::ns(jitter);
-                let up = down + SimTime::ns(self.params.mttr_ns);
-                self.sim.inject_port_down(port, down);
-                self.sim.inject_port_up(port, up);
-                self.active_flaps.push(Flap { ordinal, up_ns: up.as_ns() });
-                self.flaps_injected += 1;
-            } else {
-                let link = self.sim.topo.fabric.port_tx(port);
-                let orig = self.sim.rdma.flows.link_capacity_bpns(link);
-                let timers = self.sim.rdma.flows.set_link_capacity(link, orig / DEGRADE_FACTOR, t0);
-                for t in timers {
-                    self.sim.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+            match kind {
+                TapeKind::Flap => {
+                    let down = t0 + SimTime::ns(jitter);
+                    let up = down + SimTime::ns(self.params.mttr_ns);
+                    self.sim.inject_port_down(port, down);
+                    self.sim.inject_port_up(port, up);
+                    self.active_flaps.push(Flap { ordinal, up_ns: up.as_ns() });
+                    self.flaps_injected += 1;
+                    self.tape.push(TapeEntry { kind, id: ordinal, at_ns: down.as_ns() });
                 }
-                let heal_after = self.params.mttr_ns.div_ceil(self.params.period_ns).max(1);
-                self.active_degrades.push(Degrade {
-                    ordinal,
-                    link: link.0,
-                    orig_bits: orig.to_bits(),
-                    heal_burst: self.burst + heal_after,
-                    detected: false,
-                });
-                self.degrades_injected += 1;
+                TapeKind::Degrade | TapeKind::TrunkDegrade => {
+                    let link = victim_link.expect("degrade kinds resolve a victim link");
+                    let orig = self.sim.rdma.flows.link_capacity_bpns(link);
+                    let timers =
+                        self.sim.rdma.flows.set_link_capacity(link, orig / DEGRADE_FACTOR, t0);
+                    for t in timers {
+                        self.sim.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                    }
+                    let heal_after = self.params.mttr_ns.div_ceil(self.params.period_ns).max(1);
+                    self.active_degrades.push(Degrade {
+                        ordinal,
+                        link: link.0,
+                        orig_bits: orig.to_bits(),
+                        heal_burst: self.burst + heal_after,
+                        detected: false,
+                    });
+                    if kind == TapeKind::Degrade {
+                        self.degrades_injected += 1;
+                        self.tape.push(TapeEntry { kind, id: ordinal, at_ns: t0.as_ns() });
+                    } else {
+                        self.trunk_degrades_injected += 1;
+                        let leaf =
+                            self.sim.topo.fabric.switch_of_link(link).unwrap_or(usize::MAX);
+                        self.tape.push(TapeEntry { kind, id: leaf, at_ns: t0.as_ns() });
+                    }
+                }
+                TapeKind::SwitchDown => {
+                    let leaf = self
+                        .sim
+                        .topo
+                        .fabric
+                        .switch_of_link(self.sim.topo.fabric.port_tx(port))
+                        .expect("graded ports hang off a leaf switch");
+                    let down = t0 + SimTime::ns(jitter);
+                    let up = down + SimTime::ns(self.params.mttr_ns);
+                    self.sim.inject_switch_down(leaf, down);
+                    self.sim.inject_switch_up(leaf, up);
+                    // A dead leaf mutes the victim's primary port exactly
+                    // like a flap (traffic fails over to the backup plane),
+                    // so reuse the flap list for grading exclusion and
+                    // MTTR-based retention.
+                    self.active_flaps.push(Flap { ordinal, up_ns: up.as_ns() });
+                    self.switches_injected += 1;
+                    self.tape.push(TapeEntry { kind, id: leaf, at_ns: down.as_ns() });
+                }
             }
         }
 
@@ -488,13 +636,15 @@ impl SoakHarness {
     /// (the sim is not op-quiescent and never will be).
     pub fn checkpoint(&self) -> String {
         assert!(!self.hung, "cannot checkpoint a soak with a hung op");
-        let mut w = CkptWriter::new("VCCLSOAK", 1);
+        let mut w = CkptWriter::new("VCCLSOAK", 2);
         w.u64("burst", self.burst);
         w.u64("period", self.params.period_ns);
         w.u64("mtbf", self.params.mtbf_ns);
         w.u64("mttr", self.params.mttr_ns);
         w.u64("wflap", self.params.flap_weight as u64);
         w.u64("wdeg", self.params.degrade_weight as u64);
+        w.u64("wtrunk", self.params.trunk_weight as u64);
+        w.u64("wswitch", self.params.switch_weight as u64);
         w.bool("ar", self.params.allreduce);
         w.u64("nfat", self.faults.next_at_ns);
         let fs = self.faults.rng.state();
@@ -510,6 +660,8 @@ impl SoakHarness {
         w.u64("good", self.goodput_bytes);
         w.u64("flp", self.flaps_injected);
         w.u64("deg", self.degrades_injected);
+        w.u64("tdi", self.trunk_degrades_injected);
+        w.u64("swi", self.switches_injected);
         w.u64("ddet", self.degrades_detected);
         w.u64("sup", self.suppressed);
         w.u64("tp", self.tp);
@@ -534,6 +686,12 @@ impl SoakHarness {
             w.usize("ord", *ord);
             w.u64("anom", *v);
         }
+        w.usize("ntape", self.tape.len());
+        for e in &self.tape {
+            w.usize("tk", e.kind.to_usize());
+            w.usize("tid", e.id);
+            w.u64("tat", e.at_ns);
+        }
         let header = w.finish();
         format!("{header}{}", self.sim.checkpoint())
     }
@@ -553,7 +711,7 @@ impl SoakHarness {
             .find("VCCLCKPT")
             .ok_or_else(|| "soak checkpoint lacks an embedded sim stream".to_string())?;
         let (head, simtext) = text.split_at(pos);
-        let mut r = CkptReader::new(head, "VCCLSOAK", 1)?;
+        let mut r = CkptReader::new(head, "VCCLSOAK", 2)?;
         let burst = r.u64("burst")?;
         for (tag, want) in [
             ("period", params.period_ns),
@@ -561,6 +719,8 @@ impl SoakHarness {
             ("mttr", params.mttr_ns),
             ("wflap", params.flap_weight as u64),
             ("wdeg", params.degrade_weight as u64),
+            ("wtrunk", params.trunk_weight as u64),
+            ("wswitch", params.switch_weight as u64),
         ] {
             let got = r.u64(tag)?;
             if got != want {
@@ -587,6 +747,8 @@ impl SoakHarness {
         let goodput_bytes = r.u64("good")?;
         let flaps_injected = r.u64("flp")?;
         let degrades_injected = r.u64("deg")?;
+        let trunk_degrades_injected = r.u64("tdi")?;
+        let switches_injected = r.u64("swi")?;
         let degrades_detected = r.u64("ddet")?;
         let suppressed = r.u64("sup")?;
         let tp = r.u64("tp")?;
@@ -616,6 +778,15 @@ impl SoakHarness {
             let v = r.u64("anom")?;
             prev_anomalies.insert(ord, v);
         }
+        let ntape = r.usize("ntape")?;
+        let mut tape = Vec::with_capacity(ntape);
+        for _ in 0..ntape {
+            tape.push(TapeEntry {
+                kind: TapeKind::from_usize(r.usize("tk")?)?,
+                id: r.usize("tid")?,
+                at_ns: r.u64("tat")?,
+            });
+        }
         r.finish()?;
         let sim = ClusterSim::restore(cfg.clone(), simtext)?;
         Ok(SoakHarness {
@@ -630,6 +801,8 @@ impl SoakHarness {
             goodput_bytes,
             flaps_injected,
             degrades_injected,
+            trunk_degrades_injected,
+            switches_injected,
             degrades_detected,
             suppressed,
             tp,
@@ -638,6 +811,7 @@ impl SoakHarness {
             tn,
             active_degrades,
             active_flaps,
+            tape,
             prev_anomalies,
             hung: false,
         })
@@ -661,6 +835,8 @@ impl SoakHarness {
             },
             flaps_injected: self.flaps_injected,
             degrades_injected: self.degrades_injected,
+            trunk_degrades_injected: self.trunk_degrades_injected,
+            switches_injected: self.switches_injected,
             degrades_detected: self.degrades_detected + in_force_detected,
             faults_suppressed: self.suppressed,
             failovers: self.sim.stats.failovers,
@@ -688,7 +864,20 @@ mod tests {
             checkpoint_every: 2,
             flap_weight: 1,
             degrade_weight: 1,
+            trunk_weight: 0,
+            switch_weight: 0,
             allreduce: true,
+        }
+    }
+
+    /// quick_params with the classic kinds off and the fabric kinds on.
+    fn fabric_params(bursts: u64, trunk_w: u32, switch_w: u32) -> SoakParams {
+        SoakParams {
+            flap_weight: 0,
+            degrade_weight: 0,
+            trunk_weight: trunk_w,
+            switch_weight: switch_w,
+            ..quick_params(bursts)
         }
     }
 
@@ -808,7 +997,7 @@ mod tests {
         let mut seen: Vec<u64> = Vec::new();
         let written = h.run(Some(1), &mut |b, text| {
             seen.push(b);
-            assert!(text.starts_with("VCCLSOAK v1"));
+            assert!(text.starts_with("VCCLSOAK v2"));
         });
         assert_eq!((written, seen.as_slice()), (1, &[2u64][..]));
         assert_eq!(h.burst_index(), 2, "stop-after-ckpt aborts mid-soak");
@@ -816,5 +1005,137 @@ mod tests {
         // Bursts 4 fires the cadence; burst 6 is the end (no checkpoint).
         assert_eq!((written, seen.as_slice()), (1, &[2u64, 4][..]));
         assert!(h.done());
+    }
+
+    /// §Fault domains: trunk degrades collapse the victim's end-to-end
+    /// bandwidth with both endpoint ports pristine, the port-level monitor
+    /// still catches every one, and healed trunks return to full capacity.
+    #[test]
+    fn trunk_weighted_soak_degrades_only_trunks_and_recovers() {
+        let cfg = Config::soak_defaults();
+        let mut h = SoakHarness::with_params(cfg.clone(), fabric_params(6, 1, 0));
+        while !h.done() {
+            h.run_burst();
+        }
+        let r = h.report();
+        assert!(!h.hung());
+        assert_eq!(r.availability, 1.0, "a slow trunk must never lose an op");
+        assert!(r.trunk_degrades_injected >= 1, "MTBF of 1.5 bursts must fault");
+        assert_eq!(r.flaps_injected + r.degrades_injected + r.switches_injected, 0);
+        assert_eq!(r.failovers, 0, "a degraded trunk is slow, not dead");
+        assert_eq!(r.precision(), 1.0, "fp={}", r.fp);
+        assert_eq!(r.recall(), 1.0, "fn={}", r.fn_);
+        assert_eq!(r.degrades_detected, r.trunk_degrades_injected);
+        // Ground-truth tape: every entry is a trunk fault on a real leaf.
+        assert_eq!(h.fault_tape().len(), r.trunk_degrades_injected as usize);
+        let leaves = h.sim.topo.fabric.num_leaf_switches();
+        assert!(h
+            .fault_tape()
+            .iter()
+            .all(|e| e.kind == TapeKind::TrunkDegrade && e.id < leaves));
+        assert!(h.active_degrades.iter().all(|d| h.sim.topo.fabric.is_trunk(LinkId(d.link))));
+        // Every link without an in-force degrade is back at built capacity.
+        let fresh = ClusterSim::new(cfg);
+        for l in 0..h.sim.topo.fabric.num_links() {
+            if h.active_degrades.iter().any(|d| d.link == l) {
+                continue;
+            }
+            assert_eq!(
+                h.sim.rdma.flows.link_capacity_bpns(LinkId(l)).to_bits(),
+                fresh.rdma.flows.link_capacity_bpns(LinkId(l)).to_bits(),
+                "link {l} capacity restored after heal"
+            );
+        }
+    }
+
+    /// §Fault domains: a leaf-switch outage grades exactly like a flap —
+    /// one failover to the backup plane, one failback on heal — but the
+    /// victim's port never flapped.
+    #[test]
+    fn switch_weighted_soak_fails_over_and_back_per_outage() {
+        let cfg = Config::soak_defaults();
+        let mut h = SoakHarness::with_params(cfg, fabric_params(6, 0, 1));
+        while !h.done() {
+            h.run_burst();
+        }
+        let r = h.report();
+        assert!(!h.hung());
+        assert_eq!(r.availability, 1.0, "leaf outages must not lose ops");
+        assert!(r.switches_injected >= 1, "MTBF of 1.5 bursts must fault");
+        assert_eq!(r.flaps_injected + r.degrades_injected + r.trunk_degrades_injected, 0);
+        assert_eq!(r.failovers, r.switches_injected, "one plane failover per outage");
+        assert_eq!(r.failbacks, r.switches_injected, "heal brings traffic home");
+        assert_eq!(r.precision(), 1.0, "fp={}", r.fp);
+        let leaves = h.sim.topo.fabric.num_leaf_switches();
+        assert!(h
+            .fault_tape()
+            .iter()
+            .all(|e| e.kind == TapeKind::SwitchDown && e.id < leaves));
+    }
+
+    /// The dedup satellite: with two NICs per rail, distinct victim ports
+    /// resolve to the SAME trunk link. Exclusion keyed on the resolved
+    /// LinkId must suppress the second booking — a double-booked trunk
+    /// would record the already-cut capacity as "original" and wedge the
+    /// heal at 1/8th rate forever.
+    #[test]
+    fn shared_rail_trunk_is_never_double_booked() {
+        let mut cfg = Config::soak_defaults();
+        cfg.topo.rails = 4; // 8 NICs on 4 rails: NIC r and NIC r+4 share a trunk
+        let mut p = fabric_params(8, 1, 0);
+        p.mtbf_ns = 20_000_000_000; // ~3 arrivals per burst: force collisions
+        let mut h = SoakHarness::with_params(cfg, p);
+        while !h.done() {
+            h.run_burst();
+            let mut links: Vec<usize> = h.active_degrades.iter().map(|d| d.link).collect();
+            let n = links.len();
+            links.sort_unstable();
+            links.dedup();
+            assert_eq!(links.len(), n, "a trunk link was double-booked");
+        }
+        let r = h.report();
+        assert!(!h.hung());
+        assert_eq!(r.availability, 1.0);
+        assert!(r.trunk_degrades_injected >= 2);
+        assert!(r.faults_suppressed >= 1, "same-trunk collisions must be suppressed");
+    }
+
+    /// Satellite: kill + resume in the middle of an in-force trunk
+    /// degrade. The resumed run must heal the trunk to the checkpointed
+    /// original capacity and produce a byte-identical BENCH_soak.json.
+    #[test]
+    fn soak_resume_mid_trunk_degrade_is_bit_identical() {
+        let cfg = Config::soak_defaults();
+        let mut p = fabric_params(5, 1, 0);
+        p.mtbf_ns = 15_000_000_000; // ~4 arrivals per burst
+        p.mttr_ns = 90_000_000_000; // degrades span two burst boundaries
+        let mut a = SoakHarness::with_params(cfg.clone(), p.clone());
+        while !a.done() {
+            a.run_burst();
+        }
+        let bench_a = a.report().to_bench().to_json();
+
+        let mut b = SoakHarness::with_params(cfg.clone(), p.clone());
+        b.run_burst();
+        b.run_burst();
+        assert!(!b.active_degrades.is_empty(), "checkpoint must land mid-degrade");
+        assert!(b.active_degrades.iter().all(|d| b.sim.topo.fabric.is_trunk(LinkId(d.link))));
+        let ckpt = b.checkpoint();
+        drop(b);
+        let mut c = SoakHarness::restore_with_params(cfg, p, &ckpt).expect("soak restore");
+        assert_eq!(c.checkpoint(), ckpt, "re-checkpoint is a fixed point");
+        while !c.done() {
+            c.run_burst();
+        }
+        assert_eq!(c.report().to_bench().to_json(), bench_a);
+        assert_eq!(c.fault_tape(), a.fault_tape());
+        assert_eq!(c.sim.now(), a.sim.now());
+        // Healed capacities match the uninterrupted run bit-for-bit.
+        let caps = |h: &SoakHarness| -> Vec<u64> {
+            (0..h.sim.topo.fabric.num_links())
+                .map(|l| h.sim.rdma.flows.link_capacity_bpns(LinkId(l)).to_bits())
+                .collect()
+        };
+        assert_eq!(caps(&c), caps(&a));
     }
 }

@@ -211,9 +211,117 @@ impl Fabric {
         self.links[self.port_tx(p).0].up
     }
 
+    /// Bring a single unidirectional link up/down. This is the trunk-level
+    /// fault primitive: a dead trunk kills *paths* while both endpoint
+    /// ports stay up — the fault class the §Fault-domains machinery
+    /// perceives as path-death rather than port-death.
+    pub fn set_link_up(&mut self, l: LinkId, up: bool) {
+        self.links[l.0].up = up;
+    }
+
+    pub fn link_up(&self, l: LinkId) -> bool {
+        self.links[l.0].up
+    }
+
     /// Whether every link on the path is up.
     pub fn path_up(&self, path: &Path) -> bool {
         path.links.iter().all(|&l| self.links[l.0].up)
+    }
+
+    /// First dead link on a path, if any — names the fault-domain member
+    /// that killed the path (trace labelling for `PathMigrated`).
+    pub fn first_dead_link(&self, path: &Path) -> Option<LinkId> {
+        path.links.iter().copied().find(|&l| !self.links[l.0].up)
+    }
+
+    /// Is this link a spine trunk (either direction)?
+    pub fn is_trunk(&self, l: LinkId) -> bool {
+        (self.trunk_base..self.nvlink_base).contains(&l.0)
+    }
+
+    /// Number of fabric planes (dual-port NICs ⇒ dual-plane deployment).
+    pub fn planes(&self) -> usize {
+        self.ports_per_nic
+    }
+
+    // ------------------------------------------------------------------
+    // Switch entities (§Fault domains)
+    //
+    // The fabric's switches are first-class fault domains that *own* their
+    // member links: leaf switch `leaf_index(rail, plane)` owns every NIC
+    // uplink pair on that (rail, plane) plus its trunk pair; spine plane
+    // `num_leaf_switches() + plane` owns every trunk pair in the plane.
+    // Killing a switch cascades to its members, which is what makes
+    // switch-level faults expressible on the existing link table.
+    // ------------------------------------------------------------------
+
+    /// Leaf switches: one per (rail, plane), id = `rail * planes + plane`.
+    pub fn num_leaf_switches(&self) -> usize {
+        self.rails * self.ports_per_nic
+    }
+
+    /// All switch entities: leaves first, then one spine plane per plane.
+    pub fn num_switches(&self) -> usize {
+        self.num_leaf_switches() + self.ports_per_nic
+    }
+
+    /// Member links of a switch (leaf: uplinks of its rail+plane + its
+    /// trunks; spine plane: every trunk pair in the plane). Sorted by id.
+    pub fn switch_links(&self, s: usize) -> Vec<LinkId> {
+        let n_leaves = self.num_leaf_switches();
+        let mut out = Vec::new();
+        if s < n_leaves {
+            let (rail, plane) = (s / self.ports_per_nic, s % self.ports_per_nic);
+            for node in 0..self.nodes {
+                for local in 0..self.nics_per_node {
+                    if local % self.rails != rail {
+                        continue;
+                    }
+                    let p = PortId {
+                        nic: NicId { node: super::NodeId(node), local },
+                        port: plane as u8,
+                    };
+                    out.push(self.port_tx(p));
+                    out.push(self.port_rx(p));
+                }
+            }
+            out.push(self.trunk_up(rail, plane));
+            out.push(self.trunk_down(rail, plane));
+        } else {
+            let plane = s - n_leaves;
+            for rail in 0..self.rails {
+                out.push(self.trunk_up(rail, plane));
+                out.push(self.trunk_down(rail, plane));
+            }
+        }
+        out
+    }
+
+    /// Cascade a switch state change to its member links; returns the
+    /// member set so callers can re-rate flows / arm crossing QPs.
+    pub fn set_switch_up(&mut self, s: usize, up: bool) -> Vec<LinkId> {
+        let members = self.switch_links(s);
+        for &l in &members {
+            self.links[l.0].up = up;
+        }
+        members
+    }
+
+    /// The leaf switch that owns a link: NIC uplinks belong to the leaf of
+    /// their (rail, plane); trunks to the leaf they hang off. NVLink is not
+    /// switched. This is the RCA attribution edge (trunk symptom → owning
+    /// switch).
+    pub fn switch_of_link(&self, l: LinkId) -> Option<usize> {
+        if l.0 < self.trunk_base {
+            let port_idx = l.0 / 2;
+            let local = (port_idx / self.ports_per_nic) % self.nics_per_node;
+            let plane = port_idx % self.ports_per_nic;
+            Some((local % self.rails) * self.ports_per_nic + plane)
+        } else if l.0 < self.nvlink_base {
+            Some((l.0 - self.trunk_base) / 2)
+        } else {
+            None
+        }
     }
 
     /// The rail (leaf) a NIC belongs to.
@@ -223,27 +331,27 @@ impl Fabric {
 
     /// Inter-node path between two NIC ports.
     ///
-    /// Same rail + same plane → one leaf: `src.tx → dst.rx` (2 hops).
-    /// Otherwise the flow transits spine trunks (4 hops). Rail-optimized
-    /// collectives keep traffic on the first form; PXN exists to avoid the
-    /// second.
+    /// Every inter-node flow transits its leaf's spine-plane trunk pair:
+    /// the leaves are line cards whose node-facing ports switch through
+    /// the plane, which is why trunk capacity is `nodes × line rate` —
+    /// 1:1, never a bottleneck until a trunk fault cuts it. Same rail +
+    /// same plane stays `hops: 2` (the intra-plane hairpin is cut-through
+    /// and adds no modeled latency); what the trunk contributes there is
+    /// capacity coupling and a shared fault domain (§Fault domains).
+    /// Cross-rail / cross-plane traffic is a genuine 4-hop spine transit;
+    /// PXN exists to avoid it.
     pub fn path_inter(&self, src: PortId, dst: PortId) -> Path {
         assert_ne!(src.nic.node, dst.nic.node, "use path_nvlink for intra-node");
         let (sr, sp) = (self.rail_of(src.nic), src.port as usize);
         let (dr, dp) = (self.rail_of(dst.nic), dst.port as usize);
-        if sr == dr && sp == dp {
-            Path { links: vec![self.port_tx(src), self.port_rx(dst)], hops: 2 }
-        } else {
-            Path {
-                links: vec![
-                    self.port_tx(src),
-                    self.trunk_up(sr, sp),
-                    self.trunk_down(dr, dp),
-                    self.port_rx(dst),
-                ],
-                hops: 4,
-            }
-        }
+        let links = vec![
+            self.port_tx(src),
+            self.trunk_up(sr, sp),
+            self.trunk_down(dr, dp),
+            self.port_rx(dst),
+        ];
+        let hops = if sr == dr && sp == dp { 2 } else { 4 };
+        Path { links, hops }
     }
 
     /// Serialize the mutable fabric state — per-link up flags only
@@ -290,13 +398,15 @@ mod tests {
     }
 
     #[test]
-    fn same_rail_path_skips_spine() {
+    fn same_rail_path_hairpins_through_its_own_trunk_pair() {
         let f = Fabric::build(&topo(2, false));
         let p = f.path_inter(port(0, 3, 0), port(1, 3, 0));
-        assert_eq!(p.links.len(), 2);
-        assert_eq!(p.hops, 2);
+        assert_eq!(p.links.len(), 4);
+        assert_eq!(p.hops, 2, "the intra-plane hairpin adds no latency hop");
         assert_eq!(f.link(p.links[0]).kind, LinkKind::NicUplinkTx);
-        assert_eq!(f.link(p.links[1]).kind, LinkKind::NicUplinkRx);
+        assert_eq!(p.links[1], f.trunk_up(3, 0));
+        assert_eq!(p.links[2], f.trunk_down(3, 0));
+        assert_eq!(f.link(p.links[3]).kind, LinkKind::NicUplinkRx);
     }
 
     #[test]
@@ -304,8 +414,11 @@ mod tests {
         let f = Fabric::build(&topo(2, false));
         let p = f.path_inter(port(0, 3, 0), port(1, 5, 0));
         assert_eq!(p.links.len(), 4);
+        assert_eq!(p.hops, 4);
         assert_eq!(f.link(p.links[1]).kind, LinkKind::SpineTrunkUp);
         assert_eq!(f.link(p.links[2]).kind, LinkKind::SpineTrunkDown);
+        assert_eq!(p.links[1], f.trunk_up(3, 0));
+        assert_eq!(p.links[2], f.trunk_down(5, 0));
     }
 
     #[test]
@@ -346,6 +459,80 @@ mod tests {
         let f = Fabric::build(&topo(4, false));
         let t = f.trunk_up(0, 0);
         assert_eq!(f.link(t).capacity_gbps, 4.0 * 400.0);
+    }
+
+    #[test]
+    fn trunk_down_breaks_paths_but_not_ports() {
+        let mut f = Fabric::build(&topo(2, false));
+        let cross = f.path_inter(port(0, 3, 0), port(1, 5, 0));
+        let same = f.path_inter(port(0, 3, 0), port(1, 3, 0));
+        let other = f.path_inter(port(0, 4, 0), port(1, 4, 0));
+        let t = f.trunk_up(3, 0);
+        assert!(f.is_trunk(t) && !f.is_trunk(f.port_tx(port(0, 3, 0))));
+        f.set_link_up(t, false);
+        // Path-death without port-death: the endpoints never flapped.
+        assert!(!f.path_up(&cross));
+        assert!(!f.path_up(&same), "rail-matched traffic rides its own trunk");
+        assert!(f.port_up(port(0, 3, 0)) && f.port_up(port(1, 5, 0)));
+        assert_eq!(f.first_dead_link(&cross), Some(t));
+        assert_eq!(f.first_dead_link(&same), Some(t));
+        assert!(f.path_up(&other), "other rails' trunks are untouched");
+        f.set_link_up(t, true);
+        assert!(f.path_up(&cross));
+        assert!(f.path_up(&same));
+        assert_eq!(f.first_dead_link(&cross), None);
+    }
+
+    #[test]
+    fn switch_cascade_owns_member_links() {
+        let mut f = Fabric::build(&topo(2, true));
+        assert_eq!(f.num_leaf_switches(), 16);
+        assert_eq!(f.num_switches(), 18);
+        // Leaf (rail 3, plane 1): both nodes' NIC-3 port-1 uplinks + trunks.
+        let s = 3 * 2 + 1;
+        let members = f.switch_links(s);
+        assert_eq!(members.len(), 2 * 2 + 2);
+        assert!(members.contains(&f.port_tx(port(0, 3, 1))));
+        assert!(members.contains(&f.port_rx(port(1, 3, 1))));
+        assert!(members.contains(&f.trunk_up(3, 1)));
+        assert!(members.contains(&f.trunk_down(3, 1)));
+        let downed = f.set_switch_up(s, false);
+        assert_eq!(downed, members);
+        assert!(!f.port_up(port(0, 3, 1)));
+        assert!(!f.link_up(f.trunk_up(3, 1)));
+        // Plane 0 of the same rail is untouched — that's the backup plane.
+        assert!(f.port_up(port(0, 3, 0)));
+        assert!(f.link_up(f.trunk_up(3, 0)));
+        f.set_switch_up(s, true);
+        assert!(f.port_up(port(0, 3, 1)));
+    }
+
+    #[test]
+    fn spine_plane_switch_owns_every_trunk_in_plane() {
+        let mut f = Fabric::build(&topo(2, true));
+        let spine1 = f.num_leaf_switches() + 1;
+        let members = f.switch_links(spine1);
+        assert_eq!(members.len(), 8 * 2); // 8 rails × (up, down)
+        assert!(members.iter().all(|&l| f.is_trunk(l)));
+        f.set_switch_up(spine1, false);
+        for rail in 0..8 {
+            assert!(!f.link_up(f.trunk_up(rail, 1)));
+            assert!(f.link_up(f.trunk_up(rail, 0)), "plane 0 spine survives");
+        }
+    }
+
+    #[test]
+    fn switch_of_link_inverts_membership() {
+        let f = Fabric::build(&topo(2, true));
+        for s in 0..f.num_leaf_switches() {
+            for l in f.switch_links(s) {
+                assert_eq!(f.switch_of_link(l), Some(s), "link {l:?} of leaf {s}");
+            }
+        }
+        // Trunks attribute to their leaf, not the spine plane entity.
+        assert_eq!(f.switch_of_link(f.trunk_up(5, 1)), Some(5 * 2 + 1));
+        let g = GpuId { node: NodeId(0), local: 2 };
+        assert_eq!(f.switch_of_link(f.nvlink_tx(g)), None);
     }
 
     #[test]

@@ -42,6 +42,7 @@ const PID_NET: usize = 9000;
 const PID_CCL: usize = 9001;
 const PID_FAULT: usize = 9002;
 const PID_SIM: usize = 9003;
+const PID_FABRIC: usize = 9004;
 
 /// Topology facts the exporter needs to map a port ordinal to its node.
 #[derive(Debug, Clone, Copy)]
@@ -81,8 +82,16 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         // port row shows which QPs it carries.
         | TraceEvent::ConnBound { port, .. }
         | TraceEvent::MonitorVerdict { port, .. } => (node_of(port), port as u64),
-        TraceEvent::PointerMigrated { conn, .. } | TraceEvent::Failback { conn } => {
-            (PID_FAULT, conn as u64)
+        TraceEvent::PointerMigrated { conn, .. }
+        | TraceEvent::Failback { conn }
+        | TraceEvent::PathMigrated { conn, .. } => (PID_FAULT, conn as u64),
+        // Switch-entity lanes: one row per switch; trunk capacity events on
+        // the trunk link's lane of the same process.
+        TraceEvent::SwitchDown { switch } | TraceEvent::SwitchUp { switch } => {
+            (PID_FABRIC, switch as u64)
+        }
+        TraceEvent::TrunkDegraded { link, .. } | TraceEvent::TrunkRestored { link, .. } => {
+            (PID_FABRIC, link as u64)
         }
         TraceEvent::OpSubmitted { op, .. } | TraceEvent::OpFinished { op, .. } => {
             (PID_CCL, op as u64)
@@ -169,6 +178,21 @@ fn args_json(ev: &TraceEvent) -> String {
         TraceEvent::PortDown { port } | TraceEvent::PortUp { port } => {
             format!("{{\"port\": {port}}}")
         }
+        TraceEvent::SwitchDown { switch } | TraceEvent::SwitchUp { switch } => {
+            format!("{{\"switch\": {switch}}}")
+        }
+        TraceEvent::TrunkDegraded { link, switch, gbps, was_gbps } => format!(
+            "{{\"link\": {link}, \"switch\": {switch}, \"gbps\": {}, \"was_gbps\": {}}}",
+            json_number(gbps),
+            json_number(was_gbps)
+        ),
+        TraceEvent::TrunkRestored { link, switch, gbps } => format!(
+            "{{\"link\": {link}, \"switch\": {switch}, \"gbps\": {}}}",
+            json_number(gbps)
+        ),
+        TraceEvent::PathMigrated { conn, xfer, link } => {
+            format!("{{\"conn\": {conn}, \"xfer\": {xfer}, \"link\": {link}}}")
+        }
         TraceEvent::PointerMigrated { conn, xfer, port, breakpoint, rolled_back } => {
             let port = match port {
                 Some(p) => p.to_string(),
@@ -206,6 +230,7 @@ fn process_name(pid: usize) -> String {
         PID_CCL => "ccl".to_string(),
         PID_FAULT => "fault".to_string(),
         PID_SIM => "sim".to_string(),
+        PID_FABRIC => "fabric".to_string(),
         n => format!("node{n}"),
     }
 }
@@ -545,6 +570,28 @@ mod tests {
     }
 
     #[test]
+    fn fabric_events_get_their_own_process() {
+        let records = vec![
+            rec(100, 0, TraceEvent::SwitchDown { switch: 7 }),
+            rec(
+                200,
+                1,
+                TraceEvent::TrunkDegraded { link: 70, switch: 7, gbps: 0.0, was_gbps: 800.0 },
+            ),
+            rec(50_000, 2, TraceEvent::PathMigrated { conn: 3, xfer: 9, link: 70 }),
+            rec(90_000, 3, TraceEvent::SwitchUp { switch: 7 }),
+        ];
+        let json = export(&records, &meta());
+        json_lint(&json).unwrap();
+        assert!(json.contains("\"name\": \"fabric\""));
+        assert!(json.contains(&format!("\"pid\": {PID_FABRIC}, \"tid\": 7")));
+        assert!(json.contains(&format!("\"pid\": {PID_FABRIC}, \"tid\": 70")));
+        // Path migration sits on the fault process next to PointerMigrated.
+        assert!(json.contains(&format!("\"pid\": {PID_FAULT}, \"tid\": 3")));
+        assert!(json.contains("\"switch\": 7"));
+    }
+
+    #[test]
     fn empty_export_is_valid() {
         let json = export(&[], &meta());
         json_lint(&json).unwrap();
@@ -675,6 +722,11 @@ mod tests {
             TraceEvent::QpReset { qp: 1, port: 2, warm_ns: 3 },
             TraceEvent::PortDown { port: 1 },
             TraceEvent::PortUp { port: 1 },
+            TraceEvent::SwitchDown { switch: 2 },
+            TraceEvent::SwitchUp { switch: 2 },
+            TraceEvent::TrunkDegraded { link: 70, switch: 3, gbps: 100.0, was_gbps: 800.0 },
+            TraceEvent::TrunkRestored { link: 70, switch: 3, gbps: 800.0 },
+            TraceEvent::PathMigrated { conn: 1, xfer: 5, link: 70 },
             TraceEvent::PointerMigrated {
                 conn: 1,
                 xfer: 5,

@@ -96,6 +96,23 @@ pub enum TraceEvent {
     /// Fault injection / perception: a NIC port went down or came back.
     PortDown { port: usize },
     PortUp { port: usize },
+    /// §Fault domains: a switch entity (leaf or spine plane) went down /
+    /// came back, cascading to its member links. `switch` is the fabric's
+    /// switch id (leaves first, then spine planes).
+    SwitchDown { switch: usize },
+    SwitchUp { switch: usize },
+    /// §Fault domains: a spine trunk lost capacity (degrade) or was fully
+    /// downed (`gbps == 0`). `switch` is the owning leaf switch — the RCA
+    /// graph opens its trunk fault windows on that switch node, which is
+    /// what makes trunk symptoms attribute to the switch, not a bare link.
+    TrunkDegraded { link: usize, switch: usize, gbps: f64, was_gbps: f64 },
+    TrunkRestored { link: usize, switch: usize, gbps: f64 },
+    /// §Fault domains: a connection migrated to its backup-plane QP because
+    /// its *path* died (dead trunk / leaf) while the endpoint port stayed
+    /// up — path-death perception, distinct from the port-death failovers
+    /// `PointerMigrated` records alone. `link` is the first dead link on
+    /// the primary path at migration time.
+    PathMigrated { conn: usize, xfer: u64, link: usize },
     /// §3.3 failover migrated both sides' pointers to the breakpoint.
     /// `xfer` is the transfer whose window rolled back (the `Xfer.seq`
     /// creation ordinal, joining to `FlowResumed { scope: "xfer" }`);
@@ -151,6 +168,11 @@ impl TraceEvent {
             TraceEvent::QpReset { .. } => "QpReset",
             TraceEvent::PortDown { .. } => "PortDown",
             TraceEvent::PortUp { .. } => "PortUp",
+            TraceEvent::SwitchDown { .. } => "SwitchDown",
+            TraceEvent::SwitchUp { .. } => "SwitchUp",
+            TraceEvent::TrunkDegraded { .. } => "TrunkDegraded",
+            TraceEvent::TrunkRestored { .. } => "TrunkRestored",
+            TraceEvent::PathMigrated { .. } => "PathMigrated",
             TraceEvent::PointerMigrated { .. } => "PointerMigrated",
             TraceEvent::Failback { .. } => "Failback",
             TraceEvent::OpSubmitted { .. } => "OpSubmitted",
@@ -179,8 +201,15 @@ impl TraceEvent {
             | TraceEvent::QpRetryArmed { .. }
             | TraceEvent::QpError { .. }
             | TraceEvent::QpReset { .. } => "net.rdma",
-            TraceEvent::PortDown { .. } | TraceEvent::PortUp { .. } => "fabric",
-            TraceEvent::PointerMigrated { .. } | TraceEvent::Failback { .. } => "fault",
+            TraceEvent::PortDown { .. }
+            | TraceEvent::PortUp { .. }
+            | TraceEvent::SwitchDown { .. }
+            | TraceEvent::SwitchUp { .. }
+            | TraceEvent::TrunkDegraded { .. }
+            | TraceEvent::TrunkRestored { .. } => "fabric",
+            TraceEvent::PointerMigrated { .. }
+            | TraceEvent::Failback { .. }
+            | TraceEvent::PathMigrated { .. } => "fault",
             TraceEvent::OpSubmitted { .. }
             | TraceEvent::OpFinished { .. }
             | TraceEvent::ConnBound { .. }
@@ -202,9 +231,14 @@ impl TraceEvent {
                 | TraceEvent::QpReset { .. }
                 | TraceEvent::PortDown { .. }
                 | TraceEvent::PortUp { .. }
+                | TraceEvent::SwitchDown { .. }
+                | TraceEvent::SwitchUp { .. }
+                | TraceEvent::TrunkDegraded { .. }
+                | TraceEvent::TrunkRestored { .. }
                 | TraceEvent::LinkCapacity { .. }
                 | TraceEvent::PointerMigrated { .. }
                 | TraceEvent::Failback { .. }
+                | TraceEvent::PathMigrated { .. }
                 | TraceEvent::MonitorVerdict { .. }
         )
     }
@@ -281,7 +315,19 @@ impl Incident {
         match self.trigger {
             TraceEvent::PointerMigrated { conn, .. }
             | TraceEvent::Failback { conn }
+            | TraceEvent::PathMigrated { conn, .. }
             | TraceEvent::ConnBound { conn, .. } => Some(conn),
+            _ => None,
+        }
+    }
+
+    /// The switch entity the triggering anomaly names, if it names one.
+    pub fn switch(&self) -> Option<usize> {
+        match self.trigger {
+            TraceEvent::SwitchDown { switch }
+            | TraceEvent::SwitchUp { switch }
+            | TraceEvent::TrunkDegraded { switch, .. }
+            | TraceEvent::TrunkRestored { switch, .. } => Some(switch),
             _ => None,
         }
     }
@@ -684,5 +730,41 @@ mod tests {
         assert_eq!(ev.kind(), "LinkCapacity");
         assert_eq!(ev.layer(), "net.flow");
         assert!(ev.is_key_event());
+        let ev = TraceEvent::SwitchDown { switch: 5 };
+        assert_eq!(ev.kind(), "SwitchDown");
+        assert_eq!(ev.layer(), "fabric");
+        assert!(ev.is_key_event());
+        let ev = TraceEvent::TrunkDegraded { link: 70, switch: 3, gbps: 100.0, was_gbps: 800.0 };
+        assert_eq!(ev.kind(), "TrunkDegraded");
+        assert_eq!(ev.layer(), "fabric");
+        assert!(ev.is_key_event());
+        let ev = TraceEvent::TrunkRestored { link: 70, switch: 3, gbps: 800.0 };
+        assert_eq!(ev.kind(), "TrunkRestored");
+        assert_eq!(ev.layer(), "fabric");
+        let ev = TraceEvent::PathMigrated { conn: 4, xfer: 11, link: 70 };
+        assert_eq!(ev.kind(), "PathMigrated");
+        assert_eq!(ev.layer(), "fault");
+        assert!(ev.is_key_event());
+    }
+
+    #[test]
+    fn incident_switch_metadata_joins_fault_domains() {
+        let sink = TraceSink::new(64, 1_000);
+        let t = Tracer::attached(sink.clone());
+        t.record_anomaly(
+            SimTime::ns(100),
+            TraceEvent::TrunkDegraded { link: 70, switch: 3, gbps: 0.0, was_gbps: 800.0 },
+            "trunk-link70",
+        );
+        t.record_anomaly(
+            SimTime::ns(10_000),
+            TraceEvent::PathMigrated { conn: 4, xfer: 11, link: 70 },
+            "pathmig-conn4",
+        );
+        let incs = sink.incidents();
+        assert_eq!(incs[0].switch(), Some(3));
+        assert_eq!(incs[0].port(), None);
+        assert_eq!(incs[1].conn(), Some(4));
+        assert_eq!(incs[1].switch(), None);
     }
 }

@@ -45,6 +45,17 @@ pub fn describe(ev: &TraceEvent) -> String {
         }
         TraceEvent::PortDown { port } => format!("port {port} down"),
         TraceEvent::PortUp { port } => format!("port {port} up"),
+        TraceEvent::SwitchDown { switch } => format!("switch {switch} down (member links dead)"),
+        TraceEvent::SwitchUp { switch } => format!("switch {switch} up"),
+        TraceEvent::TrunkDegraded { link, switch, gbps, was_gbps } => {
+            format!("trunk link {link} (switch {switch}): {was_gbps:.0} -> {gbps:.0} Gbps")
+        }
+        TraceEvent::TrunkRestored { link, switch, gbps } => {
+            format!("trunk link {link} (switch {switch}): restored to {gbps:.0} Gbps")
+        }
+        TraceEvent::PathMigrated { conn, xfer, link } => format!(
+            "conn {conn} xfer {xfer}: path dead (link {link}), migrated to backup plane"
+        ),
         TraceEvent::LinkCapacity { link, gbps, was_gbps } => {
             format!("link {link}: {was_gbps:.0} -> {gbps:.0} Gbps")
         }
@@ -122,6 +133,9 @@ pub fn incident_table(inc: &Incident) -> String {
     }
     if let Some(c) = inc.conn() {
         let _ = write!(meta, " conn {c}");
+    }
+    if let Some(s) = inc.switch() {
+        let _ = write!(meta, " switch {s}");
     }
     let _ = writeln!(out, "{meta}");
     // The §Perf L5 live view: which transfers were still in flight when

@@ -273,22 +273,26 @@ fn every_experiment_id_parses_and_reports() {
     assert!(coordinator::run_experiment("definitely-not-an-id", &cfg).is_err());
 }
 
-/// `vccl bench` must emit all five BENCH_*.json files with non-empty,
+/// `vccl bench` must emit all six BENCH_*.json files with non-empty,
 /// finite metric arrays (the acceptance gate for the perf trajectory).
 #[test]
 fn bench_emits_json_files_with_metrics() {
     let dir = std::env::temp_dir().join(format!("vccl_bench_test_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let paths =
-        bench::run_bench(&Config::paper_defaults(), &dir, &bench::BenchOpts { quick: true })
-            .unwrap();
-    assert_eq!(paths.len(), 5);
+    let paths = bench::run_bench(
+        &Config::paper_defaults(),
+        &dir,
+        &bench::BenchOpts { quick: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(paths.len(), 6);
     for name in [
         "BENCH_p2p.json",
         "BENCH_failover.json",
         "BENCH_monitor.json",
         "BENCH_train.json",
         "BENCH_simcore.json",
+        "BENCH_fabric.json",
     ] {
         let path = dir.join(name);
         assert!(paths.contains(&path), "missing {name}");
@@ -308,6 +312,11 @@ fn bench_emits_json_files_with_metrics() {
     assert!(simcore.contains("simcore.rdma.visit_reduction_x"));
     assert!(simcore.contains("simcore.mem.xfers_peak_live"));
     assert!(simcore.contains("simcore.mem.recycle_ratio_x"));
+    // §Fault domains trajectory: plane-failover completeness and the RCA
+    // trunk-to-switch attribution are tracked from a real traced run.
+    let fabric = std::fs::read_to_string(dir.join("BENCH_fabric.json")).unwrap();
+    assert!(fabric.contains("fabric.completeness"));
+    assert!(fabric.contains("fabric.rca.trunk_precision"));
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -392,9 +401,14 @@ fn trace_disabled_allocates_nothing_and_bench_identical() {
     let mut cfg_on = Config::paper_defaults();
     cfg_on.trace.enabled = true;
     cfg_on.trace.ring_capacity = 1 << 12;
-    bench::run_bench(&Config::paper_defaults(), &dir_off, &bench::BenchOpts { quick: true })
+    bench::run_bench(
+        &Config::paper_defaults(),
+        &dir_off,
+        &bench::BenchOpts { quick: true, ..Default::default() },
+    )
+    .unwrap();
+    bench::run_bench(&cfg_on, &dir_on, &bench::BenchOpts { quick: true, ..Default::default() })
         .unwrap();
-    bench::run_bench(&cfg_on, &dir_on, &bench::BenchOpts { quick: true }).unwrap();
     for name in ["BENCH_p2p.json", "BENCH_failover.json", "BENCH_monitor.json", "BENCH_train.json"]
     {
         let off = std::fs::read(dir_off.join(name)).unwrap();
