@@ -20,7 +20,8 @@ use crate::gpu::{CopyEngines, GpuCompute, TaskId};
 use crate::monitor::MonitorSet;
 use crate::net::{CompletionStatus, FlowId, QpId, QpState, RdmaNet, WorkCompletion};
 use crate::sim::{Engine, EngineState, SimTime};
-use crate::topology::{build_rings, Cluster, LinkId, NicId, NodeId, PortId, RankId, Ring};
+use crate::topology::{build_rings, build_rings_excluding, Cluster, LinkId, NicId, NodeId,
+    PortId, RankId, Ring};
 use crate::trace::{TraceEvent, Tracer};
 use crate::util::{fingerprint, CkptReader, CkptWriter, Rng};
 
@@ -69,6 +70,10 @@ pub enum Event {
     TrunkUp { link: LinkId },
     SwitchDown { switch: usize },
     SwitchUp { switch: usize },
+    /// Node fault injection (§Elastic): a whole server crashes — every
+    /// NIC port it owns goes dark at once — or recovers.
+    NodeDown { node: usize },
+    NodeUp { node: usize },
     /// Receiver-side δ-timeout double check (§3.3 case 2).
     DeltaCheck { conn: ConnId, epoch: u32 },
     /// Advance a collective to its next ring step on one channel.
@@ -301,6 +306,30 @@ impl XferSlab {
         self.free.push(id.slot);
     }
 
+    /// §Elastic: drop an UNFINISHED transfer — aborted by a node-death
+    /// shrink, to be re-issued on the rebuilt ring. Unlike
+    /// [`XferSlab::retire`] nothing was folded into a roll-up, and the
+    /// record is dropped even in retain-everything mode: an aborted
+    /// transfer delivered nothing, and a retained not-done record would
+    /// leak into `iter_live` and keep stale events alive. The generation
+    /// bumps either way so queued `ChunkReady`s against it go stale.
+    pub(crate) fn abort(&mut self, id: XferId) {
+        self.retired += 1;
+        let s = &mut self.slots[id.slot as usize];
+        debug_assert_eq!(s.gen, id.gen, "aborting a stale XferId");
+        debug_assert!(
+            s.x.as_ref().is_some_and(|x| !x.done),
+            "aborting a finished transfer"
+        );
+        s.x = None;
+        s.gen = s.gen.wrapping_add(1);
+        #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+        if self.retain_all {
+            return; // never reuse slots in the reference mode
+        }
+        self.free.push(id.slot);
+    }
+
     /// Transfers currently in flight.
     pub fn live(&self) -> u64 {
         self.created - self.retired
@@ -527,6 +556,12 @@ pub struct Stats {
     /// δ-probe verdicts observed (case-2 machinery).
     pub probe_benign: u64,
     pub probe_dead: u64,
+    /// §Elastic: node-death shrinks and node-recovery rejoins executed.
+    pub elastic_shrinks: u64,
+    pub elastic_rejoins: u64,
+    /// §Elastic: (op, channel) steps aborted by a shrink and requeued on
+    /// the rebuilt rings.
+    pub ops_requeued: u64,
 }
 
 /// The simulation.
@@ -546,6 +581,11 @@ pub struct ClusterSim {
     intra_flows: HashMap<FlowId, XferId>,
     pub monitor: Option<MonitorSet>,
     pub rings: Vec<Ring>,
+    /// §Elastic: nodes currently perceived dead (every NIC port dark).
+    /// Rings are built excluding these; connections touching them swallow
+    /// failure completions instead of running a §3.3 failover that cannot
+    /// help (the backup port sits on the same dead server).
+    pub dead_nodes: Vec<bool>,
     pub mempools: Vec<MemPool>,
     pub stats: Stats,
     pub rng: Rng,
@@ -604,6 +644,7 @@ impl ClusterSim {
             None
         };
         let seed = cfg.seed;
+        let n_nodes = cfg.topo.num_nodes;
         let trailing_ns = cfg.vccl.trailing_ns.max(1);
         tracer.record(
             SimTime::ZERO,
@@ -623,6 +664,7 @@ impl ClusterSim {
             intra_flows: HashMap::new(),
             monitor,
             rings,
+            dead_nodes: vec![false; n_nodes],
             mempools,
             stats: Stats {
                 proxy_cpu_ns: vec![0; n_ranks],
@@ -1136,6 +1178,18 @@ impl ClusterSim {
     /// any), or mark the op as hung (the NCCL baseline behaviour).
     fn on_conn_failure(&mut self, conn_id: ConnId, failed_qp: QpId) {
         let now = self.now();
+        // §Elastic: a connection with an endpoint on a crashed node is
+        // past saving — its backup port sits on the same dead server, so
+        // a §3.3 failover cannot help. Ring transfers were aborted and
+        // requeued by the shrink; a straggler surfacing here is a P2P
+        // aimed at the dead node, which has nowhere to requeue (§6
+        // limitation) and fails like the baseline hang.
+        if self.conn_on_dead_node(conn_id) {
+            if let Some(xid) = self.conns[conn_id.0].cur_xfer() {
+                self.abort_xfer_record(xid);
+            }
+            return;
+        }
         let conn = &self.conns[conn_id.0];
         let error_port = if Some(failed_qp) == conn.primary {
             conn.primary_port
@@ -1307,6 +1361,16 @@ impl ClusterSim {
         self.engine.schedule_at(at, Event::SwitchUp { switch });
     }
 
+    /// Node fault entry points (§Elastic): a whole server crashes — every
+    /// NIC port it owns goes dark at once — or recovers.
+    pub fn inject_node_down(&mut self, node: usize, at: SimTime) {
+        self.engine.schedule_at(at, Event::NodeDown { node });
+    }
+
+    pub fn inject_node_up(&mut self, node: usize, at: SimTime) {
+        self.engine.schedule_at(at, Event::NodeUp { node });
+    }
+
     fn on_port_state(&mut self, port: PortId, up: bool) {
         let now = self.now();
         let ordinal = self.topo.fabric.port_ordinal(port);
@@ -1361,6 +1425,222 @@ impl ClusterSim {
         if up {
             self.failback_sweep();
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic node fault tolerance (§Elastic)
+    // ------------------------------------------------------------------
+
+    /// A whole node crashed or recovered. Down: cascade every NIC port the
+    /// node owns dark (peers escalate per-QP path death to node-death
+    /// perception — every port of the peer is gone, so no backup plane can
+    /// help), then shrink the world: abort and requeue in-flight ring
+    /// steps and rebuild the rings without the victim. Up: restore the
+    /// ports, re-warm the flushed QPs (deferred re-entry, §3.3-style), and
+    /// rebuild full-membership rings. With `elastic.enabled = false` the
+    /// cascade still happens but nothing shrinks — crossing ops hang, the
+    /// non-elastic baseline.
+    fn on_node_state(&mut self, node: usize, up: bool) {
+        let now = self.now();
+        self.tracer.record(
+            now,
+            if up { TraceEvent::NodeUp { node } } else { TraceEvent::NodeDown { node } },
+        );
+        let was_dead = self.dead_nodes.get(node).copied().unwrap_or(false);
+        let elastic = self.cfg.elastic.enabled && node < self.dead_nodes.len();
+        let members = self.topo.fabric.set_node_up(node, up);
+        if !up && elastic {
+            // Mark BEFORE the link teardown: any completion surfacing from
+            // it must already hit the dead-node guard in `on_conn_failure`.
+            self.dead_nodes[node] = true;
+        }
+        if up {
+            if let Some(d) = self.dead_nodes.get_mut(node) {
+                *d = false;
+            }
+        }
+        let out = self.rdma.set_links_up(&members, up, now);
+        self.absorb(out);
+        if up {
+            if elastic && was_dead {
+                self.elastic_rejoin(node);
+            }
+            self.failback_sweep();
+        } else if elastic && !was_dead {
+            self.elastic_shrink(node);
+        }
+    }
+
+    /// Does this rank sit on a node currently perceived dead?
+    pub(super) fn rank_on_dead_node(&self, rank: usize) -> bool {
+        let per = self.cfg.topo.gpus_per_node.max(1);
+        self.dead_nodes.get(rank / per).copied().unwrap_or(false)
+    }
+
+    /// Does either endpoint of the connection sit on a dead node?
+    fn conn_on_dead_node(&self, conn_id: ConnId) -> bool {
+        let c = &self.conns[conn_id.0];
+        self.rank_on_dead_node(c.src.0) || self.rank_on_dead_node(c.dst.0)
+    }
+
+    /// Absorb a `NetOutput` DROPPING its completions: the elastic shrink
+    /// owns the aborted transfers' fate, so the teardown's
+    /// RetryExceeded/flush completions must not re-enter the §3.3 failover
+    /// path. Re-rate timers, retry deadlines and warm-ups still schedule.
+    fn absorb_sans_wcs(&mut self, out: crate::net::rdma::NetOutput) {
+        for t in out.timers {
+            self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+        }
+        for (qp, epoch, at) in out.retry_deadlines {
+            self.engine.schedule_at(at, Event::QpRetry { qp, epoch });
+        }
+        for (qp, at) in out.warmups {
+            self.engine.schedule_at(at, Event::QpWarm { qp });
+        }
+    }
+
+    /// Drop one unfinished transfer (§Elastic): detach it from its
+    /// connection's FIFO, release the op's SM residency, fail a stranded
+    /// P2P, and recycle the slab slot without folding a roll-up.
+    fn abort_xfer_record(&mut self, xid: XferId) {
+        let now = self.now();
+        let Some(x) = self.xfers.get(xid) else { return };
+        let (conn_id, op, sms_src, sms_dst) = (x.conn, x.op, x.sms_src, x.sms_dst);
+        let (src, dst) = (self.conns[conn_id.0].src, self.conns[conn_id.0].dst);
+        {
+            let c = &mut self.conns[conn_id.0];
+            c.pending.retain(|&q| q != xid);
+            if let Some(p) = c.probe.as_mut() {
+                p.disarm();
+            }
+        }
+        self.op_sm_release(op, src.0, sms_src, now);
+        self.op_sm_release(op, dst.0, sms_dst, now);
+        if self.ops[op.0].p2p.is_some() && !self.ops[op.0].failed {
+            self.ops[op.0].failed = true;
+            self.stats.hung_ops += 1;
+        }
+        self.xfers.abort(xid);
+    }
+
+    /// §Elastic shrink: abort every in-flight transfer stranded by the
+    /// dead node — ring-collective steps (a ring spans every node, so
+    /// every channel crosses the victim) and P2P transfers with an
+    /// endpoint on it — then rebuild the rings without the node and
+    /// requeue the aborted steps on them. Transfers not crossing the
+    /// victim (P2P between survivors) keep running untouched.
+    fn elastic_shrink(&mut self, node: usize) {
+        let now = self.now();
+        let per = self.cfg.topo.gpus_per_node.max(1);
+        // 1. Classify live transfers (ascending slot order: deterministic).
+        let mut abort: Vec<XferId> = Vec::new();
+        let mut requeue: Vec<(OpId, usize)> = Vec::new();
+        for x in self.xfers.iter_live() {
+            if self.ops[x.op.0].p2p.is_some() {
+                let c = &self.conns[x.conn.0];
+                if c.src.0 / per != node && c.dst.0 / per != node {
+                    continue; // non-crossing P2P: untouched (pinned by test)
+                }
+            } else if !requeue.contains(&(x.op, x.channel)) {
+                requeue.push((x.op, x.channel));
+            }
+            abort.push(x.id);
+        }
+        // 2. Kill the NVLink flows of aborted transfers. The map iterates
+        //    in hash order, so sort the doomed flows before killing them —
+        //    re-rate passes must run in a reproducible order.
+        let doomed: std::collections::HashSet<XferId> = abort.iter().copied().collect();
+        let mut dead_flows: Vec<FlowId> = self
+            .intra_flows
+            .iter()
+            .filter(|(_, x)| doomed.contains(x))
+            .map(|(&f, _)| f)
+            .collect();
+        dead_flows.sort_unstable_by_key(|f| f.0);
+        for f in dead_flows {
+            self.intra_flows.remove(&f);
+            for t in self.rdma.flows.kill(f, now) {
+                self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+            }
+        }
+        // 3. Detach the aborted transfers, remembering the connections
+        //    whose ACTIVE transfer went away: their wire state must flush
+        //    and a surviving queued follower must be woken.
+        let mut repump: Vec<ConnId> = Vec::new();
+        for &xid in &abort {
+            let conn_id = self.xfers.get(xid).expect("aborting a live transfer").conn;
+            if self.conns[conn_id.0].cur_xfer() == Some(xid) && !repump.contains(&conn_id) {
+                repump.push(conn_id);
+            }
+            self.abort_xfer_record(xid);
+        }
+        // 4. Flush wire state on the interrupted connections: drive the
+        //    active QP to the error state (dropping its teardown
+        //    completions — the shrink owns these transfers), then restart
+        //    it toward RTS unless it sits on the dead node (those re-warm
+        //    at rejoin instead), and wake the new FIFO front.
+        for conn_id in repump {
+            if self.conns[conn_id.0].locality != Locality::IntraNode {
+                if let Some(qp) = self.conns[conn_id.0].active_qp() {
+                    let out = self.rdma.force_error(qp, now);
+                    self.absorb_sans_wcs(out);
+                    if !self.conn_on_dead_node(conn_id) {
+                        let out = self.rdma.reset_to_rts(qp, now);
+                        self.absorb(out);
+                    }
+                }
+            }
+            if let Some(next) = self.conns[conn_id.0].cur_xfer() {
+                self.pump_xfer(next);
+            }
+        }
+        // 5. Rebuild the rings over the survivors and requeue the aborted
+        //    steps on them. The step index is untouched: the interrupted
+        //    step re-runs from its start on the shrunk ring.
+        self.rebuild_rings();
+        let delay = SimTime::ns(self.cfg.elastic.requeue_delay_ns.max(1));
+        for (op, channel) in requeue {
+            self.tracer.record(now, TraceEvent::OpRequeued { op: op.0, channel });
+            self.stats.ops_requeued += 1;
+            self.engine.schedule_at(now + delay, Event::OpStep { op, channel });
+        }
+        self.stats.elastic_shrinks += 1;
+    }
+
+    /// §Elastic rejoin: the node's ports are back. Re-warm every QP the
+    /// crash teardown flushed (traffic re-enters only at full-rate
+    /// hardware — the same QpWarm gating failback uses) and rebuild the
+    /// rings to full membership. In-flight steps on the shrunk rings keep
+    /// running; the next `OpStep` of each channel picks up the full ring.
+    fn elastic_rejoin(&mut self, node: usize) {
+        let now = self.now();
+        let per = self.cfg.topo.gpus_per_node.max(1);
+        let resets: Vec<QpId> = self
+            .conns
+            .iter()
+            .filter(|c| c.src.0 / per == node || c.dst.0 / per == node)
+            .flat_map(|c| [c.primary, c.backup])
+            .flatten()
+            .filter(|&qp| self.rdma.qp_state(qp) == QpState::Error)
+            .collect();
+        for qp in resets {
+            let out = self.rdma.reset_to_rts(qp, now);
+            self.absorb(out);
+        }
+        self.rebuild_rings();
+        self.stats.elastic_rejoins += 1;
+    }
+
+    /// Rebuild the channel rings over the current (surviving) membership
+    /// and record the new world size.
+    fn rebuild_rings(&mut self) {
+        self.rings =
+            build_rings_excluding(&self.topo, self.cfg.vccl.channels.max(1), &self.dead_nodes);
+        let ranks = self.rings.first().map_or(0, |r| r.order.len());
+        self.tracer.record(
+            self.now(),
+            TraceEvent::RingRebuilt { channels: self.rings.len(), ranks },
+        );
     }
 
     /// Failback check over every connection waiting on a healed path: any
@@ -1454,6 +1734,8 @@ impl ClusterSim {
             Event::TrunkUp { link } => self.on_trunk_state(link, true),
             Event::SwitchDown { switch } => self.on_switch_state(switch, false),
             Event::SwitchUp { switch } => self.on_switch_state(switch, true),
+            Event::NodeDown { node } => self.on_node_state(node, false),
+            Event::NodeUp { node } => self.on_node_state(node, true),
             Event::DeltaCheck { conn, epoch } => self.on_delta_check(conn, epoch),
             Event::OpStep { op, channel } => self.issue_step(op, channel),
         }
@@ -1525,7 +1807,9 @@ impl ClusterSim {
                     Event::TrunkDown { .. }
                     | Event::TrunkUp { .. }
                     | Event::SwitchDown { .. }
-                    | Event::SwitchUp { .. } => 9,
+                    | Event::SwitchUp { .. }
+                    | Event::NodeDown { .. }
+                    | Event::NodeUp { .. } => 9,
                 };
                 counts[k] += 1;
                 if n % 10_000_000 == 0 && n > 0 {
@@ -1617,7 +1901,7 @@ impl ClusterSim {
                 assert!(!p.is_armed(), "checkpoint requires quiescence (armed δ-probe)");
             }
         }
-        let mut w = CkptWriter::new("VCCLCKPT", 1);
+        let mut w = CkptWriter::new("VCCLCKPT", 2);
         w.section("config");
         w.u64("cfgfp", Self::config_fingerprint(&self.cfg));
         // Connection bootstrap replay list: re-running `conn()` in creation
@@ -1638,6 +1922,11 @@ impl ClusterSim {
         }
         w.section("fabric");
         self.topo.fabric.save(&mut w);
+        w.section("elastic");
+        w.usize("ndn", self.dead_nodes.len());
+        for d in &self.dead_nodes {
+            w.bool("dn", *d);
+        }
         w.section("rdma");
         self.rdma.save(&mut w);
         w.section("engine");
@@ -1696,6 +1985,9 @@ impl ClusterSim {
         w.u64("hung", self.stats.hung_ops);
         w.u64("pben", self.stats.probe_benign);
         w.u64("pdead", self.stats.probe_dead);
+        w.u64("eshr", self.stats.elastic_shrinks);
+        w.u64("erej", self.stats.elastic_rejoins);
+        w.u64("oreq", self.stats.ops_requeued);
         self.stats.port_traffic.save(&mut w);
         w.section("monitor");
         w.bool("hasmon", self.monitor.is_some());
@@ -1730,7 +2022,7 @@ impl ClusterSim {
     /// reports. The flight-recorder ring is NOT restored (diagnostics only;
     /// `trace::export_since` splices post-resume trace tails instead).
     pub fn restore(cfg: Config, text: &str) -> Result<ClusterSim, String> {
-        let mut r = CkptReader::new(text, "VCCLCKPT", 1)?;
+        let mut r = CkptReader::new(text, "VCCLCKPT", 2)?;
         let mut sim = ClusterSim::new(cfg);
         r.expect("config")?;
         if r.u64("cfgfp")? != Self::config_fingerprint(&sim.cfg) {
@@ -1767,6 +2059,26 @@ impl ClusterSim {
         }
         r.expect("fabric")?;
         sim.topo.fabric.load(&mut r)?;
+        r.expect("elastic")?;
+        let ndn = r.usize("ndn")?;
+        if ndn != sim.dead_nodes.len() {
+            return Err(format!(
+                "dead-node table mismatch: ckpt {ndn} vs config {}",
+                sim.dead_nodes.len()
+            ));
+        }
+        for d in sim.dead_nodes.iter_mut() {
+            *d = r.bool("dn")?;
+        }
+        if sim.dead_nodes.iter().any(|&d| d) {
+            // Mid-shrink checkpoint: rebuild the shrunk rings silently (the
+            // RingRebuilt trace fired in the original timeline already).
+            sim.rings = build_rings_excluding(
+                &sim.topo,
+                sim.cfg.vccl.channels.max(1),
+                &sim.dead_nodes,
+            );
+        }
         r.expect("rdma")?;
         sim.rdma.load(&mut r)?;
         r.expect("engine")?;
@@ -1845,6 +2157,9 @@ impl ClusterSim {
         sim.stats.hung_ops = r.u64("hung")?;
         sim.stats.probe_benign = r.u64("pben")?;
         sim.stats.probe_dead = r.u64("pdead")?;
+        sim.stats.elastic_shrinks = r.u64("eshr")?;
+        sim.stats.elastic_rejoins = r.u64("erej")?;
+        sim.stats.ops_requeued = r.u64("oreq")?;
         sim.stats.port_traffic.load(&mut r)?;
         r.expect("monitor")?;
         if r.bool("hasmon")? != sim.monitor.is_some() {
@@ -1937,7 +2252,7 @@ fn load_port(r: &mut CkptReader) -> Result<PortId, String> {
     Ok(PortId { nic: NicId { node: NodeId(node), local }, port })
 }
 
-/// Event codec: every one of the thirteen kinds serializes faithfully — a
+/// Event codec: every one of the fifteen kinds serializes faithfully — a
 /// pending event whose target is gone by resume time (a stale `ChunkReady`
 /// against a recycled slot, a `GpuTask` for a finished task) fires as the
 /// same no-op it would have been in the uninterrupted run, because the
@@ -1993,6 +2308,14 @@ fn save_event(w: &mut CkptWriter, ev: &Event) {
             w.token("evM");
             w.usize("s", *switch);
         }
+        Event::NodeDown { node } => {
+            w.token("evN");
+            w.usize("n", *node);
+        }
+        Event::NodeUp { node } => {
+            w.token("evO");
+            w.usize("n", *node);
+        }
         Event::DeltaCheck { conn, epoch } => {
             w.token("evX");
             w.usize("c", conn.0);
@@ -2019,6 +2342,8 @@ fn load_event(r: &mut CkptReader) -> Result<Event, String> {
         "evV" => Event::TrunkUp { link: LinkId(r.usize("l")?) },
         "evL" => Event::SwitchDown { switch: r.usize("s")? },
         "evM" => Event::SwitchUp { switch: r.usize("s")? },
+        "evN" => Event::NodeDown { node: r.usize("n")? },
+        "evO" => Event::NodeUp { node: r.usize("n")? },
         "evX" => Event::DeltaCheck { conn: ConnId(r.usize("c")?), epoch: r.u32("e")? },
         "evS" => Event::OpStep { op: OpId(r.usize("o")?), channel: r.usize("c")? },
         other => return Err(format!("unknown event tag {other:?}")),
@@ -2358,6 +2683,8 @@ mod tests {
             Event::TrunkUp { link: LinkId(7) },
             Event::SwitchDown { switch: 3 },
             Event::SwitchUp { switch: 3 },
+            Event::NodeDown { node: 5 },
+            Event::NodeUp { node: 5 },
         ];
         for ev in evs {
             let mut w = CkptWriter::new("T", 1);
@@ -2367,6 +2694,124 @@ mod tests {
             let back = load_event(&mut r).unwrap();
             assert_eq!(format!("{ev:?}"), format!("{back:?}"));
         }
+    }
+
+    // ------------------------------------------------------------------
+    // §Elastic: node crash, ring shrink, rejoin
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn node_crash_shrinks_ring_and_allreduce_completes() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        // 256 MB AllReduce takes ~10 ms over 2×8 ranks; node 1 dies at
+        // 2 ms, mid-flight. The world shrinks to node 0's 8 ranks and the
+        // collective completes on the rebuilt (NVLink-only) ring.
+        s.inject_node_down(1, SimTime::ms(2));
+        let id = s.submit(CollKind::AllReduce, ByteSize::mb(256).0);
+        s.run_to_idle(100_000_000);
+        let op = &s.ops[id.0];
+        assert!(op.is_done(), "AllReduce must complete on the shrunk ring");
+        assert!(!op.failed);
+        assert_eq!(s.stats.elastic_shrinks, 1, "exactly one shrink");
+        assert_eq!(s.stats.elastic_rejoins, 0);
+        assert!(s.stats.ops_requeued >= 1, "the interrupted step must requeue");
+        assert_eq!(s.rings[0].order.len(), 8, "rings span the survivors");
+        let recs = s.tracer.sink().unwrap().records();
+        assert!(recs.iter().any(|r| matches!(r.ev, TraceEvent::NodeDown { node: 1 })));
+        assert!(recs
+            .iter()
+            .any(|r| matches!(r.ev, TraceEvent::RingRebuilt { ranks: 8, .. })));
+        assert!(recs.iter().any(|r| matches!(r.ev, TraceEvent::OpRequeued { .. })));
+    }
+
+    #[test]
+    fn node_recovery_rejoins_and_full_ring_returns() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        s.inject_node_down(1, SimTime::ms(2));
+        s.inject_node_up(1, SimTime::ms(400));
+        let id = s.submit(CollKind::AllReduce, ByteSize::mb(256).0);
+        s.run_to_idle(200_000_000);
+        assert!(s.ops[id.0].is_done() && !s.ops[id.0].failed);
+        assert_eq!(s.stats.elastic_shrinks, 1);
+        assert_eq!(s.stats.elastic_rejoins, 1, "exactly one rejoin");
+        assert_eq!(
+            s.rings[0].order.len(),
+            s.topo.num_ranks(),
+            "full membership restored after the heal"
+        );
+        // A post-rejoin collective must complete over ALL ranks again
+        // (rejoin completeness): the healed node's QPs re-warmed.
+        let id2 = s.submit(CollKind::AllReduce, ByteSize::mb(16).0);
+        s.run_to_idle(100_000_000);
+        assert!(s.ops[id2.0].is_done() && !s.ops[id2.0].failed);
+        let recs = s.tracer.sink().unwrap().records();
+        assert!(recs.iter().any(|r| matches!(r.ev, TraceEvent::NodeUp { node: 1 })));
+        let full = s.topo.num_ranks();
+        assert!(recs
+            .iter()
+            .any(|r| matches!(r.ev, TraceEvent::RingRebuilt { ranks, .. } if ranks == full)));
+    }
+
+    #[test]
+    fn non_crossing_p2p_is_bit_identical_under_remote_node_crash() {
+        // A P2P between nodes 0 and 1 must be untouched — timing and
+        // roll-up — by node 2 crashing (the elastic guarantee: only ops
+        // crossing the victim are perturbed).
+        let mut cfg = fast_ft_cfg();
+        cfg.topo.num_nodes = 3;
+        let run = |crash: bool| {
+            let mut s = ClusterSim::new(cfg.clone());
+            if crash {
+                s.inject_node_down(2, SimTime::ms(1));
+            }
+            let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(32).0);
+            s.run_to_idle(50_000_000);
+            let op = &s.ops[id.0];
+            assert!(op.is_done() && !op.failed);
+            (op.started_at, op.finished_at, format!("{:?}", op.chan_rollup))
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn elastic_disabled_crash_strands_the_collective() {
+        // The non-elastic baseline: the crash cascades to the ports, §3.3
+        // failover cannot help (the backup plane died with the node), and
+        // the crossing channel hangs/fails instead of shrinking.
+        let mut cfg = fast_ft_cfg();
+        cfg.elastic.enabled = false;
+        let mut s = ClusterSim::new(cfg);
+        s.inject_node_down(1, SimTime::ms(2));
+        let id = s.submit(CollKind::AllReduce, ByteSize::mb(256).0);
+        s.run_to_idle(100_000_000);
+        let op = &s.ops[id.0];
+        assert!(op.failed || !op.is_done(), "baseline must NOT complete");
+        assert_eq!(s.stats.elastic_shrinks, 0);
+        assert_eq!(s.stats.ops_requeued, 0);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_a_dead_node_and_resumes_identically() {
+        // Crash, finish the shrunk collective, checkpoint with node 1
+        // still dead. The restored sim must carry the dead-node view and
+        // the shrunk rings, then evolve bit-identically through the heal.
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        s.inject_node_down(1, SimTime::ms(2));
+        let id = s.submit(CollKind::AllReduce, ByteSize::mb(64).0);
+        s.run_to_idle(100_000_000);
+        assert!(s.ops[id.0].is_done());
+        let blob = s.checkpoint();
+        let mut r = ClusterSim::restore(fast_ft_cfg(), &blob).unwrap();
+        assert_eq!(r.dead_nodes, vec![false, true]);
+        assert_eq!(r.rings[0].order.len(), 8, "restore rebuilds shrunk rings");
+        for sim in [&mut s, &mut r] {
+            let now = sim.now();
+            sim.inject_node_up(1, now + SimTime::ms(1));
+            sim.submit(CollKind::AllReduce, ByteSize::mb(16).0);
+            sim.run_to_idle(100_000_000);
+        }
+        assert_eq!(s.stats.elastic_rejoins, 1);
+        assert_eq!(s.checkpoint(), r.checkpoint(), "divergence after resume");
     }
 
     #[test]

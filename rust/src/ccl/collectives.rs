@@ -93,8 +93,12 @@ impl ClusterSim {
             }
             CollKind::AllReduce | CollKind::AllGather | CollKind::ReduceScatter => {
                 let seg = (bytes / (nranks as u64 * channels as u64)).max(1);
+                // §Elastic: after a shrink the rings span the SURVIVING
+                // ranks only — the step completes when every segment of the
+                // (possibly shrunk) ring lands, so pend the ring's length,
+                // not the full world size. Identical when nothing is dead.
                 let ring = self.rings[channel % self.rings.len()].clone();
-                self.ops[op.0].chan_pending[channel] = nranks;
+                self.ops[op.0].chan_pending[channel] = ring.order.len();
                 for &r in &ring.order {
                     let next = ring.next(r);
                     self.start_xfer(op, r, next, channel, seg);
@@ -102,9 +106,15 @@ impl ClusterSim {
             }
             CollKind::AllToAll => {
                 let per = (bytes / (nranks as u64 * channels as u64)).max(1);
-                self.ops[op.0].chan_pending[channel] = nranks * (nranks - 1);
-                for r in 0..nranks {
-                    for s in 0..nranks {
+                // §Elastic: exchange among the survivors only. The filter
+                // preserves rank order, so with no dead nodes this is
+                // bit-identical to the plain 0..nranks double loop.
+                let alive: Vec<usize> =
+                    (0..nranks).filter(|&r| !self.rank_on_dead_node(r)).collect();
+                let m = alive.len();
+                self.ops[op.0].chan_pending[channel] = m * (m.saturating_sub(1));
+                for &r in &alive {
+                    for &s in &alive {
                         if r != s {
                             self.start_xfer(op, RankId(r), RankId(s), channel, per);
                         }

@@ -333,6 +333,17 @@ pub struct SoakConfig {
     pub trunk_weight: u32,
     /// Relative weight of whole-switch (leaf) outages in the fault mix.
     pub switch_weight: u32,
+    /// Relative weight of whole-node crashes in the fault mix (§Elastic).
+    /// 0 (the default) keeps the PR-8 mix; a crash downs every port of a
+    /// victim node for one MTTR and the cluster shrinks around it.
+    pub node_weight: u32,
+    /// Topology preset the soak drives: "burst" (the default 2-node
+    /// paper cluster) or "scale64" (the 64-node scaling preset with the
+    /// soak's shortened failure time constants). Like the other soak
+    /// knobs this shapes the driver, not a running sim, so it is
+    /// excluded from the checkpoint config fingerprint — but a resumed
+    /// soak still validates it against the saved topology.
+    pub preset: String,
 }
 
 impl Default for SoakConfig {
@@ -344,7 +355,29 @@ impl Default for SoakConfig {
             checkpoint_every: 8,
             trunk_weight: 0,
             switch_weight: 0,
+            node_weight: 0,
+            preset: String::from("burst"),
         }
+    }
+}
+
+/// Elastic membership settings (`elastic.*`, §Elastic): node-crash
+/// detection escalation and communicator shrink/rejoin.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Escalate all-ports-down peers to a node-dead perception and
+    /// shrink the communicator around them. Off = a node crash strands
+    /// its rings exactly like pre-elastic builds (ops hang).
+    pub enabled: bool,
+    /// Delay between aborting a crossing op's in-flight step and
+    /// re-issuing it on the rebuilt ring (models the bootstrap
+    /// re-rendezvous round of a communicator shrink).
+    pub requeue_delay_ns: u64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig { enabled: true, requeue_delay_ns: 1_000_000 }
     }
 }
 
@@ -358,6 +391,7 @@ pub struct Config {
     pub trace: TraceConfig,
     pub rca: RcaConfig,
     pub soak: SoakConfig,
+    pub elastic: ElasticConfig,
     /// RNG seed for all stochastic elements.
     pub seed: u64,
 }
@@ -562,6 +596,13 @@ impl Config {
             "soak.checkpoint_every" => self.soak.checkpoint_every = p(val)?,
             "soak.trunk_weight" => self.soak.trunk_weight = p(val)?,
             "soak.switch_weight" => self.soak.switch_weight = p(val)?,
+            "soak.node_weight" => self.soak.node_weight = p(val)?,
+            "soak.preset" => match val {
+                "burst" | "scale64" => self.soak.preset = val.to_string(),
+                other => anyhow::bail!("unknown soak preset {other:?}"),
+            },
+            "elastic.enabled" => self.elastic.enabled = pb(val)?,
+            "elastic.requeue_delay_ns" => self.elastic.requeue_delay_ns = p(val)?,
             "trace.enabled" => self.trace.enabled = pb(val)?,
             "trace.ring_capacity" => self.trace.ring_capacity = p(val)?,
             "trace.snapshot_window_ns" => self.trace.snapshot_window_ns = p(val)?,
@@ -685,6 +726,27 @@ mod tests {
         assert_eq!(s.net.ib_timeout_exp, s64.net.ib_timeout_exp);
         assert_eq!(s.net.ib_retry_cnt, s64.net.ib_retry_cnt);
         assert_eq!(s.net.qp_warmup_ns, s64.net.qp_warmup_ns);
+    }
+
+    #[test]
+    fn elastic_keys_parse_and_node_soak_knobs_default_off() {
+        let mut c = Config::paper_defaults();
+        assert!(c.elastic.enabled, "elastic shrink must be on by default");
+        assert_eq!(c.soak.node_weight, 0, "node crashes are opt-in");
+        assert_eq!(c.soak.preset, "burst");
+        c.apply_kv_text(
+            "soak.node_weight = 2\n\
+             soak.preset = scale64\n\
+             elastic.enabled = off\n\
+             elastic.requeue_delay_ns = 5000000\n",
+        )
+        .unwrap();
+        assert_eq!(c.soak.node_weight, 2);
+        assert_eq!(c.soak.preset, "scale64");
+        assert!(!c.elastic.enabled);
+        assert_eq!(c.elastic.requeue_delay_ns, 5_000_000);
+        assert!(c.apply_kv_text("soak.preset = mesh").is_err());
+        assert!(c.apply_kv_text("elastic.bogus = 1").is_err());
     }
 
     #[test]

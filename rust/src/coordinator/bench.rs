@@ -13,6 +13,7 @@
 //! | `BENCH_train.json`    | Fig 11 1F1B training throughput per transport    |
 //! | `BENCH_simcore.json`  | §Perf L3 allocator work per network change       |
 //! | `BENCH_fabric.json`   | §Fault domains trunk-down plane failover + RCA   |
+//! | `BENCH_elastic.json`  | §Elastic node-crash ring shrink/rejoin + RCA     |
 //!
 //! Everything is simulated time, so the numbers are bit-stable across runs
 //! and machines (same config + seed ⇒ same JSON), which is what makes them
@@ -50,6 +51,7 @@ const SUITES: &[(&str, fn(&Config, &BenchOpts) -> BenchReport)] = &[
     ("train", bench_train),
     ("simcore", bench_simcore),
     ("fabric", bench_fabric),
+    ("elastic", bench_elastic),
 ];
 
 /// Run the selected suites and write `BENCH_*.json` into `out_dir`.
@@ -332,6 +334,47 @@ pub fn bench_fabric(cfg: &Config, opts: &BenchOpts) -> BenchReport {
     r
 }
 
+/// §Elastic: the node-crash shrink/rejoin preset (see
+/// [`super::reliability::elastic_run`]) as machine-readable gates: zero
+/// lost ops, exactly one shrink and one rejoin, full rejoin completeness,
+/// non-crossing bit-identity, goodput recovery and RCA host attribution.
+pub fn bench_elastic(cfg: &Config, opts: &BenchOpts) -> BenchReport {
+    // One preset either way: the scenario is already smoke-sized.
+    let _ = opts;
+    let e = super::reliability::elastic_run(cfg);
+    let mut r = BenchReport::new(
+        "elastic",
+        "§Elastic: node crash → ring shrink → rejoin, with RCA host attribution",
+    );
+    r.push("elastic.shrinks", e.shrinks as f64, "count")
+        .push("elastic.rejoins", e.rejoins as f64, "count")
+        .push("elastic.steps_requeued", e.steps_requeued as f64, "count")
+        .push("elastic.lost_ops", e.lost_ops as f64, "count")
+        .push("elastic.recovery_ms", e.recovery_ms, "ms")
+        .push("elastic.baseline_algbw_gbps", e.baseline_gbps, "gbps")
+        .push("elastic.degraded_algbw_gbps", e.degraded_gbps, "gbps")
+        .push("elastic.recovered_algbw_gbps", e.recovered_gbps, "gbps")
+        .push(
+            "elastic.degraded_over_baseline",
+            e.degraded_gbps / e.baseline_gbps.max(1e-9),
+            "ratio",
+        )
+        .push(
+            "elastic.recovered_over_baseline",
+            e.recovered_gbps / e.baseline_gbps.max(1e-9),
+            "ratio",
+        )
+        .push("elastic.rejoin_completeness", e.rejoin_completeness(), "ratio")
+        .push(
+            "elastic.noncrossing_identical",
+            e.noncrossing_identical as u64 as f64,
+            "bool",
+        )
+        .push("elastic.rca.node_attributions", e.rca_attributed as f64, "count")
+        .push("elastic.rca.node_precision", e.rca_precision, "ratio");
+    r
+}
+
 /// Integer size label for metric names (`64KB`, `1MB` — never `64.0MB`:
 /// metric names are dotted paths, so no decimal point may appear).
 fn size_label(bytes: u64) -> String {
@@ -503,6 +546,25 @@ mod tests {
         }
         let bad = BenchOpts { quick: true, suite: Some("nope".into()) };
         assert!(run_bench(&Config::paper_defaults(), &dir, &bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `vccl bench elastic` writes exactly BENCH_elastic.json with the CI
+    /// gate metrics present.
+    #[test]
+    fn bench_suite_filter_selects_elastic_only() {
+        let dir = std::env::temp_dir().join("vccl_bench_elastic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = BenchOpts { quick: true, suite: Some("elastic".into()) };
+        let paths = run_bench(&Config::paper_defaults(), &dir, &opts).unwrap();
+        assert_eq!(paths.len(), 1);
+        assert!(paths[0].ends_with("BENCH_elastic.json"));
+        let json = std::fs::read_to_string(&paths[0]).unwrap();
+        for key in
+            ["elastic.lost_ops", "elastic.rejoin_completeness", "elastic.rca.node_precision"]
+        {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -180,6 +180,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("scale256", "256-node (2048-GPU) monitored allreduce + multi-failure sweep (§Perf L4)"),
     ("scale512", "512-node (4096-GPU) monitored allreduce + failover sweep (§Perf L5)"),
     ("fabric", "§Fault domains: trunk-down → backup-plane failover → failback"),
+    ("elastic", "§Elastic: node crash → ring shrink → rejoin without draining the world"),
 ];
 
 /// Run one experiment by id; returns the report text.
@@ -207,6 +208,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         "scale256" => experiments::scale256_cluster(cfg),
         "scale512" => experiments::scale512_cluster(cfg),
         "fabric" => reliability::fabric_failover(cfg),
+        "elastic" => reliability::elastic_recovery(cfg),
         "list" => {
             let mut out = String::new();
             for (id, desc) in EXPERIMENTS {
@@ -250,8 +252,8 @@ pub fn help_text() -> String {
          \x20                                          BENCH_rca.json\n\
          \x20 vccl bench [SUITE] [--out-dir DIR] [--quick]\n\
          \x20                                          run the headline experiments and write\n\
-         \x20                                          BENCH_{p2p,failover,monitor,train,simcore,fabric}.json\n\
-         \x20                                          (SUITE restricts to one, e.g. `vccl bench fabric`)\n\
+         \x20                                          BENCH_{p2p,failover,monitor,train,simcore,fabric,elastic}.json\n\
+         \x20                                          (SUITE restricts to one, e.g. `vccl bench elastic`)\n\
          \x20 vccl soak [--sim-days F] [--quick] [--out-dir DIR]\n\
          \x20           [--resume soak.ckpt] [--stop-after-ckpts N]\n\
          \x20                                          time-compressed MTBF fault soak with\n\

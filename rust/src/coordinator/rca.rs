@@ -34,7 +34,7 @@ use anyhow::{anyhow, Result};
 use crate::ccl::{ClusterSim, CollKind, Event};
 use crate::config::Config;
 use crate::metrics::{BenchReport, Table};
-use crate::rca::{self, InjectedFault, InjectedSwitchFault, RcaTopo};
+use crate::rca::{self, InjectedFault, InjectedNodeFault, InjectedSwitchFault, RcaTopo};
 use crate::sim::SimTime;
 use crate::soak::{SoakHarness, SoakParams, TapeKind};
 use crate::topology::RankId;
@@ -47,12 +47,14 @@ pub const SCENARIOS: &[(&str, &str)] = &[
     ("fig16", "diagnosis ramp: fault→traffic gap grows per round"),
     ("fig18", "progressive multi-victim sweep with a hung op"),
     ("scale64", "64-node multi-victim: flaps + monitored degrade"),
+    ("nodes", "mid-flight node crash: symptoms walk up to the dead host"),
     ("soak", "traced MTBF soak graded against its own fault tape"),
 ];
 
 /// One executed scenario: the trace it recorded plus its ground truth.
 /// Port-class faults (flaps, NIC degrades) land in `injected`;
-/// switch-class faults (leaf outages) in `injected_switches`.
+/// switch-class faults (leaf outages) in `injected_switches`; node
+/// crashes (§Elastic) in `injected_nodes`.
 #[derive(Debug)]
 pub struct Scenario {
     pub name: &'static str,
@@ -60,6 +62,7 @@ pub struct Scenario {
     pub incidents: Vec<Incident>,
     pub injected: Vec<InjectedFault>,
     pub injected_switches: Vec<InjectedSwitchFault>,
+    pub injected_nodes: Vec<InjectedNodeFault>,
     pub topo: RcaTopo,
 }
 
@@ -101,6 +104,7 @@ fn collect(
         incidents: sink.incidents(),
         injected,
         injected_switches: Vec::new(),
+        injected_nodes: Vec::new(),
         topo: RcaTopo::from_config(cfg),
     }
 }
@@ -285,6 +289,7 @@ pub fn soak_scenario(cfg: &Config) -> Scenario {
     assert!(!h.hung(), "the soak scenario must stay live");
     let mut injected = Vec::new();
     let mut injected_switches = Vec::new();
+    let mut injected_nodes = Vec::new();
     for e in h.fault_tape() {
         match e.kind {
             TapeKind::Flap | TapeKind::Degrade => {
@@ -294,6 +299,10 @@ pub fn soak_scenario(cfg: &Config) -> Scenario {
                 injected_switches
                     .push(InjectedSwitchFault { switch: e.id, at: SimTime::ns(e.at_ns) });
             }
+            TapeKind::NodeCrash => {
+                injected_nodes
+                    .push(InjectedNodeFault { node: e.id, at: SimTime::ns(e.at_ns) });
+            }
         }
     }
     Scenario {
@@ -302,8 +311,33 @@ pub fn soak_scenario(cfg: &Config) -> Scenario {
         incidents: sink.incidents(),
         injected,
         injected_switches,
+        injected_nodes,
         topo: RcaTopo::from_config(&h.sim.cfg),
     }
+}
+
+/// nodes — the §Elastic diagnosis loop. A 256 MB AllReduce is mid-flight
+/// when node 1 crashes outright: every one of its NIC ports dies with no
+/// per-port PortDown, the elastic layer shrinks the ring and requeues the
+/// interrupted channel, and the collective completes on the survivors.
+/// The symptoms (stalls on the victim's uplinks, the errored QPs) must
+/// walk Port→Host into the node-down window — graded with
+/// [`rca::grade_nodes`].
+pub fn nodes_scenario(cfg: &Config) -> Scenario {
+    let base = fast(cfg);
+    let (c, sink) = traced(&base);
+    let mut s = ClusterSim::new(c);
+    let down = SimTime::ms(2);
+    s.inject_node_down(1, down);
+    s.inject_node_up(1, SimTime::ms(800));
+    let id = s.submit(CollKind::AllReduce, ByteSize::mb(256).0);
+    assert!(s.run_until_op(id, 400_000_000), "the shrunk collective must complete");
+    s.run_to_idle(400_000_000); // drain recovery, rejoin, warmups
+    assert_eq!(s.stats.elastic_shrinks, 1, "the crash must shrink the ring");
+    assert_eq!(s.stats.elastic_rejoins, 1, "the heal must rejoin the ring");
+    let mut sc = collect("nodes", &s.cfg, &sink, Vec::new());
+    sc.injected_nodes = vec![InjectedNodeFault { node: 1, at: down }];
+    sc
 }
 
 /// Run one scenario by id.
@@ -313,19 +347,26 @@ pub fn run_scenario(id: &str, cfg: &Config) -> Result<Scenario> {
         "fig16" => Ok(fig16_scenario(cfg)),
         "fig18" => Ok(fig18_scenario(cfg)),
         "scale64" => Ok(scale64_scenario(cfg)),
+        "nodes" => Ok(nodes_scenario(cfg)),
         "soak" => Ok(soak_scenario(cfg)),
         other => Err(anyhow!("unknown rca scenario {other:?} (try `vccl rca list`)")),
     }
 }
 
-/// Analysis + grading of one executed scenario, rendered. The third tuple
-/// element is the switch-level grade — present only for scenarios whose
-/// ground truth includes switch-class faults (the soak tape).
-pub fn diagnose(
-    sc: &Scenario,
-    cfg: &Config,
-    symptom: Option<&str>,
-) -> (String, rca::Grade, Option<rca::Grade>) {
+/// Analysis + grading of one executed scenario, rendered. Switch- and
+/// node-level grades are present only for scenarios whose ground truth
+/// includes faults of that class.
+#[derive(Debug)]
+pub struct Diagnosis {
+    pub text: String,
+    pub grade: rca::Grade,
+    pub switch_grade: Option<rca::Grade>,
+    pub node_grade: Option<rca::Grade>,
+    /// Multi-fault disambiguation over every injected victim, all classes.
+    pub disambiguation: rca::Disambiguation,
+}
+
+pub fn diagnose(sc: &Scenario, cfg: &Config, symptom: Option<&str>) -> Diagnosis {
     let g = rca::build(&sc.records, sc.topo);
     let report = rca::analyze(&g, &cfg.rca, symptom);
     let grade = rca::grade(&report, &sc.injected);
@@ -341,6 +382,35 @@ pub fn diagnose(
         );
         sg
     });
+    let node_grade = (!sc.injected_nodes.is_empty()).then(|| {
+        let ng = rca::grade_nodes(&report, &sc.injected_nodes);
+        let _ = writeln!(
+            out,
+            "\nground truth (node-level) — {}: {} crashed node(s), \
+             {} attribution(s), precision {:.2}, recall {:.2}",
+            sc.name, ng.injected, ng.attributed, ng.precision, ng.recall,
+        );
+        ng
+    });
+    // Disambiguation: every victim, regardless of class, competes for
+    // every symptom — the score says whether symptoms name their OWN.
+    let mut victims: Vec<rca::Node> =
+        sc.injected.iter().map(|f| rca::Node::Port(f.port)).collect();
+    victims.extend(sc.injected_switches.iter().map(|f| rca::Node::Switch(f.switch)));
+    victims.extend(sc.injected_nodes.iter().map(|f| rca::Node::Host(f.node)));
+    let disambiguation = rca::disambiguate(&report, &victims);
+    if disambiguation.scored + disambiguation.ambiguous > 0 {
+        let _ = writeln!(
+            out,
+            "\ndisambiguation — {}: {}/{} symptom(s) named their own victim \
+             ({} ambiguous), score {:.2}",
+            sc.name,
+            disambiguation.correct,
+            disambiguation.scored,
+            disambiguation.ambiguous,
+            disambiguation.score,
+        );
+    }
     // Incident join (no string parsing): the triggering verdict/failover
     // port plus the live in-flight transfers frozen with each snapshot —
     // the operator's view of what a hung op was actually waiting on.
@@ -366,7 +436,7 @@ pub fn diagnose(
         let _ = writeln!(out, "\nincidents ({}):\n", sc.incidents.len());
         out.push_str(&t.render());
     }
-    (out, grade, switch_grade)
+    Diagnosis { text: out, grade, switch_grade, node_grade, disambiguation }
 }
 
 /// The `vccl rca <id>` entry point: run the scenario set, diagnose, grade,
@@ -379,20 +449,21 @@ pub fn run_rca(id: &str, cfg: &Config, symptom: Option<&str>) -> Result<(String,
             for (n, d) in SCENARIOS {
                 let _ = writeln!(out, "{n:10} {d}");
             }
-            return Ok((out, BenchReport::new("rca", "Fig 15/16/18 + scale64 + soak diagnosis")));
+            return Ok((out, BenchReport::new("rca", "Fig 15/16/18 + scale64 + nodes + soak diagnosis")));
         }
         one => vec![one],
     };
     let mut out = String::new();
-    let mut bench = BenchReport::new("rca", "Fig 15/16/18 + scale64 + soak diagnosis");
+    let mut bench = BenchReport::new("rca", "Fig 15/16/18 + scale64 + nodes + soak diagnosis");
     for (i, sid) in ids.iter().enumerate() {
         let sc = run_scenario(sid, cfg)?;
-        let (text, grade, switch_grade) = diagnose(&sc, cfg, symptom);
+        let d = diagnose(&sc, cfg, symptom);
+        let grade = &d.grade;
         if i > 0 {
             out.push('\n');
         }
         let _ = writeln!(out, "================ rca {sid} ================");
-        out.push_str(&text);
+        out.push_str(&d.text);
         bench
             .push(format!("rca.{sid}.injected"), grade.injected as f64, "count")
             .push(format!("rca.{sid}.attributed"), grade.attributed as f64, "count")
@@ -410,13 +481,35 @@ pub fn run_rca(id: &str, cfg: &Config, symptom: Option<&str>) -> Result<(String,
         }
         // Switch-class ground truth (the soak tape's leaf outages) gets its
         // own BENCH rows so CI can gate fabric attribution separately.
-        if let Some(sg) = switch_grade {
+        if let Some(sg) = &d.switch_grade {
             bench
                 .push(format!("rca.{sid}.switch_injected"), sg.injected as f64, "count")
                 .push(format!("rca.{sid}.switch_attributed"), sg.attributed as f64, "count")
                 .push(format!("rca.{sid}.switch_precision"), sg.precision, "ratio")
                 .push(format!("rca.{sid}.switch_recall"), sg.recall, "ratio");
         }
+        // Node-class ground truth (§Elastic): crashed-host attribution.
+        if let Some(ng) = &d.node_grade {
+            bench
+                .push(format!("rca.{sid}.node_injected"), ng.injected as f64, "count")
+                .push(format!("rca.{sid}.node_attributed"), ng.attributed as f64, "count")
+                .push(format!("rca.{sid}.node_precision"), ng.precision, "ratio")
+                .push(format!("rca.{sid}.node_recall"), ng.recall, "ratio");
+        }
+        // The disambiguation satellite: did each symptom name its OWN
+        // victim (scored only where exactly one victim was reachable)?
+        bench
+            .push(format!("rca.{sid}.disambiguation"), d.disambiguation.score, "ratio")
+            .push(
+                format!("rca.{sid}.disambiguation_scored"),
+                d.disambiguation.scored as f64,
+                "count",
+            )
+            .push(
+                format!("rca.{sid}.disambiguation_ambiguous"),
+                d.disambiguation.ambiguous as f64,
+                "count",
+            );
     }
     Ok((out, bench))
 }
@@ -433,8 +526,10 @@ mod tests {
     fn fig16_tta_ramps_with_symptom_availability() {
         let cfg = Config::paper_defaults();
         let sc = fig16_scenario(&cfg);
-        let (text, grade, switch_grade) = diagnose(&sc, &cfg, None);
-        assert!(switch_grade.is_none(), "fig16 injects no switch-class faults");
+        let d = diagnose(&sc, &cfg, None);
+        let (text, grade) = (&d.text, &d.grade);
+        assert!(d.switch_grade.is_none(), "fig16 injects no switch-class faults");
+        assert!(d.node_grade.is_none(), "fig16 injects no node-class faults");
         assert!(grade.recall >= 0.9, "recall {}\n{text}", grade.recall);
         assert!(grade.precision >= 0.9, "precision {}\n{text}", grade.precision);
         // Ports 0..6 were downed in round order; tta_ns is sorted by port.
@@ -448,7 +543,7 @@ mod tests {
                 "round {r}: tta {tta_ms} ms vs gap {gap_ms} ms\n{text}"
             );
         }
-        let (only, _, _) = diagnose(&sc, &cfg, Some("qp-retry"));
+        let only = diagnose(&sc, &cfg, Some("qp-retry")).text;
         assert!(text.len() > only.len());
         assert!(only.contains("qp-retry"), "{only}");
         assert!(!only.contains("qp-error"), "{only}");
@@ -469,8 +564,9 @@ mod tests {
             sc.injected.len(),
             sc.injected_switches.len()
         );
-        let (text, grade, switch_grade) = diagnose(&sc, &cfg, None);
-        let sg = switch_grade.expect("the soak tape carries switch faults");
+        let d = diagnose(&sc, &cfg, None);
+        let (text, grade) = (&d.text, &d.grade);
+        let sg = d.switch_grade.as_ref().expect("the soak tape carries switch faults");
         assert!(grade.precision >= 0.9, "port precision {}\n{text}", grade.precision);
         assert!(grade.recall >= 0.6, "port recall {}\n{text}", grade.recall);
         // Switch attributions only arise inside an outage's fault window,
@@ -478,6 +574,27 @@ mod tests {
         assert!(sg.precision >= 0.9, "switch precision {}\n{text}", sg.precision);
         assert!(sg.recall >= 0.5, "switch recall {}\n{text}", sg.recall);
         assert!(text.contains("ground truth (switch-level) — soak"), "{text}");
+    }
+
+    /// §Elastic: the nodes scenario crashes a server mid-collective; the
+    /// diagnosis must attribute confidently to the dead host (never to a
+    /// port — no per-port PortDown is ever recorded), and the
+    /// disambiguation score over the single victim must be perfect.
+    #[test]
+    fn nodes_scenario_attributes_to_the_dead_host() {
+        let cfg = Config::paper_defaults();
+        let sc = nodes_scenario(&cfg);
+        assert_eq!(sc.injected_nodes.len(), 1);
+        assert!(sc.injected.is_empty() && sc.injected_switches.is_empty());
+        let d = diagnose(&sc, &cfg, None);
+        let ng = d.node_grade.as_ref().expect("node ground truth must be graded");
+        assert_eq!(ng.injected, 1);
+        assert!(ng.attributed >= 1, "some symptom must walk to the host\n{}", d.text);
+        assert!(ng.precision >= 0.9, "node precision {}\n{}", ng.precision, d.text);
+        assert_eq!(ng.recall, 1.0, "the crashed host must be recalled\n{}", d.text);
+        assert!(d.disambiguation.score >= 0.99, "{:?}\n{}", d.disambiguation, d.text);
+        assert!(d.text.contains("ground truth (node-level) — nodes"), "{}", d.text);
+        assert!(d.text.contains("host 1"), "{}", d.text);
     }
 
     #[test]

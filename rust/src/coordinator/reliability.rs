@@ -3,11 +3,11 @@
 
 use std::fmt::Write as _;
 
-use crate::ccl::{ClusterSim, CollKind};
+use crate::ccl::{ClusterSim, CollKind, OpId};
 use crate::config::Config;
 use crate::metrics::Table;
 use crate::pipeline::{PipelineCfg, PipelineSim};
-use crate::rca::{self, InjectedSwitchFault, RcaTopo};
+use crate::rca::{self, InjectedNodeFault, InjectedSwitchFault, RcaTopo};
 use crate::sim::SimTime;
 use crate::topology::RankId;
 use crate::trace::TraceSink;
@@ -445,6 +445,213 @@ pub fn fabric_failover(cfg: &Config) -> String {
     out
 }
 
+/// Everything the §Elastic node-crash preset measures (shared by the
+/// `elastic` experiment and `vccl bench elastic`).
+#[derive(Debug, Clone)]
+pub struct ElasticRun {
+    /// Ring shrinks observed (must be exactly 1 for the single crash).
+    pub shrinks: u64,
+    /// Deferred re-entries after the node returned (must also be 1).
+    pub rejoins: u64,
+    /// (op, channel) ring steps aborted by the shrink and re-run.
+    pub steps_requeued: u64,
+    pub lost_ops: u64,
+    /// Crash → interrupted collective completion on the shrunk ring (ms).
+    pub recovery_ms: f64,
+    /// 256MB AllReduce algbw per phase: full ring (crash-free twin),
+    /// shrunk N−1 ring, rejoined full ring.
+    pub baseline_gbps: f64,
+    pub degraded_gbps: f64,
+    pub recovered_gbps: f64,
+    /// Ring membership after the rejoin vs the full communicator.
+    pub rejoin_ranks: usize,
+    pub full_ranks: usize,
+    /// Rail-disjoint pipeline P2P timers identical to the crash-free twin.
+    pub noncrossing_identical: bool,
+    /// The crashed node (RCA ground truth).
+    pub node: usize,
+    pub rca_attributed: usize,
+    pub rca_precision: f64,
+}
+
+impl ElasticRun {
+    /// Rejoin completeness: ranks back in the ring over the full set.
+    pub fn rejoin_completeness(&self) -> f64 {
+        if self.full_ranks == 0 {
+            0.0
+        } else {
+            self.rejoin_ranks as f64 / self.full_ranks as f64
+        }
+    }
+}
+
+/// §Elastic preset: 3 nodes, a monitored 2-channel AllReduce (whose ring
+/// channels stripe rails 0/1 and cross every node) plus two pipeline P2P
+/// streams on rails 4/5 between the two survivors. Node 2 crashes
+/// mid-collective: the crossing channels are aborted and requeued on the
+/// shrunk 2-node ring, the P2P streams — link-disjoint from every crossing
+/// channel (per-rail uplinks AND per-rail trunk pairs) — must not shift by
+/// a nanosecond, and the node's return re-expands the ring behind QP
+/// warm-up. A crash-free twin run provides the baseline goodput and the
+/// bit-identity reference. The crash run is flight-recorded so RCA is
+/// graded on the same evidence an operator would have.
+pub fn elastic_run(cfg: &Config) -> ElasticRun {
+    let mk = || {
+        let mut c = experiments::transport_cfg(cfg, "vccl", 3, 2);
+        c.vccl.monitor = true;
+        // Short retry window + warm-up (as `fabric_run`) so the whole
+        // crash → rejoin arc fits in under a second of simulated time.
+        c.net.ib_timeout_exp = 10;
+        c.net.ib_retry_cnt = 2;
+        c.net.qp_warmup_ns = 100_000_000;
+        c
+    };
+    // 256MB so the collective is still mid-flight at the 2ms crash (64MB
+    // drains in ~1.3ms at line rate — see `bench_failover`'s sizing note).
+    let ar_bytes = ByteSize::mb(256).0;
+    let p2p_bytes = ByteSize::mb(256).0;
+    // Rails 4/5, node 0 → node 1: these never touch the victim node or
+    // the AllReduce's rail-0/1 links (channels stripe rails — see
+    // `crate::topology::build_rings`), so the crash may not move them.
+    let streams = [(RankId(4), RankId(12)), (RankId(5), RankId(13))];
+    // Start/finish plus the per-channel roll-up of each P2P stream as one
+    // comparable signature; the Debug rendering carries every timer ns.
+    let p2p_sig = |s: &ClusterSim, ids: &[OpId]| -> Vec<String> {
+        ids.iter()
+            .map(|id| {
+                let o = &s.ops[id.0];
+                format!("{:?} {:?} {:?}", o.started_at, o.finished_at, o.chan_rollup)
+            })
+            .collect()
+    };
+
+    // Crash-free twin: baseline goodput + the bit-identity reference.
+    let (ref_sig, baseline_gbps) = {
+        let mut s = ClusterSim::new(mk());
+        let ar = s.submit(CollKind::AllReduce, ar_bytes);
+        let ids: Vec<_> =
+            streams.iter().map(|&(a, b)| s.submit_p2p(a, b, p2p_bytes)).collect();
+        assert!(s.run_until_op(ar, 400_000_000), "twin allreduce must complete");
+        for &id in &ids {
+            assert!(s.run_until_op(id, 400_000_000), "twin stream must complete");
+        }
+        (p2p_sig(&s, &ids), s.ops[ar.0].algbw_gbps().expect("twin allreduce done"))
+    };
+
+    // Crash run, flight-recorded end to end.
+    let mut c = mk();
+    c.trace.enabled = true;
+    c.trace.ring_capacity = c.trace.ring_capacity.max(1 << 20);
+    c.trace.snapshot_window_ns = c.trace.snapshot_window_ns.max(2_000_000_000);
+    let sink = TraceSink::new(c.trace.ring_capacity, c.trace.snapshot_window_ns);
+    c.trace.sink = Some(sink.clone());
+    let mut s = ClusterSim::new(c);
+    let node = 2usize;
+    let down_at = SimTime::ms(2);
+    let up_at = SimTime::ms(400);
+    s.inject_node_down(node, down_at);
+    s.inject_node_up(node, up_at);
+    let ar = s.submit(CollKind::AllReduce, ar_bytes);
+    let ids: Vec<_> = streams.iter().map(|&(a, b)| s.submit_p2p(a, b, p2p_bytes)).collect();
+    assert!(s.run_until_op(ar, 400_000_000), "elastic allreduce must complete");
+    for &id in &ids {
+        assert!(s.run_until_op(id, 400_000_000), "elastic stream must complete");
+    }
+    let recovery_ms = s.ops[ar.0].finished_at.expect("done").since(down_at).as_ms_f64();
+    let steps_requeued = s.stats.ops_requeued;
+    let shrinks = s.stats.elastic_shrinks;
+
+    // N−1 goodput: the same AllReduce on the shrunk two-node ring.
+    let d = s.submit(CollKind::AllReduce, ar_bytes);
+    assert!(s.run_until_op(d, 400_000_000), "degraded allreduce must complete");
+    let degraded_gbps = s.ops[d.0].algbw_gbps().expect("degraded allreduce done");
+    assert!(s.now() < up_at, "degraded phase must finish before the node returns");
+
+    // Rejoin: run past the node's return and its QP warm-up, then measure
+    // the full ring again.
+    s.run_until(up_at + SimTime::ms(150));
+    s.run_to_idle(400_000_000);
+    let rejoin_ranks = s.rings[0].order.len();
+    let full_ranks = s.topo.num_ranks();
+    let r = s.submit(CollKind::AllReduce, ar_bytes);
+    assert!(s.run_until_op(r, 400_000_000), "recovered allreduce must complete");
+    let recovered_gbps = s.ops[r.0].algbw_gbps().expect("recovered allreduce done");
+
+    let noncrossing_identical = p2p_sig(&s, &ids) == ref_sig;
+
+    // Grade RCA on the crash run's own flight recorder: every confident
+    // host-level attribution must name the crashed node.
+    let g = rca::build(&sink.records(), RcaTopo::from_config(&s.cfg));
+    let report = rca::analyze(&g, &s.cfg.rca, None);
+    let grade = rca::grade_nodes(&report, &[InjectedNodeFault { node, at: down_at }]);
+    ElasticRun {
+        shrinks,
+        rejoins: s.stats.elastic_rejoins,
+        steps_requeued,
+        lost_ops: s.stats.hung_ops,
+        recovery_ms,
+        baseline_gbps,
+        degraded_gbps,
+        recovered_gbps,
+        rejoin_ranks,
+        full_ranks,
+        noncrossing_identical,
+        node,
+        rca_attributed: grade.attributed,
+        rca_precision: grade.precision,
+    }
+}
+
+/// The `elastic` experiment: render [`elastic_run`] as a phase table.
+pub fn elastic_recovery(cfg: &Config) -> String {
+    let r = elastic_run(cfg);
+    let mut t = Table::new(vec!["phase", "AllReduce algbw (Gbps)", "note"]);
+    t.row(vec![
+        "baseline".into(),
+        format!("{:.0}", r.baseline_gbps),
+        "full 3-node ring (crash-free twin)".into(),
+    ]);
+    t.row(vec![
+        "shrunk (N−1)".into(),
+        format!("{:.0}", r.degraded_gbps),
+        format!(
+            "{} step(s) requeued; interrupted op done {:.1} ms after the crash",
+            r.steps_requeued, r.recovery_ms
+        ),
+    ]);
+    t.row(vec![
+        "rejoined".into(),
+        format!("{:.0}", r.recovered_gbps),
+        format!("{}/{} ranks back in the ring", r.rejoin_ranks, r.full_ranks),
+    ]);
+    let mut out = String::from(
+        "Elastic node crash — node 2 dies mid-AllReduce, the ring shrinks\n\
+         without draining the world, and the node rejoins behind QP warm-up\n\
+         (§Elastic)\n\n",
+    );
+    out.push_str(&t.render());
+    let _ = writeln!(
+        out,
+        "\nshrinks={} rejoins={} steps_requeued={} lost_ops={} rejoin_completeness={:.2}",
+        r.shrinks,
+        r.rejoins,
+        r.steps_requeued,
+        r.lost_ops,
+        r.rejoin_completeness()
+    );
+    let _ = writeln!(
+        out,
+        "non-crossing pipeline P2P bit-identical to the crash-free twin: {}",
+        r.noncrossing_identical
+    );
+    let _ = writeln!(
+        out,
+        "rca: {} host-level attribution(s) to host {} — precision {:.2}",
+        r.rca_attributed, r.node, r.rca_precision
+    );
+    out
+}
+
 /// Ablation: the intentional retry window (≈ half of flaps recover within
 /// seconds) vs immediate failover.
 pub fn retrywin_ablation(cfg: &Config) -> String {
@@ -541,6 +748,39 @@ mod tests {
             r.baseline_gbps
         );
         assert!(r.rca_attributed >= 1, "the trunk outage must be walkable");
+        assert!(r.rca_precision >= 0.9, "precision {}", r.rca_precision);
+    }
+
+    /// §Elastic acceptance: one node crash mid-collective loses zero ops,
+    /// shrinks exactly once and rejoins exactly once, leaves the
+    /// rail-disjoint pipeline P2P bit-identical to the crash-free twin,
+    /// re-expands to the full ring, and returns goodput to baseline. RCA
+    /// pins the blame on the crashed host.
+    #[test]
+    fn elastic_node_crash_shrinks_rejoins_and_recovers() {
+        let r = elastic_run(&Config::paper_defaults());
+        assert_eq!(r.shrinks, 1, "exactly one shrink per crash");
+        assert_eq!(r.rejoins, 1, "exactly one rejoin per recovery");
+        assert!(r.steps_requeued >= 1, "the mid-flight collective must requeue");
+        assert_eq!(r.lost_ops, 0, "an elastic shrink loses nothing");
+        assert!(
+            r.noncrossing_identical,
+            "rail-disjoint P2P must not shift by a nanosecond"
+        );
+        assert_eq!(r.rejoin_completeness(), 1.0, "all ranks return to the ring");
+        assert!(
+            r.degraded_gbps > 0.0 && r.degraded_gbps < r.baseline_gbps * 1.5,
+            "the shrunk ring still moves bytes: {} vs {}",
+            r.degraded_gbps,
+            r.baseline_gbps
+        );
+        assert!(
+            r.recovered_gbps >= r.baseline_gbps * 0.99,
+            "post-rejoin goodput must return to baseline: {} vs {}",
+            r.recovered_gbps,
+            r.baseline_gbps
+        );
+        assert!(r.rca_attributed >= 1, "the crash must be walkable");
         assert!(r.rca_precision >= 0.9, "precision {}", r.rca_precision);
     }
 }

@@ -37,12 +37,24 @@ pub fn quick_cfg(mut cfg: Config) -> Config {
     cfg
 }
 
+/// Apply `soak.preset` onto a config: "burst" keeps the 2-node soak
+/// cluster; "scale64" widens it to the 64-node scaling topology (the soak
+/// baseline already carries scale64's shortened failure time constants,
+/// so the widening is the only delta — monitor and dual-port NICs stay).
+pub fn preset_cfg(mut cfg: Config) -> Config {
+    if cfg.soak.preset == "scale64" {
+        cfg.topo.num_nodes = 64;
+    }
+    cfg
+}
+
 /// Run (or resume) a soak; write `soak.ckpt` checkpoints and the final
 /// `BENCH_soak.json` into `out_dir`. Returns the human-readable summary.
 pub fn run_soak(cfg: &Config, out_dir: &Path, opts: &SoakOpts) -> Result<String> {
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
     let cfg = if opts.quick { quick_cfg(cfg.clone()) } else { cfg.clone() };
+    let cfg = preset_cfg(cfg);
     let ckpt_path = out_dir.join("soak.ckpt");
 
     let mut h = match &opts.resume {
@@ -155,6 +167,22 @@ mod tests {
 
         let _ = std::fs::remove_dir_all(&ref_dir);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `soak.preset=scale64` widens the soak cluster to the 64-node
+    /// scaling topology without touching the rest of the soak baseline;
+    /// the default "burst" preset leaves the config alone.
+    #[test]
+    fn scale64_preset_widens_the_cluster() {
+        let mut cfg = Config::soak_defaults();
+        cfg.set_key("soak.preset", "scale64").unwrap();
+        let c = preset_cfg(cfg);
+        assert_eq!(c.topo.num_nodes, 64);
+        assert!(c.topo.dual_port_nics, "soak keeps dual-port NICs at scale");
+        assert_eq!(c.vccl.channels, 1);
+        let base = Config::soak_defaults();
+        let c2 = preset_cfg(base.clone());
+        assert_eq!(c2.topo.num_nodes, base.topo.num_nodes, "burst preset is a no-op");
     }
 
     #[test]

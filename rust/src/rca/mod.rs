@@ -94,6 +94,12 @@ impl RcaTopo {
         (link < self.nic_links).then_some(link / 2)
     }
 
+    /// The host node (server) a port ordinal belongs to: ports are laid
+    /// out node-major, `nics_per_node × ports_per_nic` per node.
+    pub fn port_node(&self, port: usize) -> usize {
+        port / (self.nics_per_node * self.ports_per_nic).max(1)
+    }
+
     /// The leaf switch that owns a link (fabric layout contract): a NIC
     /// uplink belongs to the leaf of its (rail, plane); trunk pairs follow
     /// the NIC uplinks in the table, one up/down pair per leaf. `None`
@@ -119,6 +125,8 @@ pub enum Node {
     Port(usize),
     Link(usize),
     Switch(usize),
+    /// A host server (§Elastic): the fault domain a node crash opens.
+    Host(usize),
     Qp(u64),
     Conn(usize),
     Flow(u64),
@@ -132,6 +140,7 @@ impl Node {
             Node::Port(p) => format!("port {p}"),
             Node::Link(l) => format!("link {l}"),
             Node::Switch(s) => format!("switch {s}"),
+            Node::Host(h) => format!("host {h}"),
             Node::Qp(q) => format!("qp {q}"),
             Node::Conn(c) => format!("conn {c}"),
             Node::Flow(f) => format!("flow {f}"),
@@ -156,6 +165,10 @@ pub enum EdgeKind {
     LinkOnPort,
     /// Trunk link → the switch that owns it (fault-domain hierarchy).
     LinkOnSwitch,
+    /// NIC port → the host server it is plugged into (static layout):
+    /// a crashed node emits no per-port `PortDown`, so symptoms on its
+    /// ports walk up to the node-down window through this edge.
+    PortOnNode,
     /// Conn → the dead link a path migration named (`PathMigrated`).
     ConnOnLink,
     /// Xfer → the connection whose pointers migrated.
@@ -174,6 +187,7 @@ impl EdgeKind {
             EdgeKind::FlowOnLink => "stalled on",
             EdgeKind::LinkOnPort => "uplink of",
             EdgeKind::LinkOnSwitch => "member of",
+            EdgeKind::PortOnNode => "hosted by",
             EdgeKind::ConnOnLink => "migrated off",
             EdgeKind::XferOnConn => "carried by",
             EdgeKind::OpOverlap => "overlaps",
@@ -371,6 +385,12 @@ pub fn build(records: &[TraceRecord], topo: RcaTopo) -> CausalGraph {
             TraceEvent::SwitchUp { switch } => {
                 g.close_fault(Node::Switch(switch), r.at);
             }
+            TraceEvent::NodeDown { node } => {
+                g.open_fault(Node::Host(node), "node-down", r.at);
+            }
+            TraceEvent::NodeUp { node } => {
+                g.close_fault(Node::Host(node), r.at);
+            }
             TraceEvent::TrunkDegraded { link, switch, .. } => {
                 g.add_edge(Node::Link(link), Node::Switch(switch), EdgeKind::LinkOnSwitch);
                 g.open_fault(Node::Switch(switch), "trunk-down", r.at);
@@ -394,6 +414,29 @@ pub fn build(records: &[TraceRecord], topo: RcaTopo) -> CausalGraph {
             }
             _ => {}
         }
+    }
+    // Every port in the graph hangs off its host server (static layout,
+    // like Link→Port): a node crash kills every NIC port of the victim
+    // WITHOUT per-port PortDown events, so symptoms on those ports need
+    // the Port→Host edge to reach the node-down fault window.
+    let mut ports: BTreeSet<usize> = BTreeSet::new();
+    for (n, v) in &g.edges {
+        if let Node::Port(p) = n {
+            ports.insert(*p);
+        }
+        for (c, _) in v {
+            if let Node::Port(p) = c {
+                ports.insert(*p);
+            }
+        }
+    }
+    for s in &g.symptoms {
+        if let Node::Port(p) = s.node {
+            ports.insert(p);
+        }
+    }
+    for p in ports {
+        g.add_edge(Node::Port(p), Node::Host(topo.port_node(p)), EdgeKind::PortOnNode);
     }
     // Ops still open when the trace ends are hung. Each becomes a symptom
     // with temporal edges to every entity that showed a symptom inside the
@@ -459,6 +502,15 @@ impl Attribution {
     pub fn attributed_switch(&self) -> Option<usize> {
         self.causes.iter().find(|c| c.confident).and_then(|c| match c.node {
             Node::Switch(s) => Some(s),
+            _ => None,
+        })
+    }
+
+    /// The host the top confident cause names — what node-level grading
+    /// ([`grade_nodes`]) counts.
+    pub fn attributed_node(&self) -> Option<usize> {
+        self.causes.iter().find(|c| c.confident).and_then(|c| match c.node {
+            Node::Host(h) => Some(h),
             _ => None,
         })
     }
@@ -768,6 +820,104 @@ pub fn grade_switches(report: &RcaReport, injected: &[InjectedSwitchFault]) -> G
         precision: if attributed == 0 { 1.0 } else { correct as f64 / attributed as f64 },
         recall: if switches.is_empty() { 1.0 } else { tta.len() as f64 / switches.len() as f64 },
         tta_ns: tta.into_iter().collect(),
+    }
+}
+
+/// Ground truth for a node-level fault: the crashed host server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedNodeFault {
+    pub node: usize,
+    pub at: SimTime,
+}
+
+/// Score a report against injected node crashes: same shape as [`grade`]
+/// but keyed on the host the top confident cause names. `tta_ns` entries
+/// are keyed by host id.
+pub fn grade_nodes(report: &RcaReport, injected: &[InjectedNodeFault]) -> Grade {
+    let hosts: BTreeSet<usize> = injected.iter().map(|f| f.node).collect();
+    let mut attributed = 0usize;
+    let mut correct = 0usize;
+    let mut tta: BTreeMap<usize, u64> = BTreeMap::new();
+    for a in &report.attributions {
+        let Some(h) = a.attributed_node() else { continue };
+        attributed += 1;
+        if hosts.contains(&h) {
+            correct += 1;
+            if let Some(f) = injected
+                .iter()
+                .filter(|f| f.node == h && f.at <= a.symptom.at)
+                .max_by_key(|f| f.at.as_ns())
+            {
+                let d = a.symptom.at.as_ns() - f.at.as_ns();
+                tta.entry(h).and_modify(|e| *e = (*e).min(d)).or_insert(d);
+            }
+        }
+    }
+    Grade {
+        injected: hosts.len(),
+        attributed,
+        correct,
+        recalled: tta.len(),
+        precision: if attributed == 0 { 1.0 } else { correct as f64 / attributed as f64 },
+        recall: if hosts.is_empty() { 1.0 } else { tta.len() as f64 / hosts.len() as f64 },
+        tta_ns: tta.into_iter().collect(),
+    }
+}
+
+/// Multi-fault disambiguation score: with several victims at fault
+/// simultaneously, does each symptom name *its own* victim — the one its
+/// causal walk actually reaches — rather than a fresher or closer fault
+/// elsewhere in the fabric?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Disambiguation {
+    /// Symptoms whose candidate list reaches exactly one injected victim.
+    pub scored: usize,
+    /// Of those, the top confident cause named that victim.
+    pub correct: usize,
+    /// Symptoms reaching two or more victims (op-overlap bridges): they
+    /// are ambiguous by construction, not mis-attributed, so they are
+    /// counted but not scored.
+    pub ambiguous: usize,
+    /// `correct / scored`; vacuously 1.0 with nothing to score.
+    pub score: f64,
+}
+
+/// Score how well the report disambiguates between the given victim
+/// entities (injected ports as [`Node::Port`], switches as
+/// [`Node::Switch`], crashed hosts as [`Node::Host`]). A symptom is
+/// "scored" when exactly one victim is reachable in its candidate list;
+/// it is "correct" when the top confident cause is that victim.
+pub fn disambiguate(report: &RcaReport, victims: &[Node]) -> Disambiguation {
+    let vs: BTreeSet<Node> = victims.iter().copied().collect();
+    let mut scored = 0usize;
+    let mut correct = 0usize;
+    let mut ambiguous = 0usize;
+    for a in &report.attributions {
+        let reachable: BTreeSet<Node> = a
+            .causes
+            .iter()
+            .filter(|c| c.confident)
+            .map(|c| c.node)
+            .filter(|n| vs.contains(n))
+            .collect();
+        match reachable.len() {
+            0 => {}
+            1 => {
+                scored += 1;
+                let own = *reachable.iter().next().expect("len == 1");
+                let top = a.causes.iter().find(|c| c.confident).map(|c| c.node);
+                if top == Some(own) {
+                    correct += 1;
+                }
+            }
+            _ => ambiguous += 1,
+        }
+    }
+    Disambiguation {
+        scored,
+        correct,
+        ambiguous,
+        score: if scored == 0 { 1.0 } else { correct as f64 / scored as f64 },
     }
 }
 
@@ -1288,5 +1438,71 @@ mod tests {
         for s in &g.symptoms {
             let _ = g.walk(s, &rcfg()); // must not hang
         }
+    }
+
+    /// §Elastic: a node crash opens a fault window on the host, and a
+    /// stall on one of the victim's uplinks walks Flow → Link → Port →
+    /// Host into it — with no per-port PortDown ever recorded.
+    #[test]
+    fn node_crash_symptoms_attribute_to_host() {
+        let recs = vec![
+            rec(2_000_000, 0, TraceEvent::NodeDown { node: 1 }),
+            // Link 18 is port 9's tx uplink; port 9 lives on node 1.
+            rec(2_100_000, 1, TraceEvent::FlowStalled { flow: 5, link: Some(18) }),
+            rec(400_000_000, 2, TraceEvent::NodeUp { node: 1 }),
+        ];
+        let g = build(&recs, topo32());
+        assert_eq!(g.faults.len(), 1);
+        assert_eq!(g.faults[0].node, Node::Host(1));
+        assert_eq!(g.faults[0].kind, "node-down");
+        assert_eq!(g.faults[0].until, Some(SimTime::ms(400)));
+        let causes = g.walk(&g.symptoms[0], &rcfg());
+        assert!(causes[0].confident);
+        assert_eq!(causes[0].node, Node::Host(1));
+        assert_eq!(causes[0].hops, 3); // Flow -> Link -> Port -> Host
+        let report = analyze(&g, &rcfg(), None);
+        let gr = grade_nodes(
+            &report,
+            &[InjectedNodeFault { node: 1, at: SimTime::ms(2) }],
+        );
+        assert_eq!(gr.injected, 1);
+        assert_eq!(gr.recalled, 1);
+        assert_eq!(gr.precision, 1.0);
+        assert_eq!(gr.recall, 1.0);
+        assert_eq!(gr.tta_ns, vec![(1, 100_000)]);
+        // No PORT is blamed for a node death (there is no port window).
+        let pgr = grade(&report, &[]);
+        assert_eq!(pgr.attributed, 0, "host attributions must not count as ports");
+    }
+
+    /// The disambiguation satellite: two simultaneous victims, one stall
+    /// each. Each stall reaches exactly its own victim (scored, correct);
+    /// the hung op overlaps both and is counted ambiguous, not wrong.
+    #[test]
+    fn concurrent_victims_disambiguate_per_symptom() {
+        let recs = vec![
+            rec(0, 0, TraceEvent::OpSubmitted { op: 0, kind: "AllReduce", bytes: 1 << 20 }),
+            rec(1_000_000, 1, TraceEvent::PortDown { port: 2 }),
+            rec(1_000_000, 2, TraceEvent::PortDown { port: 9 }),
+            // Link 4 -> port 2, link 18 -> port 9: disjoint walks.
+            rec(1_100_000, 3, TraceEvent::FlowStalled { flow: 5, link: Some(4) }),
+            rec(1_200_000, 4, TraceEvent::FlowStalled { flow: 6, link: Some(18) }),
+        ];
+        let g = build(&recs, topo32());
+        let report = analyze(&g, &rcfg(), None);
+        let victims = [Node::Port(2), Node::Port(9)];
+        let d = disambiguate(&report, &victims);
+        assert_eq!(d.scored, 2, "each stall reaches exactly one victim");
+        assert_eq!(d.correct, 2, "each stall names its own victim");
+        assert_eq!(d.ambiguous, 1, "the hung op overlaps both victims");
+        assert_eq!(d.score, 1.0);
+        // And the per-stall attributions really are distinct ports.
+        let stall_ports: Vec<Option<usize>> = report
+            .attributions
+            .iter()
+            .filter(|a| a.symptom.kind == SymptomKind::FlowStall)
+            .map(|a| a.attributed_port())
+            .collect();
+        assert_eq!(stall_ports, vec![Some(2), Some(9)]);
     }
 }

@@ -35,6 +35,17 @@
 //!   link; heals MTTR later. Per victim this grades exactly like a flap
 //!   (one failover to the backup plane/rail, one failback), but the
 //!   perception path is path-death, never a port flap.
+//! - **node crashes** (`soak.node_weight`, §Elastic) — a whole peer node
+//!   (never node 0, which hosts every graded port) dies
+//!   (`inject_node_down`), the cluster shrinks around it, and it rejoins
+//!   MTTR later. Graded as zero lost ops and exactly one elastic
+//!   shrink + rejoin per crash. While the victim is dead the pipeline
+//!   wave routes to the next alive peer node (skipped when none exists).
+//!   Dedup is two-way across fault domains: a crash on a node with an
+//!   in-force port fault is suppressed (the flap's heal would revive one
+//!   port of a dead server), and port-keyed faults on a crashed node's
+//!   ports are suppressed — both counted via `faults_suppressed`,
+//!   mirroring the LinkId-keyed trunk dedup.
 //!
 //! Every injection is appended to the **fault tape** ([`TapeEntry`], the
 //! soak's ground truth) so `vccl rca` can diagnose a soak's trace ring and
@@ -50,7 +61,7 @@
 //!
 //! ## Checkpoint format
 //!
-//! `SoakHarness::checkpoint` emits a `VCCLSOAK v2` header (harness
+//! `SoakHarness::checkpoint` emits a `VCCLSOAK v3` header (harness
 //! counters, both RNG streams, the fault clock, active faults, the fault
 //! tape, the per-port verdict baseline) followed by the embedded `VCCLCKPT` stream
 //! of the simulation. A version bump is REQUIRED whenever any serialized
@@ -150,6 +161,10 @@ pub struct SoakParams {
     pub degrade_weight: u32,
     pub trunk_weight: u32,
     pub switch_weight: u32,
+    /// Relative weight of whole-node crashes (§Elastic). Defaults to 0 so
+    /// the pre-elastic fault mix (and its RNG stream) is unchanged unless
+    /// explicitly opted into.
+    pub node_weight: u32,
     /// Run the per-burst DP AllReduce (off = pure P2P soak).
     pub allreduce: bool,
 }
@@ -168,6 +183,7 @@ impl SoakParams {
             degrade_weight: 1,
             trunk_weight: cfg.soak.trunk_weight,
             switch_weight: cfg.soak.switch_weight,
+            node_weight: cfg.soak.node_weight,
             allreduce: true,
         }
     }
@@ -184,6 +200,8 @@ pub enum TapeKind {
     TrunkDegrade,
     /// Whole-switch outage — `id` is the leaf switch.
     SwitchDown,
+    /// Whole-node crash (§Elastic) — `id` is the victim node.
+    NodeCrash,
 }
 
 impl TapeKind {
@@ -193,6 +211,7 @@ impl TapeKind {
             TapeKind::Degrade => 1,
             TapeKind::TrunkDegrade => 2,
             TapeKind::SwitchDown => 3,
+            TapeKind::NodeCrash => 4,
         }
     }
 
@@ -202,6 +221,7 @@ impl TapeKind {
             1 => TapeKind::Degrade,
             2 => TapeKind::TrunkDegrade,
             3 => TapeKind::SwitchDown,
+            4 => TapeKind::NodeCrash,
             _ => return Err(format!("unknown soak tape kind {v}")),
         })
     }
@@ -236,6 +256,14 @@ struct Flap {
     up_ns: u64,
 }
 
+/// An in-force node crash (§Elastic: dedups overlapping fault domains and
+/// routes the pipeline wave off the dead node).
+#[derive(Debug, Clone)]
+struct Crash {
+    node: usize,
+    up_ns: u64,
+}
+
 /// Final soak roll-up — everything `BENCH_soak.json` reports.
 #[derive(Debug, Clone)]
 pub struct SoakReport {
@@ -250,6 +278,13 @@ pub struct SoakReport {
     pub degrades_injected: u64,
     pub trunk_degrades_injected: u64,
     pub switches_injected: u64,
+    /// §Elastic: whole-node crashes injected, and the shrink/rejoin/
+    /// requeue work the elastic layer did in response (from sim stats —
+    /// graded as exactly one shrink + rejoin per crash).
+    pub node_crashes_injected: u64,
+    pub elastic_shrinks: u64,
+    pub elastic_rejoins: u64,
+    pub ops_requeued: u64,
     /// Degrades (NIC + trunk) the window monitor caught while in force.
     pub degrades_detected: u64,
     pub faults_suppressed: u64,
@@ -289,6 +324,10 @@ impl SoakReport {
             .push("degrades_injected", self.degrades_injected as f64, "count")
             .push("trunk_degrades_injected", self.trunk_degrades_injected as f64, "count")
             .push("switches_injected", self.switches_injected as f64, "count")
+            .push("node_crashes_injected", self.node_crashes_injected as f64, "count")
+            .push("elastic_shrinks", self.elastic_shrinks as f64, "count")
+            .push("elastic_rejoins", self.elastic_rejoins as f64, "count")
+            .push("ops_requeued", self.ops_requeued as f64, "count")
             .push("degrades_detected", self.degrades_detected as f64, "count")
             .push("faults_suppressed", self.faults_suppressed as f64, "count")
             .push("failovers", self.failovers as f64, "count")
@@ -322,6 +361,7 @@ pub struct SoakHarness {
     degrades_injected: u64,
     trunk_degrades_injected: u64,
     switches_injected: u64,
+    node_crashes_injected: u64,
     degrades_detected: u64,
     suppressed: u64,
     tp: u64,
@@ -330,6 +370,7 @@ pub struct SoakHarness {
     tn: u64,
     active_degrades: Vec<Degrade>,
     active_flaps: Vec<Flap>,
+    active_crashes: Vec<Crash>,
     /// Ground-truth tape of every injected fault, in injection order.
     tape: Vec<TapeEntry>,
     /// Last seen non-Healthy verdict total per graded port ordinal.
@@ -366,6 +407,7 @@ impl SoakHarness {
             degrades_injected: 0,
             trunk_degrades_injected: 0,
             switches_injected: 0,
+            node_crashes_injected: 0,
             degrades_detected: 0,
             suppressed: 0,
             tp: 0,
@@ -374,6 +416,7 @@ impl SoakHarness {
             tn: 0,
             active_degrades: Vec::new(),
             active_flaps: Vec::new(),
+            active_crashes: Vec::new(),
             tape: Vec::new(),
             prev_anomalies: BTreeMap::new(),
             hung: false,
@@ -425,17 +468,19 @@ impl SoakHarness {
             self.degrades_detected += d.detected as u64;
         }
         self.active_flaps.retain(|f| f.up_ns > t0.as_ns());
+        self.active_crashes.retain(|c| c.up_ns > t0.as_ns());
 
         // 2. Draw faults whose nominal arrival falls in this period.
         let window_end = (self.burst + 1).saturating_mul(self.params.period_ns);
         while self.faults.next_at_ns() < window_end {
             let _nominal = self.faults.advance();
-            let (wf, wd, wt) = (
+            let (wf, wd, wt, ws) = (
                 self.params.flap_weight as u64,
                 self.params.degrade_weight as u64,
                 self.params.trunk_weight as u64,
+                self.params.switch_weight as u64,
             );
-            let wsum = (wf + wd + wt + self.params.switch_weight as u64).max(1);
+            let wsum = (wf + wd + wt + ws + self.params.node_weight as u64).max(1);
             let draw = self.faults.rng().below(wsum);
             let kind = if draw < wf {
                 TapeKind::Flap
@@ -443,8 +488,10 @@ impl SoakHarness {
                 TapeKind::Degrade
             } else if draw < wf + wd + wt {
                 TapeKind::TrunkDegrade
-            } else {
+            } else if draw < wf + wd + wt + ws {
                 TapeKind::SwitchDown
+            } else {
+                TapeKind::NodeCrash
             };
             let rank = 1 + self.faults.rng().below((gpn - 2) as u64) as usize;
             // Flap jitter stays below the burst's minimum traffic time
@@ -465,11 +512,20 @@ impl SoakHarness {
                         .fabric
                         .trunk_up(port.nic.local % self.cfg.topo.rails, usize::from(port.port)),
                 ),
-                TapeKind::Flap | TapeKind::SwitchDown => None,
+                TapeKind::Flap | TapeKind::SwitchDown | TapeKind::NodeCrash => None,
             };
-            if self.active_flaps.iter().any(|f| f.ordinal == ordinal)
-                || self.active_degrades.iter().any(|d| d.ordinal == ordinal)
-                || victim_link.is_some_and(|l| self.active_degrades.iter().any(|d| d.link == l.0))
+            // Port-keyed dedup (NodeCrash dedups on the node domain in its
+            // own arm below — the drawn rank/port is not its victim). The
+            // crashed-node arm mirrors it the other way: a port fault on a
+            // dead server's port would book a heal against hardware the
+            // node cascade already owns.
+            let victim_node = self.sim.topo.fabric.node_of_port_ordinal(ordinal);
+            if kind != TapeKind::NodeCrash
+                && (self.active_flaps.iter().any(|f| f.ordinal == ordinal)
+                    || self.active_degrades.iter().any(|d| d.ordinal == ordinal)
+                    || victim_link
+                        .is_some_and(|l| self.active_degrades.iter().any(|d| d.link == l.0))
+                    || self.active_crashes.iter().any(|c| c.node == victim_node))
             {
                 // One fault at a time per victim; the arrival is consumed so
                 // both sides of a resume agree on the schedule.
@@ -531,6 +587,46 @@ impl SoakHarness {
                     self.switches_injected += 1;
                     self.tape.push(TapeEntry { kind, id: leaf, at_ns: down.as_ns() });
                 }
+                TapeKind::NodeCrash => {
+                    // Victim: any node but node 0 (it hosts every graded
+                    // port and the traffic sources — crashing it would
+                    // grade the traffic generator, not the elastic layer).
+                    let nodes = self.cfg.topo.num_nodes;
+                    let victim = 1 + self.faults.rng().below((nodes - 1) as u64) as usize;
+                    // Node-domain dedup: a crash on an already-dead node,
+                    // or on a node with an in-force port fault, would
+                    // double-book the cascade (the earlier fault's heal
+                    // would revive one port of a dead server). The arrival
+                    // is consumed either way so resumes agree.
+                    let fab = &self.sim.topo.fabric;
+                    if self.active_crashes.iter().any(|c| c.node == victim)
+                        || self
+                            .active_flaps
+                            .iter()
+                            .any(|f| fab.node_of_port_ordinal(f.ordinal) == victim)
+                        || self
+                            .active_degrades
+                            .iter()
+                            .any(|d| fab.node_of_port_ordinal(d.ordinal) == victim)
+                    {
+                        self.suppressed += 1;
+                        continue;
+                    }
+                    // Boundary-applied (down at t0, before this burst's
+                    // traffic events): the crash is in force for the whole
+                    // burst, so the wave reroutes around it and no P2P is
+                    // ever in flight toward a dying node — mid-flight
+                    // aborts are the cluster tests' and the elastic
+                    // experiment's job; the soak grades long-run shrink/
+                    // rejoin accounting. The jitter draw was consumed
+                    // above so resumes agree on the schedule.
+                    let up = t0 + SimTime::ns(self.params.mttr_ns);
+                    self.sim.inject_node_down(victim, t0);
+                    self.sim.inject_node_up(victim, up);
+                    self.active_crashes.push(Crash { node: victim, up_ns: up.as_ns() });
+                    self.node_crashes_injected += 1;
+                    self.tape.push(TapeEntry { kind, id: victim, at_ns: t0.as_ns() });
+                }
             }
         }
 
@@ -556,9 +652,23 @@ impl SoakHarness {
         for g in 0..gpn {
             // ≥ 12 MB ⇒ ≥ 12 chunk WCs per port per burst — enough to fill
             // the monitor's 8-message window and emit several samples even
-            // at the smallest draw (the window was just flushed).
+            // at the smallest draw (the window was just flushed). The size
+            // is drawn before any elastic rerouting so the traffic stream
+            // is identical whether or not a crash is in force.
             let bytes = self.traffic_rng.range(12 << 20, 32 << 20);
-            wave.push(self.sim.submit_p2p(RankId(g), RankId(g + gpn), bytes));
+            // §Elastic: route the pipeline target off crashed nodes — the
+            // first alive peer node, same rail. Keyed on the crash
+            // schedule (not live sim state): a boundary-applied NodeDown
+            // event may not have been dispatched yet when the wave is
+            // submitted. With every peer dead the wave has no target and
+            // is skipped (goodput dips for the burst; nothing is
+            // submitted, so nothing is lost).
+            let Some(dst) = (1..self.cfg.topo.num_nodes)
+                .find(|&n| !self.active_crashes.iter().any(|c| c.node == n))
+            else {
+                continue;
+            };
+            wave.push(self.sim.submit_p2p(RankId(g), RankId(dst * gpn + g), bytes));
             self.ops_submitted += 1;
         }
         for &id in &wave {
@@ -636,7 +746,7 @@ impl SoakHarness {
     /// (the sim is not op-quiescent and never will be).
     pub fn checkpoint(&self) -> String {
         assert!(!self.hung, "cannot checkpoint a soak with a hung op");
-        let mut w = CkptWriter::new("VCCLSOAK", 2);
+        let mut w = CkptWriter::new("VCCLSOAK", 3);
         w.u64("burst", self.burst);
         w.u64("period", self.params.period_ns);
         w.u64("mtbf", self.params.mtbf_ns);
@@ -645,6 +755,7 @@ impl SoakHarness {
         w.u64("wdeg", self.params.degrade_weight as u64);
         w.u64("wtrunk", self.params.trunk_weight as u64);
         w.u64("wswitch", self.params.switch_weight as u64);
+        w.u64("wnode", self.params.node_weight as u64);
         w.bool("ar", self.params.allreduce);
         w.u64("nfat", self.faults.next_at_ns);
         let fs = self.faults.rng.state();
@@ -662,6 +773,7 @@ impl SoakHarness {
         w.u64("deg", self.degrades_injected);
         w.u64("tdi", self.trunk_degrades_injected);
         w.u64("swi", self.switches_injected);
+        w.u64("ncr", self.node_crashes_injected);
         w.u64("ddet", self.degrades_detected);
         w.u64("sup", self.suppressed);
         w.u64("tp", self.tp);
@@ -680,6 +792,11 @@ impl SoakHarness {
         for f in &self.active_flaps {
             w.usize("ord", f.ordinal);
             w.u64("up", f.up_ns);
+        }
+        w.usize("ncra", self.active_crashes.len());
+        for c in &self.active_crashes {
+            w.usize("cn", c.node);
+            w.u64("cup", c.up_ns);
         }
         w.usize("nprev", self.prev_anomalies.len());
         for (ord, v) in &self.prev_anomalies {
@@ -711,7 +828,7 @@ impl SoakHarness {
             .find("VCCLCKPT")
             .ok_or_else(|| "soak checkpoint lacks an embedded sim stream".to_string())?;
         let (head, simtext) = text.split_at(pos);
-        let mut r = CkptReader::new(head, "VCCLSOAK", 2)?;
+        let mut r = CkptReader::new(head, "VCCLSOAK", 3)?;
         let burst = r.u64("burst")?;
         for (tag, want) in [
             ("period", params.period_ns),
@@ -721,6 +838,7 @@ impl SoakHarness {
             ("wdeg", params.degrade_weight as u64),
             ("wtrunk", params.trunk_weight as u64),
             ("wswitch", params.switch_weight as u64),
+            ("wnode", params.node_weight as u64),
         ] {
             let got = r.u64(tag)?;
             if got != want {
@@ -749,6 +867,7 @@ impl SoakHarness {
         let degrades_injected = r.u64("deg")?;
         let trunk_degrades_injected = r.u64("tdi")?;
         let switches_injected = r.u64("swi")?;
+        let node_crashes_injected = r.u64("ncr")?;
         let degrades_detected = r.u64("ddet")?;
         let suppressed = r.u64("sup")?;
         let tp = r.u64("tp")?;
@@ -770,6 +889,11 @@ impl SoakHarness {
         let mut active_flaps = Vec::with_capacity(nflp);
         for _ in 0..nflp {
             active_flaps.push(Flap { ordinal: r.usize("ord")?, up_ns: r.u64("up")? });
+        }
+        let ncra = r.usize("ncra")?;
+        let mut active_crashes = Vec::with_capacity(ncra);
+        for _ in 0..ncra {
+            active_crashes.push(Crash { node: r.usize("cn")?, up_ns: r.u64("cup")? });
         }
         let nprev = r.usize("nprev")?;
         let mut prev_anomalies = BTreeMap::new();
@@ -803,6 +927,7 @@ impl SoakHarness {
             degrades_injected,
             trunk_degrades_injected,
             switches_injected,
+            node_crashes_injected,
             degrades_detected,
             suppressed,
             tp,
@@ -811,6 +936,7 @@ impl SoakHarness {
             tn,
             active_degrades,
             active_flaps,
+            active_crashes,
             tape,
             prev_anomalies,
             hung: false,
@@ -837,6 +963,10 @@ impl SoakHarness {
             degrades_injected: self.degrades_injected,
             trunk_degrades_injected: self.trunk_degrades_injected,
             switches_injected: self.switches_injected,
+            node_crashes_injected: self.node_crashes_injected,
+            elastic_shrinks: self.sim.stats.elastic_shrinks,
+            elastic_rejoins: self.sim.stats.elastic_rejoins,
+            ops_requeued: self.sim.stats.ops_requeued,
             degrades_detected: self.degrades_detected + in_force_detected,
             faults_suppressed: self.suppressed,
             failovers: self.sim.stats.failovers,
@@ -866,6 +996,7 @@ mod tests {
             degrade_weight: 1,
             trunk_weight: 0,
             switch_weight: 0,
+            node_weight: 0,
             allreduce: true,
         }
     }
@@ -997,7 +1128,7 @@ mod tests {
         let mut seen: Vec<u64> = Vec::new();
         let written = h.run(Some(1), &mut |b, text| {
             seen.push(b);
-            assert!(text.starts_with("VCCLSOAK v2"));
+            assert!(text.starts_with("VCCLSOAK v3"));
         });
         assert_eq!((written, seen.as_slice()), (1, &[2u64][..]));
         assert_eq!(h.burst_index(), 2, "stop-after-ckpt aborts mid-soak");
@@ -1137,5 +1268,79 @@ mod tests {
                 .collect()
         };
         assert_eq!(caps(&c), caps(&a));
+    }
+
+    /// §Elastic: a node-weighted soak grades the shrink/rejoin machinery —
+    /// zero lost ops, exactly one shrink and one rejoin per crash, and the
+    /// full ring back at the end. Crashes are boundary-applied so nothing
+    /// is in flight toward the victim; the P2P wave reroutes (here, with
+    /// one peer node, it is skipped outright while the peer is down).
+    #[test]
+    fn node_weighted_soak_shrinks_and_rejoins_per_crash() {
+        let cfg = Config::soak_defaults();
+        let p = SoakParams {
+            flap_weight: 0,
+            degrade_weight: 0,
+            node_weight: 1,
+            ..quick_params(6)
+        };
+        let mut h = SoakHarness::with_params(cfg, p);
+        while !h.done() {
+            h.run_burst();
+        }
+        let r = h.report();
+        assert!(!h.hung());
+        assert_eq!(r.availability, 1.0, "a node crash must never lose an op");
+        assert!(r.node_crashes_injected >= 1, "MTBF of 1.5 bursts must fault");
+        assert_eq!(
+            r.flaps_injected + r.degrades_injected + r.trunk_degrades_injected
+                + r.switches_injected,
+            0
+        );
+        assert_eq!(r.elastic_shrinks, r.node_crashes_injected, "one shrink per crash");
+        assert_eq!(r.elastic_rejoins, r.node_crashes_injected, "one rejoin per heal");
+        assert_eq!(r.ops_requeued, 0, "boundary-applied crashes abort nothing");
+        assert_eq!(r.precision(), 1.0, "fp={}", r.fp);
+        // Ground-truth tape: every entry names the only crashable node.
+        assert_eq!(h.fault_tape().len(), r.node_crashes_injected as usize);
+        assert!(h.fault_tape().iter().all(|e| e.kind == TapeKind::NodeCrash && e.id == 1));
+        // All crashes healed within their burst (mttr < period): full ring.
+        assert!(h.sim.dead_nodes.iter().all(|d| !d), "every victim rejoined");
+        let full = h.cfg.topo.num_nodes * h.cfg.topo.gpus_per_node;
+        assert_eq!(h.sim.rings[0].order.len(), full, "final ring spans all ranks");
+    }
+
+    /// The overlap-dedup satellite: with MTTR spanning burst boundaries, a
+    /// second crash drawn while the victim is still down must be
+    /// suppressed (not double-booked) — a double booking would schedule a
+    /// second NodeUp cascade that revives ports the first heal already
+    /// owns. Counted via `faults_suppressed`, like the trunk dedup.
+    #[test]
+    fn node_crash_on_crashed_node_is_suppressed() {
+        let cfg = Config::soak_defaults();
+        let mut p = SoakParams {
+            flap_weight: 0,
+            degrade_weight: 0,
+            node_weight: 1,
+            ..quick_params(6)
+        };
+        p.mtbf_ns = 20_000_000_000; // ~3 arrivals per burst: force collisions
+        p.mttr_ns = 90_000_000_000; // crashes span burst boundaries
+        let mut h = SoakHarness::with_params(cfg, p);
+        while !h.done() {
+            h.run_burst();
+            // One crash at a time per node — no duplicates in force.
+            let mut nodes: Vec<usize> = h.active_crashes.iter().map(|c| c.node).collect();
+            let n = nodes.len();
+            nodes.sort_unstable();
+            nodes.dedup();
+            assert_eq!(nodes.len(), n, "a node crash was double-booked");
+        }
+        let r = h.report();
+        assert!(!h.hung());
+        assert_eq!(r.availability, 1.0);
+        assert!(r.node_crashes_injected >= 2, "heals must re-arm the victim");
+        assert!(r.faults_suppressed >= 1, "same-node collisions must be suppressed");
+        assert_eq!(r.elastic_shrinks, r.node_crashes_injected);
     }
 }

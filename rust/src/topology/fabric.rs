@@ -329,6 +329,81 @@ impl Fabric {
         nic.local % self.rails
     }
 
+    // ------------------------------------------------------------------
+    // Node entities (§Elastic)
+    //
+    // A server node is a fault domain too: a kernel panic / power loss
+    // takes every NIC port of the node down at once. Node entities own
+    // their NIC uplink pairs exactly like switches own member links, so
+    // node-crash faults cascade on the existing link table. NVLinks are
+    // deliberately *not* members — a dead node's intra-node traffic dies
+    // with its ops (the elastic shrink aborts them), whereas the NIC
+    // uplinks are what the *peers* observe going dark, which is the
+    // all-ports-down perception the escalation keys on.
+    // ------------------------------------------------------------------
+
+    /// Number of server nodes in the fabric.
+    pub fn num_fabric_nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// All NIC ports of a node, sorted by (nic, port).
+    pub fn node_ports(&self, n: usize) -> Vec<PortId> {
+        let mut out = Vec::with_capacity(self.nics_per_node * self.ports_per_nic);
+        for local in 0..self.nics_per_node {
+            for port in 0..self.ports_per_nic {
+                out.push(PortId {
+                    nic: NicId { node: super::NodeId(n), local },
+                    port: port as u8,
+                });
+            }
+        }
+        out
+    }
+
+    /// Member links of a node: every tx/rx uplink of its NIC ports.
+    /// Sorted by id (the port layout is contiguous per node).
+    pub fn node_links(&self, n: usize) -> Vec<LinkId> {
+        let mut out = Vec::with_capacity(self.nics_per_node * self.ports_per_nic * 2);
+        for p in self.node_ports(n) {
+            out.push(self.port_tx(p));
+            out.push(self.port_rx(p));
+        }
+        out
+    }
+
+    /// Cascade a node state change to its member links; returns the member
+    /// set so callers can re-rate flows / arm crossing QPs, mirroring
+    /// `set_switch_up`.
+    pub fn set_node_up(&mut self, n: usize, up: bool) -> Vec<LinkId> {
+        let members = self.node_links(n);
+        for &l in &members {
+            self.links[l.0].up = up;
+        }
+        members
+    }
+
+    /// The node that owns a NIC uplink. Trunks and NVLinks belong to no
+    /// node entity (trunks are switch members; NVLink faults are not
+    /// modeled). This is the RCA attribution edge (port symptom → node).
+    pub fn node_of_link(&self, l: LinkId) -> Option<usize> {
+        (l.0 < self.trunk_base)
+            .then(|| (l.0 / 2) / (self.nics_per_node * self.ports_per_nic))
+    }
+
+    /// The node owning a dense port ordinal (`port_ordinal` inverse, node
+    /// part only).
+    pub fn node_of_port_ordinal(&self, ordinal: usize) -> usize {
+        ordinal / (self.nics_per_node * self.ports_per_nic)
+    }
+
+    /// Node-dead perception (§Elastic): *every* NIC port of the node is
+    /// down. Distinct from path-death — a switch outage on one plane
+    /// leaves the other plane's ports up, so this stays false.
+    pub fn node_dead(&self, n: usize) -> bool {
+        self.node_ports(n).iter().all(|&p| !self.port_up(p))
+    }
+
     /// Inter-node path between two NIC ports.
     ///
     /// Every inter-node flow transits its leaf's spine-plane trunk pair:
@@ -533,6 +608,60 @@ mod tests {
         assert_eq!(f.switch_of_link(f.trunk_up(5, 1)), Some(5 * 2 + 1));
         let g = GpuId { node: NodeId(0), local: 2 };
         assert_eq!(f.switch_of_link(f.nvlink_tx(g)), None);
+    }
+
+    #[test]
+    fn node_cascade_owns_every_nic_port() {
+        let mut f = Fabric::build(&topo(2, true));
+        assert_eq!(f.num_fabric_nodes(), 2);
+        let members = f.node_links(1);
+        assert_eq!(members.len(), 8 * 2 * 2); // 8 NICs × 2 ports × (tx, rx)
+        assert!(members.contains(&f.port_tx(port(1, 0, 0))));
+        assert!(members.contains(&f.port_rx(port(1, 7, 1))));
+        assert!(!members.contains(&f.port_tx(port(0, 0, 0))));
+        assert!(members.iter().all(|&l| !f.is_trunk(l)));
+        assert!(!f.node_dead(1));
+        let downed = f.set_node_up(1, false);
+        assert_eq!(downed, members);
+        assert!(f.node_dead(1), "every port down ⇒ node-dead perception");
+        assert!(!f.node_dead(0), "the surviving node is unaffected");
+        assert!(f.port_up(port(0, 3, 0)));
+        assert!(f.link_up(f.trunk_up(3, 0)), "trunks are switch members, not node members");
+        f.set_node_up(1, true);
+        assert!(!f.node_dead(1));
+        assert!(f.port_up(port(1, 3, 1)));
+    }
+
+    #[test]
+    fn node_dead_is_distinct_from_switch_outage() {
+        let mut f = Fabric::build(&topo(2, true));
+        // Kill every *leaf* plane-1 switch: all plane-1 ports of both nodes
+        // go down, yet no node is dead — plane 0 still serves them.
+        for rail in 0..8 {
+            f.set_switch_up(rail * 2 + 1, false);
+        }
+        assert!(!f.node_dead(0) && !f.node_dead(1));
+        // Downing the remaining plane-0 ports of node 1 crosses the line.
+        for nic in 0..8 {
+            f.set_port_up(port(1, nic, 0), false);
+        }
+        assert!(f.node_dead(1) && !f.node_dead(0));
+    }
+
+    #[test]
+    fn node_of_link_inverts_membership() {
+        let f = Fabric::build(&topo(2, true));
+        for n in 0..f.num_fabric_nodes() {
+            for l in f.node_links(n) {
+                assert_eq!(f.node_of_link(l), Some(n), "link {l:?} of node {n}");
+            }
+        }
+        assert_eq!(f.node_of_link(f.trunk_up(3, 0)), None);
+        let g = GpuId { node: NodeId(0), local: 2 };
+        assert_eq!(f.node_of_link(f.nvlink_tx(g)), None);
+        // Ordinal inverse agrees with the link-based attribution.
+        let p = port(1, 5, 1);
+        assert_eq!(f.node_of_port_ordinal(f.port_ordinal(p)), 1);
     }
 
     #[test]

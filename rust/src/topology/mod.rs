@@ -15,7 +15,7 @@ mod rings;
 
 pub use fabric::{Fabric, LinkId, LinkKind, Path};
 pub use ids::{GpuId, NicId, NodeId, PortId, RankId};
-pub use rings::{build_rings, Ring};
+pub use rings::{build_rings, build_rings_excluding, Ring};
 
 use crate::config::TopologyConfig;
 

@@ -22,11 +22,25 @@ pub struct Ring {
 
 impl Ring {
     fn new(order: Vec<RankId>, rail: usize) -> Self {
-        let mut pos_of = vec![0; order.len()];
+        Self::with_total_ranks(order, rail, 0)
+    }
+
+    /// Build a ring whose `pos_of` table is sized for `total` ranks even
+    /// when `order` excludes some (§Elastic shrink). Excluded ranks keep a
+    /// zero entry that `next`/`prev` must never consult — collectives only
+    /// iterate `order`, so a dead rank is simply never asked.
+    fn with_total_ranks(order: Vec<RankId>, rail: usize, total: usize) -> Self {
+        let mut pos_of = vec![0; order.len().max(total)];
         for (i, r) in order.iter().enumerate() {
             pos_of[r.0] = i;
         }
         Ring { order, rail, pos_of }
+    }
+
+    /// Does the ring include `r`? O(1); false for ranks excluded by an
+    /// elastic shrink (and trivially true on full rings).
+    pub fn contains(&self, r: RankId) -> bool {
+        r.0 < self.pos_of.len() && self.order.get(self.pos_of[r.0]) == Some(&r)
     }
 
     /// Successor of `r` on the ring.
@@ -52,6 +66,15 @@ impl Ring {
 /// rotated by the rail so that the node's *boundary* GPUs (the ones doing the
 /// inter-node send/recv) sit on the channel's rail-local NIC.
 pub fn build_rings(cluster: &Cluster, channels: usize) -> Vec<Ring> {
+    build_rings_excluding(cluster, channels, &[])
+}
+
+/// Build `channels` rail-aligned rings over the surviving nodes only
+/// (§Elastic shrink): nodes with `dead[node] == true` contribute no segment,
+/// everything else keeps the exact `build_rings` layout. With no dead nodes
+/// this is bit-identical to `build_rings` — the determinism contract the
+/// elastic tests pin.
+pub fn build_rings_excluding(cluster: &Cluster, channels: usize, dead: &[bool]) -> Vec<Ring> {
     let n_nodes = cluster.cfg.num_nodes;
     let per = cluster.cfg.gpus_per_node;
     let rails = cluster.cfg.rails.max(1);
@@ -60,6 +83,9 @@ pub fn build_rings(cluster: &Cluster, channels: usize) -> Vec<Ring> {
             let rail = c % rails;
             let mut order = Vec::with_capacity(n_nodes * per);
             for node in 0..n_nodes {
+                if dead.get(node).copied().unwrap_or(false) {
+                    continue;
+                }
                 // Start the node's segment at the rail-local GPU so that the
                 // inter-node hop (last GPU of this node → first of next)
                 // leaves from / arrives at the rail's NIC.
@@ -68,7 +94,7 @@ pub fn build_rings(cluster: &Cluster, channels: usize) -> Vec<Ring> {
                     order.push(RankId(node * per + local));
                 }
             }
-            Ring::new(order, rail)
+            Ring::with_total_ranks(order, rail, n_nodes * per)
         })
         .collect()
 }
@@ -120,6 +146,43 @@ mod tests {
         let ring = &build_rings(&c, 1)[0];
         for &r in &ring.order {
             assert_eq!(ring.prev(ring.next(r)), r);
+        }
+    }
+
+    #[test]
+    fn excluding_dead_node_drops_its_segment_only() {
+        let c = cluster(4);
+        let full = build_rings(&c, 8);
+        let shrunk = build_rings_excluding(&c, 8, &[false, false, true, false]);
+        for (f, s) in full.iter().zip(&shrunk) {
+            assert_eq!(s.rail, f.rail);
+            assert_eq!(s.order.len(), 3 * 8);
+            // Surviving segments keep the full ring's layout and order.
+            let expect: Vec<RankId> =
+                f.order.iter().copied().filter(|r| r.0 / 8 != 2).collect();
+            assert_eq!(s.order, expect);
+            for &r in &s.order {
+                assert!(s.contains(r));
+                assert_eq!(s.prev(s.next(r)), r);
+            }
+            for dead in 16..24 {
+                assert!(!s.contains(RankId(dead)));
+            }
+        }
+    }
+
+    #[test]
+    fn excluding_nothing_matches_build_rings() {
+        let c = cluster(3);
+        let a = build_rings(&c, 8);
+        let b = build_rings_excluding(&c, 8, &[false; 3]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.order, y.order);
+            assert_eq!(x.rail, y.rail);
+            for &r in &x.order {
+                assert_eq!(x.next(r), y.next(r));
+                assert_eq!(x.prev(r), y.prev(r));
+            }
         }
     }
 

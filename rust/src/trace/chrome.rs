@@ -93,6 +93,15 @@ fn lane(ev: &TraceEvent, meta: &ChromeMeta) -> (usize, u64) {
         TraceEvent::TrunkDegraded { link, .. } | TraceEvent::TrunkRestored { link, .. } => {
             (PID_FABRIC, link as u64)
         }
+        // Node-entity lanes sit above the switch/link tid space so a node's
+        // crash row never merges with switch 0's.
+        TraceEvent::NodeDown { node } | TraceEvent::NodeUp { node } => {
+            (PID_FABRIC, (1u64 << 32) | node as u64)
+        }
+        TraceEvent::RingRebuilt { .. } => (PID_CCL, u64::MAX),
+        TraceEvent::OpRequeued { op, channel } => {
+            (PID_CCL, ((op as u64) << 16) | channel as u64)
+        }
         TraceEvent::OpSubmitted { op, .. } | TraceEvent::OpFinished { op, .. } => {
             (PID_CCL, op as u64)
         }
@@ -180,6 +189,15 @@ fn args_json(ev: &TraceEvent) -> String {
         }
         TraceEvent::SwitchDown { switch } | TraceEvent::SwitchUp { switch } => {
             format!("{{\"switch\": {switch}}}")
+        }
+        TraceEvent::NodeDown { node } | TraceEvent::NodeUp { node } => {
+            format!("{{\"node\": {node}}}")
+        }
+        TraceEvent::RingRebuilt { channels, ranks } => {
+            format!("{{\"channels\": {channels}, \"ranks\": {ranks}}}")
+        }
+        TraceEvent::OpRequeued { op, channel } => {
+            format!("{{\"op\": {op}, \"channel\": {channel}}}")
         }
         TraceEvent::TrunkDegraded { link, switch, gbps, was_gbps } => format!(
             "{{\"link\": {link}, \"switch\": {switch}, \"gbps\": {}, \"was_gbps\": {}}}",

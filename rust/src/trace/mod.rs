@@ -101,6 +101,17 @@ pub enum TraceEvent {
     /// switch id (leaves first, then spine planes).
     SwitchDown { switch: usize },
     SwitchUp { switch: usize },
+    /// §Elastic: a whole server node crashed / recovered, cascading to
+    /// every NIC port it owns. `node` is the fabric's node index.
+    NodeDown { node: usize },
+    NodeUp { node: usize },
+    /// §Elastic: the communicator's rings were rebuilt (shrink on node
+    /// death, expand on rejoin). `ranks` is the surviving membership each
+    /// of the `channels` rebuilt rings now visits.
+    RingRebuilt { channels: usize, ranks: usize },
+    /// §Elastic: an in-flight op step crossing a dead node was aborted and
+    /// re-issued on the rebuilt ring.
+    OpRequeued { op: usize, channel: usize },
     /// §Fault domains: a spine trunk lost capacity (degrade) or was fully
     /// downed (`gbps == 0`). `switch` is the owning leaf switch — the RCA
     /// graph opens its trunk fault windows on that switch node, which is
@@ -170,6 +181,10 @@ impl TraceEvent {
             TraceEvent::PortUp { .. } => "PortUp",
             TraceEvent::SwitchDown { .. } => "SwitchDown",
             TraceEvent::SwitchUp { .. } => "SwitchUp",
+            TraceEvent::NodeDown { .. } => "NodeDown",
+            TraceEvent::NodeUp { .. } => "NodeUp",
+            TraceEvent::RingRebuilt { .. } => "RingRebuilt",
+            TraceEvent::OpRequeued { .. } => "OpRequeued",
             TraceEvent::TrunkDegraded { .. } => "TrunkDegraded",
             TraceEvent::TrunkRestored { .. } => "TrunkRestored",
             TraceEvent::PathMigrated { .. } => "PathMigrated",
@@ -205,6 +220,8 @@ impl TraceEvent {
             | TraceEvent::PortUp { .. }
             | TraceEvent::SwitchDown { .. }
             | TraceEvent::SwitchUp { .. }
+            | TraceEvent::NodeDown { .. }
+            | TraceEvent::NodeUp { .. }
             | TraceEvent::TrunkDegraded { .. }
             | TraceEvent::TrunkRestored { .. } => "fabric",
             TraceEvent::PointerMigrated { .. }
@@ -214,7 +231,9 @@ impl TraceEvent {
             | TraceEvent::OpFinished { .. }
             | TraceEvent::ConnBound { .. }
             | TraceEvent::StepBegin { .. }
-            | TraceEvent::StepEnd { .. } => "ccl",
+            | TraceEvent::StepEnd { .. }
+            | TraceEvent::RingRebuilt { .. }
+            | TraceEvent::OpRequeued { .. } => "ccl",
             TraceEvent::MonitorVerdict { .. } => "monitor",
         }
     }
@@ -233,6 +252,10 @@ impl TraceEvent {
                 | TraceEvent::PortUp { .. }
                 | TraceEvent::SwitchDown { .. }
                 | TraceEvent::SwitchUp { .. }
+                | TraceEvent::NodeDown { .. }
+                | TraceEvent::NodeUp { .. }
+                | TraceEvent::RingRebuilt { .. }
+                | TraceEvent::OpRequeued { .. }
                 | TraceEvent::TrunkDegraded { .. }
                 | TraceEvent::TrunkRestored { .. }
                 | TraceEvent::LinkCapacity { .. }
@@ -328,6 +351,15 @@ impl Incident {
             | TraceEvent::SwitchUp { switch }
             | TraceEvent::TrunkDegraded { switch, .. }
             | TraceEvent::TrunkRestored { switch, .. } => Some(switch),
+            _ => None,
+        }
+    }
+
+    /// The server node the triggering anomaly names, if it names one
+    /// (§Elastic crash incidents).
+    pub fn node(&self) -> Option<usize> {
+        match self.trigger {
+            TraceEvent::NodeDown { node } | TraceEvent::NodeUp { node } => Some(node),
             _ => None,
         }
     }
@@ -745,6 +777,30 @@ mod tests {
         assert_eq!(ev.kind(), "PathMigrated");
         assert_eq!(ev.layer(), "fault");
         assert!(ev.is_key_event());
+    }
+
+    #[test]
+    fn elastic_kinds_and_node_metadata() {
+        let ev = TraceEvent::NodeDown { node: 1 };
+        assert_eq!(ev.kind(), "NodeDown");
+        assert_eq!(ev.layer(), "fabric");
+        assert!(ev.is_key_event());
+        let ev = TraceEvent::RingRebuilt { channels: 2, ranks: 24 };
+        assert_eq!(ev.kind(), "RingRebuilt");
+        assert_eq!(ev.layer(), "ccl");
+        assert!(ev.is_key_event());
+        let ev = TraceEvent::OpRequeued { op: 0, channel: 1 };
+        assert_eq!(ev.kind(), "OpRequeued");
+        assert_eq!(ev.layer(), "ccl");
+        assert!(ev.is_key_event());
+
+        let sink = TraceSink::new(64, 1_000);
+        let t = Tracer::attached(sink.clone());
+        t.record_anomaly(SimTime::ns(100), TraceEvent::NodeDown { node: 1 }, "node1-crash");
+        let incs = sink.incidents();
+        assert_eq!(incs[0].node(), Some(1));
+        assert_eq!(incs[0].port(), None);
+        assert_eq!(incs[0].switch(), None);
     }
 
     #[test]

@@ -47,6 +47,14 @@ pub fn describe(ev: &TraceEvent) -> String {
         TraceEvent::PortUp { port } => format!("port {port} up"),
         TraceEvent::SwitchDown { switch } => format!("switch {switch} down (member links dead)"),
         TraceEvent::SwitchUp { switch } => format!("switch {switch} up"),
+        TraceEvent::NodeDown { node } => format!("node {node} crashed (all NIC ports dead)"),
+        TraceEvent::NodeUp { node } => format!("node {node} recovered"),
+        TraceEvent::RingRebuilt { channels, ranks } => {
+            format!("{channels} ring(s) rebuilt over {ranks} rank(s)")
+        }
+        TraceEvent::OpRequeued { op, channel } => {
+            format!("op {op} ch {channel}: aborted and requeued on rebuilt ring")
+        }
         TraceEvent::TrunkDegraded { link, switch, gbps, was_gbps } => {
             format!("trunk link {link} (switch {switch}): {was_gbps:.0} -> {gbps:.0} Gbps")
         }

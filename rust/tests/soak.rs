@@ -3,9 +3,11 @@
 //! equivalence — everything the time-compressed soak harness promises,
 //! exercised through the public API.
 
-use vccl::ccl::ClusterSim;
+use vccl::ccl::{ClusterSim, CollKind};
 use vccl::config::Config;
+use vccl::sim::SimTime;
 use vccl::soak::{FaultClock, SoakHarness, SoakParams, BURST_PERIOD_NS};
+use vccl::topology::RankId;
 use vccl::util::Rng;
 
 /// Debug builds run fewer randomized cases (the un-optimized simulator is
@@ -22,6 +24,9 @@ fn params(bursts: u64, flap_weight: u32, degrade_weight: u32) -> SoakParams {
         checkpoint_every: 0,
         flap_weight,
         degrade_weight,
+        trunk_weight: 0,
+        switch_weight: 0,
+        node_weight: 0,
         allreduce: true,
     }
 }
@@ -241,6 +246,98 @@ fn goodput_matches_chan_rollups() {
     assert!(r.goodput_bytes > 0);
     assert_eq!(r.goodput_bytes, goodput_rollup(&h.sim));
     assert!(r.wire_bytes >= r.goodput_bytes);
+}
+
+// ---------------------------------------------------------------------
+// Satellite: randomized node-crash fault tolerance (§Elastic)
+// ---------------------------------------------------------------------
+
+/// Node-crash soak property, randomized over seeds: no op is ever lost —
+/// every burst's ops complete despite elastic shrinks — and each crash
+/// produces exactly one shrink and exactly one rejoin (MTTR < period, so
+/// every victim returns inside its own burst and the cluster ends whole).
+#[test]
+fn node_crash_soak_never_loses_an_op() {
+    for case in 0..CASES {
+        let mut cfg = Config::soak_defaults();
+        cfg.seed = 0xE1A5 + case * 101;
+        let mut p = params(5, 0, 0); // crash-only schedule
+        p.node_weight = 1;
+        let mut h = SoakHarness::with_params(cfg, p);
+        while !h.done() {
+            h.run_burst();
+        }
+        assert!(!h.hung(), "case {case}: a crash stranded an op");
+        let r = h.report();
+        assert_eq!(r.availability, 1.0, "case {case}: an op was lost to a crash");
+        assert!(r.node_crashes_injected >= 1, "case {case}: schedule produced no crashes");
+        assert_eq!(r.flaps_injected, 0, "case {case}");
+        assert_eq!(r.degrades_injected, 0, "case {case}");
+        assert_eq!(r.elastic_shrinks, r.node_crashes_injected, "case {case}");
+        assert_eq!(r.elastic_rejoins, r.node_crashes_injected, "case {case}");
+        assert!(h.sim.dead_nodes.iter().all(|d| !d), "case {case}: every victim rejoined");
+    }
+}
+
+/// Non-crossing property, randomized: a P2P stream between two survivor
+/// nodes shares no links with the crashed node, so its completion timers
+/// (start, finish, and the full per-channel roll-up) are bit-identical to
+/// a crash-free run — for any seed and any mid-flight crash instant.
+#[test]
+fn noncrossing_p2p_timers_survive_remote_crash_randomized() {
+    let mut pick = Rng::new(0xE1A57_1C);
+    for case in 0..CASES {
+        // 32MB drains in well under a millisecond of wire time; crash
+        // somewhere inside the transfer.
+        let crash_ns = 100_000 + pick.below(500_000);
+        let sig = |crash: Option<u64>| {
+            let mut cfg = Config::soak_defaults();
+            cfg.topo.num_nodes = 3;
+            cfg.seed = 0xBEEF + case;
+            let mut s = ClusterSim::new(cfg);
+            if let Some(at) = crash {
+                s.inject_node_down(2, SimTime::ns(at));
+                s.inject_node_up(2, SimTime::ms(200));
+            }
+            let id = s.submit_p2p(RankId(0), RankId(8), 32 << 20);
+            assert!(s.run_until_op(id, 400_000_000), "stream must complete");
+            let o = &s.ops[id.0];
+            format!("{:?} {:?} {:?}", o.started_at, o.finished_at, o.chan_rollup)
+        };
+        assert_eq!(sig(Some(crash_ns)), sig(None), "case {case}: crash at {crash_ns}ns");
+    }
+}
+
+/// Mid-shrink checkpoint: interrupt the simulation between the crash and
+/// the requeued steps' re-issue (inside the elastic requeue delay, with
+/// the aborted channel steps still pending in the event queue), restore,
+/// and the resumed run finishes bit-identical to the uninterrupted one.
+#[test]
+fn mid_shrink_checkpoint_resume_is_bit_identical() {
+    let run = |cut: bool| -> (u64, String) {
+        let mut cfg = Config::soak_defaults();
+        cfg.topo.num_nodes = 3;
+        let mut s = ClusterSim::new(cfg.clone());
+        s.inject_node_down(2, SimTime::ms(1));
+        s.inject_node_up(2, SimTime::ms(300));
+        let id = s.submit(CollKind::AllReduce, 64 << 20);
+        // Stop inside the shrink's requeue delay (default 1 ms): the ring
+        // is already rebuilt but the requeued OpSteps have not re-issued.
+        s.run_until(SimTime::ms(1) + SimTime::us(200));
+        assert_eq!(s.stats.elastic_shrinks, 1, "the crash must have shrunk the ring");
+        assert!(!s.ops[id.0].is_done(), "the collective must still be mid-shrink");
+        let mut s = if cut {
+            let ckpt = s.checkpoint();
+            ClusterSim::restore(cfg, &ckpt).expect("mid-shrink restore")
+        } else {
+            s
+        };
+        s.run_to_idle(400_000_000);
+        assert!(s.ops[id.0].is_done(), "the collective must finish after the shrink");
+        assert!(s.dead_nodes.iter().all(|d| !d), "the victim must rejoin");
+        (s.now().as_ns(), s.checkpoint())
+    };
+    assert_eq!(run(true), run(false), "mid-shrink resume diverged");
 }
 
 /// Monitor memory stays O(window capacity) across a soak — the bounded
