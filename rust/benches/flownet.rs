@@ -11,9 +11,11 @@
 //!   workload in `FlowNet::set_reference_mode`, so the comparison (work
 //!   counters *and* wall-clock) uses the real pre-L3 algorithm.
 //!
-//! Also emits `BENCH_simcore.json` (deterministic counters only — wall-clock
-//! is machine-dependent and stays on stdout) so the perf trajectory of the
-//! simulator core is tracked as a CI artifact.
+//! Also emits `BENCH_simcore.json` so the perf trajectory of the simulator
+//! core is tracked as a CI artifact: deterministic counters, plus one
+//! wall-clock metric (`simcore.engine.events_per_sec`, the §Perf L6
+//! scheduler headline — CI gates it at a generous floor; the tight
+//! per-workload gates stay in `benches/simcore.rs`).
 
 mod bench_util;
 

@@ -11,7 +11,8 @@
 //!
 //! Everything is deterministic: same config + seed ⇒ identical event trace.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::config::{Config, Transport};
 use crate::fault::{migrate_to_breakpoint_traced, DeltaProbe, ProbeVerdict, RecvPointers,
@@ -564,11 +565,107 @@ pub struct Stats {
     pub ops_requeued: u64,
 }
 
+/// §Perf L6 fast-forward counters: windows opened (one per event popped
+/// from the global queue while the tier is on), events elided from the
+/// global queue into the local buffer, and how many of those were
+/// dispatched locally. `elided - local_dispatched` events were flushed
+/// back to the engine at a run-loop exit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FfStats {
+    pub windows: u64,
+    pub elided: u64,
+    pub local_dispatched: u64,
+}
+
+/// A locally buffered event in the fast-forward tier. Ordered by
+/// `(at, lseq)` — `lseq` increments per buffered event, reproducing the
+/// engine's schedule-order FIFO tie-break for simultaneous events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct LocalEv {
+    at: SimTime,
+    lseq: u64,
+    ev: Event,
+}
+
+impl Ord for LocalEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.lseq).cmp(&(other.at, other.lseq))
+    }
+}
+
+impl PartialOrd for LocalEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// §Perf L6: the flow-level fast-forward tier. While the run loop drains
+/// the window between two *global-queue* events, every event a handler
+/// schedules strictly inside that window is buffered here and dispatched
+/// locally — skipping the calendar/heap round-trip entirely. The horizon
+/// (the engine's next pending event) bounds the window, so fault
+/// injections, monitor boundaries and anything scheduled at or beyond it
+/// still serialize through the global queue. The local buffer replays
+/// `(at, lseq)` order, which equals the engine's `(at, seq)` order for
+/// the same events, so dispatch order — and therefore every observable
+/// trajectory — is bit-identical to the fully-evented run (pinned by
+/// `randomized_equivalence_fast_forward_vs_evented`).
+#[derive(Debug)]
+struct FastForward {
+    /// Tier switch (`engine.fast_forward`). Off: every call passes
+    /// straight through to the engine.
+    enabled: bool,
+    /// True while a run loop is draining a window; always false outside
+    /// `next_event`/`ff_flush`, so external schedulers (fault injection
+    /// between runs, the soak/rca harnesses, pipeline's own loop) always
+    /// talk to the real engine.
+    draining: bool,
+    /// The engine's next pending event when the window opened. Events at
+    /// or beyond it are never buffered.
+    horizon: SimTime,
+    /// Run-loop deadline (`run_until`): events beyond it must outlive the
+    /// loop, so they go to the engine even when inside the horizon.
+    bound: Option<SimTime>,
+    lseq: u64,
+    buf: BinaryHeap<Reverse<LocalEv>>,
+    windows: u64,
+    elided: u64,
+    local_dispatched: u64,
+}
+
+impl FastForward {
+    fn new(enabled: bool) -> Self {
+        FastForward {
+            enabled,
+            draining: false,
+            horizon: SimTime::ZERO,
+            bound: None,
+            lseq: 0,
+            buf: BinaryHeap::new(),
+            windows: 0,
+            elided: 0,
+            local_dispatched: 0,
+        }
+    }
+
+    fn stats(&self) -> FfStats {
+        FfStats {
+            windows: self.windows,
+            elided: self.elided,
+            local_dispatched: self.local_dispatched,
+        }
+    }
+}
+
 /// The simulation.
 pub struct ClusterSim {
     pub cfg: Config,
     pub topo: Cluster,
     pub engine: Engine<Event>,
+    /// §Perf L6 fast-forward tier. Pure scheduling shortcut: holds no
+    /// durable state between run loops (the buffer is flushed back into
+    /// `engine` at every loop exit), so checkpoints never see it.
+    ff: FastForward,
     pub rdma: RdmaNet,
     pub gpus: Vec<GpuUnit>,
     pub conns: Vec<Conn>,
@@ -646,6 +743,8 @@ impl ClusterSim {
         let seed = cfg.seed;
         let n_nodes = cfg.topo.num_nodes;
         let trailing_ns = cfg.vccl.trailing_ns.max(1);
+        let bucket_ns = cfg.engine.bucket_ns;
+        let fast_forward = cfg.engine.fast_forward;
         tracer.record(
             SimTime::ZERO,
             TraceEvent::SimStarted { nodes: cfg.topo.num_nodes, ranks: n_ranks },
@@ -653,7 +752,8 @@ impl ClusterSim {
         ClusterSim {
             cfg,
             topo,
-            engine: Engine::new(),
+            engine: Engine::with_bucket_ns(bucket_ns),
+            ff: FastForward::new(fast_forward),
             rdma,
             gpus,
             conns: Vec::new(),
@@ -892,7 +992,7 @@ impl ClusterSim {
                 Transport::Kernel => 700,
             };
             self.stats.proxy_cpu_ns[src.0] += proxy_ns;
-            self.engine.schedule_at(ready_at, Event::ChunkReady { xfer: xid });
+            self.sched_at(ready_at, Event::ChunkReady { xfer: xid });
         }
     }
 
@@ -940,7 +1040,7 @@ impl ClusterSim {
                 );
                 self.intra_flows.insert(flow, xid);
                 for t in timers {
-                    self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                    self.sched_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
                 }
                 let x = self.xfers.get_mut(xid).expect("transfer is live");
                 x.send.transmitted += 1;
@@ -983,7 +1083,7 @@ impl ClusterSim {
                     .as_mut()
                     .and_then(|p| p.arm(now));
                 if let Some((at, epoch)) = deadline {
-                    self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch });
+                    self.sched_at(at, Event::DeltaCheck { conn: conn_id, epoch });
                 }
                 self.absorb(out);
             }
@@ -993,13 +1093,13 @@ impl ClusterSim {
     /// Schedule NetOutput items into the engine and route WCs.
     fn absorb(&mut self, out: crate::net::rdma::NetOutput) {
         for t in out.timers {
-            self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+            self.sched_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
         }
         for (qp, epoch, at) in out.retry_deadlines {
-            self.engine.schedule_at(at, Event::QpRetry { qp, epoch });
+            self.sched_at(at, Event::QpRetry { qp, epoch });
         }
         for (qp, at) in out.warmups {
-            self.engine.schedule_at(at, Event::QpWarm { qp });
+            self.sched_at(at, Event::QpWarm { qp });
         }
         for wc in out.wcs {
             self.on_wc(wc);
@@ -1064,7 +1164,7 @@ impl ClusterSim {
             .as_mut()
             .and_then(|p| p.on_progress(now, more));
         if let Some((at, epoch)) = redeadline {
-            self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch });
+            self.sched_at(at, Event::DeltaCheck { conn: conn_id, epoch });
         }
         if more {
             self.pump_xfer(xid);
@@ -1148,7 +1248,7 @@ impl ClusterSim {
             entry.1 = 1;
             self.stats.comm_kernel_launches += 1;
             for t in self.gpus[gpu].compute.acquire_comm_sms(sms, now) {
-                self.engine.schedule_at(t.at, Event::GpuTask { gpu, task: t.task, gen: t.gen });
+                self.sched_at(t.at, Event::GpuTask { gpu, task: t.task, gen: t.gen });
             }
         } else {
             entry.1 += 1;
@@ -1165,7 +1265,7 @@ impl ClusterSim {
             let held = entry.0;
             self.op_sms.remove(&(op.0, gpu));
             for t in self.gpus[gpu].compute.release_comm_sms(held, now) {
-                self.engine.schedule_at(t.at, Event::GpuTask { gpu, task: t.task, gen: t.gen });
+                self.sched_at(t.at, Event::GpuTask { gpu, task: t.task, gen: t.gen });
             }
         }
     }
@@ -1271,7 +1371,7 @@ impl ClusterSim {
         //    retransmission). The chunks were already staged — only the
         //    proxy's ibv_post_send needs to re-run, so a small CPU delay.
         for i in 0..rolled_back {
-            self.engine.schedule_at(
+            self.sched_at(
                 now + SimTime::ns(2_000 + i * 500),
                 Event::ChunkReady { xfer: xid },
             );
@@ -1322,7 +1422,7 @@ impl ClusterSim {
                 self.stats.probe_benign += 1;
                 if let Some((at, e)) = self.conns[conn_id.0].probe.as_ref().unwrap().next_deadline()
                 {
-                    self.engine.schedule_at(at, Event::DeltaCheck { conn: conn_id, epoch: e });
+                    self.sched_at(at, Event::DeltaCheck { conn: conn_id, epoch: e });
                 }
             }
             ProbeVerdict::LinkDead => {
@@ -1335,40 +1435,40 @@ impl ClusterSim {
 
     /// Port state change entry points (failure injection).
     pub fn inject_port_down(&mut self, port: PortId, at: SimTime) {
-        self.engine.schedule_at(at, Event::PortDown { port });
+        self.sched_at(at, Event::PortDown { port });
     }
 
     pub fn inject_port_up(&mut self, port: PortId, at: SimTime) {
-        self.engine.schedule_at(at, Event::PortUp { port });
+        self.sched_at(at, Event::PortUp { port });
     }
 
     /// Fabric fault entry points (§Fault domains): a trunk link dying with
     /// both endpoint ports still up, or a whole switch cascading to every
     /// member link.
     pub fn inject_trunk_down(&mut self, link: LinkId, at: SimTime) {
-        self.engine.schedule_at(at, Event::TrunkDown { link });
+        self.sched_at(at, Event::TrunkDown { link });
     }
 
     pub fn inject_trunk_up(&mut self, link: LinkId, at: SimTime) {
-        self.engine.schedule_at(at, Event::TrunkUp { link });
+        self.sched_at(at, Event::TrunkUp { link });
     }
 
     pub fn inject_switch_down(&mut self, switch: usize, at: SimTime) {
-        self.engine.schedule_at(at, Event::SwitchDown { switch });
+        self.sched_at(at, Event::SwitchDown { switch });
     }
 
     pub fn inject_switch_up(&mut self, switch: usize, at: SimTime) {
-        self.engine.schedule_at(at, Event::SwitchUp { switch });
+        self.sched_at(at, Event::SwitchUp { switch });
     }
 
     /// Node fault entry points (§Elastic): a whole server crashes — every
     /// NIC port it owns goes dark at once — or recovers.
     pub fn inject_node_down(&mut self, node: usize, at: SimTime) {
-        self.engine.schedule_at(at, Event::NodeDown { node });
+        self.sched_at(at, Event::NodeDown { node });
     }
 
     pub fn inject_node_up(&mut self, node: usize, at: SimTime) {
-        self.engine.schedule_at(at, Event::NodeUp { node });
+        self.sched_at(at, Event::NodeUp { node });
     }
 
     fn on_port_state(&mut self, port: PortId, up: bool) {
@@ -1489,13 +1589,13 @@ impl ClusterSim {
     /// path. Re-rate timers, retry deadlines and warm-ups still schedule.
     fn absorb_sans_wcs(&mut self, out: crate::net::rdma::NetOutput) {
         for t in out.timers {
-            self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+            self.sched_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
         }
         for (qp, epoch, at) in out.retry_deadlines {
-            self.engine.schedule_at(at, Event::QpRetry { qp, epoch });
+            self.sched_at(at, Event::QpRetry { qp, epoch });
         }
         for (qp, at) in out.warmups {
-            self.engine.schedule_at(at, Event::QpWarm { qp });
+            self.sched_at(at, Event::QpWarm { qp });
         }
     }
 
@@ -1560,7 +1660,7 @@ impl ClusterSim {
         for f in dead_flows {
             self.intra_flows.remove(&f);
             for t in self.rdma.flows.kill(f, now) {
-                self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                self.sched_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
             }
         }
         // 3. Detach the aborted transfers, remembering the connections
@@ -1602,7 +1702,7 @@ impl ClusterSim {
         for (op, channel) in requeue {
             self.tracer.record(now, TraceEvent::OpRequeued { op: op.0, channel });
             self.stats.ops_requeued += 1;
-            self.engine.schedule_at(now + delay, Event::OpStep { op, channel });
+            self.sched_at(now + delay, Event::OpStep { op, channel });
         }
         self.stats.elastic_shrinks += 1;
     }
@@ -1684,6 +1784,84 @@ impl ClusterSim {
     // Event loop
     // ------------------------------------------------------------------
 
+    /// The one scheduling entry point for all simulation events. With the
+    /// fast-forward tier off (or outside a drain window) this is exactly
+    /// `engine.schedule_at`. Inside a window, events strictly before the
+    /// horizon (and within the run deadline) are buffered locally instead
+    /// of round-tripping through the global queue — the steady-state
+    /// chunk/flow/WC chatter that dominates large presets.
+    pub(crate) fn sched_at(&mut self, at: SimTime, ev: Event) {
+        if self.ff.draining
+            && at < self.ff.horizon
+            && self.ff.bound.map_or(true, |d| at <= d)
+        {
+            let lseq = self.ff.lseq;
+            self.ff.lseq += 1;
+            self.ff.elided += 1;
+            self.ff.buf.push(Reverse(LocalEv { at, lseq, ev }));
+        } else {
+            self.engine.schedule_at(at, ev);
+        }
+    }
+
+    /// Pop the next event to dispatch, in global time order. Drains the
+    /// fast-forward buffer first (every buffered event precedes the
+    /// horizon, i.e. the engine's next pending event); once it is empty,
+    /// pops the engine and — if the tier is enabled — opens the next
+    /// window at the new engine head. `deadline` leaves later events
+    /// pending (the `run_until` contract).
+    fn next_event(&mut self, deadline: Option<SimTime>) -> Option<(SimTime, Event)> {
+        if self.ff.draining {
+            if let Some(Reverse(l)) = self.ff.buf.pop() {
+                // Keep the engine clock in lock-step with locally
+                // dispatched events: handlers read `now()` from it, and
+                // `l.at` precedes every engine-pending event by
+                // construction, so this can never skip one.
+                self.engine.advance_to(l.at);
+                self.ff.local_dispatched += 1;
+                return Some((l.at, l.ev));
+            }
+            self.ff.draining = false;
+        }
+        let t = self.engine.peek_time()?;
+        if deadline.is_some_and(|d| t > d) {
+            return None;
+        }
+        let (at, ev) = self.engine.pop().expect("peeked event must pop");
+        if self.ff.enabled {
+            self.ff.horizon = self.engine.peek_time().unwrap_or(SimTime::ns(u64::MAX));
+            self.ff.bound = deadline;
+            self.ff.draining = true;
+            self.ff.windows += 1;
+        }
+        Some((at, ev))
+    }
+
+    /// Return buffered fast-forward events to the engine. Called at every
+    /// run-loop exit so external drivers — fault injection between runs,
+    /// checkpointing, the soak/rca/pipeline harnesses poking the engine
+    /// directly — always see the full pending set in the global queue.
+    /// Ascending `(at, lseq)` replay assigns engine seqs in scheduling
+    /// order, preserving equal-time FIFO for a later run loop.
+    fn ff_flush(&mut self) {
+        while let Some(Reverse(l)) = self.ff.buf.pop() {
+            self.engine.schedule_at(l.at, l.ev);
+        }
+        self.ff.draining = false;
+    }
+
+    /// Total events dispatched, both through the global queue and locally
+    /// by the fast-forward tier. This — not `engine.dispatched()` — is
+    /// the mode-independent work count of a run.
+    pub fn events_processed(&self) -> u64 {
+        self.engine.dispatched() + self.ff.local_dispatched
+    }
+
+    /// §Perf L6 fast-forward tier counters (all zero when disabled).
+    pub fn ff_stats(&self) -> FfStats {
+        self.ff.stats()
+    }
+
     pub fn dispatch(&mut self, ev: Event) {
         let now = self.now();
         match ev {
@@ -1691,7 +1869,7 @@ impl ClusterSim {
                 if let Some(&xid) = self.intra_flows.get(&flow) {
                     let (meta, timers) = self.rdma.flows.try_finish(flow, gen, now);
                     for t in timers {
-                        self.engine.schedule_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
+                        self.sched_at(t.at, Event::Flow { flow: t.flow, gen: t.gen });
                     }
                     if meta.is_some() {
                         self.intra_flows.remove(&flow);
@@ -1777,13 +1955,10 @@ impl ClusterSim {
 
     /// Run until the engine drains or `deadline` passes. Returns the time.
     pub fn run_until(&mut self, deadline: SimTime) -> SimTime {
-        while let Some(t) = self.engine.peek_time() {
-            if t > deadline {
-                break;
-            }
-            let (_, ev) = self.engine.pop().unwrap();
+        while let Some((_, ev)) = self.next_event(Some(deadline)) {
             self.dispatch(ev);
         }
+        self.ff_flush();
         self.engine.now()
     }
 
@@ -1792,7 +1967,7 @@ impl ClusterSim {
         let debug = std::env::var("VCCL_DEBUG_EVENTS").is_ok();
         let mut n: u64 = 0;
         let mut counts = [0u64; 10];
-        while let Some((_, ev)) = self.engine.pop() {
+        while let Some((_, ev)) = self.next_event(None) {
             if debug {
                 let k = match ev {
                     Event::Flow { .. } => 0,
@@ -1820,6 +1995,7 @@ impl ClusterSim {
             n += 1;
             assert!(n < max_events, "simulation did not quiesce in {max_events} events");
         }
+        self.ff_flush();
         self.engine.now()
     }
 
@@ -1830,11 +2006,14 @@ impl ClusterSim {
     pub fn run_until_op(&mut self, op: OpId, max_events: u64) -> bool {
         let mut n: u64 = 0;
         while !self.ops[op.0].is_done() && !self.ops[op.0].failed {
-            let Some((_, ev)) = self.engine.pop() else { break };
+            let Some((_, ev)) = self.next_event(None) else { break };
             self.dispatch(ev);
             n += 1;
             assert!(n < max_events, "op did not finish in {max_events} events");
         }
+        // The op can finish mid-window: hand the un-dispatched remainder
+        // back to the engine so the next caller sees a coherent queue.
+        self.ff_flush();
         self.ops[op.0].is_done()
     }
 
@@ -1930,6 +2109,10 @@ impl ClusterSim {
         w.section("rdma");
         self.rdma.save(&mut w);
         w.section("engine");
+        // The fast-forward buffer is flushed at every run-loop exit, so a
+        // quiescent boundary always has the complete pending set in the
+        // engine — the checkpoint layout is identical in both modes.
+        assert!(self.ff.buf.is_empty(), "checkpoint requires a flushed fast-forward buffer");
         let st = self.engine.checkpoint_state();
         w.u64("enow", st.now.as_ns());
         w.u64("eseq", st.seq);
@@ -2095,7 +2278,10 @@ impl ClusterSim {
             let sq = r.u64("sq")?;
             pending.push((at, sq, load_event(&mut r)?));
         }
-        sim.engine = Engine::from_state(EngineState { now, seq, dispatched, cancelled, pending });
+        sim.engine = Engine::from_state_with(
+            EngineState { now, seq, dispatched, cancelled, pending },
+            sim.cfg.engine.bucket_ns,
+        );
         r.expect("xfers")?;
         sim.xfers.load(&mut r)?;
         r.expect("ops")?;
@@ -3104,5 +3290,140 @@ mod tests {
         let _ = n.run_p2p(RankId(0), RankId(8), ByteSize::mb(64).0);
         let n_cpu: u64 = n.stats.proxy_cpu_ns.iter().sum();
         assert!(v_cpu > n_cpu, "vccl={v_cpu} nccl={n_cpu}");
+    }
+
+    /// §Perf L6 tentpole property: the fast-forward tier is a scheduling
+    /// shortcut, never a model change. A seeded randomized workload —
+    /// mixed collectives and P2P through all three run-loop entry points,
+    /// port flaps straddling transfers, a mid-run checkpoint/restore cut —
+    /// driven once fully evented and once fast-forwarded must agree on
+    /// every observable: completion timers, per-op roll-ups, failover
+    /// stats, wire bytes, trace streams, the final clock and the RNG
+    /// stream. Only the *scheduling* counters (engine dispatch vs local
+    /// dispatch split) may differ; their sum — `events_processed()` — is
+    /// pinned equal too.
+    #[test]
+    fn randomized_equivalence_fast_forward_vs_evented() {
+        let run = |fast_forward: bool| {
+            let mut cfg = fast_ft_cfg();
+            cfg.trace.enabled = true;
+            cfg.engine.fast_forward = fast_forward;
+            let mut s = ClusterSim::new(cfg.clone());
+            let mut rng = crate::util::Rng::new(0x1F6);
+            let ops_n = if cfg!(debug_assertions) { 60 } else { 300 };
+            let flap_ranks = [0usize, 2, 4, 6, 8, 10, 12, 14];
+            let mut finished = Vec::with_capacity(ops_n);
+            for i in 0..ops_n {
+                if rng.below(100) < 7 {
+                    let g = flap_ranks[rng.below(flap_ranks.len() as u64) as usize];
+                    let port = s.topo.primary_port(s.topo.gpu_of_rank(RankId(g)));
+                    let at = s.now() + SimTime::ns(rng.range(1_000, 2_000_000));
+                    s.inject_port_down(port, at);
+                    s.inject_port_up(port, at + SimTime::ns(rng.range(100_000, 20_000_000)));
+                }
+                let id = match rng.below(10) {
+                    0..=6 => {
+                        let n = s.topo.num_ranks();
+                        let src = RankId(rng.below(n as u64) as usize);
+                        let mut dst = RankId(rng.below(n as u64) as usize);
+                        if dst == src {
+                            dst = RankId((src.0 + 1) % n);
+                        }
+                        s.submit_p2p(src, dst, rng.range(1, 4 << 20))
+                    }
+                    7 => s.submit(CollKind::AllReduce, rng.range(1 << 16, 2 << 20)),
+                    8 => s.submit(CollKind::AllGather, rng.range(1 << 16, 2 << 20)),
+                    _ => s.submit(CollKind::ReduceScatter, rng.range(1 << 16, 2 << 20)),
+                };
+                // Exercise every run-loop shape: the op-bounded loop, a
+                // deadline loop that cuts windows short, and full drains.
+                match rng.below(4) {
+                    0 => {
+                        let step = SimTime::ns(rng.range(10_000, 3_000_000));
+                        s.run_until(s.now() + step);
+                        assert!(s.run_until_op(id, 100_000_000), "op {i} must finish");
+                    }
+                    1 => {
+                        s.run_to_idle(100_000_000);
+                    }
+                    _ => {
+                        assert!(s.run_until_op(id, 100_000_000), "op {i} must finish");
+                    }
+                }
+                // Mid-run checkpoint/resume cut at an op-quiescent
+                // boundary: the restored sim replaces the original and
+                // must carry the identical trajectory forward.
+                if i == ops_n / 2 {
+                    s.run_to_idle(100_000_000);
+                    let boundary = s.now() + SimTime::ms(1);
+                    s.run_until(boundary - SimTime::ns(1));
+                    s.engine.advance_to(boundary);
+                    let blob = s.checkpoint();
+                    let tracer = s.tracer.clone();
+                    let ffs = s.ff_stats();
+                    s = ClusterSim::restore(cfg.clone(), &blob).expect("restore");
+                    // The recorder ring and the fast-forward counters are
+                    // diagnostics, not sim state: carry both across the
+                    // cut so streams and work totals stay comparable.
+                    s.tracer = tracer;
+                    s.rdma.set_tracer(s.tracer.clone());
+                    if let Some(m) = s.monitor.as_mut() {
+                        m.set_tracer(s.tracer.clone());
+                    }
+                    s.ff.windows = ffs.windows;
+                    s.ff.elided = ffs.elided;
+                    s.ff.local_dispatched = ffs.local_dispatched;
+                }
+                finished.push(s.ops[id.0].finished_at.map(|t| t.as_ns()));
+            }
+            s.run_to_idle(100_000_000);
+            let records: Vec<_> = s
+                .tracer
+                .sink()
+                .expect("tracing on")
+                .records()
+                .iter()
+                .map(|r| (r.at.as_ns(), r.ev.kind()))
+                .collect();
+            (
+                finished,
+                s.ops.iter().map(|o| format!("{:?}", o.chan_rollup)).collect::<Vec<_>>(),
+                s.stats.failovers,
+                s.stats.failbacks,
+                s.stats.wire_bytes,
+                s.now().as_ns(),
+                s.rng.next_u64(),
+                records,
+                s.events_processed(),
+            )
+        };
+        let evented = run(false);
+        let fast = run(true);
+        assert_eq!(evented, fast, "fast-forward trajectory diverged from evented");
+        // And the tier must actually have engaged — elision is the point.
+        let probe = {
+            let mut cfg = fast_ft_cfg();
+            cfg.engine.fast_forward = true;
+            let mut s = ClusterSim::new(cfg);
+            let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(8).0);
+            s.run_to_idle(20_000_000);
+            assert!(s.ops[id.0].is_done());
+            s.ff_stats()
+        };
+        assert!(probe.windows > 0, "no fast-forward window opened: {probe:?}");
+        assert!(probe.local_dispatched > 0, "nothing dispatched locally: {probe:?}");
+    }
+
+    /// With the tier disabled (the default), the counters stay zero and
+    /// the engine sees every event — the pre-L6 behaviour, bit for bit.
+    #[test]
+    fn fast_forward_off_by_default_and_counters_stay_zero() {
+        let mut s = ClusterSim::new(fast_ft_cfg());
+        assert!(!s.cfg.engine.fast_forward);
+        let id = s.submit_p2p(RankId(0), RankId(8), ByteSize::mb(8).0);
+        s.run_to_idle(20_000_000);
+        assert!(s.ops[id.0].is_done());
+        assert_eq!(s.ff_stats(), FfStats::default());
+        assert_eq!(s.events_processed(), s.engine.dispatched());
     }
 }

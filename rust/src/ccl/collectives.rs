@@ -66,7 +66,7 @@ impl ClusterSim {
         );
         for c in 0..channels {
             let now = self.now();
-            self.engine.schedule_at(now, Event::OpStep { op: id, channel: c });
+            self.sched_at(now, Event::OpStep { op: id, channel: c });
         }
         id
     }
@@ -172,8 +172,7 @@ impl ClusterSim {
             (true, delay)
         };
         if advance {
-            self.engine
-                .schedule(SimTime::ns(reduce_delay_ns), Event::OpStep { op, channel });
+            self.sched_at(now + SimTime::ns(reduce_delay_ns), Event::OpStep { op, channel });
         }
     }
 

@@ -14,8 +14,8 @@ pub mod mempool;
 pub mod transport;
 
 pub use cluster::{
-    ActiveSide, ChanRollup, ClusterSim, CollKind, Conn, ConnId, Event, Op, OpId, Stats, Xfer,
-    XferId, XferMemStats, XferSlab,
+    ActiveSide, ChanRollup, ClusterSim, CollKind, Conn, ConnId, Event, FfStats, Op, OpId, Stats,
+    Xfer, XferId, XferMemStats, XferSlab,
 };
 pub use mempool::{AllocPolicy, MemPool};
 pub use transport::{locality_of, DataPath, Locality, TransportProfile};

@@ -381,6 +381,31 @@ impl Default for ElasticConfig {
     }
 }
 
+/// Event-engine settings (`engine.*`, §Perf L6). These tune the scheduler,
+/// never the modeled physics: any combination produces the same trajectory
+/// (the randomized equivalence tests pin it), only at different speeds.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Calendar-queue bucket width in nanoseconds (clamped to [64, 1 MiB]
+    /// and rounded up to a power of two). ~4 µs matches the cluster sim's
+    /// per-chunk event spacing; widen it for sparser workloads.
+    pub bucket_ns: u64,
+    /// Flow-level fast-forward tier: between two engine events, locally
+    /// generated follow-up events (chunk completions, WCs, GPU tasks) are
+    /// drained from a small local buffer instead of round-tripping through
+    /// the global queue. Observable output is bit-identical either way
+    /// (`randomized_equivalence_fast_forward_vs_evented` pins it); only
+    /// engine work counters differ. Off by default; the `scale4k` preset
+    /// turns it on.
+    pub fast_forward: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { bucket_ns: crate::sim::DEFAULT_BUCKET_NS, fast_forward: false }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -392,6 +417,7 @@ pub struct Config {
     pub rca: RcaConfig,
     pub soak: SoakConfig,
     pub elastic: ElasticConfig,
+    pub engine: EngineConfig,
     /// RNG seed for all stochastic elements.
     pub seed: u64,
 }
@@ -456,6 +482,27 @@ impl Config {
     pub fn scale512() -> Self {
         let mut c = Self::scale256();
         c.topo.num_nodes = 512;
+        c
+    }
+
+    /// 4096-node scaling preset (§Perf L6, the `scale4k` experiment): a
+    /// *rail slice* of a 4096-node cluster — one GPU + one dual-port NIC
+    /// per node (rail 0 of the paper's 8-rail fabric), 4096 ranks in one
+    /// ring. Unlike scale512's 8-GPU nodes (7/8 of ring hops intra-node),
+    /// every hop here is inter-node RDMA, so this is the densest network
+    /// workload per rank the sim runs. Only tractable with the §Perf L6
+    /// calendar-queue engine + fast-forward tier; the full 8-rail 32768-
+    /// rank cluster (ring transfers grow with ranks²) stays future work
+    /// for the sharded-engine stretch goal.
+    pub fn scale4k() -> Self {
+        let mut c = Self::scale512();
+        c.topo.num_nodes = 4096;
+        c.topo.gpus_per_node = 1;
+        c.topo.nics_per_node = 1;
+        c.topo.rails = 1;
+        // Backup QPs ride the second port of the same NIC (§3.3).
+        c.topo.dual_port_nics = true;
+        c.engine.fast_forward = true;
         c
     }
 
@@ -603,6 +650,8 @@ impl Config {
             },
             "elastic.enabled" => self.elastic.enabled = pb(val)?,
             "elastic.requeue_delay_ns" => self.elastic.requeue_delay_ns = p(val)?,
+            "engine.bucket_ns" => self.engine.bucket_ns = p(val)?,
+            "engine.fast_forward" => self.engine.fast_forward = pb(val)?,
             "trace.enabled" => self.trace.enabled = pb(val)?,
             "trace.ring_capacity" => self.trace.ring_capacity = p(val)?,
             "trace.snapshot_window_ns" => self.trace.snapshot_window_ns = p(val)?,
@@ -664,6 +713,20 @@ mod tests {
         assert_eq!(s64.vccl.channels, 1);
         assert_eq!(s256.vccl.channels, 1);
         assert_eq!(s512.vccl.channels, 1);
+
+        // scale4k is a rail slice: 4096 single-GPU nodes, all-RDMA ring,
+        // backup QPs on the second port of each node's only NIC, and the
+        // §Perf L6 fast-forward tier on.
+        let s4k = Config::scale4k();
+        assert_eq!(s4k.topo.num_nodes, 4096);
+        assert_eq!(s4k.topo.gpus_per_node, 1);
+        assert_eq!(s4k.topo.nics_per_node, 1);
+        assert_eq!(s4k.topo.rails, 1);
+        assert!(s4k.topo.dual_port_nics);
+        assert!(s4k.vccl.monitor, "the monitor stays on at 4096 nodes");
+        assert!(s4k.engine.fast_forward);
+        assert_eq!(s4k.net.ib_timeout_exp, s64.net.ib_timeout_exp);
+        assert_eq!(s4k.net.qp_warmup_ns, s64.net.qp_warmup_ns);
     }
 
     #[test]
@@ -685,6 +748,21 @@ mod tests {
         assert!(c.apply_kv_text("vccl.windowsize = 8").is_err());
         assert!(c.apply_kv_text("vccl.transport = quantum").is_err());
         assert!(c.apply_kv_text("not a kv line").is_err());
+    }
+
+    #[test]
+    fn engine_keys_parse_and_default_to_evented() {
+        let mut c = Config::paper_defaults();
+        assert_eq!(c.engine.bucket_ns, crate::sim::DEFAULT_BUCKET_NS);
+        assert!(!c.engine.fast_forward, "fast-forward is opt-in (scale4k turns it on)");
+        c.apply_kv_text(
+            "engine.bucket_ns = 8192\n\
+             engine.fast_forward = on\n",
+        )
+        .unwrap();
+        assert_eq!(c.engine.bucket_ns, 8192);
+        assert!(c.engine.fast_forward);
+        assert!(c.apply_kv_text("engine.bogus = 1").is_err());
     }
 
     #[test]

@@ -267,6 +267,67 @@ pub fn bench_simcore(cfg: &Config, opts: &BenchOpts) -> BenchReport {
         );
     }
 
+    // §Perf L6 (`simcore.engine.*`): scheduler throughput and the
+    // fast-forward tier's elision split. The twin run drives the IDENTICAL
+    // AllReduce with the tier on and asserts the trajectory did not move —
+    // the bench doubles as a cheap equivalence smoke on every CI run. The
+    // split counters are deterministic; `events_per_sec` is this report's
+    // one wall-clock metric (a raw engine churn microbench — the CI gate
+    // asserts a generous floor, `benches/simcore.rs` enforces the tighter
+    // per-workload gates).
+    {
+        let mut c = experiments::transport_cfg(cfg, "vccl", nodes, 1);
+        c.vccl.monitor = false;
+        c.engine.fast_forward = true;
+        let mut f = ClusterSim::new(c);
+        let fid = f.submit(CollKind::AllReduce, 8 << 20);
+        f.run_to_idle(400_000_000);
+        assert!(f.ops[fid.0].is_done(), "fast-forward twin must complete");
+        assert_eq!(
+            f.ops[fid.0].finished_at, s.ops[id.0].finished_at,
+            "fast-forward twin diverged from the evented run"
+        );
+        assert_eq!(
+            f.events_processed(),
+            s.engine.dispatched(),
+            "fast-forward twin must do the same total event work"
+        );
+        let ff = f.ff_stats();
+        let es = f.engine.stats();
+        let total = f.events_processed();
+        r.push("simcore.engine.events_total", total as f64, "count");
+        r.push("simcore.engine.ff_windows", ff.windows as f64, "count");
+        r.push("simcore.engine.ff_elided", ff.elided as f64, "count");
+        r.push("simcore.engine.ff_local_dispatched", ff.local_dispatched as f64, "count");
+        r.push(
+            "simcore.engine.ff_share",
+            ff.local_dispatched as f64 / total.max(1) as f64,
+            "ratio",
+        );
+        r.push("simcore.engine.window_sorts", es.window_sorts as f64, "count");
+        r.push("simcore.engine.window_jumps", es.window_jumps as f64, "count");
+        r.push("simcore.engine.overflow_pulls", es.overflow_pulls as f64, "count");
+    }
+    {
+        // Raw calendar-queue churn: schedule+pop a mixed near/far pattern
+        // (hot bucket traffic, same-time bursts, occasional overflow-day
+        // hops) and report dispatched events per wall-clock second.
+        const N: u64 = if cfg!(debug_assertions) { 1 << 18 } else { 1 << 21 };
+        let mut e: crate::sim::Engine<u64> = crate::sim::Engine::new();
+        let t0 = std::time::Instant::now();
+        for i in 0..N {
+            let far = if i % 64 == 0 { 8_000_000 } else { 0 };
+            let at = e.now() + crate::sim::SimTime::ns(1 + (i % 7) * 777 + far);
+            e.schedule_at(at, i);
+            if i % 2 == 0 {
+                let _ = e.pop();
+            }
+        }
+        while e.pop().is_some() {}
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        r.push("simcore.engine.events_per_sec", N as f64 / secs, "events/s");
+    }
+
     // §Perf L4 (`bench_rdma` suite): RDMA hot-path accounting work on a
     // monitored flap-churn workload — every successful WC reads the
     // per-port backlog (§3.4 condition ii) and every flap walks the
@@ -598,6 +659,13 @@ mod tests {
             "transfer recycling must bound live slots: {}x",
             get("simcore.mem.recycle_ratio_x")
         );
+        // §Perf L6: the engine block reports the fast-forward split (the
+        // twin-run equality is asserted inside bench_simcore itself) and a
+        // non-degenerate wall-clock throughput.
+        assert!(get("simcore.engine.events_total") > 1000.0);
+        assert!(get("simcore.engine.ff_windows") > 0.0, "the tier must engage");
+        assert!(get("simcore.engine.ff_local_dispatched") > 0.0);
+        assert!(get("simcore.engine.events_per_sec") > 0.0);
         // §Perf L4: the monitored churn workload exercises both hot paths.
         assert!(get("simcore.rdma.backlog_reads") > 50.0);
         assert!(get("simcore.rdma.flap_events") >= 4.0);

@@ -179,6 +179,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("scale64", "64-node (512-GPU) allreduce + failover sweep (§Perf L3)"),
     ("scale256", "256-node (2048-GPU) monitored allreduce + multi-failure sweep (§Perf L4)"),
     ("scale512", "512-node (4096-GPU) monitored allreduce + failover sweep (§Perf L5)"),
+    ("scale4k", "4096-node rail-slice monitored allreduce + failover sweep (§Perf L6)"),
     ("fabric", "§Fault domains: trunk-down → backup-plane failover → failback"),
     ("elastic", "§Elastic: node crash → ring shrink → rejoin without draining the world"),
 ];
@@ -207,6 +208,7 @@ pub fn run_experiment(id: &str, cfg: &Config) -> Result<String> {
         "scale64" => experiments::scale64_cluster(cfg),
         "scale256" => experiments::scale256_cluster(cfg),
         "scale512" => experiments::scale512_cluster(cfg),
+        "scale4k" => experiments::scale4k_cluster(cfg),
         "fabric" => reliability::fabric_failover(cfg),
         "elastic" => reliability::elastic_recovery(cfg),
         "list" => {

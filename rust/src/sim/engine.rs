@@ -3,18 +3,58 @@
 //! The engine is *not* an actor framework — event payloads are a plain enum
 //! owned by the simulation (`ClusterSim` dispatches them in one big match).
 //! That keeps the hot loop branch-predictable and allocation-free, which is
-//! what lets cluster-scale experiments (thousands of ranks × thousands of
-//! chunks) run in milliseconds. See `benches/simcore.rs` for the events/sec
-//! target (§Perf: ≥1M events/s).
+//! what lets cluster-scale experiments (thousands of ranks × millions of
+//! chunks) run in seconds. See `benches/simcore.rs` for the events/sec
+//! target (§Perf L6: ≥1M events/s, CI-gated via `BENCH_simcore.json`).
+//!
+//! # §Perf L6 scheduler
+//!
+//! The default backend is a **calendar queue**: a power-of-two ring of
+//! unsorted buckets, each covering one `bucket_ns`-wide slice of the clock,
+//! plus an overflow heap for events beyond the ring's one-"day" coverage.
+//! Only the bucket currently being drained is sorted (once, when the window
+//! reaches it), so an event pays an amortized O(bucket) sort share instead
+//! of the O(log n) sift of a multi-million-entry binary heap — and
+//! same-instant bursts (a 4096-rank step issuing its chunk events) append
+//! to the active window in O(1). When the ring goes empty the window
+//! *jumps* straight to the earliest overflow event, so idle gaps (soak
+//! bursts hours apart) cost O(1), not O(gap / bucket).
+//!
+//! The pre-L6 `BinaryHeap` survives as a cross-checked **reference mode**
+//! (`set_reference_mode`, gated like the §Perf L3–L5 reference paths): the
+//! randomized equivalence tests drive both backends through identical
+//! trajectories and assert bit-identical pop sequences, and debug builds
+//! additionally shadow every calendar operation with a key-only heap,
+//! asserting each physical pop against it.
+//!
+//! # Cancellation accounting
+//!
+//! `live` and `cancelled` are disjoint seq sets partitioning the queued
+//! entries: an event is in exactly one of them from `schedule` until its
+//! slot is physically popped. `cancel` moves a seq live→cancelled only if
+//! it is still live, so cancelling an already-fired (or already-cancelled)
+//! id is an exact no-op: `pending()` stays exact and the tombstone set is
+//! bounded by the entries physically queued — it cannot leak across a
+//! multi-day soak (the regression test in `tests/soak.rs` pins this).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
 
 use super::SimTime;
 
 /// Handle to a scheduled event, usable to cancel it before it fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EventId(u64);
+
+/// Default calendar bucket width. ~4 µs covers the per-chunk event spacing
+/// of the cluster sim (NIC latencies + µs-scale chunk serialization);
+/// retry windows, warm-ups and δ-probe periods (≥ milliseconds) land in
+/// the overflow heap, which is exactly where rarely-touched events belong.
+pub const DEFAULT_BUCKET_NS: u64 = 4_096;
+
+/// Calendar ring size (one "day" = `NBUCKETS × bucket_ns` ≈ 4.2 ms at the
+/// default width).
+const NBUCKETS: usize = 1_024;
 
 #[derive(Debug)]
 struct Scheduled<Ev> {
@@ -42,15 +82,255 @@ impl<Ev> Ord for Scheduled<Ev> {
     }
 }
 
+/// §Perf L6 scheduler work counters. All are deterministic functions of
+/// the event trajectory — safe to ship in `BENCH_simcore.json`, unlike
+/// wall-clock time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineStats {
+    /// Events dispatched so far.
+    pub dispatched: u64,
+    /// Live (schedulable, un-cancelled) events currently pending.
+    pub pending: usize,
+    /// High-water mark of `pending`.
+    pub peak_pending: usize,
+    /// Cancelled entries still physically queued (tombstone backlog —
+    /// bounded by the queue, never by cancellation history).
+    pub cancelled_backlog: usize,
+    /// Calendar: active-window materializations (one bucket sort each).
+    pub window_sorts: u64,
+    /// Calendar: events migrated overflow → ring as coverage advanced.
+    pub overflow_pulls: u64,
+    /// Calendar: empty-ring jumps straight to the earliest overflow event.
+    pub window_jumps: u64,
+}
+
+/// The §Perf L6 calendar queue: a ring of unsorted buckets covering
+/// `[win_end - bucket_ns, cov_end)`, one sorted active window, and an
+/// overflow heap for everything at or beyond `cov_end`.
+///
+/// Invariants (cross-checked per pop by the engine's debug shadow heap):
+/// - `active` is sorted ascending by `(at, seq)` and precedes every
+///   bucket/overflow entry.
+/// - an entry in `buckets[i]` has `win_end <= at < cov_end` and
+///   `(at >> shift) & mask == i`; coverage is exactly one day, so each
+///   bucket holds entries of a single window.
+/// - `overflow` holds exactly the entries with `at >= cov_end`.
+/// - `len` counts all queued entries (active + buckets + overflow).
+#[derive(Debug)]
+struct Calendar<Ev> {
+    shift: u32,
+    mask: usize,
+    bucket_ns: u64,
+    /// One day of coverage: `NBUCKETS << shift` nanoseconds.
+    day: u64,
+    /// Exclusive upper bound of the active window.
+    win_end: u64,
+    /// Exclusive upper bound of ring coverage.
+    cov_end: u64,
+    /// Ring index of the active window's bucket.
+    cur: usize,
+    buckets: Vec<Vec<Scheduled<Ev>>>,
+    /// Entries across all buckets (excluding `active` and `overflow`).
+    in_buckets: usize,
+    active: VecDeque<Scheduled<Ev>>,
+    overflow: BinaryHeap<Reverse<Scheduled<Ev>>>,
+    len: usize,
+    window_sorts: u64,
+    overflow_pulls: u64,
+    window_jumps: u64,
+}
+
+impl<Ev> Calendar<Ev> {
+    fn new(bucket_ns: u64) -> Self {
+        let bucket_ns = bucket_ns.clamp(64, 1 << 20).next_power_of_two();
+        let shift = bucket_ns.trailing_zeros();
+        let day = (NBUCKETS as u64) << shift;
+        Calendar {
+            shift,
+            mask: NBUCKETS - 1,
+            bucket_ns,
+            day,
+            win_end: bucket_ns,
+            cov_end: day,
+            cur: 0,
+            buckets: (0..NBUCKETS).map(|_| Vec::new()).collect(),
+            in_buckets: 0,
+            active: VecDeque::new(),
+            overflow: BinaryHeap::new(),
+            len: 0,
+            window_sorts: 0,
+            overflow_pulls: 0,
+            window_jumps: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, at: u64) -> usize {
+        ((at >> self.shift) as usize) & self.mask
+    }
+
+    fn insert(&mut self, s: Scheduled<Ev>) {
+        let at = s.at.as_ns();
+        self.len += 1;
+        if at < self.win_end {
+            // In (or before) the already-materialized window: keep `active`
+            // sorted. A fresh seq is the largest key among equal times, so
+            // same-instant bursts scheduled while draining append at the
+            // back — O(1), not a quadratic mid-insert.
+            let key = (s.at, s.seq);
+            let idx = self.active.partition_point(|e| (e.at, e.seq) < key);
+            self.active.insert(idx, s);
+        } else if at < self.cov_end {
+            let slot = self.slot(at);
+            self.in_buckets += 1;
+            self.buckets[slot].push(s);
+        } else {
+            self.overflow.push(Reverse(s));
+        }
+    }
+
+    /// Move overflow entries that fell inside coverage into their buckets.
+    fn pull_overflow(&mut self) {
+        while let Some(Reverse(s)) = self.overflow.peek() {
+            if s.at.as_ns() >= self.cov_end {
+                break;
+            }
+            let Reverse(s) = self.overflow.pop().expect("peeked");
+            let slot = self.slot(s.at.as_ns());
+            self.in_buckets += 1;
+            self.buckets[slot].push(s);
+            self.overflow_pulls += 1;
+        }
+    }
+
+    /// Advance to the next non-empty window and sort it into `active`.
+    /// Precondition: `active` is drained and `len > 0`.
+    fn advance_window(&mut self) {
+        debug_assert!(self.active.is_empty());
+        debug_assert!(self.len > 0, "advance_window on an empty calendar");
+        loop {
+            if self.in_buckets == 0 {
+                // Ring empty: everything pending sits in overflow. Jump the
+                // window straight to the earliest event — an hours-long
+                // soak idle gap costs O(1), not O(gap / bucket_ns).
+                let min_at = {
+                    let Reverse(s) = self.overflow.peek().expect("len > 0 with empty ring");
+                    s.at.as_ns()
+                };
+                let win_start = min_at & !(self.bucket_ns - 1);
+                self.win_end = win_start + self.bucket_ns;
+                self.cov_end = win_start + self.day;
+                self.cur = self.slot(win_start);
+                self.window_jumps += 1;
+                self.pull_overflow();
+                debug_assert!(!self.buckets[self.cur].is_empty());
+            } else {
+                self.cur = (self.cur + 1) & self.mask;
+                self.win_end += self.bucket_ns;
+                self.cov_end += self.bucket_ns;
+                self.pull_overflow();
+            }
+            if !self.buckets[self.cur].is_empty() {
+                let mut bucket = std::mem::take(&mut self.buckets[self.cur]);
+                self.in_buckets -= bucket.len();
+                bucket.sort_unstable_by_key(|s| (s.at, s.seq));
+                self.active = VecDeque::from(bucket);
+                self.window_sorts += 1;
+                return;
+            }
+        }
+    }
+
+    fn pop_min(&mut self) -> Option<Scheduled<Ev>> {
+        loop {
+            if let Some(s) = self.active.pop_front() {
+                self.len -= 1;
+                return Some(s);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            self.advance_window();
+        }
+    }
+
+    /// Key of the earliest entry (materializes its window, consumes nothing).
+    fn peek_min(&mut self) -> Option<(SimTime, u64)> {
+        loop {
+            if let Some(s) = self.active.front() {
+                return Some((s.at, s.seq));
+            }
+            if self.len == 0 {
+                return None;
+            }
+            self.advance_window();
+        }
+    }
+}
+
+/// The queue backend: calendar by default, the pre-L6 binary heap as the
+/// cross-checked reference (gated like the §Perf L3–L5 reference paths).
+#[derive(Debug)]
+enum Backend<Ev> {
+    Calendar(Calendar<Ev>),
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    Heap(BinaryHeap<Reverse<Scheduled<Ev>>>),
+}
+
+impl<Ev> Backend<Ev> {
+    fn insert(&mut self, s: Scheduled<Ev>) {
+        match self {
+            Backend::Calendar(c) => c.insert(s),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            Backend::Heap(h) => h.push(Reverse(s)),
+        }
+    }
+
+    fn pop_min(&mut self) -> Option<Scheduled<Ev>> {
+        match self {
+            Backend::Calendar(c) => c.pop_min(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            Backend::Heap(h) => h.pop().map(|Reverse(s)| s),
+        }
+    }
+
+    fn peek_min(&mut self) -> Option<(SimTime, u64)> {
+        match self {
+            Backend::Calendar(c) => c.peek_min(),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            Backend::Heap(h) => h.peek().map(|Reverse(s)| (s.at, s.seq)),
+        }
+    }
+
+    fn queued(&self) -> usize {
+        match self {
+            Backend::Calendar(c) => c.len,
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            Backend::Heap(h) => h.len(),
+        }
+    }
+}
+
 /// A discrete-event queue over event payloads of type `Ev`.
+#[derive(Debug)]
 pub struct Engine<Ev> {
     now: SimTime,
-    heap: BinaryHeap<Reverse<Scheduled<Ev>>>,
+    backend: Backend<Ev>,
     seq: u64,
-    // Cancelled event seqs. Kept sorted-free: membership is checked lazily on
-    // pop. Size is bounded by the number of outstanding cancellations.
-    cancelled: std::collections::HashSet<u64>,
+    bucket_ns: u64,
+    /// Seqs scheduled and neither fired nor cancelled: `pending()` is its
+    /// exact size; disjoint from `cancelled` by construction.
+    live: HashSet<u64>,
+    /// Cancelled seqs physically still queued (reaped when their slot is
+    /// popped) — bounded by the queue, never by history.
+    cancelled: HashSet<u64>,
     dispatched: u64,
+    peak_pending: usize,
+    /// Debug cross-check: a key-only mirror of the calendar backend. Every
+    /// physical pop must match its order exactly (release builds are
+    /// pinned end-to-end by the randomized equivalence tests instead).
+    #[cfg(debug_assertions)]
+    shadow: BinaryHeap<Reverse<(SimTime, u64)>>,
 }
 
 impl<Ev> Default for Engine<Ev> {
@@ -61,13 +341,55 @@ impl<Ev> Default for Engine<Ev> {
 
 impl<Ev> Engine<Ev> {
     pub fn new() -> Self {
+        Self::with_bucket_ns(DEFAULT_BUCKET_NS)
+    }
+
+    /// Engine with a custom calendar bucket width (`engine.bucket_ns`;
+    /// clamped to `[64, 1 MiB]` ns and rounded up to a power of two).
+    pub fn with_bucket_ns(bucket_ns: u64) -> Self {
+        let cal = Calendar::new(bucket_ns);
+        let bucket_ns = cal.bucket_ns;
         Engine {
             now: SimTime::ZERO,
-            heap: BinaryHeap::new(),
+            backend: Backend::Calendar(cal),
             seq: 0,
-            cancelled: std::collections::HashSet::new(),
+            bucket_ns,
+            live: HashSet::new(),
+            cancelled: HashSet::new(),
             dispatched: 0,
+            peak_pending: 0,
+            #[cfg(debug_assertions)]
+            shadow: BinaryHeap::new(),
         }
+    }
+
+    /// §Perf L6 reference mode: swap the calendar queue for the pre-L6
+    /// binary heap. Pop order is identical by contract — the randomized
+    /// equivalence tests (CI: `--features ref-alloc`) enforce it. Must be
+    /// called before anything is scheduled.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn set_reference_mode(&mut self, on: bool) {
+        assert!(
+            self.backend.queued() == 0 && self.live.is_empty() && self.cancelled.is_empty(),
+            "set_reference_mode on a non-empty engine"
+        );
+        self.backend = if on {
+            Backend::Heap(BinaryHeap::new())
+        } else {
+            Backend::Calendar(Calendar::new(self.bucket_ns))
+        };
+    }
+
+    /// True when running on the reference heap backend.
+    #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+    pub fn reference_mode(&self) -> bool {
+        matches!(self.backend, Backend::Heap(_))
+    }
+
+    #[cfg(debug_assertions)]
+    #[inline]
+    fn shadow_on(&self) -> bool {
+        matches!(self.backend, Backend::Calendar(_))
     }
 
     /// Current simulated time.
@@ -81,9 +403,41 @@ impl<Ev> Engine<Ev> {
         self.dispatched
     }
 
-    /// Number of events still pending.
+    /// Number of live events still pending. Exact: cancellations — before
+    /// or after fire — never skew it (the pre-L6 `heap.len() -
+    /// cancelled.len()` undercounted once a fired id was cancelled).
     pub fn pending(&self) -> usize {
-        self.heap.len() - self.cancelled.len().min(self.heap.len())
+        self.live.len()
+    }
+
+    /// Cancelled entries physically still queued. Bounded by `queued()`;
+    /// the soak memory-flat regression test pins that cancel-after-fire
+    /// contributes nothing.
+    pub fn cancelled_backlog(&self) -> usize {
+        self.cancelled.len()
+    }
+
+    /// Physically queued entries (live + cancelled tombstones).
+    pub fn queued(&self) -> usize {
+        self.backend.queued()
+    }
+
+    /// Scheduler work counters (§Perf L6).
+    pub fn stats(&self) -> EngineStats {
+        let (window_sorts, overflow_pulls, window_jumps) = match &self.backend {
+            Backend::Calendar(c) => (c.window_sorts, c.overflow_pulls, c.window_jumps),
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            Backend::Heap(_) => (0, 0, 0),
+        };
+        EngineStats {
+            dispatched: self.dispatched,
+            pending: self.live.len(),
+            peak_pending: self.peak_pending,
+            cancelled_backlog: self.cancelled.len(),
+            window_sorts,
+            overflow_pulls,
+            window_jumps,
+        }
     }
 
     /// Schedule `ev` to fire `delay` after now.
@@ -91,28 +445,50 @@ impl<Ev> Engine<Ev> {
         self.schedule_at(self.now + delay, ev)
     }
 
-    /// Schedule `ev` at an absolute time (must not be in the past).
+    /// Schedule `ev` at an absolute time. Scheduling into the past is a
+    /// hard error in every build: the release-mode clamp this replaced
+    /// silently rewrote causality at scale (§Perf L6 satellite fix).
     pub fn schedule_at(&mut self, at: SimTime, ev: Ev) -> EventId {
-        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
-        let at = at.max(self.now);
+        assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Scheduled { at, seq, ev }));
+        self.live.insert(seq);
+        self.peak_pending = self.peak_pending.max(self.live.len());
+        #[cfg(debug_assertions)]
+        if self.shadow_on() {
+            self.shadow.push(Reverse((at, seq)));
+        }
+        self.backend.insert(Scheduled { at, seq, ev });
         EventId(seq)
     }
 
     /// Cancel a previously scheduled event. Idempotent; cancelling an
-    /// already-fired event is a no-op.
+    /// already-fired event is an exact no-op (no tombstone, no count skew).
     pub fn cancel(&mut self, id: EventId) {
-        self.cancelled.insert(id.0);
+        if self.live.remove(&id.0) {
+            self.cancelled.insert(id.0);
+        }
+    }
+
+    /// Pop one physical entry, keeping the debug shadow in lock-step.
+    fn pop_raw(&mut self) -> Option<Scheduled<Ev>> {
+        let s = self.backend.pop_min()?;
+        #[cfg(debug_assertions)]
+        if self.shadow_on() {
+            let Reverse(key) = self.shadow.pop().expect("shadow mirrors the calendar");
+            assert_eq!(key, (s.at, s.seq), "calendar pop diverged from the reference order");
+        }
+        Some(s)
     }
 
     /// Pop the next live event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, Ev)> {
-        while let Some(Reverse(s)) = self.heap.pop() {
+        while let Some(s) = self.pop_raw() {
             if self.cancelled.remove(&s.seq) {
                 continue;
             }
+            let was_live = self.live.remove(&s.seq);
+            debug_assert!(was_live, "queued entry neither live nor cancelled");
             debug_assert!(s.at >= self.now);
             self.now = s.at;
             self.dispatched += 1;
@@ -124,13 +500,12 @@ impl<Ev> Engine<Ev> {
     /// Peek at the timestamp of the next live event without firing it.
     pub fn peek_time(&mut self) -> Option<SimTime> {
         // Drop cancelled heads eagerly so peek is accurate.
-        while let Some(Reverse(s)) = self.heap.peek() {
-            if self.cancelled.contains(&s.seq) {
-                let seq = s.seq;
-                self.heap.pop();
+        while let Some((at, seq)) = self.backend.peek_min() {
+            if self.cancelled.contains(&seq) {
+                let _ = self.pop_raw();
                 self.cancelled.remove(&seq);
             } else {
-                return Some(s.at);
+                return Some(at);
             }
         }
         None
@@ -138,7 +513,7 @@ impl<Ev> Engine<Ev> {
 
     /// True if no live events remain.
     pub fn is_idle(&mut self) -> bool {
-        self.peek_time().is_none()
+        self.live.is_empty()
     }
 
     /// Advance the clock over event-free time (§Soak time compression: a
@@ -158,12 +533,16 @@ impl<Ev> Engine<Ev> {
 /// pending queue *with original sequence numbers* — sequence numbers break
 /// same-instant ties, so restoring them verbatim is what keeps a resumed
 /// simulation's dispatch order identical to an uninterrupted run's.
-#[derive(Debug, Clone)]
+/// Mode-agnostic: a state captured under either backend restores into
+/// either backend with an identical future (the equivalence tests cut
+/// checkpoints across modes to pin this).
+#[derive(Debug, Clone, PartialEq)]
 pub struct EngineState<Ev> {
     pub now: SimTime,
     pub seq: u64,
     pub dispatched: u64,
-    /// Outstanding cancelled seqs, ascending.
+    /// Outstanding cancelled seqs, ascending. Every entry refers to a
+    /// still-queued event (the live/cancelled partition guarantees it).
     pub cancelled: Vec<u64>,
     /// Pending events as `(at, seq, ev)`, ascending by `(at, seq)`.
     pub pending: Vec<(SimTime, u64, Ev)>,
@@ -171,39 +550,74 @@ pub struct EngineState<Ev> {
 
 impl<Ev: Clone> Engine<Ev> {
     /// Capture the engine's complete state. The pending queue is emitted in
-    /// deterministic `(at, seq)` order (the heap's internal layout is not).
+    /// deterministic `(at, seq)` order (the backends' internal layouts are
+    /// not).
     pub fn checkpoint_state(&self) -> EngineState<Ev> {
         let mut cancelled: Vec<u64> = self.cancelled.iter().copied().collect();
         cancelled.sort_unstable();
-        let mut pending: Vec<(SimTime, u64, Ev)> = self
-            .heap
-            .iter()
-            .map(|Reverse(s)| (s.at, s.seq, s.ev.clone()))
-            .collect();
+        let mut pending: Vec<(SimTime, u64, Ev)> = Vec::with_capacity(self.backend.queued());
+        match &self.backend {
+            Backend::Calendar(c) => {
+                pending.extend(c.active.iter().map(|s| (s.at, s.seq, s.ev.clone())));
+                for b in &c.buckets {
+                    pending.extend(b.iter().map(|s| (s.at, s.seq, s.ev.clone())));
+                }
+                pending.extend(c.overflow.iter().map(|Reverse(s)| (s.at, s.seq, s.ev.clone())));
+            }
+            #[cfg(any(test, debug_assertions, feature = "ref-alloc"))]
+            Backend::Heap(h) => {
+                pending.extend(h.iter().map(|Reverse(s)| (s.at, s.seq, s.ev.clone())));
+            }
+        }
         pending.sort_unstable_by_key(|&(at, seq, _)| (at, seq));
         EngineState { now: self.now, seq: self.seq, dispatched: self.dispatched, cancelled, pending }
     }
 
-    /// Rebuild an engine from a snapshot.
+    /// Rebuild an engine from a snapshot (calendar backend at the default
+    /// bucket width; [`Engine::from_state_with`] picks the width). Stale
+    /// cancellations — seqs matching no pending entry, as a pre-fix
+    /// checkpoint could carry — are dropped rather than leaked.
     pub fn from_state(st: EngineState<Ev>) -> Self {
-        let mut heap = BinaryHeap::with_capacity(st.pending.len());
+        Self::from_state_with(st, DEFAULT_BUCKET_NS)
+    }
+
+    /// [`Engine::from_state`] with an explicit calendar bucket width.
+    pub fn from_state_with(st: EngineState<Ev>, bucket_ns: u64) -> Self {
+        let mut e: Engine<Ev> = Engine::with_bucket_ns(bucket_ns);
+        e.restore(st);
+        e
+    }
+
+    /// Load a snapshot into this (empty) engine, keeping its backend mode —
+    /// this is how the equivalence tests restore a calendar-mode snapshot
+    /// into a reference-mode engine and vice versa.
+    pub fn restore(&mut self, st: EngineState<Ev>) {
+        assert!(
+            self.backend.queued() == 0 && self.live.is_empty() && self.cancelled.is_empty(),
+            "restore into a non-empty engine"
+        );
+        let queued: HashSet<u64> = st.pending.iter().map(|&(_, seq, _)| seq).collect();
+        self.cancelled = st.cancelled.into_iter().filter(|s| queued.contains(s)).collect();
+        self.live = queued.difference(&self.cancelled).copied().collect();
         for (at, seq, ev) in st.pending {
             assert!(seq < st.seq, "pending event seq {seq} beyond the scheduling counter");
-            heap.push(Reverse(Scheduled { at, seq, ev }));
+            #[cfg(debug_assertions)]
+            if self.shadow_on() {
+                self.shadow.push(Reverse((at, seq)));
+            }
+            self.backend.insert(Scheduled { at, seq, ev });
         }
-        Engine {
-            now: st.now,
-            heap,
-            seq: st.seq,
-            cancelled: st.cancelled.into_iter().collect(),
-            dispatched: st.dispatched,
-        }
+        self.now = st.now;
+        self.seq = st.seq;
+        self.dispatched = st.dispatched;
+        self.peak_pending = self.live.len();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn fires_in_time_order() {
@@ -240,14 +654,62 @@ mod tests {
     fn cancel_is_idempotent_and_safe_after_fire() {
         let mut e: Engine<u8> = Engine::new();
         let a = e.schedule(SimTime::ns(1), 1);
+        assert_eq!(e.pending(), 1);
         e.cancel(a);
-        e.cancel(a);
+        assert_eq!(e.pending(), 0);
+        e.cancel(a); // double cancel: exact no-op
+        assert_eq!(e.pending(), 0);
         assert!(e.pop().is_none());
         let b = e.schedule(SimTime::ns(2), 2);
+        assert_eq!(e.pending(), 1);
         assert_eq!(e.pop().map(|(_, v)| v), Some(2));
-        e.cancel(b); // already fired — must not poison future pops
-        e.schedule(SimTime::ns(3), 3);
+        assert_eq!(e.pending(), 0);
+        e.cancel(b); // already fired — must not poison future pops...
+        let c = e.schedule(SimTime::ns(3), 3);
+        // ...and must not skew the live count (the pre-L6 accounting
+        // subtracted the stale tombstone from `heap.len()` and reported 0
+        // here) or leave a tombstone behind.
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.cancelled_backlog(), 0);
         assert_eq!(e.pop().map(|(_, v)| v), Some(3));
+        e.cancel(c);
+        e.cancel(b);
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.cancelled_backlog(), 0);
+    }
+
+    #[test]
+    fn tombstones_are_bounded_by_queued_entries() {
+        let mut e: Engine<u64> = Engine::new();
+        // Soak-shaped churn: schedule, fire, then cancel the fired id —
+        // repeated millions of times this must stay memory-flat.
+        for i in 0..10_000u64 {
+            let id = e.schedule(SimTime::ns(1), i);
+            let _ = e.pop();
+            e.cancel(id);
+            assert_eq!(e.cancelled_backlog(), 0);
+            assert_eq!(e.queued(), 0);
+        }
+        // Cancel-before-fire tombstones exist only while physically queued.
+        let ids: Vec<EventId> = (0..100).map(|i| e.schedule(SimTime::ns(5), i)).collect();
+        for &id in &ids {
+            e.cancel(id);
+        }
+        assert_eq!(e.cancelled_backlog(), 100);
+        assert_eq!(e.pending(), 0);
+        assert!(e.pop().is_none());
+        assert_eq!(e.cancelled_backlog(), 0, "popping the slots reaps the tombstones");
+        assert_eq!(e.queued(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn schedule_into_the_past_is_a_hard_error() {
+        let mut e: Engine<u8> = Engine::new();
+        e.schedule_at(SimTime::ns(100), 1);
+        let _ = e.pop();
+        // Pre-L6 release builds silently clamped this to `now`.
+        e.schedule_at(SimTime::ns(99), 2);
     }
 
     #[test]
@@ -265,6 +727,7 @@ mod tests {
         }
         assert_eq!(n, 1000);
         assert_eq!(e.dispatched(), 1000);
+        assert_eq!(e.stats().peak_pending, 1000);
     }
 
     #[test]
@@ -299,6 +762,38 @@ mod tests {
     }
 
     #[test]
+    fn overflow_and_idle_jumps_preserve_order() {
+        // Events beyond one calendar day (4 µs × 1024 ≈ 4.2 ms) land in
+        // the overflow heap; pops must still come out in (at, seq) order
+        // across day boundaries and hours-long idle jumps.
+        let mut e: Engine<u64> = Engine::new();
+        let day = (NBUCKETS as u64) * DEFAULT_BUCKET_NS;
+        let times = [
+            0,
+            1,
+            day - 1,
+            day,
+            day + 1,
+            3 * day,
+            3 * day,
+            10 * day + 7,
+            3_600_000_000_000, // one hour out
+            3_600_000_000_001,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            e.schedule_at(SimTime::ns(t), i as u64);
+        }
+        let fired: Vec<(u64, u64)> =
+            std::iter::from_fn(|| e.pop().map(|(t, v)| (t.as_ns(), v))).collect();
+        let mut want: Vec<(u64, u64)> =
+            times.iter().enumerate().map(|(i, &t)| (t, i as u64)).collect();
+        want.sort_unstable();
+        assert_eq!(fired, want);
+        assert!(e.stats().window_jumps >= 1, "hour-out event must be reached by a jump");
+        assert!(e.stats().overflow_pulls >= 1);
+    }
+
+    #[test]
     fn snapshot_restore_preserves_order_counters_and_cancellations() {
         let mut e: Engine<u32> = Engine::new();
         for i in 0..10 {
@@ -314,6 +809,7 @@ mod tests {
         assert_eq!(resumed.now(), e.now());
         assert_eq!(resumed.dispatched(), e.dispatched());
         assert_eq!(resumed.pending(), e.pending());
+        assert_eq!(resumed.cancelled_backlog(), e.cancelled_backlog());
 
         // Both engines must drain identically, including new events scheduled
         // after the snapshot (same seq counter ⇒ same FIFO tie-breaks).
@@ -333,6 +829,20 @@ mod tests {
     }
 
     #[test]
+    fn restore_drops_stale_cancellations() {
+        // A pre-fix checkpoint could carry tombstones for already-fired
+        // seqs; restoring must not leak them into the accounting.
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule(SimTime::ns(4), 7);
+        let mut st = e.checkpoint_state();
+        st.cancelled = vec![999_999]; // matches nothing pending
+        let mut r = Engine::from_state(st);
+        assert_eq!(r.pending(), 1);
+        assert_eq!(r.cancelled_backlog(), 0);
+        assert_eq!(r.pop().map(|(_, v)| v), Some(7));
+    }
+
+    #[test]
     fn schedule_during_run() {
         // An event handler scheduling follow-ups is the normal pattern.
         let mut e: Engine<u32> = Engine::new();
@@ -346,5 +856,157 @@ mod tests {
         }
         assert_eq!(fired, vec![0, 1, 2, 3, 4, 5]);
         assert_eq!(e.now().as_ns(), 6);
+    }
+
+    /// One random engine op applied identically to every engine in
+    /// `engines`. Delays mix near (in-bucket), same-instant (FIFO ties),
+    /// day-boundary and far-overflow horizons so every calendar path —
+    /// active insert, bucket insert, overflow, pulls, jumps — is hit.
+    fn random_op(
+        rng: &mut Rng,
+        engines: &mut [&mut Engine<u64>],
+        ids: &mut Vec<EventId>,
+        next_val: &mut u64,
+    ) -> Vec<Option<(u64, u64)>> {
+        let day = (NBUCKETS as u64) * DEFAULT_BUCKET_NS;
+        match rng.below(10) {
+            0..=3 => {
+                let delay = match rng.below(5) {
+                    0 => 0,
+                    1 => rng.below(64),
+                    2 => rng.below(DEFAULT_BUCKET_NS * 4),
+                    3 => day - 2 + rng.below(4),
+                    _ => day * (1 + rng.below(19)) + rng.below(1000),
+                };
+                let v = *next_val;
+                *next_val += 1;
+                let mut id = None;
+                for e in engines.iter_mut() {
+                    id = Some(e.schedule(SimTime::ns(delay), v));
+                }
+                ids.push(id.expect("at least one engine"));
+                Vec::new()
+            }
+            4..=5 if !ids.is_empty() => {
+                // Cancel a random previously issued id — fired or not.
+                let id = ids[rng.below(ids.len() as u64) as usize];
+                for e in engines.iter_mut() {
+                    e.cancel(id);
+                }
+                Vec::new()
+            }
+            6 => {
+                // Advance over idle time, capped at the next pending event.
+                let step = rng.below(day * 3);
+                for e in engines.iter_mut() {
+                    let cap = e.peek_time().map_or(u64::MAX, |t| t.as_ns());
+                    let t = (e.now().as_ns() + step).min(cap);
+                    e.advance_to(SimTime::ns(t));
+                }
+                Vec::new()
+            }
+            _ => engines
+                .iter_mut()
+                .map(|e| e.pop().map(|(t, v)| (t.as_ns(), v)))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn randomized_equivalence_calendar_vs_reference_heap() {
+        // §Perf L6 acceptance: the calendar backend's observable behaviour
+        // — pop sequence, peeks, pending counts, snapshots — is
+        // bit-identical to the reference heap's on randomized
+        // trajectories, including across checkpoint/resume cuts that
+        // restore each mode's snapshot into the OTHER mode.
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0x6E61 + seed);
+            let mut cal: Engine<u64> = Engine::new();
+            let mut heap: Engine<u64> = Engine::new();
+            heap.set_reference_mode(true);
+            assert!(heap.reference_mode() && !cal.reference_mode());
+            let mut ids = Vec::new();
+            let mut next_val = 0u64;
+            for step in 0..2_000 {
+                {
+                    let mut both = [&mut cal, &mut heap];
+                    let outs = random_op(&mut rng, &mut both, &mut ids, &mut next_val);
+                    if outs.len() == 2 {
+                        assert_eq!(outs[0], outs[1], "pop diverged at step {step}");
+                    }
+                }
+                assert_eq!(cal.peek_time(), heap.peek_time());
+                assert_eq!(cal.pending(), heap.pending());
+                assert_eq!(cal.now(), heap.now());
+                if step % 403 == 0 {
+                    // Checkpoint cut: snapshots are mode-agnostic and equal.
+                    let sc = cal.checkpoint_state();
+                    let sh = heap.checkpoint_state();
+                    assert_eq!(sc, sh, "snapshots diverged at step {step}");
+                    // Cross-restore: heap state → calendar engine and back.
+                    cal = Engine::from_state(sh);
+                    let mut h: Engine<u64> = Engine::new();
+                    h.set_reference_mode(true);
+                    h.restore(sc);
+                    heap = h;
+                }
+            }
+            // Drain to the end in lock-step.
+            loop {
+                let a = cal.pop().map(|(t, v)| (t.as_ns(), v));
+                let b = heap.pop().map(|(t, v)| (t.as_ns(), v));
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
+            }
+            assert_eq!(cal.dispatched(), heap.dispatched());
+            assert_eq!(cal.cancelled_backlog(), 0);
+            assert_eq!(heap.cancelled_backlog(), 0);
+        }
+    }
+
+    #[test]
+    fn randomized_pending_matches_drain_and_snapshots_round_trip() {
+        // Satellite: `pending()` must equal the actual remaining drain
+        // count after ANY interleaving of schedule/schedule_at/cancel
+        // (before and after fire)/pop/advance_to, and `checkpoint_state`
+        // → `from_state` must round-trip bit-identically at every cut
+        // point — in both scheduler modes.
+        for reference in [false, true] {
+            for seed in 0..4u64 {
+                let mut rng = Rng::new(0xACC7 + seed * 31 + reference as u64);
+                let mut e: Engine<u64> = Engine::new();
+                if reference {
+                    e.set_reference_mode(true);
+                }
+                let mut ids = Vec::new();
+                let mut next_val = 0u64;
+                for _ in 0..1_200 {
+                    {
+                        let mut one = [&mut e];
+                        let _ = random_op(&mut rng, &mut one, &mut ids, &mut next_val);
+                    }
+                    // Round-trip at every cut point: the restored engine's
+                    // snapshot is the identical snapshot.
+                    let st = e.checkpoint_state();
+                    let mut r: Engine<u64> = Engine::new();
+                    if reference {
+                        r.set_reference_mode(true);
+                    }
+                    r.restore(st.clone());
+                    assert_eq!(r.checkpoint_state(), st);
+                    // `pending()` equals the true remaining drain count.
+                    let mut probe = Engine::from_state(st);
+                    let mut drained = 0usize;
+                    while probe.pop().is_some() {
+                        drained += 1;
+                    }
+                    assert_eq!(e.pending(), drained, "pending() diverged from drain count");
+                    // Tombstones plus live events account for every slot.
+                    assert_eq!(e.queued(), e.pending() + e.cancelled_backlog());
+                }
+            }
+        }
     }
 }

@@ -2,13 +2,16 @@
 //!
 //! Everything in the simulated cluster — NIC transmissions, kernel
 //! completions, proxy polling, failure injection — is an event on a single
-//! nanosecond-resolution virtual clock. The engine is deliberately minimal:
-//! a binary heap of `(time, seq, event)` with stable FIFO ordering for
-//! simultaneous events and O(1) amortized cancellation (needed when fluid
-//! flows are re-rated and their completion events must be invalidated).
+//! nanosecond-resolution virtual clock. The engine keeps `(time, seq,
+//! event)` entries with stable FIFO ordering for simultaneous events and
+//! O(1) amortized cancellation (needed when fluid flows are re-rated and
+//! their completion events must be invalidated). Since §Perf L6 the
+//! default backend is a calendar queue (bucketed windows + overflow heap)
+//! sized for multi-thousand-node presets; the original binary heap
+//! survives as the cross-checked reference mode.
 
 mod engine;
 mod time;
 
-pub use engine::{Engine, EngineState, EventId};
+pub use engine::{Engine, EngineState, EngineStats, EventId, DEFAULT_BUCKET_NS};
 pub use time::SimTime;

@@ -250,7 +250,8 @@ fn every_experiment_id_parses_and_reports() {
     // simulator is ~10× slower and every allocation pass additionally
     // cross-checks against the global reference allocator; full coverage
     // is a release concern — same policy as `large_cluster_alltoall`).
-    let heavy = ["fig13a", "fig18", "fig11", "fig13b", "scale64", "scale256", "scale512"];
+    let heavy =
+        ["fig13a", "fig18", "fig11", "fig13b", "scale64", "scale256", "scale512", "scale4k"];
     let cfg = Config::paper_defaults();
     for (id, _) in EXPERIMENTS {
         if cfg!(debug_assertions) && heavy.contains(id) {

@@ -368,3 +368,62 @@ fn monitor_memory_is_bounded_across_soak() {
          ({short_samples} -> {long_samples} samples)"
     );
 }
+
+/// §Perf L6 satellite: the engine's cancellation tombstones must stay
+/// memory-flat across soak-scale churn. A multi-day soak re-rates flows
+/// millions of times, and the dominant pattern is cancel-after-fire — the
+/// timer already popped by the time the re-rate invalidates it. Pre-L6
+/// that leaked a tombstone per call forever (the seq matched nothing in
+/// the heap, and nothing ever removed it); now the live-set accounting
+/// refuses it outright, and genuine cancel-before-fire tombstones are
+/// reaped as pops pass them. Ten times the churn must leave the same
+/// (zero) backlog, not ten times the memory.
+#[test]
+fn engine_tombstones_stay_flat_across_soak_churn() {
+    use vccl::sim::Engine;
+    // Phase A: pure cancel-after-fire churn. Every round schedules a
+    // burst, drains it, then cancels every already-fired id — twice, for
+    // idempotence. The tombstone set must stay EMPTY throughout, at any
+    // churn length.
+    let after_fire_churn = |rounds: u64| {
+        let mut e: Engine<u64> = Engine::new();
+        let mut rng = Rng::new(0x7AB5);
+        let mut peak = 0usize;
+        for _ in 0..rounds {
+            let ids: Vec<_> =
+                (0..32).map(|i| e.schedule(SimTime::ns(1 + rng.below(10_000)), i)).collect();
+            while e.pop().is_some() {}
+            for id in ids {
+                e.cancel(id);
+                e.cancel(id);
+            }
+            peak = peak.max(e.cancelled_backlog());
+        }
+        peak
+    };
+    assert_eq!(after_fire_churn(300), 0, "cancel-after-fire must leave no tombstone");
+    assert_eq!(after_fire_churn(3_000), 0, "10x the churn, same flat zero");
+
+    // Phase B: genuine cancel-before-fire tombstones are bounded by the
+    // queue and reaped by the pops that pass them — a drained engine holds
+    // none, and the physical-queue invariant holds at every step.
+    let mut e: Engine<u64> = Engine::new();
+    let mut rng = Rng::new(0x7AB6);
+    let mut cancelled = 0usize;
+    let ids: Vec<_> =
+        (0..2_000).map(|i| e.schedule(SimTime::ns(1 + rng.below(50_000)), i)).collect();
+    for id in ids.iter().step_by(2) {
+        e.cancel(*id);
+        cancelled += 1;
+    }
+    assert_eq!(e.cancelled_backlog(), cancelled);
+    assert_eq!(e.queued(), e.pending() + e.cancelled_backlog());
+    let mut drained = 0usize;
+    while e.pop().is_some() {
+        drained += 1;
+        assert_eq!(e.queued(), e.pending() + e.cancelled_backlog());
+    }
+    assert_eq!(drained, ids.len() - cancelled, "cancelled events must not fire");
+    assert_eq!(e.cancelled_backlog(), 0, "a drained engine must hold zero tombstones");
+    assert_eq!(e.pending(), 0);
+}
